@@ -1,0 +1,88 @@
+//! L3 microbenches: the GES hot paths — contingency counting, BDeu
+//! local scores (fresh vs cached), operator evaluation, CPDAG
+//! completion — measured in isolation. This is the profile the §Perf
+//! iterations in EXPERIMENTS.md optimize against.
+//!
+//!   cargo bench --bench ges_micro -- [--rows 5000] [--n 200]
+
+use std::sync::Arc;
+
+use cges::bn::{forward_sample, generate, NetGenConfig};
+use cges::graph::{complete_pdag, dag_to_cpdag};
+use cges::learn::operators::best_insert;
+use cges::score::{family_counts, BdeuScorer};
+use cges::util::Timer;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warm-up.
+    f();
+    let t = Timer::start();
+    for _ in 0..iters {
+        f();
+    }
+    let total = t.secs();
+    println!("{:<38} {:>10.2} µs/op   ({} iters, {:.3}s)", name, total / iters as f64 * 1e6, iters, total);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str| -> Option<String> {
+        args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).cloned()
+    };
+    let rows: usize = get("--rows").and_then(|v| v.parse().ok()).unwrap_or(5000);
+    let n: usize = get("--n").and_then(|v| v.parse().ok()).unwrap_or(200);
+
+    let bn = generate(
+        &NetGenConfig { nodes: n, edges: n * 3 / 2, max_parents: 3, ..Default::default() },
+        13,
+    );
+    let data = Arc::new(forward_sample(&bn, rows, 3));
+    println!("# ges_micro: n={n} rows={rows}\n");
+
+    // Counting.
+    bench("family_counts / 0 parents", 2000, || {
+        std::hint::black_box(family_counts(&data, 5, &[]));
+    });
+    bench("family_counts / 1 parent", 2000, || {
+        std::hint::black_box(family_counts(&data, 5, &[7]));
+    });
+    bench("family_counts / 3 parents", 1000, || {
+        std::hint::black_box(family_counts(&data, 5, &[7, 11, 13]));
+    });
+
+    // Scoring.
+    let scorer = BdeuScorer::new(data.clone(), 10.0);
+    bench("bdeu local (uncached)", 500, || {
+        std::hint::black_box(scorer.local_uncached(5, &[7, 11]));
+    });
+    scorer.local(5, &[7, 11]);
+    bench("bdeu local (cache hit)", 20_000, || {
+        std::hint::black_box(scorer.local(5, &[7, 11]));
+    });
+
+    // Operator evaluation on the true CPDAG.
+    let cpdag = dag_to_cpdag(&bn.dag);
+    let (mut x, mut y) = (0, 1);
+    'outer: for i in 0..n {
+        for j in 0..n {
+            if i != j && !cpdag.adjacent(i, j) {
+                (x, y) = (i, j);
+                break 'outer;
+            }
+        }
+    }
+    bench("best_insert on dense CPDAG", 500, || {
+        std::hint::black_box(best_insert(&scorer, &cpdag, x, y, None));
+    });
+
+    // Graph machinery.
+    bench("dag_to_cpdag", 200, || {
+        std::hint::black_box(dag_to_cpdag(&bn.dag));
+    });
+    bench("complete_pdag (extend + relabel)", 100, || {
+        std::hint::black_box(complete_pdag(&cpdag).unwrap());
+    });
+
+    let (hits, misses) = scorer.cache().stats();
+    println!("\ncache: {hits} hits / {misses} computed");
+}

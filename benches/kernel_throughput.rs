@@ -1,0 +1,90 @@
+//! Stage-1 similarity throughput: the AOT XLA artifact (L1 Pallas
+//! kernel under PJRT) vs the threaded Rust fallback, across dataset
+//! shapes. Reports wall time and effective pair-score throughput —
+//! the L1/L2 half of the §Perf record in EXPERIMENTS.md.
+//!
+//!   cargo bench --bench kernel_throughput -- [--rows 2000] [--reps 3]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cges::bn::{forward_sample, generate, NetGenConfig};
+use cges::score::pairwise_similarity;
+use cges::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str| -> Option<String> {
+        args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).cloned()
+    };
+    let rows: usize = get("--rows").and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let reps: usize = get("--reps").and_then(|v| v.parse().ok()).unwrap_or(3);
+    let threads = cges::util::num_threads();
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let runtime = cges::runtime::SimilarityRuntime::load(&artifacts).ok();
+    println!(
+        "# kernel_throughput: rows={rows} reps={reps} threads={threads} xla={}",
+        runtime.is_some()
+    );
+    println!(
+        "{:>6} {:>6} {:>6} | {:>12} {:>12} | {:>12} {:>12}",
+        "n", "m", "r", "rust(s)", "Mpairs/s", "xla(s)", "Mpairs/s"
+    );
+
+    for &(n, r_max) in &[(64usize, 4u32), (128, 4), (128, 8), (256, 8)] {
+        let bn = generate(
+            &NetGenConfig {
+                nodes: n,
+                edges: n * 3 / 2,
+                card_range: (2, r_max),
+                ..Default::default()
+            },
+            99,
+        );
+        let data = Arc::new(forward_sample(&bn, rows, 7));
+        let pairs = (n * n) as f64 / 1e6;
+
+        // Rust fallback.
+        let mut rust_best = f64::INFINITY;
+        for _ in 0..reps {
+            let t = Timer::start();
+            let s = pairwise_similarity(&data, 10.0, threads);
+            std::hint::black_box(&s.s);
+            rust_best = rust_best.min(t.secs());
+        }
+
+        // XLA artifact (compile once, measure steady-state execution).
+        let (xla_s, xla_tp) = match &runtime {
+            Some(rt) if rt.supports(&data) => {
+                let _warm = rt.pairwise(&data, 10.0)?; // includes compile
+                let mut best = f64::INFINITY;
+                for _ in 0..reps {
+                    let t = Timer::start();
+                    let s = rt.pairwise(&data, 10.0)?;
+                    std::hint::black_box(&s.s);
+                    best = best.min(t.secs());
+                }
+                (format!("{best:.3}"), format!("{:.2}", pairs / best))
+            }
+            _ => ("n/a".into(), "-".into()),
+        };
+
+        println!(
+            "{:>6} {:>6} {:>6} | {:>12.3} {:>12.2} | {:>12} {:>12}",
+            n,
+            rows,
+            r_max,
+            rust_best,
+            pairs / rust_best,
+            xla_s,
+            xla_tp
+        );
+    }
+    println!(
+        "\nNote: the XLA path runs the Pallas kernel in interpret mode on the CPU\n\
+         PJRT plugin and pads to the artifact's static shape — absolute numbers\n\
+         measure the AOT plumbing, not TPU kernel performance (see DESIGN.md §7)."
+    );
+    Ok(())
+}

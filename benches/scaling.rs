@@ -1,0 +1,86 @@
+//! Ring-size scaling bench (Table 2c's k-columns + the §4.4 speed-up
+//! discussion): wall time and quality of cGES / cGES-L as the ring
+//! grows, against the GES baseline, at a fixed domain scale.
+//!
+//!   cargo bench --bench scaling -- [--domain link] [--scale 0.25]
+//!       [--rows 2000] [--datasets 2] [--kmax 16]
+
+use std::sync::Arc;
+
+use cges::bn::{forward_sample, load_domain, Domain};
+use cges::coordinator::{cges, RingConfig};
+use cges::graph::Dag;
+use cges::learn::{ges, GesConfig};
+use cges::metrics::evaluate;
+use cges::score::BdeuScorer;
+use cges::util::{mean, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str| -> Option<String> {
+        args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).cloned()
+    };
+    let domain = get("--domain").and_then(|d| Domain::parse(&d)).unwrap_or(Domain::Link);
+    let scale: f64 = get("--scale").and_then(|v| v.parse().ok()).unwrap_or(0.25);
+    let rows: usize = get("--rows").and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let datasets: usize = get("--datasets").and_then(|v| v.parse().ok()).unwrap_or(2);
+    let kmax: usize = get("--kmax").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let threads = 8;
+
+    let truth = load_domain(domain, scale);
+    println!(
+        "# scaling bench: {} scale={scale} ({} nodes, {} edges), {} datasets x {rows} rows",
+        domain.name(),
+        truth.n(),
+        truth.dag.edge_count(),
+        datasets
+    );
+
+    // Baseline GES.
+    let mut ges_secs = Vec::new();
+    let mut ges_bdeu = Vec::new();
+    for ds in 0..datasets {
+        let data = Arc::new(forward_sample(&truth, rows, 500 + ds as u64));
+        let sc = BdeuScorer::new(data.clone(), 10.0);
+        let t = Timer::start();
+        let r = ges(&sc, &Dag::new(truth.n()), &GesConfig { threads, ..Default::default() });
+        ges_secs.push(t.secs());
+        let rep = evaluate(&r.dag, &truth.dag, &sc);
+        ges_bdeu.push(rep.bdeu_normalized);
+    }
+    println!(
+        "{:<12} {:>8} {:>12} {:>9}",
+        "config", "k", "BDeu/N", "time(s)"
+    );
+    println!("{:<12} {:>8} {:>12.4} {:>9.2}", "ges", "-", mean(&ges_bdeu), mean(&ges_secs));
+
+    for limited in [false, true] {
+        let mut k = 2;
+        while k <= kmax {
+            let mut secs = Vec::new();
+            let mut bdeu = Vec::new();
+            let mut rounds = Vec::new();
+            for ds in 0..datasets {
+                let data = Arc::new(forward_sample(&truth, rows, 500 + ds as u64));
+                let cfg = RingConfig { k, limit_inserts: limited, threads, ..Default::default() };
+                let t = Timer::start();
+                let r = cges(data.clone(), &cfg)?;
+                secs.push(t.secs());
+                rounds.push(r.rounds as f64);
+                let sc = BdeuScorer::new(data, 10.0);
+                bdeu.push(evaluate(&r.dag, &truth.dag, &sc).bdeu_normalized);
+            }
+            println!(
+                "{:<12} {:>8} {:>12.4} {:>9.2}   speed-up {:.2}x, avg rounds {:.1}",
+                if limited { "cges-l" } else { "cges" },
+                k,
+                mean(&bdeu),
+                mean(&secs),
+                mean(&ges_secs) / mean(&secs).max(1e-9),
+                mean(&rounds)
+            );
+            k *= 2;
+        }
+    }
+    Ok(())
+}

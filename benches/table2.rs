@@ -1,0 +1,161 @@
+//! Table 2 harness: regenerates the paper's three result tables —
+//! (a) normalized BDeu, (b) SMHD, (c) CPU time — for all eight
+//! algorithm configurations (FGES, GES, cGES{2,4,8}, cGES-L{2,4,8})
+//! over the three domains.
+//!
+//! Default scale is reduced (25% nodes, 3 datasets x 2000 rows) so the
+//! full grid completes in minutes; pass `--full` after `--` for the
+//! paper's 100% / 11 x 5000 setting:
+//!
+//!   cargo bench --bench table2                 # reduced
+//!   cargo bench --bench table2 -- --full       # paper scale
+//!   cargo bench --bench table2 -- --domains pigs --scale 0.15
+//!
+//! The *shape* to check against the paper (EXPERIMENTS.md records each
+//! run): cGES-L variants fastest at equal-or-near BDeu; FGES weakest
+//! quality; 4/8 rings faster than 2.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cges::bn::{forward_sample, load_domain, Domain};
+use cges::coordinator::{cges, PartitionSource, RingConfig};
+use cges::graph::Dag;
+use cges::learn::{fges, ges, FgesConfig, GesConfig};
+use cges::metrics::evaluate;
+use cges::score::BdeuScorer;
+use cges::util::{mean, Timer};
+
+const ALGOS: &[&str] = &["fges", "ges", "cges-2", "cges-4", "cges-8", "cges-l-2", "cges-l-4", "cges-l-8"];
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let get = |key: &str| -> Option<String> {
+        args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).cloned()
+    };
+    let scale: f64 = if full { 1.0 } else { get("--scale").and_then(|v| v.parse().ok()).unwrap_or(0.25) };
+    let datasets: usize = if full { 11 } else { get("--datasets").and_then(|v| v.parse().ok()).unwrap_or(3) };
+    let rows: usize = if full { 5000 } else { get("--rows").and_then(|v| v.parse().ok()).unwrap_or(2000) };
+    let threads: usize = get("--threads").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let domains: Vec<Domain> = match get("--domains") {
+        Some(list) => list.split(',').filter_map(Domain::parse).collect(),
+        None => vec![Domain::Pigs, Domain::Link, Domain::Munin],
+    };
+
+    // XLA stage-1 is opt-in (--xla): at reduced scale the one-time PJRT
+    // compile would dominate Table 2c; see benches/kernel_throughput.rs.
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let have_artifacts = args.iter().any(|a| a == "--xla") && artifacts.join("manifest.txt").exists();
+
+    println!(
+        "# table2 harness: scale={scale} datasets={datasets} rows={rows} threads={threads} artifacts={}",
+        have_artifacts
+    );
+
+    // results[domain][algo] = (bdeu_n, smhd, secs) vectors
+    let mut bdeu = vec![vec![Vec::new(); ALGOS.len()]; domains.len()];
+    let mut smhd = vec![vec![Vec::new(); ALGOS.len()]; domains.len()];
+    let mut time = vec![vec![Vec::new(); ALGOS.len()]; domains.len()];
+
+    for (di, &domain) in domains.iter().enumerate() {
+        let truth = load_domain(domain, scale);
+        eprintln!(
+            "domain {}: {} nodes, {} edges",
+            domain.name(),
+            truth.n(),
+            truth.dag.edge_count()
+        );
+        for ds in 0..datasets {
+            let data = Arc::new(forward_sample(&truth, rows, 31_000 + ds as u64));
+            for (ai, &algo) in ALGOS.iter().enumerate() {
+                let t = Timer::start();
+                let dag = run_algo(algo, &data, threads, have_artifacts.then(|| artifacts.clone()))?;
+                let secs = t.secs();
+                let sc = BdeuScorer::new(data.clone(), 10.0);
+                let rep = evaluate(&dag, &truth.dag, &sc);
+                eprintln!(
+                    "  {} ds{ds} {algo:<9} bdeu/N {:>9.4} smhd {:>5} {:>7.1}s",
+                    domain.name(),
+                    rep.bdeu_normalized,
+                    rep.smhd,
+                    secs
+                );
+                bdeu[di][ai].push(rep.bdeu_normalized);
+                smhd[di][ai].push(rep.smhd as f64);
+                time[di][ai].push(secs);
+            }
+        }
+    }
+
+    let table = |title: &str, data: &[Vec<Vec<f64>>], fmt: &dyn Fn(f64) -> String| {
+        println!("\n## Table 2{title}");
+        print!("{:<8}", "Network");
+        for a in ALGOS {
+            print!(" {:>10}", a.to_uppercase());
+        }
+        println!();
+        for (di, &domain) in domains.iter().enumerate() {
+            print!("{:<8}", domain.name());
+            // Bold-equivalent: mark the best with '*'.
+            let means: Vec<f64> = (0..ALGOS.len()).map(|ai| mean(&data[di][ai])).collect();
+            let best = if title.contains('a') {
+                means.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            } else {
+                means.iter().cloned().fold(f64::INFINITY, f64::min)
+            };
+            for m in &means {
+                let mark = if (*m - best).abs() < 1e-9 { "*" } else { "" };
+                print!(" {:>10}", format!("{}{}", fmt(*m), mark));
+            }
+            println!();
+        }
+    };
+
+    table("a: BDeu score (normalized)", &bdeu, &|v| format!("{v:.4}"));
+    table("b: SMHD", &smhd, &|v| format!("{v:.1}"));
+    table("c: CPU time (s)", &time, &|v| format!("{v:.1}"));
+
+    // §4.4 speed-up lines (cGES-L 4 vs GES, the paper's 3.02/2.70/2.23).
+    println!("\n## Speed-ups (cGES-L 4 vs GES)");
+    let ges_i = ALGOS.iter().position(|&a| a == "ges").unwrap();
+    let cl4_i = ALGOS.iter().position(|&a| a == "cges-l-4").unwrap();
+    for (di, &domain) in domains.iter().enumerate() {
+        let s = mean(&time[di][ges_i]) / mean(&time[di][cl4_i]).max(1e-9);
+        println!("{:<8} {:.2}x", domain.name(), s);
+    }
+    Ok(())
+}
+
+fn run_algo(
+    algo: &str,
+    data: &Arc<cges::data::Dataset>,
+    threads: usize,
+    artifacts: Option<PathBuf>,
+) -> anyhow::Result<Dag> {
+    let n = data.n_vars();
+    Ok(match algo {
+        "fges" => {
+            let sc = BdeuScorer::new(data.clone(), 10.0);
+            fges(&sc, &Dag::new(n), &FgesConfig { threads, ..Default::default() }).dag
+        }
+        "ges" => {
+            let sc = BdeuScorer::new(data.clone(), 10.0);
+            ges(&sc, &Dag::new(n), &GesConfig { threads, ..Default::default() }).dag
+        }
+        _ => {
+            let limited = algo.starts_with("cges-l");
+            let k: usize = algo.rsplit('-').next().unwrap().parse()?;
+            let cfg = RingConfig {
+                k,
+                limit_inserts: limited,
+                threads,
+                partition_source: artifacts
+                    .map(PartitionSource::Artifacts)
+                    .unwrap_or(PartitionSource::RustFallback),
+                ..Default::default()
+            };
+            cges(data.clone(), &cfg)?.dag
+        }
+    })
+}

@@ -1,0 +1,91 @@
+//! Fusion demo: what the ring's message handling actually does.
+//!
+//! Two "processes" learn complementary halves of a network (disjoint
+//! edge masks, as in stage 2), then their models are fused. The demo
+//! shows the GHO order, the σ-consistent transforms, and that the
+//! fusion is an I-map union recovering structure neither half had.
+//!
+//! Run: `cargo run --release --example fusion_demo`
+
+use std::sync::Arc;
+
+use cges::bn::{forward_sample, generate, NetGenConfig};
+use cges::fusion::{fuse, sigma_consistent_imap};
+use cges::graph::Dag;
+use cges::learn::{ges, EdgeMask, GesConfig};
+use cges::metrics::smhd;
+use cges::score::BdeuScorer;
+
+fn main() -> anyhow::Result<()> {
+    let n = 30;
+    let truth = generate(
+        &NetGenConfig { nodes: n, edges: 42, max_parents: 3, ..Default::default() },
+        11,
+    );
+    let data = Arc::new(forward_sample(&truth, 4000, 5));
+    let scorer = BdeuScorer::new(data, 10.0);
+
+    // Split the candidate pairs in two disjoint halves (even/odd sum).
+    let mut m1 = EdgeMask::new(n);
+    let mut m2 = EdgeMask::new(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if (i + j) % 2 == 0 {
+                m1.allow(i, j)
+            } else {
+                m2.allow(i, j)
+            }
+        }
+    }
+
+    let learn = |mask: EdgeMask| {
+        let cfg = GesConfig { mask: Some(Arc::new(mask)), ..Default::default() };
+        ges(&scorer, &Dag::new(n), &cfg)
+    };
+    let g1 = learn(m1);
+    let g2 = learn(m2);
+    println!(
+        "local model A: {} edges, BDeu {:.1} | local model B: {} edges, BDeu {:.1}",
+        g1.dag.edge_count(),
+        g1.score,
+        g2.dag.edge_count(),
+        g2.score
+    );
+
+    // Fuse.
+    let (fused, sigma) = fuse(&[&g1.dag, &g2.dag]);
+    println!(
+        "fused: {} edges (A ∪ B after σ-transform); σ head: {:?}...",
+        fused.edge_count(),
+        &sigma[..8.min(sigma.len())]
+    );
+
+    // Every σ-transformed input edge is present in the union.
+    for (name, g) in [("A", &g1.dag), ("B", &g2.dag)] {
+        let t = sigma_consistent_imap(g, &sigma);
+        let missing = t.edges().iter().filter(|&&(u, v)| !fused.has_edge(u, v)).count();
+        println!("  transform({name}): {} edges, {} missing from union", t.edge_count(), missing);
+        assert_eq!(missing, 0);
+    }
+
+    // The fusion is a better starting point than either half alone.
+    println!(
+        "SMHD to truth — A: {}, B: {}, fused: {}",
+        smhd(&g1.dag, &truth.dag),
+        smhd(&g2.dag, &truth.dag),
+        smhd(&fused, &truth.dag)
+    );
+
+    // Use the fusion as a GES starting point (what each ring worker
+    // does each round) and watch the score climb.
+    let refined = ges(&scorer, &fused, &GesConfig::default());
+    println!(
+        "GES from fusion: BDeu {:.1} -> {:.1} ({} edges, SMHD {})",
+        scorer.score_dag(&fused),
+        refined.score,
+        refined.dag.edge_count(),
+        smhd(&refined.dag, &truth.dag)
+    );
+    assert!(refined.score >= scorer.score_dag(&fused) - 1e-9);
+    Ok(())
+}

@@ -1,0 +1,83 @@
+"""AOT export: lower `similarity_model` to HLO text per shape-config.
+
+HLO *text* (NOT `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run as:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits one `similarity_<name>.hlo.txt` per config plus `manifest.txt`
+(`name n m r_max block file` per line) which rust/src/runtime/artifacts.rs
+uses to pick the smallest config a dataset fits into (with padding).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import similarity_model
+
+# (name, n, m, r_max, block). n must be a multiple of block. Sizes chosen
+# so `make artifacts` stays fast while covering the bench scales; the
+# paper-scale configs (n up to 1088 >= munin's 1041) are exported too.
+CONFIGS = [
+    ("tiny", 32, 256, 4, 8),
+    ("small", 128, 1024, 8, 8),
+    ("medium", 256, 5000, 8, 8),
+    ("large", 512, 5000, 8, 8),
+    ("xl", 1088, 5000, 8, 8),
+    ("wide", 1088, 5000, 22, 8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(n: int, m: int, r_max: int, block: int):
+    import jax.numpy as jnp
+
+    data = jax.ShapeDtypeStruct((n, m), jnp.int32)
+    cards = jax.ShapeDtypeStruct((n,), jnp.float32)
+    ess = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+    fn = lambda d, c, e: similarity_model(d, c, e, r_max=r_max, block=block)
+    return jax.jit(fn).lower(data, cards, ess)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs", default=None, help="comma-separated config names (default: all)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    wanted = set(args.configs.split(",")) if args.configs else None
+    manifest_lines = []
+    for name, n, m, r_max, block in CONFIGS:
+        if wanted is not None and name not in wanted:
+            continue
+        fname = f"similarity_{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        text = to_hlo_text(lower_config(n, m, r_max, block))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {n} {m} {r_max} {block} {fname}")
+        print(f"wrote {path}: n={n} m={m} r_max={r_max} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

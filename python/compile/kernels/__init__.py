@@ -1,0 +1,3 @@
+"""L1: Pallas kernels for the paper's compute hot-spot."""
+
+from .pairwise_bdeu import pairwise_bdeu, DEFAULT_BLOCK  # noqa: F401

@@ -1,0 +1,52 @@
+"""L2: the JAX compute graph exported to the Rust coordinator.
+
+`similarity_model` is the whole of stage-1's dense math: the pairwise
+BDeu similarity matrix (L1 Pallas kernel) plus the per-variable
+empty-graph BDeu local scores (plain jnp — a cheap marginal count).
+Both lower into one HLO module; `aot.py` serializes it as HLO *text*
+per shape-config, and `rust/src/runtime` loads + executes it via PJRT.
+
+Python never runs on the learning path: this file is build-time only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pairwise_bdeu
+
+
+def empty_scores(data, cards, ess, *, r_max: int):
+    """Per-variable BDeu local score with no parents, (n,) f32.
+
+    Pure jnp: marginal counts via one-hot sum. Padded instances
+    (state >= r_max) drop out of the counts; padded variables
+    (card = 1, state = r_max) score lgamma(ess) - lgamma(ess) = 0.
+    """
+    states = jax.lax.broadcasted_iota(jnp.int32, (1, 1, r_max), 2)
+    counts = (data[:, :, None] == states).astype(jnp.float32).sum(axis=1)  # (n, r)
+    lgamma = jax.lax.lgamma
+    a_cell = (ess / cards)[:, None]  # (n, 1)
+    n_tot = counts.sum(axis=1)
+    cell = (lgamma(counts + a_cell) - lgamma(a_cell)).sum(axis=1)
+    return lgamma(jnp.full_like(n_tot, ess)) - lgamma(n_tot + ess) + cell
+
+
+@functools.partial(jax.jit, static_argnames=("r_max", "block"))
+def similarity_model(data, cards, ess, *, r_max: int, block: int = 8):
+    """The exported computation.
+
+    Args:
+      data:  (n, m) int32 dataset (variables x instances).
+      cards: (n,) f32 cardinalities.
+      ess:   (1, 1) f32 BDeu equivalent sample size.
+
+    Returns:
+      (S, empty): (n, n) f32 similarity matrix, (n,) f32 empty scores.
+    """
+    s = pairwise_bdeu(data, cards, ess, r_max=r_max, block=block)
+    e = empty_scores(data, cards, ess[0, 0], r_max=r_max)
+    return s, e

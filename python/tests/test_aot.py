@@ -1,0 +1,51 @@
+"""AOT export sanity: HLO text emits, parses, and declares the expected
+entry computation shapes for every config in the manifest."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import CONFIGS, lower_config, to_hlo_text
+
+
+def test_configs_are_well_formed():
+    names = [c[0] for c in CONFIGS]
+    assert len(set(names)) == len(names), "duplicate config names"
+    for name, n, m, r_max, block in CONFIGS:
+        assert n % block == 0, f"{name}: n must be a multiple of block"
+        assert r_max >= 2 and m > 0
+
+
+def test_tiny_config_lowers_to_hlo_text():
+    text = to_hlo_text(lower_config(16, 64, 3, 8))
+    assert "ENTRY" in text
+    assert "f32[16,16]" in text  # S output
+    assert "s32[16,64]" in text  # data input
+
+
+def test_export_cli_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--configs", "tiny"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    manifest = (out / "manifest.txt").read_text().strip().splitlines()
+    assert len(manifest) == 1
+    name, n, m, r, block, fname = manifest[0].split()
+    assert name == "tiny" and (out / fname).exists()
+
+
+def test_paper_scale_configs_cover_domains():
+    """The exported configs must cover the paper's three domains
+    (link 724, pigs 441, munin 1041 vars; max card 21; 5000 rows)."""
+    def fits(n, m, r):
+        return any(cn >= n and cm >= m and cr >= r for _, cn, cm, cr, _ in CONFIGS)
+
+    assert fits(441, 5000, 3)   # pigs
+    assert fits(724, 5000, 4)   # link
+    assert fits(1041, 5000, 21)  # munin

@@ -1,0 +1,151 @@
+"""Kernel vs oracle: the core L1 correctness signal.
+
+The Pallas kernel (f32, blocked, fused count+score) is checked against
+the direct-transcription float64 oracle in ref.py. Tolerances absorb
+f32 lgamma error accumulated over r^2 terms with counts up to m.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import pairwise_bdeu
+from compile.kernels.ref import pairwise_bdeu_ref, empty_scores_ref
+from compile.model import empty_scores, similarity_model
+
+RTOL = 2e-4
+ATOL = 5e-2
+
+
+def make_data(rng, n, m, r_max, uniform_card=None):
+    cards = (
+        np.full(n, uniform_card)
+        if uniform_card
+        else rng.integers(2, r_max + 1, size=n)
+    )
+    data = np.stack([rng.integers(0, c, size=m) for c in cards]).astype(np.int32)
+    return data, cards.astype(np.float32)
+
+
+def run_kernel(data, cards, ess, r_max, block=8):
+    s = pairwise_bdeu(
+        jnp.asarray(data),
+        jnp.asarray(cards, jnp.float32),
+        jnp.full((1, 1), ess, jnp.float32),
+        r_max=r_max,
+        block=block,
+    )
+    return np.asarray(s, dtype=np.float64)
+
+
+def test_matches_oracle_basic():
+    rng = np.random.default_rng(0)
+    data, cards = make_data(rng, 16, 300, 4)
+    s = run_kernel(data, cards, 10.0, 4)
+    ref = pairwise_bdeu_ref(data, cards, 10.0, 4)
+    np.testing.assert_allclose(s, ref, rtol=RTOL, atol=ATOL)
+
+
+def test_symmetry_score_equivalence():
+    # BDeu is score equivalent: s(i,j) == s(j,i).
+    rng = np.random.default_rng(1)
+    data, cards = make_data(rng, 24, 500, 5)
+    s = run_kernel(data, cards, 4.0, 5)
+    np.testing.assert_allclose(s, s.T, rtol=1e-4, atol=1e-2)
+
+
+def test_correlated_pair_dominates():
+    rng = np.random.default_rng(2)
+    data, cards = make_data(rng, 8, 800, 3, uniform_card=3)
+    data[1] = data[0]  # perfect correlation
+    s = run_kernel(data, cards, 10.0, 3)
+    off_diag = [s[1, j] for j in range(8) if j not in (0, 1)]
+    assert s[1, 0] > max(off_diag)
+    assert s[1, 0] > 0
+
+
+def test_padded_instances_are_ignored():
+    rng = np.random.default_rng(3)
+    data, cards = make_data(rng, 8, 200, 4)
+    padded = np.concatenate(
+        [data, np.full((8, 56), 4, dtype=np.int32)], axis=1
+    )  # pad state == r_max
+    s_plain = run_kernel(data, cards, 10.0, 4)
+    s_padded = run_kernel(padded, cards, 10.0, 4)
+    np.testing.assert_allclose(s_plain, s_padded, rtol=1e-5, atol=1e-3)
+
+
+def test_padded_variables_score_zero():
+    rng = np.random.default_rng(4)
+    data, cards = make_data(rng, 8, 200, 4)
+    data[6:] = 4  # pad two variables entirely
+    cards[6:] = 1.0
+    s = run_kernel(data, cards, 10.0, 4)
+    np.testing.assert_allclose(s[6:, :], 0.0, atol=1e-4)
+    np.testing.assert_allclose(s[:, 6:][:6], 0.0, atol=1e-4)
+
+
+def test_block_size_invariance():
+    rng = np.random.default_rng(5)
+    data, cards = make_data(rng, 16, 250, 4)
+    s8 = run_kernel(data, cards, 10.0, 4, block=8)
+    s4 = run_kernel(data, cards, 10.0, 4, block=4)
+    s16 = run_kernel(data, cards, 10.0, 4, block=16)
+    np.testing.assert_allclose(s8, s4, rtol=1e-6, atol=1e-4)
+    np.testing.assert_allclose(s8, s16, rtol=1e-6, atol=1e-4)
+
+
+def test_rejects_bad_block():
+    rng = np.random.default_rng(6)
+    data, cards = make_data(rng, 12, 100, 3)
+    with pytest.raises(ValueError):
+        run_kernel(data, cards, 10.0, 3, block=8)  # 12 % 8 != 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(1, 3),
+    m=st.integers(50, 400),
+    r_max=st.integers(2, 6),
+    ess=st.sampled_from([1.0, 4.0, 10.0]),
+    seed=st.integers(0, 10_000),
+)
+def test_hypothesis_sweep(n_blocks, m, r_max, ess, seed):
+    """Property sweep over shapes, arities and ESS: kernel == oracle."""
+    rng = np.random.default_rng(seed)
+    n = 8 * n_blocks
+    data, cards = make_data(rng, n, m, r_max)
+    s = run_kernel(data, cards, ess, r_max)
+    ref = pairwise_bdeu_ref(data, cards, ess, r_max)
+    np.testing.assert_allclose(s, ref, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(50, 300), r_max=st.integers(2, 5), seed=st.integers(0, 9999))
+def test_empty_scores_match(m, r_max, seed):
+    rng = np.random.default_rng(seed)
+    data, cards = make_data(rng, 16, m, r_max)
+    e = np.asarray(
+        empty_scores(jnp.asarray(data), jnp.asarray(cards), 10.0, r_max=r_max),
+        dtype=np.float64,
+    )
+    ref = empty_scores_ref(data, cards, 10.0, r_max)
+    np.testing.assert_allclose(e, ref, rtol=RTOL, atol=ATOL)
+
+
+def test_similarity_model_tuple():
+    rng = np.random.default_rng(7)
+    data, cards = make_data(rng, 16, 200, 4)
+    s, e = similarity_model(
+        jnp.asarray(data),
+        jnp.asarray(cards),
+        jnp.full((1, 1), 10.0, jnp.float32),
+        r_max=4,
+    )
+    assert s.shape == (16, 16)
+    assert e.shape == (16,)
+    np.testing.assert_allclose(
+        np.asarray(e, np.float64), empty_scores_ref(data, cards, 10.0, 4), rtol=RTOL, atol=ATOL
+    )

@@ -1,0 +1,415 @@
+//! BIF (Bayesian Interchange Format) parser + writer.
+//!
+//! The paper's domains (`link`, `pigs`, `munin`) are distributed by the
+//! bnlearn repository as `.bif` files. This module reads/writes the
+//! discrete subset of the format so real repository files drop straight
+//! into the pipeline; the `bn::repo` analogs are used when the originals
+//! are not on disk (offline environment — see DESIGN.md §Substitutions).
+//!
+//! Supported grammar (whitespace-insensitive):
+//!   network <name> { }
+//!   variable <name> { type discrete [ k ] { s0, s1, ... }; }
+//!   probability ( <child> ) { table p0, ..., p_{r-1}; }
+//!   probability ( <child> | p1, p2 ) { (s_a, s_b) p0, ...; ... }
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bn::{Cpt, DiscreteBn};
+use crate::graph::Dag;
+
+/// Parse a `.bif` file.
+pub fn read_bif(path: &Path) -> Result<DiscreteBn> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("open {}", path.display()))?;
+    parse_bif(&text)
+}
+
+/// Parse BIF text.
+pub fn parse_bif(text: &str) -> Result<DiscreteBn> {
+    let toks = tokenize(text);
+    let mut p = Parser { toks, pos: 0 };
+    p.parse()
+}
+
+fn tokenize(text: &str) -> Vec<String> {
+    let mut toks = Vec::new();
+    let mut cur = String::new();
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '/' if chars.peek() == Some(&'/') => {
+                // line comment
+                for c2 in chars.by_ref() {
+                    if c2 == '\n' {
+                        break;
+                    }
+                }
+            }
+            '{' | '}' | '(' | ')' | '[' | ']' | ',' | ';' | '|' => {
+                if !cur.is_empty() {
+                    toks.push(std::mem::take(&mut cur));
+                }
+                toks.push(c.to_string());
+            }
+            c if c.is_whitespace() => {
+                if !cur.is_empty() {
+                    toks.push(std::mem::take(&mut cur));
+                }
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        toks.push(cur);
+    }
+    toks
+}
+
+struct Parser {
+    toks: Vec<String>,
+    pos: usize,
+}
+
+struct VarDecl {
+    name: String,
+    states: Vec<String>,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&str> {
+        self.toks.get(self.pos).map(|s| s.as_str())
+    }
+
+    fn next(&mut self) -> Result<&str> {
+        let t = self.toks.get(self.pos).ok_or_else(|| anyhow!("unexpected EOF"))?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, want: &str) -> Result<()> {
+        let pos = self.pos;
+        let t = self.next()?;
+        if t != want {
+            bail!("expected '{want}', got '{t}' at token {pos}");
+        }
+        Ok(())
+    }
+
+    fn skip_block(&mut self) -> Result<()> {
+        self.expect("{")?;
+        let mut depth = 1;
+        while depth > 0 {
+            match self.next()? {
+                "{" => depth += 1,
+                "}" => depth -= 1,
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn parse(&mut self) -> Result<DiscreteBn> {
+        let mut vars: Vec<VarDecl> = Vec::new();
+        let mut probs: Vec<(String, Vec<String>, Vec<(Vec<String>, Vec<f64>)>, Option<Vec<f64>>)> =
+            Vec::new();
+
+        while let Some(tok) = self.peek() {
+            match tok {
+                "network" => {
+                    self.next()?;
+                    while self.peek() != Some("{") {
+                        self.next()?;
+                    }
+                    self.skip_block()?;
+                }
+                "variable" => {
+                    self.next()?;
+                    let name = self.next()?.to_string();
+                    self.expect("{")?;
+                    let mut states = Vec::new();
+                    while self.peek() != Some("}") {
+                        if self.peek() == Some("type") {
+                            self.next()?; // type
+                            self.expect("discrete")?;
+                            self.expect("[")?;
+                            let _k: usize = self.next()?.parse().context("state count")?;
+                            self.expect("]")?;
+                            self.expect("{")?;
+                            loop {
+                                let t = self.next()?;
+                                match t {
+                                    "}" => break,
+                                    "," => {}
+                                    s => states.push(s.to_string()),
+                                }
+                            }
+                            self.expect(";")?;
+                        } else {
+                            self.next()?;
+                        }
+                    }
+                    self.expect("}")?;
+                    vars.push(VarDecl { name, states });
+                }
+                "probability" => {
+                    self.next()?;
+                    self.expect("(")?;
+                    let child = self.next()?.to_string();
+                    let mut parents = Vec::new();
+                    if self.peek() == Some("|") {
+                        self.next()?;
+                        loop {
+                            let t = self.next()?;
+                            match t {
+                                ")" => break,
+                                "," => {}
+                                s => parents.push(s.to_string()),
+                            }
+                        }
+                    } else {
+                        self.expect(")")?;
+                    }
+                    self.expect("{")?;
+                    let mut rows: Vec<(Vec<String>, Vec<f64>)> = Vec::new();
+                    let mut table: Option<Vec<f64>> = None;
+                    while self.peek() != Some("}") {
+                        match self.peek() {
+                            Some("table") => {
+                                self.next()?;
+                                let mut vals = Vec::new();
+                                loop {
+                                    let t = self.next()?;
+                                    match t {
+                                        ";" => break,
+                                        "," => {}
+                                        v => vals.push(v.parse::<f64>().context("table value")?),
+                                    }
+                                }
+                                table = Some(vals);
+                            }
+                            Some("(") => {
+                                self.next()?;
+                                let mut cfg = Vec::new();
+                                loop {
+                                    let t = self.next()?;
+                                    match t {
+                                        ")" => break,
+                                        "," => {}
+                                        s => cfg.push(s.to_string()),
+                                    }
+                                }
+                                let mut vals = Vec::new();
+                                loop {
+                                    let t = self.next()?;
+                                    match t {
+                                        ";" => break,
+                                        "," => {}
+                                        v => vals.push(v.parse::<f64>().context("cpt value")?),
+                                    }
+                                }
+                                rows.push((cfg, vals));
+                            }
+                            _ => {
+                                self.next()?;
+                            }
+                        }
+                    }
+                    self.expect("}")?;
+                    probs.push((child, parents, rows, table));
+                }
+                _ => {
+                    self.next()?;
+                }
+            }
+        }
+
+        // Assemble the network.
+        let n = vars.len();
+        let index: HashMap<&str, usize> =
+            vars.iter().enumerate().map(|(i, v)| (v.name.as_str(), i)).collect();
+        let state_index: Vec<HashMap<&str, usize>> = vars
+            .iter()
+            .map(|v| v.states.iter().enumerate().map(|(i, s)| (s.as_str(), i)).collect())
+            .collect();
+        let cards: Vec<u32> = vars.iter().map(|v| v.states.len() as u32).collect();
+
+        let mut dag = Dag::new(n);
+        let mut cpts: Vec<Option<Cpt>> = (0..n).map(|_| None).collect();
+        for (child, parents, rows, table) in probs {
+            let c = *index.get(child.as_str()).ok_or_else(|| anyhow!("unknown var {child}"))?;
+            let pidx: Vec<usize> = parents
+                .iter()
+                .map(|p| index.get(p.as_str()).copied().ok_or_else(|| anyhow!("unknown parent {p}")))
+                .collect::<Result<_>>()?;
+            for &p in &pidx {
+                dag.add_edge(p, c);
+            }
+            let r = cards[c] as usize;
+            // CPT parent order: ascending variable index (our convention);
+            // remap each BIF row from the file's parent order.
+            let mut sorted = pidx.clone();
+            sorted.sort_unstable();
+            let q: usize = sorted.iter().map(|&p| cards[p] as usize).product();
+            let mut tbl = vec![0.0f64; q * r];
+            if let Some(vals) = table {
+                if vals.len() != r {
+                    bail!("{child}: table has {} values, expected {r}", vals.len());
+                }
+                tbl.copy_from_slice(&vals);
+            } else {
+                for (cfg_states, vals) in rows {
+                    if cfg_states.len() != pidx.len() || vals.len() != r {
+                        bail!("{child}: malformed cpt row");
+                    }
+                    let mut cfg = 0usize;
+                    for (p_file, sname) in pidx.iter().zip(&cfg_states) {
+                        let s = *state_index[*p_file]
+                            .get(sname.as_str())
+                            .ok_or_else(|| anyhow!("unknown state {sname} of parent"))?;
+                        // stride of p_file within sorted order
+                        let mut stride = 1usize;
+                        for &sp in sorted.iter() {
+                            if sp == *p_file {
+                                break;
+                            }
+                            stride *= cards[sp] as usize;
+                        }
+                        cfg += stride * s;
+                    }
+                    tbl[cfg * r..(cfg + 1) * r].copy_from_slice(&vals);
+                }
+            }
+            cpts[c] = Some(Cpt { parents: sorted, table: tbl, r });
+        }
+
+        let cpts: Vec<Cpt> = cpts
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| c.ok_or_else(|| anyhow!("no probability block for {}", vars[i].name)))
+            .collect::<Result<_>>()?;
+        let bn = DiscreteBn {
+            dag,
+            names: vars.into_iter().map(|v| v.name).collect(),
+            cards,
+            cpts,
+        };
+        bn.validate().map_err(|e| anyhow!("invalid BN: {e}"))?;
+        Ok(bn)
+    }
+}
+
+/// Write a network as BIF (states named `s0..s{r-1}`).
+pub fn write_bif(bn: &DiscreteBn, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "network unknown {{\n}}")?;
+    for v in 0..bn.n() {
+        let states: Vec<String> = (0..bn.cards[v]).map(|s| format!("s{s}")).collect();
+        writeln!(
+            f,
+            "variable {} {{\n  type discrete [ {} ] {{ {} }};\n}}",
+            bn.names[v],
+            bn.cards[v],
+            states.join(", ")
+        )?;
+    }
+    for v in 0..bn.n() {
+        let cpt = &bn.cpts[v];
+        if cpt.parents.is_empty() {
+            let vals: Vec<String> = cpt.table.iter().map(|p| format!("{p:.10}")).collect();
+            writeln!(
+                f,
+                "probability ( {} ) {{\n  table {};\n}}",
+                bn.names[v],
+                vals.join(", ")
+            )?;
+        } else {
+            let pnames: Vec<&str> = cpt.parents.iter().map(|&p| bn.names[p].as_str()).collect();
+            writeln!(f, "probability ( {} | {} ) {{", bn.names[v], pnames.join(", "))?;
+            for cfg in 0..cpt.q() {
+                // decode mixed-radix cfg into parent states
+                let mut rem = cfg;
+                let mut states = Vec::new();
+                for &p in &cpt.parents {
+                    let c = bn.cards[p] as usize;
+                    states.push(format!("s{}", rem % c));
+                    rem /= c;
+                }
+                let vals: Vec<String> = cpt.row(cfg).iter().map(|p| format!("{p:.10}")).collect();
+                writeln!(f, "  ({}) {};", states.join(", "), vals.join(", "))?;
+            }
+            writeln!(f, "}}")?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+network test {
+}
+variable rain {
+  type discrete [ 2 ] { yes, no };
+}
+variable sprinkler {
+  type discrete [ 2 ] { on, off };
+}
+variable wet {
+  type discrete [ 2 ] { wet, dry };
+}
+probability ( rain ) {
+  table 0.2, 0.8;
+}
+probability ( sprinkler ) {
+  table 0.3, 0.7;
+}
+probability ( wet | rain, sprinkler ) {
+  (yes, on) 0.99, 0.01;
+  (yes, off) 0.8, 0.2;
+  (no, on) 0.9, 0.1;
+  (no, off) 0.05, 0.95;
+}
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let bn = parse_bif(SAMPLE).unwrap();
+        assert_eq!(bn.n(), 3);
+        assert_eq!(bn.cards, vec![2, 2, 2]);
+        let wet = bn.names.iter().position(|n| n == "wet").unwrap();
+        assert_eq!(bn.dag.parents(wet).count(), 2);
+        // P(wet=wet | rain=yes, sprinkler=on) = 0.99
+        // parents sorted = [rain=0, sprinkler=1]; cfg (yes=0, on=0) -> 0
+        assert!((bn.cpts[wet].row(0)[0] - 0.99).abs() < 1e-9);
+        // cfg (no=1, on=0) -> stride rain=1 -> cfg 1
+        assert!((bn.cpts[wet].row(1)[0] - 0.9).abs() < 1e-9);
+        bn.validate().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_through_writer() {
+        let bn = crate::bn::netgen::generate(&crate::bn::NetGenConfig::default(), 5);
+        let tmp = std::env::temp_dir().join("cges_bif_roundtrip.bif");
+        write_bif(&bn, &tmp).unwrap();
+        let back = read_bif(&tmp).unwrap();
+        assert_eq!(back.n(), bn.n());
+        assert_eq!(back.cards, bn.cards);
+        let mut e1 = bn.dag.edges();
+        let mut e2 = back.dag.edges();
+        e1.sort_unstable();
+        e2.sort_unstable();
+        assert_eq!(e1, e2);
+        // CPT values survive within print precision.
+        for v in 0..bn.n() {
+            for (a, b) in bn.cpts[v].table.iter().zip(&back.cpts[v].table) {
+                assert!((a - b).abs() < 1e-8);
+            }
+        }
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -1,0 +1,14 @@
+//! Bayesian-network substrate: representation, BIF interchange,
+//! generators (paper-domain analogs) and forward sampling.
+
+pub mod bif;
+pub mod netgen;
+pub mod network;
+pub mod repo;
+pub mod sampler;
+
+pub use bif::{parse_bif, read_bif, write_bif};
+pub use netgen::{generate, NetGenConfig};
+pub use network::{Cpt, DiscreteBn};
+pub use repo::{load_domain, Domain};
+pub use sampler::forward_sample;

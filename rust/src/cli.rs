@@ -1,0 +1,132 @@
+//! Minimal CLI argument parser (no `clap` in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, and positional arguments, with
+//! typed getters and an unknown-option check. Each `main.rs` subcommand
+//! declares its options against this.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed argument bag.
+pub struct Args {
+    positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv slice. `flag_names` lists boolean flags (which
+    /// consume no value); everything else starting with `--` takes one.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut options = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if flag_names.contains(&name) {
+                    flags.push(name.to_string());
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("option --{name} expects a value"))?;
+                    options.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, options, flags })
+    }
+
+    /// Positional argument by index.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// Number of positional arguments.
+    pub fn n_pos(&self) -> usize {
+        self.positional.len()
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Required string option.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: cannot parse '{v}'")),
+        }
+    }
+
+    /// Boolean flag.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Error on unknown options (call after reading all known keys).
+    pub fn check_known(&self, known_opts: &[&str], known_flags: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known_opts.contains(&k.as_str()) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !known_flags.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&argv(&["learn", "--k", "4", "--full", "data.csv"]), &["full"]).unwrap();
+        assert_eq!(a.pos(0), Some("learn"));
+        assert_eq!(a.pos(1), Some("data.csv"));
+        assert_eq!(a.get_parse::<usize>("k", 2).unwrap(), 4);
+        assert!(a.flag("full"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv(&["--k"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_and_require() {
+        let a = Args::parse(&argv(&[]), &[]).unwrap();
+        assert_eq!(a.get_parse::<f64>("ess", 10.0).unwrap(), 10.0);
+        assert!(a.require("data").is_err());
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = Args::parse(&argv(&["--bogus", "1"]), &[]).unwrap();
+        assert!(a.check_known(&["k"], &[]).is_err());
+        let b = Args::parse(&argv(&["--k", "1"]), &[]).unwrap();
+        assert!(b.check_known(&["k"], &[]).is_ok());
+    }
+}

@@ -1,0 +1,8 @@
+//! The paper's system contribution: the directed-ring distributed
+//! learning coordinator (Algorithm 1) plus run telemetry.
+
+pub mod ring;
+pub mod telemetry;
+
+pub use ring::{cges, insert_limit, PartitionSource, RingConfig, RingResult};
+pub use telemetry::{RoundRecord, Telemetry};

@@ -1,0 +1,328 @@
+//! The cGES ring coordinator — Algorithm 1 of the paper.
+//!
+//! Stage 1 (edge partitioning): pairwise BDeu similarities — from the
+//! AOT XLA artifact when available, the threaded Rust fallback
+//! otherwise — feed the hierarchical clustering and the balanced edge
+//! assignment (`partition`).
+//!
+//! Stage 2 (ring learning): k workers, one per edge subset E_i,
+//! synchronous rounds. In round t worker i fuses its own model
+//! G_i^{t-1} with its predecessor's G_{i-1}^{t-1} (`fusion`), then runs
+//! GES restricted to E_i, optionally capped at l = (10/k)·√n inserts
+//! (cGES-L). All workers share one concurrent score cache; candidate
+//! scoring inside each worker is threaded so the whole machine stays at
+//! `threads` busy cores (the paper's 8).
+//!
+//! Convergence: the round's best BDeu must beat the best seen so far,
+//! else the learning stage stops (Algorithm 1 lines 11-16).
+//!
+//! Stage 3 (fine tuning): one unrestricted GES from the ring's best
+//! model — this run is what transfers GES's theoretical guarantees to
+//! cGES.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::telemetry::{RoundRecord, Telemetry};
+use crate::data::Dataset;
+use crate::fusion::fuse;
+use crate::graph::Dag;
+use crate::learn::{ges, EdgeMask, GesConfig, RingWorker};
+use crate::partition::partition_edges;
+use crate::score::{BdeuScorer, PairwiseScores, ScoreCache};
+use crate::util::Timer;
+
+/// Where stage 1 gets its pairwise similarities.
+#[derive(Clone, Debug, Default)]
+pub enum PartitionSource {
+    /// Load + execute the AOT artifact from this directory; fall back
+    /// to Rust (with a warning) if no config fits.
+    Artifacts(PathBuf),
+    /// Always use the threaded Rust implementation.
+    #[default]
+    RustFallback,
+}
+
+/// Ring configuration.
+#[derive(Clone)]
+pub struct RingConfig {
+    /// Number of ring processes / edge subsets (paper: 2, 4, 8).
+    pub k: usize,
+    /// cGES-L: cap FES inserts per round at (10/k)·√n.
+    pub limit_inserts: bool,
+    /// BDeu equivalent sample size.
+    pub ess: f64,
+    /// Total scoring threads, shared across workers (paper: 8).
+    pub threads: usize,
+    /// Safety cap on rounds (the paper iterates to convergence).
+    pub max_rounds: usize,
+    /// Stage-1 similarity source.
+    pub partition_source: PartitionSource,
+    /// Run the stage-3 unrestricted GES.
+    pub fine_tune: bool,
+    /// Optional hard max-parents cap passed to the learners.
+    pub max_parents: Option<usize>,
+}
+
+impl Default for RingConfig {
+    fn default() -> Self {
+        RingConfig {
+            k: 4,
+            limit_inserts: true,
+            ess: 10.0,
+            threads: crate::util::num_threads(),
+            max_rounds: 50,
+            partition_source: PartitionSource::RustFallback,
+            fine_tune: true,
+            max_parents: None,
+        }
+    }
+}
+
+/// Ring outcome.
+pub struct RingResult {
+    /// Final structure (after fine tuning if enabled).
+    pub dag: Dag,
+    /// Its BDeu score.
+    pub score: f64,
+    /// Learning-stage rounds executed.
+    pub rounds: usize,
+    /// Telemetry (per-round records, stage times, cache stats).
+    pub telemetry: Telemetry,
+}
+
+/// The cGES-L insert limit l = (10/k)·√n.
+pub fn insert_limit(k: usize, n: usize) -> usize {
+    ((10.0 / k as f64) * (n as f64).sqrt()).ceil() as usize
+}
+
+/// Compute stage-1 similarities, preferring the artifact path.
+fn stage1_similarity(
+    data: &Arc<Dataset>,
+    cfg: &RingConfig,
+) -> (PairwiseScores, String) {
+    match &cfg.partition_source {
+        PartitionSource::Artifacts(dir) => {
+            match crate::runtime::SimilarityRuntime::load(dir) {
+                Ok(rt) if rt.supports(data) => match rt.pairwise(data, cfg.ess) {
+                    Ok(s) => return (s, format!("xla:{}", rt.platform())),
+                    Err(e) => eprintln!("warning: artifact execution failed ({e}); falling back to Rust"),
+                },
+                Ok(_) => eprintln!(
+                    "warning: no artifact config fits n={} m={} r={}; falling back to Rust",
+                    data.n_vars(),
+                    data.n_rows(),
+                    data.max_card()
+                ),
+                Err(e) => eprintln!("warning: artifact load failed ({e}); falling back to Rust"),
+            }
+            (crate::score::pairwise_similarity(data, cfg.ess, cfg.threads), "rust-fallback".into())
+        }
+        PartitionSource::RustFallback => {
+            (crate::score::pairwise_similarity(data, cfg.ess, cfg.threads), "rust-fallback".into())
+        }
+    }
+}
+
+/// Run cGES on a dataset.
+pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
+    assert!(cfg.k >= 1, "ring needs at least one process");
+    let n = data.n_vars();
+    let mut telemetry = Telemetry::default();
+
+    // ---- Stage 1: edge partitioning -------------------------------
+    let t = Timer::start();
+    let (pairwise, source) = stage1_similarity(&data, cfg);
+    let masks: Vec<Arc<EdgeMask>> =
+        partition_edges(&pairwise.s, cfg.k).into_iter().map(Arc::new).collect();
+    let seed = Arc::new(pairwise.s);
+    telemetry.partition_secs = t.secs();
+    telemetry.partition_source = source;
+
+    // Shared score cache across every worker and stage.
+    let cache = Arc::new(ScoreCache::new());
+    let scorer = BdeuScorer::with_cache(data.clone(), cfg.ess, cache.clone());
+
+    let limit = cfg.limit_inserts.then(|| insert_limit(cfg.k, n));
+    let worker_threads = (cfg.threads / cfg.k).max(1);
+
+    // ---- Stage 2: ring learning -----------------------------------
+    // Workers keep their search state (candidate heaps, version
+    // stamps) across rounds: a round only re-evaluates pairs the
+    // fusion actually changed (see learn::ges::RingWorker — the §Perf
+    // optimization that makes the ring competitive with heap-GES).
+    let t = Timer::start();
+    let mut workers: Vec<RingWorker> = (0..cfg.k)
+        .map(|i| {
+            let ges_cfg = GesConfig {
+                threads: worker_threads,
+                insert_limit: limit,
+                mask: Some(masks[i].clone()),
+                max_parents: cfg.max_parents,
+                seed: Some(seed.clone()),
+                iterate_until_stable: false,
+                forward_empty_t: false,
+            };
+            RingWorker::new(scorer.clone(), ges_cfg)
+        })
+        .collect();
+    let mut models: Vec<Dag> = vec![Dag::new(n); cfg.k];
+    let mut best_score = f64::NEG_INFINITY;
+    let mut best_dag = Dag::new(n);
+    let mut rounds = 0usize;
+
+    'rounds: for round in 0..cfg.max_rounds {
+        rounds = round + 1;
+        // Jacobi-synchronous ring step: worker i consumes its own model
+        // and predecessor (i-1)'s model from the previous round.
+        let prev = models.clone();
+        let results: Vec<(Dag, RoundRecord)> = std::thread::scope(|s| {
+            let handles: Vec<_> = workers
+                .iter_mut()
+                .enumerate()
+                .map(|(i, worker)| {
+                    let scorer = scorer.clone();
+                    let own = &prev[i];
+                    let pred = &prev[(i + cfg.k - 1) % cfg.k];
+                    s.spawn(move || {
+                        // Fusion (skipped in round 0: nothing learned yet).
+                        let ft = Timer::start();
+                        if round > 0 {
+                            let (fused, _sigma) = fuse(&[own, pred]);
+                            worker.absorb(&fused);
+                        }
+                        let fusion_secs = ft.secs();
+
+                        // Constrained GES resuming the persistent state.
+                        let gt = Timer::start();
+                        let (inserts, deletes) = worker.step(limit);
+                        let dag = worker.dag();
+                        let rec = RoundRecord {
+                            round,
+                            worker: i,
+                            fusion_secs,
+                            ges_secs: gt.secs(),
+                            score: scorer.score_dag(&dag),
+                            edges: dag.edge_count(),
+                            inserts,
+                            deletes,
+                        };
+                        (dag, rec)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("ring worker panicked")).collect()
+        });
+
+        // Convergence check (Algorithm 1, lines 11-16).
+        let mut improved = false;
+        for (i, (dag, rec)) in results.into_iter().enumerate() {
+            if rec.score > best_score {
+                best_score = rec.score;
+                best_dag = dag.clone();
+                improved = true;
+            }
+            telemetry.records.push(rec);
+            models[i] = dag;
+        }
+        if !improved {
+            break 'rounds;
+        }
+    }
+    telemetry.learning_secs = t.secs();
+
+    // ---- Stage 3: fine tuning --------------------------------------
+    let t = Timer::start();
+    let (dag, score) = if cfg.fine_tune {
+        let ges_cfg = GesConfig {
+            threads: cfg.threads,
+            insert_limit: None,
+            mask: None,
+            max_parents: cfg.max_parents,
+            seed: None,
+            iterate_until_stable: false,
+            forward_empty_t: false,
+        };
+        let r = ges(&scorer, &best_dag, &ges_cfg);
+        (r.dag, r.score)
+    } else {
+        (best_dag, best_score)
+    };
+    telemetry.fine_tune_secs = t.secs();
+
+    let (hits, misses) = cache.stats();
+    telemetry.cache_hits = hits;
+    telemetry.cache_misses = misses;
+
+    Ok(RingResult { dag, score, rounds, telemetry })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::{forward_sample, generate, NetGenConfig};
+    use crate::learn::GesConfig;
+
+    fn workload(nodes: usize, edges: usize, seed: u64) -> (crate::bn::DiscreteBn, Arc<Dataset>) {
+        let bn = generate(&NetGenConfig { nodes, edges, ..Default::default() }, seed);
+        let data = Arc::new(forward_sample(&bn, 1500, seed + 1));
+        (bn, data)
+    }
+
+    #[test]
+    fn cges_beats_empty_and_converges() {
+        let (_bn, data) = workload(20, 28, 41);
+        let cfg = RingConfig { k: 2, threads: 4, ..Default::default() };
+        let r = cges(data.clone(), &cfg).unwrap();
+        let sc = BdeuScorer::new(data, cfg.ess);
+        assert!(r.score > sc.score_dag(&Dag::new(20)));
+        assert!(r.rounds >= 1 && r.rounds < cfg.max_rounds);
+        assert!(!r.telemetry.records.is_empty());
+        let (h, _m) = (r.telemetry.cache_hits, r.telemetry.cache_misses);
+        assert!(h > 0, "workers must share the cache");
+    }
+
+    #[test]
+    fn cges_k1_close_to_plain_ges() {
+        let (_bn, data) = workload(14, 18, 7);
+        let cfg = RingConfig {
+            k: 1,
+            limit_inserts: false,
+            threads: 2,
+            ..Default::default()
+        };
+        let ring = cges(data.clone(), &cfg).unwrap();
+        let sc = BdeuScorer::new(data, cfg.ess);
+        let plain = ges(&sc, &Dag::new(14), &GesConfig { threads: 2, ..Default::default() });
+        assert!(
+            (ring.score - plain.score).abs() < 1e-6,
+            "k=1 unlimited ring = GES: {} vs {}",
+            ring.score,
+            plain.score
+        );
+    }
+
+    #[test]
+    fn limit_policy_applies() {
+        assert_eq!(insert_limit(4, 400), 50);
+        assert_eq!(insert_limit(2, 100), 50);
+        let (_bn, data) = workload(16, 24, 3);
+        let cfg = RingConfig { k: 4, limit_inserts: true, threads: 4, fine_tune: false, ..Default::default() };
+        let r = cges(data, &cfg).unwrap();
+        let l = insert_limit(4, 16);
+        for rec in &r.telemetry.records {
+            assert!(rec.inserts <= l, "round {} worker {} inserted {}", rec.round, rec.worker, rec.inserts);
+        }
+    }
+
+    #[test]
+    fn fine_tune_only_improves() {
+        let (_bn, data) = workload(18, 26, 11);
+        let base = RingConfig { k: 2, threads: 4, fine_tune: false, ..Default::default() };
+        let no_ft = cges(data.clone(), &base).unwrap();
+        let with_ft = cges(data, &RingConfig { fine_tune: true, ..base }).unwrap();
+        assert!(with_ft.score >= no_ft.score - 1e-9);
+    }
+}

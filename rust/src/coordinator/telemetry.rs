@@ -1,0 +1,110 @@
+//! Run telemetry: per-round, per-worker records of the ring — the data
+//! behind the paper's Table 2c and our convergence-trace "figure".
+
+use std::io::Write;
+use std::path::Path;
+
+/// One worker's activity in one ring round.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub worker: usize,
+    pub fusion_secs: f64,
+    pub ges_secs: f64,
+    pub score: f64,
+    pub edges: usize,
+    pub inserts: usize,
+    pub deletes: usize,
+}
+
+/// Full run telemetry.
+#[derive(Debug, Default, Clone)]
+pub struct Telemetry {
+    pub records: Vec<RoundRecord>,
+    /// (hits, computed) of the shared score cache at the end.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Stage wall-times.
+    pub partition_secs: f64,
+    pub learning_secs: f64,
+    pub fine_tune_secs: f64,
+    /// Partition source ("xla:<config>" or "rust-fallback").
+    pub partition_source: String,
+}
+
+impl Telemetry {
+    /// Best score observed per round (the convergence trace).
+    pub fn round_best_scores(&self) -> Vec<(usize, f64)> {
+        let mut out: Vec<(usize, f64)> = Vec::new();
+        for r in &self.records {
+            match out.iter_mut().find(|(round, _)| *round == r.round) {
+                Some((_, best)) => {
+                    if r.score > *best {
+                        *best = r.score;
+                    }
+                }
+                None => out.push((r.round, r.score)),
+            }
+        }
+        out.sort_by_key(|&(round, _)| round);
+        out
+    }
+
+    /// Dump as TSV (one row per record plus a `#summary` trailer).
+    pub fn write_tsv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "round\tworker\tfusion_secs\tges_secs\tscore\tedges\tinserts\tdeletes")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{}\t{}\t{:.4}\t{:.4}\t{:.4}\t{}\t{}\t{}",
+                r.round, r.worker, r.fusion_secs, r.ges_secs, r.score, r.edges, r.inserts, r.deletes
+            )?;
+        }
+        writeln!(
+            f,
+            "#summary\tpartition={:.3}s ({})\tlearning={:.3}s\tfine_tune={:.3}s\tcache_hits={}\tcache_misses={}",
+            self.partition_secs,
+            self.partition_source,
+            self.learning_secs,
+            self.fine_tune_secs,
+            self.cache_hits,
+            self.cache_misses
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_best_scores_tracks_max() {
+        let t = Telemetry {
+            records: vec![
+                RoundRecord { round: 0, worker: 0, fusion_secs: 0.0, ges_secs: 0.1, score: -10.0, edges: 1, inserts: 1, deletes: 0 },
+                RoundRecord { round: 0, worker: 1, fusion_secs: 0.0, ges_secs: 0.1, score: -8.0, edges: 2, inserts: 2, deletes: 0 },
+                RoundRecord { round: 1, worker: 0, fusion_secs: 0.1, ges_secs: 0.1, score: -7.0, edges: 3, inserts: 1, deletes: 0 },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(t.round_best_scores(), vec![(0, -8.0), (1, -7.0)]);
+    }
+
+    #[test]
+    fn tsv_roundtrip_lines() {
+        let t = Telemetry {
+            records: vec![RoundRecord { round: 0, worker: 0, fusion_secs: 0.0, ges_secs: 0.5, score: -1.0, edges: 4, inserts: 4, deletes: 1 }],
+            partition_source: "rust-fallback".into(),
+            ..Default::default()
+        };
+        let tmp = std::env::temp_dir().join("cges_telemetry.tsv");
+        t.write_tsv(&tmp).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert!(text.starts_with("round\t"));
+        assert!(text.contains("#summary"));
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_file(&tmp).ok();
+    }
+}

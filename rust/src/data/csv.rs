@@ -1,0 +1,100 @@
+//! CSV interchange for datasets: header row of variable names, integer
+//! state values. Cardinalities are inferred as `max state + 1` unless a
+//! `#cards:` comment line supplies them (the sampler always writes it,
+//! so round-trips are exact even if a rare state never occurs in the
+//! sample).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+
+/// Write `data` as CSV (with a `#cards:` header comment).
+pub fn write_csv(data: &Dataset, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    let cards: Vec<String> = data.cards().iter().map(|c| c.to_string()).collect();
+    writeln!(f, "#cards: {}", cards.join(","))?;
+    writeln!(f, "{}", data.names().join(","))?;
+    for r in 0..data.n_rows() {
+        let row: Vec<String> = (0..data.n_vars()).map(|v| data.col(v)[r].to_string()).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a dataset written by [`write_csv`] (or any integer CSV).
+pub fn read_csv(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut lines = BufReader::new(f).lines();
+
+    let mut first = lines.next().context("empty csv")??;
+    let mut cards: Option<Vec<u32>> = None;
+    if let Some(rest) = first.strip_prefix("#cards:") {
+        cards = Some(
+            rest.trim()
+                .split(',')
+                .map(|s| s.trim().parse::<u32>().context("bad #cards entry"))
+                .collect::<Result<_>>()?,
+        );
+        first = lines.next().context("csv missing header")??;
+    }
+    let names: Vec<String> = first.split(',').map(|s| s.trim().to_string()).collect();
+    let n = names.len();
+
+    let mut cols: Vec<Vec<u8>> = vec![Vec::new(); n];
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() != n {
+            bail!("row {} has {} fields, expected {}", lineno + 2, fields.len(), n);
+        }
+        for (v, s) in fields.iter().enumerate() {
+            let val: u32 = s.trim().parse().with_context(|| format!("row {lineno}, col {v}"))?;
+            if val > u8::MAX as u32 {
+                bail!("state {val} exceeds u8 range (col {v})");
+            }
+            cols[v].push(val as u8);
+        }
+    }
+
+    let cards = cards.unwrap_or_else(|| {
+        cols.iter()
+            .map(|c| c.iter().copied().max().map(|m| m as u32 + 1).unwrap_or(1))
+            .collect()
+    });
+    Ok(Dataset::new(names, cards, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let d = Dataset::unnamed(vec![3, 2], vec![vec![0, 2, 1], vec![1, 0, 1]]);
+        let tmp = std::env::temp_dir().join("cges_csv_roundtrip.csv");
+        write_csv(&d, &tmp).unwrap();
+        let r = read_csv(&tmp).unwrap();
+        assert_eq!(r.cards(), d.cards());
+        assert_eq!(r.col(0), d.col(0));
+        assert_eq!(r.col(1), d.col(1));
+        assert_eq!(r.names(), d.names());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn infers_cards_without_header() {
+        let tmp = std::env::temp_dir().join("cges_csv_nocards.csv");
+        std::fs::write(&tmp, "a,b\n0,1\n2,0\n").unwrap();
+        let r = read_csv(&tmp).unwrap();
+        assert_eq!(r.cards(), &[3, 2]);
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -1,0 +1,132 @@
+//! Column-major discrete dataset.
+//!
+//! Variables are `u8` state columns (max cardinality 255 — munin's 21
+//! is the largest in the paper's domains). Column-major layout keeps
+//! the contingency-counting inner loops (the global hot path) streaming
+//! over contiguous memory.
+
+/// Discrete dataset: `n_vars` columns of `n_rows` states each.
+#[derive(Clone)]
+pub struct Dataset {
+    names: Vec<String>,
+    cards: Vec<u32>,
+    cols: Vec<Vec<u8>>,
+    n_rows: usize,
+}
+
+impl Dataset {
+    /// Build from columns; `cards[i]` must exceed every state in
+    /// `cols[i]`.
+    pub fn new(names: Vec<String>, cards: Vec<u32>, cols: Vec<Vec<u8>>) -> Self {
+        assert_eq!(names.len(), cards.len());
+        assert_eq!(names.len(), cols.len());
+        let n_rows = cols.first().map(|c| c.len()).unwrap_or(0);
+        for (i, col) in cols.iter().enumerate() {
+            assert_eq!(col.len(), n_rows, "ragged column {i}");
+            debug_assert!(
+                col.iter().all(|&s| (s as u32) < cards[i]),
+                "state out of range in column {i}"
+            );
+        }
+        Dataset { names, cards, cols, n_rows }
+    }
+
+    /// Dataset with default names `X0..X{n-1}`.
+    pub fn unnamed(cards: Vec<u32>, cols: Vec<Vec<u8>>) -> Self {
+        let names = (0..cards.len()).map(|i| format!("X{i}")).collect();
+        Dataset::new(names, cards, cols)
+    }
+
+    /// Number of variables.
+    #[inline]
+    pub fn n_vars(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Number of instances.
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Cardinality of variable `i`.
+    #[inline]
+    pub fn card(&self, i: usize) -> u32 {
+        self.cards[i]
+    }
+
+    /// All cardinalities.
+    #[inline]
+    pub fn cards(&self) -> &[u32] {
+        &self.cards
+    }
+
+    /// Column `i`'s states.
+    #[inline]
+    pub fn col(&self, i: usize) -> &[u8] {
+        &self.cols[i]
+    }
+
+    /// Variable names.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Name of variable `i`.
+    pub fn name(&self, i: usize) -> &str {
+        &self.names[i]
+    }
+
+    /// Index of a variable by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Maximum cardinality across variables.
+    pub fn max_card(&self) -> u32 {
+        self.cards.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Row-restricted copy (used by the federated example's horizontal
+    /// shards).
+    pub fn select_rows(&self, rows: &[usize]) -> Dataset {
+        let cols = self
+            .cols
+            .iter()
+            .map(|c| rows.iter().map(|&r| c[r]).collect())
+            .collect();
+        Dataset { names: self.names.clone(), cards: self.cards.clone(), cols, n_rows: rows.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let d = Dataset::unnamed(vec![2, 3], vec![vec![0, 1, 0], vec![2, 1, 0]]);
+        assert_eq!(d.n_vars(), 2);
+        assert_eq!(d.n_rows(), 3);
+        assert_eq!(d.card(1), 3);
+        assert_eq!(d.col(0), &[0, 1, 0]);
+        assert_eq!(d.name(1), "X1");
+        assert_eq!(d.index_of("X0"), Some(0));
+        assert_eq!(d.max_card(), 3);
+    }
+
+    #[test]
+    fn select_rows_subsets() {
+        let d = Dataset::unnamed(vec![2, 2], vec![vec![0, 1, 1, 0], vec![1, 1, 0, 0]]);
+        let s = d.select_rows(&[0, 3]);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.col(0), &[0, 0]);
+        assert_eq!(s.col(1), &[1, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_columns_rejected() {
+        Dataset::unnamed(vec![2, 2], vec![vec![0, 1], vec![0]]);
+    }
+}

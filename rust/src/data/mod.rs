@@ -1,0 +1,7 @@
+//! Dataset substrate: column-major discrete data + CSV interchange.
+
+pub mod csv;
+pub mod dataset;
+
+pub use csv::{read_csv, write_csv};
+pub use dataset::Dataset;

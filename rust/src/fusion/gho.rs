@@ -1,0 +1,191 @@
+//! Greedy Heuristic Ordering (GHO) for fusion.
+//!
+//! The fusion result depends strongly on the common variable order σ;
+//! GHO (Puerta et al. 2021) builds σ from the back by repeatedly
+//! selecting the node with the minimum total *sink cost* — the number
+//! of edges the reversal procedure would add across all input DAGs to
+//! make that node a sink — then actually sinking it and recursing on
+//! the remaining nodes.
+
+use crate::graph::Dag;
+
+/// Cost of making `v` a sink in `g`, restricted to non-removed nodes:
+/// `(edges_added, reversals)`. This simulates the same reversal order
+/// [`make_sink`] uses, so the greedy choice is exact with respect to
+/// the transformation actually applied.
+pub fn sink_cost(g: &Dag, v: usize, removed: &[bool]) -> (usize, usize) {
+    let mut sim = g.clone();
+    make_sink(&mut sim, v, removed)
+}
+
+/// Turn `v` into a sink in-place by reversing its outgoing edges
+/// (to non-removed children), augmenting parents to keep the graph an
+/// I-map of the original (Shachter-style arc reversal). Returns
+/// `(edges_added, reversals)`.
+pub fn make_sink(g: &mut Dag, v: usize, removed: &[bool]) -> (usize, usize) {
+    let mut added = 0usize;
+    let mut reversals = 0usize;
+    loop {
+        // Children of v still in play.
+        let children: Vec<usize> = g.children(v).iter().filter(|&c| !removed[c]).collect();
+        if children.is_empty() {
+            return (added, reversals);
+        }
+        // Reverse v -> c where no *other* child of v reaches c: a cycle
+        // after reversal needs a path v -> o ⇝ c, so choosing c minimal
+        // in the children-reachability order makes reversal safe.
+        let c = *children
+            .iter()
+            .find(|&&c| children.iter().all(|&o| o == c || !g.has_directed_path(o, c)))
+            .expect("a DAG always has a reachability-minimal child");
+        reversals += 1;
+        // Arc reversal v -> c: both endpoints inherit the other's
+        // parents (minus themselves).
+        let pa_v: Vec<usize> = g.parents(v).iter().collect();
+        let pa_c: Vec<usize> = g.parents(c).iter().filter(|&p| p != v).collect();
+        for &p in &pa_v {
+            if p != c && !g.has_edge(p, c) {
+                g.add_edge(p, c);
+                added += 1;
+            }
+        }
+        for &p in &pa_c {
+            if p != v && !g.has_edge(p, v) {
+                g.add_edge(p, v);
+                added += 1;
+            }
+        }
+        g.remove_edge(v, c);
+        g.add_edge(c, v);
+        debug_assert!(g.is_acyclic());
+    }
+}
+
+/// Cheap sink-cost estimate used inside the GHO selection loop:
+/// the parent-copy cost of the *first* reversal of each outgoing edge,
+/// ignoring the cascade effects later reversals add. One bitset pass
+/// per child — no graph clone, no simulation. (The §Perf pass replaced
+/// the exact simulated cost here: fusion dominated ring rounds at
+/// n ≥ 200, see EXPERIMENTS.md. Selection quality is heuristic either
+/// way — the GHO paper itself scores candidate orders heuristically —
+/// and the applied transformation stays exact.)
+pub fn sink_cost_estimate(g: &Dag, v: usize, removed: &[bool]) -> (usize, usize) {
+    let mut added = 0usize;
+    let mut reversals = 0usize;
+    let pa_v = g.parents(v);
+    for c in g.children(v).iter() {
+        if removed[c] {
+            continue;
+        }
+        reversals += 1;
+        let pa_c = g.parents(c);
+        // p -> c for p in Pa(v) \ Pa(c) \ {c}
+        let mut need_c = pa_v.clone();
+        need_c.difference_with(pa_c);
+        need_c.remove(c);
+        // p -> v for p in Pa(c) \ Pa(v) \ {v}
+        let mut need_v = pa_c.clone();
+        need_v.difference_with(pa_v);
+        need_v.remove(v);
+        added += need_c.count() + need_v.count();
+    }
+    (added, reversals)
+}
+
+/// GHO: a common order σ (first element = first in the order) that
+/// greedily minimizes total reversal cost across `dags`.
+pub fn gho_order(dags: &[&Dag]) -> Vec<usize> {
+    assert!(!dags.is_empty());
+    let n = dags[0].n();
+    let mut work: Vec<Dag> = dags.iter().map(|&g| g.clone()).collect();
+    let mut removed = vec![false; n];
+    let mut sigma_rev = Vec::with_capacity(n);
+
+    for _ in 0..n {
+        // Node with minimum total (edges added, reversals) — preferring
+        // true sinks among zero-cost candidates keeps fusion of
+        // identical/compatible DAGs an identity; ties broken by index
+        // for determinism.
+        let mut best: Option<((usize, usize), usize)> = None;
+        for v in 0..n {
+            if removed[v] {
+                continue;
+            }
+            let mut cost = (0usize, 0usize);
+            for g in &work {
+                let (a, r) = sink_cost_estimate(g, v, &removed);
+                cost.0 += a;
+                cost.1 += r;
+            }
+            if best.map(|(bc, _)| cost < bc).unwrap_or(true) {
+                best = Some((cost, v));
+            }
+            if cost == (0, 0) {
+                break; // a true common sink; cannot do better
+            }
+        }
+        let (_, v) = best.expect("nodes remain");
+        for g in &mut work {
+            make_sink(g, v, &removed);
+        }
+        removed[v] = true;
+        sigma_rev.push(v);
+    }
+    sigma_rev.reverse();
+    sigma_rev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_cost_zero_for_sinks() {
+        let g = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let removed = vec![false; 3];
+        assert_eq!(sink_cost(&g, 2, &removed), (0, 0));
+        // Sinking the middle node reverses 1->2 and must add 0->2.
+        let (added, revs) = sink_cost(&g, 1, &removed);
+        assert_eq!((added, revs), (1, 1));
+        // Sinking the root reverses its only edge; no parents to copy.
+        assert_eq!(sink_cost(&g, 0, &removed), (0, 1));
+    }
+
+    #[test]
+    fn make_sink_preserves_acyclicity_and_sinkness() {
+        let mut g = Dag::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let removed = vec![false; 4];
+        make_sink(&mut g, 0, &removed);
+        assert!(g.is_acyclic());
+        assert_eq!(g.children(0).count(), 0);
+    }
+
+    #[test]
+    fn gho_respects_topology_of_single_dag() {
+        // For a single DAG, GHO should return a topological order
+        // (sinks have cost 0 and are picked from the back).
+        let g = Dag::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let sigma = gho_order(&[&g]);
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 5];
+            for (i, &v) in sigma.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        for (u, v) in g.edges() {
+            assert!(pos[u] < pos[v], "σ must be consistent with {u}->{v}");
+        }
+    }
+
+    #[test]
+    fn gho_handles_disagreeing_dags() {
+        // G1: 0 -> 1, G2: 1 -> 0 — any order works, cost reflects one
+        // reversal somewhere; just verify a valid permutation comes out.
+        let g1 = Dag::from_edges(2, &[(0, 1)]);
+        let g2 = Dag::from_edges(2, &[(1, 0)]);
+        let mut sigma = gho_order(&[&g1, &g2]);
+        sigma.sort_unstable();
+        assert_eq!(sigma, vec![0, 1]);
+    }
+}

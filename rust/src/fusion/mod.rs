@@ -1,0 +1,24 @@
+//! Bayesian-network structural fusion (Puerta, Aledo, Gámez, Laborda —
+//! Information Fusion 66, 2021), the core component of the ring's
+//! message handling.
+//!
+//! Fusing DAGs G_1..G_k:
+//! 1. find a common ancestral order σ with the **G**reedy **H**euristic
+//!    **O**rdering (GHO): repeatedly pick the node that is cheapest to
+//!    turn into a sink across all input DAGs ([`gho`]);
+//! 2. transform each G_i into a σ-consistent (independence-preserving)
+//!    DAG via covered-edge-style reversals ([`imap`]);
+//! 3. take the edge union — σ-consistency of all inputs makes the
+//!    union acyclic ([`union`]).
+//!
+//! The ring uses the 2-argument form (own model + predecessor's model),
+//! which the paper points out keeps fused structures sparse and
+//! mitigates overfitting.
+
+pub mod gho;
+pub mod imap;
+pub mod union;
+
+pub use gho::gho_order;
+pub use imap::sigma_consistent_imap;
+pub use union::{fuse, fuse_with_order};

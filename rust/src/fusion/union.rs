@@ -1,0 +1,85 @@
+//! Fusion by edge union of σ-consistent transforms.
+//!
+//! Once every input DAG has been made σ-consistent, all edges point
+//! forward in σ, so their union is again a DAG — and it is an I-map of
+//! every input (contains every input's independence constraints'
+//! edges). This is `Fusion.edgeUnion` in the paper's Algorithm 1.
+
+use crate::fusion::gho::gho_order;
+use crate::fusion::imap::sigma_consistent_imap;
+use crate::graph::Dag;
+
+/// Fuse with an explicitly supplied order.
+pub fn fuse_with_order(dags: &[&Dag], sigma: &[usize]) -> Dag {
+    assert!(!dags.is_empty());
+    let n = dags[0].n();
+    let mut out = Dag::new(n);
+    for &g in dags {
+        let t = sigma_consistent_imap(g, sigma);
+        for (u, v) in t.edges() {
+            out.add_edge(u, v);
+        }
+    }
+    debug_assert!(out.is_acyclic());
+    out
+}
+
+/// Full fusion: GHO order + transform + union. Returns the fused DAG
+/// and the order used (for telemetry).
+pub fn fuse(dags: &[&Dag]) -> (Dag, Vec<usize>) {
+    let sigma = gho_order(dags);
+    let fused = fuse_with_order(dags, &sigma);
+    (fused, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_of_identical_is_identity() {
+        let g = Dag::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let (f, _sigma) = fuse(&[&g, &g]);
+        let mut e1 = g.edges();
+        let mut e2 = f.edges();
+        e1.sort_unstable();
+        e2.sort_unstable();
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn union_contains_both_inputs_modulo_sigma() {
+        // Disjoint claims: G1 has 0 -> 1, G2 has 2 -> 3. Fusion must
+        // keep both adjacencies.
+        let g1 = Dag::from_edges(4, &[(0, 1)]);
+        let g2 = Dag::from_edges(4, &[(2, 3)]);
+        let (f, _) = fuse(&[&g1, &g2]);
+        assert!(f.adjacent(0, 1));
+        assert!(f.adjacent(2, 3));
+        assert!(f.is_acyclic());
+    }
+
+    #[test]
+    fn conflicting_directions_still_acyclic() {
+        let g1 = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let g2 = Dag::from_edges(3, &[(2, 1), (1, 0)]);
+        let (f, sigma) = fuse(&[&g1, &g2]);
+        assert!(f.is_acyclic());
+        // Both skeleton adjacencies survive.
+        assert!(f.adjacent(0, 1) && f.adjacent(1, 2));
+        assert_eq!(sigma.len(), 3);
+    }
+
+    #[test]
+    fn fusion_is_edge_superset_of_each_transform() {
+        let g1 = Dag::from_edges(5, &[(0, 1), (1, 2), (3, 4)]);
+        let g2 = Dag::from_edges(5, &[(0, 2), (2, 4), (1, 3)]);
+        let (f, sigma) = fuse(&[&g1, &g2]);
+        for g in [&g1, &g2] {
+            let t = sigma_consistent_imap(g, &sigma);
+            for (u, v) in t.edges() {
+                assert!(f.has_edge(u, v), "missing {u}->{v}");
+            }
+        }
+    }
+}

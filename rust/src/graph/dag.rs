@@ -1,0 +1,263 @@
+//! Directed acyclic graph with bitset adjacency rows.
+//!
+//! The DAG is the common currency between the learners (GES search
+//! state extensions), the fusion stage (σ-consistent minimal I-maps),
+//! the generators (ground-truth networks) and the metrics (moral
+//! graphs). Parent/children sets are `BitSet` rows so the hot set
+//! operations (ancestor closures, clique tests, parent unions) are
+//! word-parallel.
+
+use crate::util::BitSet;
+
+/// Directed graph (acyclicity enforced by callers via `is_acyclic` /
+/// `try_add_edge`; all learner code paths only create acyclic graphs).
+#[derive(Clone, PartialEq, Eq)]
+pub struct Dag {
+    n: usize,
+    parents: Vec<BitSet>,
+    children: Vec<BitSet>,
+}
+
+impl Dag {
+    /// Empty graph over `n` nodes.
+    pub fn new(n: usize) -> Self {
+        Dag {
+            n,
+            parents: vec![BitSet::new(n); n],
+            children: vec![BitSet::new(n); n],
+        }
+    }
+
+    /// Build from directed edges; panics on out-of-range nodes.
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut g = Dag::new(n);
+        for &(u, v) in edges {
+            g.add_edge(u, v);
+        }
+        g
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Add edge `u -> v` (idempotent).
+    #[inline]
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        debug_assert!(u != v);
+        self.parents[v].insert(u);
+        self.children[u].insert(v);
+    }
+
+    /// Remove edge `u -> v` if present.
+    #[inline]
+    pub fn remove_edge(&mut self, u: usize, v: usize) {
+        self.parents[v].remove(u);
+        self.children[u].remove(v);
+    }
+
+    /// True iff `u -> v` exists.
+    #[inline]
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.parents[v].contains(u)
+    }
+
+    /// True iff `u -> v` or `v -> u`.
+    #[inline]
+    pub fn adjacent(&self, u: usize, v: usize) -> bool {
+        self.has_edge(u, v) || self.has_edge(v, u)
+    }
+
+    /// Parent set of `v`.
+    #[inline]
+    pub fn parents(&self, v: usize) -> &BitSet {
+        &self.parents[v]
+    }
+
+    /// Children set of `u`.
+    #[inline]
+    pub fn children(&self, u: usize) -> &BitSet {
+        &self.children[u]
+    }
+
+    /// Total directed edge count.
+    pub fn edge_count(&self) -> usize {
+        self.parents.iter().map(|p| p.count()).sum()
+    }
+
+    /// All edges as `(u, v)` pairs.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.edge_count());
+        for v in 0..self.n {
+            for u in self.parents[v].iter() {
+                out.push((u, v));
+            }
+        }
+        out
+    }
+
+    /// Kahn topological order; `None` if the graph has a cycle.
+    pub fn topological_order(&self) -> Option<Vec<usize>> {
+        let mut indeg: Vec<usize> = (0..self.n).map(|v| self.parents[v].count()).collect();
+        let mut queue: Vec<usize> = (0..self.n).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(self.n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for c in self.children[u].iter() {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        (order.len() == self.n).then_some(order)
+    }
+
+    /// True iff acyclic.
+    pub fn is_acyclic(&self) -> bool {
+        self.topological_order().is_some()
+    }
+
+    /// Would adding `u -> v` keep the graph acyclic? (i.e. no directed
+    /// path `v ⇝ u` exists.)
+    pub fn can_add_edge(&self, u: usize, v: usize) -> bool {
+        u != v && !self.has_directed_path(v, u)
+    }
+
+    /// BFS directed reachability `from ⇝ to`.
+    pub fn has_directed_path(&self, from: usize, to: usize) -> bool {
+        if from == to {
+            return true;
+        }
+        let mut seen = BitSet::new(self.n);
+        seen.insert(from);
+        let mut stack = vec![from];
+        while let Some(u) = stack.pop() {
+            for c in self.children[u].iter() {
+                if c == to {
+                    return true;
+                }
+                if !seen.contains(c) {
+                    seen.insert(c);
+                    stack.push(c);
+                }
+            }
+        }
+        false
+    }
+
+    /// Ancestor set of `v` (excluding `v`).
+    pub fn ancestors(&self, v: usize) -> BitSet {
+        let mut anc = BitSet::new(self.n);
+        let mut stack: Vec<usize> = self.parents[v].iter().collect();
+        while let Some(u) = stack.pop() {
+            if !anc.contains(u) {
+                anc.insert(u);
+                stack.extend(self.parents[u].iter());
+            }
+        }
+        anc
+    }
+
+    /// Descendant set of `v` (excluding `v`).
+    pub fn descendants(&self, v: usize) -> BitSet {
+        let mut des = BitSet::new(self.n);
+        let mut stack: Vec<usize> = self.children[v].iter().collect();
+        while let Some(u) = stack.pop() {
+            if !des.contains(u) {
+                des.insert(u);
+                stack.extend(self.children[u].iter());
+            }
+        }
+        des
+    }
+
+    /// Maximum in-degree (max parents per node).
+    pub fn max_in_degree(&self) -> usize {
+        (0..self.n).map(|v| self.parents[v].count()).max().unwrap_or(0)
+    }
+
+    /// Undirected skeleton as symmetric adjacency bitset rows.
+    pub fn skeleton(&self) -> Vec<BitSet> {
+        let mut adj = vec![BitSet::new(self.n); self.n];
+        for (u, v) in self.edges() {
+            adj[u].insert(v);
+            adj[v].insert(u);
+        }
+        adj
+    }
+
+    /// V-structures `(a, c, b)` with `a -> c <- b`, a/b non-adjacent, a < b.
+    pub fn v_structures(&self) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::new();
+        for c in 0..self.n {
+            let pa: Vec<usize> = self.parents[c].iter().collect();
+            for (i, &a) in pa.iter().enumerate() {
+                for &b in &pa[i + 1..] {
+                    if !self.adjacent(a, b) {
+                        out.push((a, c, b));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for Dag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Dag(n={}, edges={:?})", self.n, self.edges())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edges_roundtrip() {
+        let g = Dag::from_edges(4, &[(0, 1), (1, 2), (0, 3)]);
+        assert!(g.has_edge(0, 1) && !g.has_edge(1, 0));
+        assert!(g.adjacent(1, 0));
+        assert_eq!(g.edge_count(), 3);
+        let mut e = g.edges();
+        e.sort_unstable();
+        assert_eq!(e, vec![(0, 1), (0, 3), (1, 2)]);
+    }
+
+    #[test]
+    fn topo_and_cycles() {
+        let g = Dag::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(g.topological_order(), Some(vec![0, 1, 2, 3]));
+        assert!(g.is_acyclic());
+        let mut c = g.clone();
+        c.add_edge(3, 0);
+        assert!(!c.is_acyclic());
+        assert!(g.can_add_edge(0, 3));
+        assert!(!g.can_add_edge(3, 0));
+    }
+
+    #[test]
+    fn ancestors_descendants() {
+        let g = Dag::from_edges(5, &[(0, 1), (1, 2), (3, 2), (2, 4)]);
+        assert_eq!(g.ancestors(4).to_vec(), vec![0, 1, 2, 3]);
+        assert_eq!(g.descendants(0).to_vec(), vec![1, 2, 4]);
+        assert!(g.has_directed_path(0, 4));
+        assert!(!g.has_directed_path(4, 0));
+    }
+
+    #[test]
+    fn v_structures_found() {
+        // 0 -> 2 <- 1 is a v-structure (0, 1 non-adjacent).
+        let g = Dag::from_edges(4, &[(0, 2), (1, 2)]);
+        assert_eq!(g.v_structures(), vec![(0, 2, 1)]);
+        // Marrying the parents destroys it.
+        let shielded = Dag::from_edges(4, &[(0, 2), (1, 2), (0, 1)]);
+        assert!(shielded.v_structures().is_empty());
+    }
+}

@@ -1,0 +1,133 @@
+//! d-separation via the Bayes-ball / reachability algorithm.
+//!
+//! Used by the test-suite to validate generators and the fusion stage
+//! (an I-map must not claim independences the inputs reject), not on
+//! the learning hot path.
+
+use crate::graph::Dag;
+use crate::util::BitSet;
+
+/// True iff `x` and `y` are d-separated by the conditioning set `z` in
+/// DAG `g` (reachability formulation over ancestral moral subgraph is
+/// equivalent; we implement the classic ball-passing walk).
+pub fn d_separated(g: &Dag, x: usize, y: usize, z: &BitSet) -> bool {
+    !d_connected(g, x, y, z)
+}
+
+/// True iff an active path connects `x` and `y` given `z`.
+pub fn d_connected(g: &Dag, x: usize, y: usize, z: &BitSet) -> bool {
+    if x == y {
+        return true;
+    }
+    let n = g.n();
+    // Ancestors of z (for collider activation).
+    let mut anc_z = z.clone();
+    let mut stack: Vec<usize> = z.iter().collect();
+    while let Some(v) = stack.pop() {
+        for p in g.parents(v).iter() {
+            if !anc_z.contains(p) {
+                anc_z.insert(p);
+                stack.push(p);
+            }
+        }
+    }
+
+    // Ball-passing: states (node, direction) with direction = came from
+    // child (up=true) or from parent (up=false).
+    let mut visited_up = BitSet::new(n);
+    let mut visited_down = BitSet::new(n);
+    // Start from x as if arriving from a child (can go anywhere).
+    let mut queue: Vec<(usize, bool)> = vec![(x, true)];
+    visited_up.insert(x);
+    while let Some((v, up)) = queue.pop() {
+        if v == y {
+            return true;
+        }
+        let in_z = z.contains(v);
+        if up {
+            // Arrived from a child: if v not in z, pass to parents
+            // (up) and children (down).
+            if !in_z {
+                for p in g.parents(v).iter() {
+                    if !visited_up.contains(p) {
+                        visited_up.insert(p);
+                        queue.push((p, true));
+                    }
+                }
+                for c in g.children(v).iter() {
+                    if !visited_down.contains(c) {
+                        visited_down.insert(c);
+                        queue.push((c, false));
+                    }
+                }
+            }
+        } else {
+            // Arrived from a parent.
+            if !in_z {
+                // Chain: continue to children.
+                for c in g.children(v).iter() {
+                    if !visited_down.contains(c) {
+                        visited_down.insert(c);
+                        queue.push((c, false));
+                    }
+                }
+            }
+            // Collider: bounce to parents iff v activates (in An(z) ∪ z).
+            if anc_z.contains(v) || in_z {
+                for p in g.parents(v).iter() {
+                    if !visited_up.contains(p) {
+                        visited_up.insert(p);
+                        queue.push((p, true));
+                    }
+                }
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(n: usize, items: &[usize]) -> BitSet {
+        BitSet::from_iter(n, items.iter().copied())
+    }
+
+    #[test]
+    fn chain_blocked_by_middle() {
+        let g = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        assert!(d_connected(&g, 0, 2, &set(3, &[])));
+        assert!(d_separated(&g, 0, 2, &set(3, &[1])));
+    }
+
+    #[test]
+    fn fork_blocked_by_root() {
+        let g = Dag::from_edges(3, &[(1, 0), (1, 2)]);
+        assert!(d_connected(&g, 0, 2, &set(3, &[])));
+        assert!(d_separated(&g, 0, 2, &set(3, &[1])));
+    }
+
+    #[test]
+    fn collider_activates_on_conditioning() {
+        let g = Dag::from_edges(3, &[(0, 1), (2, 1)]);
+        assert!(d_separated(&g, 0, 2, &set(3, &[])));
+        assert!(d_connected(&g, 0, 2, &set(3, &[1])));
+    }
+
+    #[test]
+    fn collider_activates_via_descendant() {
+        // 0 -> 1 <- 2, 1 -> 3: conditioning on descendant 3 activates.
+        let g = Dag::from_edges(4, &[(0, 1), (2, 1), (1, 3)]);
+        assert!(d_separated(&g, 0, 2, &set(4, &[])));
+        assert!(d_connected(&g, 0, 2, &set(4, &[3])));
+    }
+
+    #[test]
+    fn markov_condition_holds() {
+        // In 0 -> 1 -> 2 -> 3: node 3 ⫫ {0,1} | parent 2.
+        let g = Dag::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert!(d_separated(&g, 3, 0, &set(4, &[2])));
+        assert!(d_separated(&g, 3, 1, &set(4, &[2])));
+    }
+}

@@ -1,0 +1,15 @@
+//! Graph substrate: DAGs, PDAGs/CPDAGs, conversions, moralization and
+//! d-separation — everything the learners, the fusion stage and the
+//! metrics build on.
+
+pub mod cpdag;
+pub mod dag;
+pub mod dsep;
+pub mod moral;
+pub mod pdag;
+
+pub use cpdag::{complete_pdag, dag_to_cpdag, markov_equivalent, pdag_to_dag};
+pub use dag::Dag;
+pub use dsep::{d_connected, d_separated};
+pub use moral::{moral_graph, undirected_edge_count};
+pub use pdag::Pdag;

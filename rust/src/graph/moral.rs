@@ -1,0 +1,56 @@
+//! Moralization: the undirected graph obtained by "marrying" every
+//! node's parents and dropping directions. The paper's SMHD metric
+//! (structural *moral* Hamming distance) compares moral graphs, so this
+//! is the evaluation substrate.
+
+use crate::graph::Dag;
+use crate::util::BitSet;
+
+/// Symmetric adjacency rows of the moral graph of `g`.
+pub fn moral_graph(g: &Dag) -> Vec<BitSet> {
+    let n = g.n();
+    let mut adj = vec![BitSet::new(n); n];
+    for (u, v) in g.edges() {
+        adj[u].insert(v);
+        adj[v].insert(u);
+    }
+    // Marry parents pairwise.
+    for v in 0..n {
+        let pa: Vec<usize> = g.parents(v).iter().collect();
+        for (i, &a) in pa.iter().enumerate() {
+            for &b in &pa[i + 1..] {
+                adj[a].insert(b);
+                adj[b].insert(a);
+            }
+        }
+    }
+    adj
+}
+
+/// Number of edges in a symmetric adjacency structure.
+pub fn undirected_edge_count(adj: &[BitSet]) -> usize {
+    adj.iter().map(|r| r.count()).sum::<usize>() / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marries_parents() {
+        // 0 -> 2 <- 1: moral graph is the triangle {0-1, 0-2, 1-2}.
+        let g = Dag::from_edges(3, &[(0, 2), (1, 2)]);
+        let m = moral_graph(&g);
+        assert!(m[0].contains(1) && m[1].contains(0));
+        assert!(m[0].contains(2) && m[1].contains(2));
+        assert_eq!(undirected_edge_count(&m), 3);
+    }
+
+    #[test]
+    fn chain_unchanged() {
+        let g = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let m = moral_graph(&g);
+        assert!(!m[0].contains(2));
+        assert_eq!(undirected_edge_count(&m), 2);
+    }
+}

@@ -1,0 +1,290 @@
+//! Partially directed graph (PDAG): the GES search state.
+//!
+//! A PDAG holds directed edges (`u -> v`) and undirected edges
+//! (`u - v`). CPDAGs (completed PDAGs, i.e. equivalence classes) are
+//! represented with this type; `graph::cpdag` provides the DAG↔CPDAG
+//! conversions and the consistent-extension algorithm.
+
+use crate::graph::Dag;
+use crate::util::BitSet;
+
+/// Mixed graph with directed and undirected edges.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Pdag {
+    n: usize,
+    /// Directed: parents[v] = {u : u -> v}.
+    parents: Vec<BitSet>,
+    /// Directed: children[u] = {v : u -> v}.
+    children: Vec<BitSet>,
+    /// Undirected, symmetric: und[u] = {v : u - v}.
+    und: Vec<BitSet>,
+}
+
+impl Pdag {
+    /// Empty PDAG over `n` nodes.
+    pub fn new(n: usize) -> Self {
+        Pdag {
+            n,
+            parents: vec![BitSet::new(n); n],
+            children: vec![BitSet::new(n); n],
+            und: vec![BitSet::new(n); n],
+        }
+    }
+
+    /// View a DAG as a PDAG (all edges directed).
+    pub fn from_dag(d: &Dag) -> Self {
+        let mut g = Pdag::new(d.n());
+        for (u, v) in d.edges() {
+            g.add_directed(u, v);
+        }
+        g
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Add `u -> v`.
+    #[inline]
+    pub fn add_directed(&mut self, u: usize, v: usize) {
+        debug_assert!(u != v);
+        self.parents[v].insert(u);
+        self.children[u].insert(v);
+    }
+
+    /// Add `u - v`.
+    #[inline]
+    pub fn add_undirected(&mut self, u: usize, v: usize) {
+        debug_assert!(u != v);
+        self.und[u].insert(v);
+        self.und[v].insert(u);
+    }
+
+    /// Remove any edge (directed either way or undirected) between u, v.
+    pub fn remove_between(&mut self, u: usize, v: usize) {
+        self.parents[v].remove(u);
+        self.children[u].remove(v);
+        self.parents[u].remove(v);
+        self.children[v].remove(u);
+        self.und[u].remove(v);
+        self.und[v].remove(u);
+    }
+
+    /// Turn `u - v` into `u -> v` (no-op if not undirected-adjacent).
+    pub fn orient(&mut self, u: usize, v: usize) {
+        if self.und[u].contains(v) {
+            self.und[u].remove(v);
+            self.und[v].remove(u);
+            self.add_directed(u, v);
+        }
+    }
+
+    /// True iff `u -> v`.
+    #[inline]
+    pub fn has_directed(&self, u: usize, v: usize) -> bool {
+        self.parents[v].contains(u)
+    }
+
+    /// True iff `u - v`.
+    #[inline]
+    pub fn has_undirected(&self, u: usize, v: usize) -> bool {
+        self.und[u].contains(v)
+    }
+
+    /// True iff any edge connects u and v.
+    #[inline]
+    pub fn adjacent(&self, u: usize, v: usize) -> bool {
+        self.has_directed(u, v) || self.has_directed(v, u) || self.has_undirected(u, v)
+    }
+
+    /// Directed parents of `v`.
+    #[inline]
+    pub fn parents(&self, v: usize) -> &BitSet {
+        &self.parents[v]
+    }
+
+    /// Directed children of `u`.
+    #[inline]
+    pub fn children(&self, u: usize) -> &BitSet {
+        &self.children[u]
+    }
+
+    /// Undirected neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &BitSet {
+        &self.und[v]
+    }
+
+    /// All nodes connected to `v` by any edge.
+    pub fn adjacents(&self, v: usize) -> BitSet {
+        let mut a = self.parents[v].clone();
+        a.union_with(&self.children[v]);
+        a.union_with(&self.und[v]);
+        a
+    }
+
+    /// NA(y, x): undirected neighbors of `y` that are adjacent to `x`
+    /// (Chickering's `NA_{y,x}`, the core of Insert/Delete validity).
+    pub fn na(&self, y: usize, x: usize) -> BitSet {
+        let mut s = self.und[y].clone();
+        s.intersect_with(&self.adjacents(x));
+        s
+    }
+
+    /// True iff every pair in `set` is adjacent (∅ and singletons are
+    /// cliques).
+    pub fn is_clique(&self, set: &BitSet) -> bool {
+        let members: Vec<usize> = set.iter().collect();
+        for (i, &u) in members.iter().enumerate() {
+            for &v in &members[i + 1..] {
+                if !self.adjacent(u, v) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// True iff a semi-directed path (following `-` or `->` edges)
+    /// exists from `from` to `to` avoiding all nodes in `block`.
+    pub fn has_semi_directed_path(&self, from: usize, to: usize, block: &BitSet) -> bool {
+        if from == to {
+            return true;
+        }
+        if block.contains(to) {
+            return false;
+        }
+        let mut seen = BitSet::new(self.n);
+        seen.insert(from);
+        let mut stack = vec![from];
+        while let Some(u) = stack.pop() {
+            let mut succ = self.children[u].clone();
+            succ.union_with(&self.und[u]);
+            for w in succ.iter() {
+                if w == to {
+                    return true;
+                }
+                if !seen.contains(w) && !block.contains(w) {
+                    seen.insert(w);
+                    stack.push(w);
+                }
+            }
+        }
+        false
+    }
+
+    /// Counts `(directed, undirected)` edges.
+    pub fn edge_counts(&self) -> (usize, usize) {
+        let d = self.parents.iter().map(|p| p.count()).sum();
+        let u = self.und.iter().map(|p| p.count()).sum::<usize>() / 2;
+        (d, u)
+    }
+
+    /// Total number of edges (undirected counted once).
+    pub fn total_edges(&self) -> usize {
+        let (d, u) = self.edge_counts();
+        d + u
+    }
+
+    /// Undirected skeleton adjacency rows.
+    pub fn skeleton(&self) -> Vec<BitSet> {
+        let mut adj = vec![BitSet::new(self.n); self.n];
+        for v in 0..self.n {
+            for u in self.parents[v].iter() {
+                adj[u].insert(v);
+                adj[v].insert(u);
+            }
+            adj[v].union_with(&self.und[v]);
+        }
+        adj
+    }
+
+    /// Directed edges list.
+    pub fn directed_edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for v in 0..self.n {
+            for u in self.parents[v].iter() {
+                out.push((u, v));
+            }
+        }
+        out
+    }
+
+    /// Undirected edges list with `u < v`.
+    pub fn undirected_edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for u in 0..self.n {
+            for v in self.und[u].iter() {
+                if u < v {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for Pdag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Pdag(n={}, directed={:?}, undirected={:?})",
+            self.n,
+            self.directed_edges(),
+            self.undirected_edges()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_kinds() {
+        let mut g = Pdag::new(4);
+        g.add_directed(0, 1);
+        g.add_undirected(1, 2);
+        assert!(g.has_directed(0, 1) && !g.has_directed(1, 0));
+        assert!(g.has_undirected(2, 1));
+        assert!(g.adjacent(1, 2) && g.adjacent(0, 1) && !g.adjacent(0, 2));
+        assert_eq!(g.edge_counts(), (1, 1));
+        g.orient(1, 2);
+        assert!(g.has_directed(1, 2) && !g.has_undirected(1, 2));
+        g.remove_between(0, 1);
+        assert!(!g.adjacent(0, 1));
+    }
+
+    #[test]
+    fn na_and_clique() {
+        let mut g = Pdag::new(5);
+        // y=0 with undirected neighbors 1, 2; x=4 adjacent to 1 only.
+        g.add_undirected(0, 1);
+        g.add_undirected(0, 2);
+        g.add_directed(4, 1);
+        assert_eq!(g.na(0, 4).to_vec(), vec![1]);
+        let mut s = BitSet::new(5);
+        s.insert(1);
+        s.insert(2);
+        assert!(!g.is_clique(&s));
+        g.add_undirected(1, 2);
+        assert!(g.is_clique(&s));
+        assert!(g.is_clique(&BitSet::new(5)));
+    }
+
+    #[test]
+    fn semi_directed_paths() {
+        let mut g = Pdag::new(5);
+        g.add_directed(0, 1);
+        g.add_undirected(1, 2);
+        g.add_directed(2, 3);
+        assert!(g.has_semi_directed_path(0, 3, &BitSet::new(5)));
+        // Can't traverse a directed edge backwards.
+        assert!(!g.has_semi_directed_path(3, 0, &BitSet::new(5)));
+        // Blocking the middle node cuts the path.
+        let block = BitSet::from_iter(5, [1]);
+        assert!(!g.has_semi_directed_path(0, 3, &block));
+    }
+}

@@ -1,0 +1,675 @@
+//! Parallel GES (Greedy Equivalence Search) over CPDAGs.
+//!
+//! The variant follows the paper's control algorithm (Alonso-Barba et
+//! al. 2013): a totally greedy FES (apply the single best valid Insert,
+//! re-score affected candidates, repeat), then a standard BES, with the
+//! candidate scoring distributed across threads (the paper's "checking
+//! phase ... carried out in a distributed manner by using the available
+//! threads").
+//!
+//! Candidate management is a max-heap with version stamps and
+//! recompute-on-pop (the Tetrad approach):
+//! * every node carries a version bumped whenever its parent or
+//!   neighbor set changes (operator application + re-completion);
+//! * a popped candidate whose endpoints are stale is recomputed and
+//!   re-pushed;
+//! * a popped fresh candidate is recomputed once before application —
+//!   this re-checks the (graph-global) path validity condition that
+//!   version stamps cannot capture.
+//!
+//! cGES hooks: an [`EdgeMask`] restricts the candidate pairs to one
+//! partition subset E_i, `insert_limit` implements the cGES-L cap
+//! l = (10/k)·√n, and `seed` lets the coordinator inject the AOT
+//! artifact's pairwise similarity matrix as the initial FES frontier
+//! (exact deltas for the empty graph, a free first sweep).
+
+use std::cmp::Ordering as CmpOrd;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::graph::{complete_pdag, dag_to_cpdag, pdag_to_dag, Dag, Pdag};
+use crate::learn::mask::EdgeMask;
+use crate::learn::operators::{apply, best_delete, best_insert_empty_t, best_insert_opt, Operator};
+use crate::score::BdeuScorer;
+use crate::util::par::par_map_index;
+use crate::util::BitSet;
+
+/// Minimum improvement treated as progress (guards float noise; the
+/// paper's convergence test is a plain ≥ comparison on BDeu).
+const EPS: f64 = 1e-9;
+
+/// GES configuration.
+#[derive(Clone)]
+pub struct GesConfig {
+    /// Scoring threads (the paper uses 8).
+    pub threads: usize,
+    /// FES insertion cap — cGES-L's l = (10/k)·√n. `None` = unlimited.
+    pub insert_limit: Option<usize>,
+    /// Candidate-pair restriction (cGES partition subset E_i).
+    pub mask: Option<Arc<EdgeMask>>,
+    /// Optional hard cap on parents per node.
+    pub max_parents: Option<usize>,
+    /// Pairwise similarity seed (from the XLA artifact or the Rust
+    /// fallback): S[y][x] = exact Insert(x, y, ∅) delta on the empty
+    /// graph.
+    pub seed: Option<Arc<Vec<Vec<f64>>>>,
+    /// Re-run FES+BES until neither applies an operator.
+    pub iterate_until_stable: bool,
+    /// fGES mode (Ramsey et al. 2017): forward phase considers only
+    /// T = ∅ inserts — the speed/quality trade the paper observes.
+    pub forward_empty_t: bool,
+}
+
+impl Default for GesConfig {
+    fn default() -> Self {
+        GesConfig {
+            threads: crate::util::num_threads(),
+            insert_limit: None,
+            mask: None,
+            max_parents: None,
+            seed: None,
+            iterate_until_stable: false,
+            forward_empty_t: false,
+        }
+    }
+}
+
+/// Search outcome.
+pub struct GesResult {
+    /// A DAG from the final equivalence class.
+    pub dag: Dag,
+    /// The final CPDAG.
+    pub cpdag: Pdag,
+    /// BDeu score of `dag`.
+    pub score: f64,
+    /// Applied insert / delete counts.
+    pub inserts: usize,
+    pub deletes: usize,
+    /// Candidate evaluations performed (telemetry).
+    pub evaluations: u64,
+}
+
+#[derive(Clone, Debug)]
+struct Cand {
+    delta: f64,
+    x: usize,
+    y: usize,
+    vx: u64,
+    vy: u64,
+    /// Exact (recomputed) vs seeded estimate.
+    exact: bool,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.delta == other.delta
+    }
+}
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrd> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> CmpOrd {
+        self.delta.partial_cmp(&other.delta).unwrap_or(CmpOrd::Equal)
+    }
+}
+
+/// Shared search machinery for the two phases. Owns its scorer clone
+/// (the score cache is shared through `Arc`) so it can persist across
+/// ring rounds inside a [`RingWorker`].
+struct Search {
+    scorer: BdeuScorer,
+    cfg: GesConfig,
+    cpdag: Pdag,
+    version: Vec<u64>,
+    evaluations: u64,
+    /// Persistent candidate heaps (insert / delete). Stale entries are
+    /// version-checked on pop; entries for untouched pairs stay valid
+    /// across rounds — the incremental-ring optimization (§Perf).
+    fwd: BinaryHeap<Cand>,
+    bwd: BinaryHeap<Cand>,
+    fwd_seeded: bool,
+    bwd_seeded: bool,
+    /// Nodes whose incident candidates are outdated for a phase (the
+    /// *other* phase's applies and ring fusions mark these; they are
+    /// drained in one batched incident evaluation when the phase
+    /// starts, instead of per-apply — cheaper and just as complete).
+    dirty_fwd: Vec<usize>,
+    dirty_bwd: Vec<usize>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Forward,
+    Backward,
+}
+
+impl Search {
+    fn n(&self) -> usize {
+        self.cpdag.n()
+    }
+
+    fn allowed(&self, x: usize, y: usize) -> bool {
+        self.cfg.mask.as_ref().map(|m| m.allowed(x, y)).unwrap_or(true)
+    }
+
+    /// Best operator for an unordered pair under a phase. With
+    /// `exact = false` the (expensive, graph-global) path-validity BFS
+    /// is skipped — fine for heap estimates, which are re-validated
+    /// exactly at pop time before any application.
+    fn best_for_pair(&self, x: usize, y: usize, phase: Phase, exact: bool) -> Option<Operator> {
+        match phase {
+            Phase::Forward => {
+                let f = |s: &BdeuScorer, g: &Pdag, x: usize, y: usize, mp: Option<usize>| {
+                    if self.cfg.forward_empty_t {
+                        best_insert_empty_t(s, g, x, y, mp)
+                    } else {
+                        best_insert_opt(s, g, x, y, mp, exact)
+                    }
+                };
+                let a = f(&self.scorer, &self.cpdag, x, y, self.cfg.max_parents);
+                let b = f(&self.scorer, &self.cpdag, y, x, self.cfg.max_parents);
+                match (a, b) {
+                    (Some(a), Some(b)) => Some(if a.delta >= b.delta { a } else { b }),
+                    (a, b) => a.or(b),
+                }
+            }
+            Phase::Backward => {
+                let a = best_delete(&self.scorer, &self.cpdag, x, y);
+                let b = best_delete(&self.scorer, &self.cpdag, y, x);
+                match (a, b) {
+                    (Some(a), Some(b)) => Some(if a.delta >= b.delta { a } else { b }),
+                    (a, b) => a.or(b),
+                }
+            }
+        }
+    }
+
+    /// Candidate pair applicability for a phase.
+    fn applicable(&self, x: usize, y: usize, phase: Phase) -> bool {
+        match phase {
+            Phase::Forward => !self.cpdag.adjacent(x, y) && self.allowed(x, y),
+            // Deletions are always allowed ("addition and deletion ...
+            // restrained to E_i" — an edge inside the graph can only be
+            // there if its pair was permitted, so masking deletes too
+            // only matters for fused-in edges; the paper prunes those
+            // during the constrained GES run, so we do NOT mask deletes).
+            Phase::Backward => {
+                self.cpdag.has_directed(x, y)
+                    || self.cpdag.has_directed(y, x)
+                    || self.cpdag.has_undirected(x, y)
+            }
+        }
+    }
+
+    /// Parallel evaluation of a set of unordered pairs; pushes positive
+    /// candidates into the phase's heap.
+    fn evaluate_pairs(&mut self, pairs: &[(usize, usize)], phase: Phase) {
+        let results = par_map_index(pairs.len(), self.cfg.threads, |i| {
+            let (x, y) = pairs[i];
+            // Estimates only: path validity deferred to pop time.
+            self.best_for_pair(x, y, phase, false).map(|op| (op.delta, op.x, op.y))
+        });
+        self.evaluations += pairs.len() as u64;
+        let version = &self.version;
+        let cands = results.into_iter().flatten().filter(|(d, _, _)| *d > EPS).map(
+            |(delta, x, y)| Cand { delta, x, y, vx: version[x], vy: version[y], exact: true },
+        );
+        match phase {
+            Phase::Forward => self.fwd.extend(cands),
+            Phase::Backward => self.bwd.extend(cands),
+        }
+    }
+
+    /// All applicable unordered pairs for a phase.
+    fn frontier(&self, phase: Phase) -> Vec<(usize, usize)> {
+        let n = self.n();
+        let mut pairs = Vec::new();
+        match phase {
+            Phase::Forward => {
+                for x in 0..n {
+                    if let Some(mask) = &self.cfg.mask {
+                        for y in mask.partners(x).iter() {
+                            if x < y && !self.cpdag.adjacent(x, y) {
+                                pairs.push((x, y));
+                            }
+                        }
+                    } else {
+                        for y in (x + 1)..n {
+                            if !self.cpdag.adjacent(x, y) {
+                                pairs.push((x, y));
+                            }
+                        }
+                    }
+                }
+            }
+            Phase::Backward => {
+                for x in 0..n {
+                    for y in self.cpdag.adjacents(x).iter() {
+                        if x < y {
+                            pairs.push((x, y));
+                        }
+                    }
+                }
+            }
+        }
+        pairs
+    }
+
+    /// Apply an operator, re-complete, bump versions of changed nodes,
+    /// and return them. `None` (with state untouched) if the PDAG
+    /// became inconsistent (operator raced a stale validity — skip it).
+    fn apply_and_refresh(&mut self, op: &Operator) -> Option<Vec<usize>> {
+        let mut pdag = self.cpdag.clone();
+        apply(&mut pdag, op);
+        let completed = complete_pdag(&pdag)?;
+        let n = self.n();
+        let mut changed = Vec::new();
+        for v in 0..n {
+            if completed.parents(v) != self.cpdag.parents(v)
+                || completed.neighbors(v) != self.cpdag.neighbors(v)
+            {
+                changed.push(v);
+                self.version[v] += 1;
+            }
+        }
+        self.cpdag = completed;
+        Some(changed)
+    }
+
+    /// Pairs incident to any changed node, applicable under `phase`.
+    fn incident_pairs(&self, changed: &[usize], phase: Phase) -> Vec<(usize, usize)> {
+        let n = self.n();
+        let mut mark = BitSet::new(n);
+        for &c in changed {
+            mark.insert(c);
+        }
+        let mut pairs = Vec::new();
+        for &c in changed {
+            for w in 0..n {
+                if w == c || (mark.contains(w) && w < c) {
+                    continue; // dedupe pairs with both ends changed
+                }
+                let (x, y) = if c < w { (c, w) } else { (w, c) };
+                if self.applicable(x, y, phase) {
+                    pairs.push((x, y));
+                }
+            }
+        }
+        pairs
+    }
+
+    /// Populate a phase's heap: the similarity seed when starting from
+    /// the empty graph (exact ∅-graph deltas for free), the evaluated
+    /// full frontier otherwise.
+    fn seed_phase(&mut self, phase: Phase) {
+        let seeded = phase == Phase::Forward
+            && self.cfg.seed.is_some()
+            && self.cpdag.total_edges() == 0;
+        if seeded {
+            let seed = self.cfg.seed.clone().unwrap();
+            let n = self.n();
+            for x in 0..n {
+                let iter: Box<dyn Iterator<Item = usize>> = if let Some(m) = &self.cfg.mask {
+                    Box::new(m.partners(x).iter().filter(move |&y| y > x))
+                } else {
+                    Box::new((x + 1)..n)
+                };
+                for y in iter {
+                    let d = seed[y][x].max(seed[x][y]);
+                    if d > EPS {
+                        self.fwd.push(Cand { delta: d, x, y, vx: 0, vy: 0, exact: false });
+                    }
+                }
+            }
+        } else {
+            let frontier = self.frontier(phase);
+            self.evaluate_pairs(&frontier, phase);
+        }
+        match phase {
+            Phase::Forward => self.fwd_seeded = true,
+            Phase::Backward => self.bwd_seeded = true,
+        }
+    }
+
+    fn pop(&mut self, phase: Phase) -> Option<Cand> {
+        match phase {
+            Phase::Forward => self.fwd.pop(),
+            Phase::Backward => self.bwd.pop(),
+        }
+    }
+
+    fn push(&mut self, phase: Phase, cand: Cand) {
+        match phase {
+            Phase::Forward => self.fwd.push(cand),
+            Phase::Backward => self.bwd.push(cand),
+        }
+    }
+
+    /// One greedy phase (FES or BES) over the persistent heaps.
+    /// Returns number of applied ops.
+    fn run_phase(&mut self, phase: Phase, limit: Option<usize>) -> usize {
+        let seeded = match phase {
+            Phase::Forward => self.fwd_seeded,
+            Phase::Backward => self.bwd_seeded,
+        };
+        if !seeded {
+            self.seed_phase(phase);
+            match phase {
+                Phase::Forward => self.dirty_fwd.clear(),
+                Phase::Backward => self.dirty_bwd.clear(),
+            }
+        } else {
+            // Batched catch-up on nodes touched by the other phase or
+            // by ring fusion since this heap was last current.
+            let mut dirty = match phase {
+                Phase::Forward => std::mem::take(&mut self.dirty_fwd),
+                Phase::Backward => std::mem::take(&mut self.dirty_bwd),
+            };
+            dirty.sort_unstable();
+            dirty.dedup();
+            if !dirty.is_empty() {
+                let pairs = self.incident_pairs(&dirty, phase);
+                self.evaluate_pairs(&pairs, phase);
+            }
+        }
+
+        let mut applied = 0usize;
+        let mut deferred: Vec<Cand> = Vec::new(); // positive leftovers past the limit
+        while let Some(cand) = self.pop(phase) {
+            if cand.delta <= EPS {
+                break;
+            }
+            if let Some(lim) = limit {
+                if applied >= lim {
+                    deferred.push(cand); // keep for the next round
+                    break;
+                }
+            }
+            let fresh =
+                cand.vx == self.version[cand.x] && cand.vy == self.version[cand.y];
+            if !fresh || !cand.exact {
+                // Stale or seeded estimate: recompute and re-push.
+                if self.applicable(cand.x, cand.y, phase) {
+                    if let Some(op) = self.best_for_pair(cand.x, cand.y, phase, false) {
+                        self.evaluations += 1;
+                        if op.delta > EPS {
+                            let c = Cand {
+                                delta: op.delta,
+                                x: cand.x,
+                                y: cand.y,
+                                vx: self.version[cand.x],
+                                vy: self.version[cand.y],
+                                exact: true,
+                            };
+                            self.push(phase, c);
+                        }
+                    }
+                }
+                continue;
+            }
+            // Fresh: recompute once — revalidates the path condition
+            // and gives the operator to apply.
+            if !self.applicable(cand.x, cand.y, phase) {
+                continue;
+            }
+            let Some(op) = self.best_for_pair(cand.x, cand.y, phase, true) else {
+                continue;
+            };
+            self.evaluations += 1;
+            if op.delta <= EPS {
+                continue;
+            }
+            if (op.delta - cand.delta).abs() > 1e-9 {
+                // Value moved (path-check correction or stale base):
+                // reorder with the exact value.
+                let c = Cand {
+                    delta: op.delta,
+                    x: cand.x,
+                    y: cand.y,
+                    vx: self.version[cand.x],
+                    vy: self.version[cand.y],
+                    exact: true,
+                };
+                self.push(phase, c);
+                continue;
+            }
+            // Apply.
+            let Some(changed) = self.apply_and_refresh(&op) else {
+                continue; // inconsistent extension: drop candidate
+            };
+            applied += 1;
+            // Refresh candidates incident to the change for the active
+            // phase now; mark them dirty for the other phase (drained
+            // in a single batch when that phase next runs).
+            let pairs = self.incident_pairs(&changed, phase);
+            self.evaluate_pairs(&pairs, phase);
+            match phase {
+                Phase::Forward => self.dirty_bwd.extend_from_slice(&changed),
+                Phase::Backward => self.dirty_fwd.extend_from_slice(&changed),
+            }
+        }
+        for c in deferred {
+            self.push(phase, c);
+        }
+        applied
+    }
+
+    /// Replace the search graph (ring fusion result): bump versions of
+    /// every node whose parents/neighbors changed and re-evaluate only
+    /// the incident pairs — entries for untouched pairs in the
+    /// persistent heaps remain valid.
+    fn absorb_graph(&mut self, new_dag: &Dag) {
+        let completed = if new_dag.edge_count() == 0 {
+            Pdag::new(new_dag.n())
+        } else {
+            dag_to_cpdag(new_dag)
+        };
+        let n = self.n();
+        let mut changed = Vec::new();
+        for v in 0..n {
+            if completed.parents(v) != self.cpdag.parents(v)
+                || completed.neighbors(v) != self.cpdag.neighbors(v)
+            {
+                changed.push(v);
+                self.version[v] += 1;
+            }
+        }
+        self.cpdag = completed;
+        self.dirty_fwd.extend_from_slice(&changed);
+        self.dirty_bwd.extend_from_slice(&changed);
+    }
+}
+
+/// Persistent per-process search state for the ring coordinator: keeps
+/// the candidate heaps, version stamps and CPDAG alive across rounds so
+/// each round only re-evaluates pairs the fusion actually touched —
+/// instead of re-scanning the worker's whole E_i frontier (§Perf: this
+/// cut ring learning time ~an order of magnitude at n ≥ 400).
+pub struct RingWorker {
+    search: Search,
+}
+
+impl RingWorker {
+    /// New worker over an empty graph.
+    pub fn new(scorer: BdeuScorer, cfg: GesConfig) -> RingWorker {
+        let n = scorer.data().n_vars();
+        RingWorker {
+            search: Search {
+                scorer,
+                cfg,
+                cpdag: Pdag::new(n),
+                version: vec![0; n],
+                evaluations: 0,
+                fwd: BinaryHeap::new(),
+                bwd: BinaryHeap::new(),
+                fwd_seeded: false,
+                bwd_seeded: false,
+                dirty_fwd: Vec::new(),
+                dirty_bwd: Vec::new(),
+            },
+        }
+    }
+
+    /// Absorb the fusion result as the new search state.
+    pub fn absorb(&mut self, fused: &Dag) {
+        self.search.absorb_graph(fused);
+    }
+
+    /// One round: FES (optionally capped) + BES. Returns
+    /// `(inserts, deletes)`.
+    pub fn step(&mut self, insert_limit: Option<usize>) -> (usize, usize) {
+        let i = self.search.run_phase(Phase::Forward, insert_limit);
+        let d = self.search.run_phase(Phase::Backward, None);
+        (i, d)
+    }
+
+    /// Current model as a DAG.
+    pub fn dag(&self) -> Dag {
+        pdag_to_dag(&self.search.cpdag).expect("worker CPDAG must be extendable")
+    }
+
+    /// Candidate evaluations so far (telemetry).
+    pub fn evaluations(&self) -> u64 {
+        self.search.evaluations
+    }
+}
+
+/// Run GES from an initial DAG.
+pub fn ges(scorer: &BdeuScorer, init: &Dag, cfg: &GesConfig) -> GesResult {
+    let cpdag = if init.edge_count() == 0 {
+        Pdag::new(init.n())
+    } else {
+        dag_to_cpdag(init)
+    };
+    let mut search = Search {
+        scorer: scorer.clone(),
+        cfg: cfg.clone(),
+        cpdag,
+        version: vec![0; init.n()],
+        evaluations: 0,
+        fwd: BinaryHeap::new(),
+        bwd: BinaryHeap::new(),
+        fwd_seeded: false,
+        bwd_seeded: false,
+        dirty_fwd: Vec::new(),
+        dirty_bwd: Vec::new(),
+    };
+
+    let mut inserts = 0;
+    let mut deletes = 0;
+    loop {
+        let i = search.run_phase(Phase::Forward, cfg.insert_limit);
+        let d = search.run_phase(Phase::Backward, None);
+        inserts += i;
+        deletes += d;
+        if !cfg.iterate_until_stable || (i == 0 && d == 0) {
+            break;
+        }
+    }
+
+    let dag = pdag_to_dag(&search.cpdag).expect("final CPDAG must be extendable");
+    let score = scorer.score_dag(&dag);
+    GesResult { dag, cpdag: search.cpdag, score, inserts, deletes, evaluations: search.evaluations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::{forward_sample, generate, NetGenConfig};
+    use crate::data::Dataset;
+    use crate::graph::markov_equivalent;
+    use std::sync::Arc;
+
+    fn learn(data: Arc<Dataset>, cfg: &GesConfig) -> (GesResult, BdeuScorer) {
+        let sc = BdeuScorer::new(data, 10.0);
+        let n = sc.data().n_vars();
+        let r = ges(&sc, &Dag::new(n), cfg);
+        (r, sc)
+    }
+
+    #[test]
+    fn recovers_chain_class() {
+        // Ground truth 0 -> 1 -> 2; GES should recover the equivalence
+        // class (chain skeleton, no collider).
+        let bn = generate(
+            &NetGenConfig { nodes: 3, edges: 2, max_parents: 1, locality: 0, ..Default::default() },
+            21,
+        );
+        let data = Arc::new(forward_sample(&bn, 4000, 1));
+        let (r, _) = learn(data, &GesConfig::default());
+        assert!(markov_equivalent(&r.dag, &bn.dag) || r.dag.skeleton() == bn.dag.skeleton());
+    }
+
+    #[test]
+    fn improves_over_empty_and_bes_prunes() {
+        let bn = generate(&NetGenConfig { nodes: 12, edges: 16, ..Default::default() }, 3);
+        let data = Arc::new(forward_sample(&bn, 2000, 5));
+        let (r, sc) = learn(data, &GesConfig::default());
+        let empty = sc.score_dag(&Dag::new(12));
+        assert!(r.score > empty, "GES must beat the empty graph");
+        assert!(r.inserts > 0);
+    }
+
+    #[test]
+    fn mask_restricts_edges() {
+        let bn = generate(&NetGenConfig { nodes: 10, edges: 14, ..Default::default() }, 8);
+        let data = Arc::new(forward_sample(&bn, 1500, 2));
+        // Only pairs within {0..4} and within {5..9} allowed.
+        let mut mask = EdgeMask::new(10);
+        for a in 0..5 {
+            for b in (a + 1)..5 {
+                mask.allow(a, b);
+                mask.allow(a + 5, b + 5);
+            }
+        }
+        let cfg = GesConfig { mask: Some(Arc::new(mask.clone())), ..Default::default() };
+        let (r, _) = learn(data, &cfg);
+        for (u, v) in r.dag.edges() {
+            assert!(mask.allowed(u, v), "edge ({u},{v}) outside mask");
+        }
+    }
+
+    #[test]
+    fn insert_limit_caps_edges() {
+        let bn = generate(&NetGenConfig { nodes: 12, edges: 20, ..Default::default() }, 4);
+        let data = Arc::new(forward_sample(&bn, 1500, 3));
+        let cfg = GesConfig { insert_limit: Some(3), ..Default::default() };
+        let (r, _) = learn(data, &cfg);
+        assert!(r.inserts <= 3);
+        assert!(r.dag.edge_count() <= 3);
+    }
+
+    #[test]
+    fn seeded_matches_unseeded() {
+        let bn = generate(&NetGenConfig { nodes: 10, edges: 13, ..Default::default() }, 6);
+        let data = Arc::new(forward_sample(&bn, 1200, 9));
+        let sc1 = BdeuScorer::new(data.clone(), 10.0);
+        let plain = ges(&sc1, &Dag::new(10), &GesConfig::default());
+
+        let pw = crate::score::pairwise_similarity(&data, 10.0, 2);
+        let sc2 = BdeuScorer::new(data, 10.0);
+        let seeded = ges(
+            &sc2,
+            &Dag::new(10),
+            &GesConfig { seed: Some(Arc::new(pw.s.clone())), ..Default::default() },
+        );
+        assert!((plain.score - seeded.score).abs() < 1e-6, "{} vs {}", plain.score, seeded.score);
+    }
+
+    #[test]
+    fn starting_from_truth_stays_near_truth() {
+        let bn = generate(&NetGenConfig { nodes: 12, edges: 16, ..Default::default() }, 13);
+        let data = Arc::new(forward_sample(&bn, 3000, 11));
+        let sc = BdeuScorer::new(data, 10.0);
+        let from_truth = ges(&sc, &bn.dag, &GesConfig::default());
+        let from_empty = ges(&sc, &Dag::new(12), &GesConfig::default());
+        // Warm start can only do at least as well as the score of truth.
+        assert!(from_truth.score >= sc.score_dag(&bn.dag) - 1e-9);
+        // Both runs should land in the same ballpark.
+        assert!((from_truth.score - from_empty.score).abs() / from_empty.score.abs() < 0.05);
+    }
+}

@@ -1,0 +1,99 @@
+//! Edge mask: the per-process search-space restriction of cGES.
+//!
+//! Stage 1 partitions the O(n²) candidate edges into k disjoint subsets
+//! E_1..E_k; each ring process may only Insert/Delete pairs inside its
+//! mask. GES treats candidate adjacencies symmetrically (equivalence-
+//! class search), so masks hold *unordered* pairs — assigning X→Y and
+//! Y→X to one subset, exactly what the paper's balancing does.
+
+use crate::util::BitSet;
+
+/// Symmetric set of allowed variable pairs.
+#[derive(Clone)]
+pub struct EdgeMask {
+    rows: Vec<BitSet>,
+    count: usize,
+}
+
+impl EdgeMask {
+    /// Empty mask over `n` variables.
+    pub fn new(n: usize) -> Self {
+        EdgeMask { rows: vec![BitSet::new(n); n], count: 0 }
+    }
+
+    /// Mask allowing every pair.
+    pub fn full(n: usize) -> Self {
+        let mut m = EdgeMask::new(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    m.rows[i].insert(j);
+                }
+            }
+        }
+        m.count = n * (n - 1) / 2;
+        m
+    }
+
+    /// Number of variables.
+    pub fn n(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Allow the unordered pair {x, y}.
+    pub fn allow(&mut self, x: usize, y: usize) {
+        debug_assert!(x != y);
+        if !self.rows[x].contains(y) {
+            self.rows[x].insert(y);
+            self.rows[y].insert(x);
+            self.count += 1;
+        }
+    }
+
+    /// True iff the pair {x, y} is in the mask.
+    #[inline]
+    pub fn allowed(&self, x: usize, y: usize) -> bool {
+        self.rows[x].contains(y)
+    }
+
+    /// Row view: all partners allowed with `x`.
+    pub fn partners(&self, x: usize) -> &BitSet {
+        &self.rows[x]
+    }
+
+    /// Number of unordered pairs in the mask.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    /// True iff no pair is allowed.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_and_query_symmetric() {
+        let mut m = EdgeMask::new(5);
+        assert!(!m.allowed(0, 1));
+        m.allow(0, 1);
+        assert!(m.allowed(0, 1) && m.allowed(1, 0));
+        assert_eq!(m.len(), 1);
+        m.allow(1, 0); // idempotent
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn full_mask_counts() {
+        let m = EdgeMask::full(6);
+        assert_eq!(m.len(), 15);
+        for i in 0..6 {
+            assert!(!m.allowed(i, i));
+            assert_eq!(m.partners(i).count(), 5);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Structure learners: GES (paper's parallel variant), fGES baseline,
+//! the Chickering operator machinery, and edge-mask restrictions.
+
+pub mod fges;
+pub mod ges;
+pub mod mask;
+pub mod operators;
+
+pub use fges::{fges, FgesConfig};
+pub use ges::{ges, GesConfig, GesResult, RingWorker};
+pub use mask::EdgeMask;
+pub use operators::Operator;

@@ -1,0 +1,405 @@
+//! GES operators on equivalence classes (Chickering 2002):
+//! Insert(X, Y, T) and Delete(X, Y, H) — validity tests, score deltas
+//! and CPDAG application.
+//!
+//! Validity (Theorems 15/17 of Chickering 2002):
+//! * Insert(X,Y,T): X, Y non-adjacent; T ⊆ neighbors(Y) \ adj(X);
+//!   NA_{Y,X} ∪ T is a clique; every semi-directed Y→X path is blocked
+//!   by NA_{Y,X} ∪ T.
+//!   Δ = s(Y, NA ∪ T ∪ Pa(Y) ∪ {X}) − s(Y, NA ∪ T ∪ Pa(Y)).
+//! * Delete(X,Y,H): X→Y or X−Y; H ⊆ NA_{Y,X}; NA_{Y,X} \ H is a clique.
+//!   Δ = s(Y, (NA\H) ∪ Pa(Y) \ {X}) − s(Y, (NA\H) ∪ Pa(Y)).
+//!
+//! After application the PDAG is re-completed by the caller
+//! (`graph::complete_pdag`).
+
+use crate::graph::Pdag;
+use crate::score::BdeuScorer;
+use crate::util::BitSet;
+
+/// Largest NA/T candidate pool enumerated exhaustively; beyond this a
+/// greedy forward pass is used. 2^6 = 64 subsets bounds the per-pair
+/// work on dense fused subgraphs (unlimited cGES grows those — the
+/// paper's stated motivation for cGES-L) while sparse regions are
+/// unaffected.
+const EXHAUSTIVE_LIMIT: usize = 6;
+
+/// Widest family (parents incl. X) a candidate evaluation will score.
+/// With 2-5k rows, families beyond this width have q >> m and are never
+/// competitive under BDeu; scoring them costs a fresh sparse count per
+/// T-subset, which blew up unlimited-cGES benches (§Perf).
+const MAX_EVAL_WIDTH: usize = 8;
+
+/// A scored, applicable operator.
+#[derive(Clone, Debug)]
+pub struct Operator {
+    /// Insert = true, Delete = false.
+    pub is_insert: bool,
+    pub x: usize,
+    pub y: usize,
+    /// T (insert) or H (delete) node set.
+    pub set: Vec<usize>,
+    /// Score delta of applying the operator.
+    pub delta: f64,
+}
+
+/// Score delta of Insert(x, y, t_set) on `g`.
+pub fn insert_delta(scorer: &BdeuScorer, g: &Pdag, x: usize, y: usize, t: &BitSet) -> f64 {
+    let mut base: Vec<usize> = g.na(y, x).union(t).union(&g.parents(y).clone()).to_vec();
+    base.retain(|&v| v != x);
+    let mut with_x = base.clone();
+    with_x.push(x);
+    scorer.local(y, &with_x) - scorer.local(y, &base)
+}
+
+/// Score delta of Delete(x, y, h_set) on `g`.
+pub fn delete_delta(scorer: &BdeuScorer, g: &Pdag, x: usize, y: usize, h: &BitSet) -> f64 {
+    let mut na_minus_h = g.na(y, x);
+    na_minus_h.difference_with(h);
+    let mut with_x: Vec<usize> = na_minus_h.union(g.parents(y)).to_vec();
+    if !with_x.contains(&x) {
+        with_x.push(x);
+    }
+    let without_x: Vec<usize> = with_x.iter().copied().filter(|&v| v != x).collect();
+    scorer.local(y, &without_x) - scorer.local(y, &with_x)
+}
+
+/// Insert validity (Chickering Thm 15).
+pub fn valid_insert(g: &Pdag, x: usize, y: usize, t: &BitSet) -> bool {
+    valid_insert_opt(g, x, y, t, true)
+}
+
+/// Insert validity with an optional path check. The clique condition is
+/// cheap and always verified; the semi-directed-path BFS (the §Perf
+/// profile's second-largest cost) may be skipped for heap *estimates* —
+/// the search re-validates every candidate exactly before applying it,
+/// so a skipped check can only cost a wasted pop, never a wrong apply.
+pub fn valid_insert_opt(g: &Pdag, x: usize, y: usize, t: &BitSet, check_path: bool) -> bool {
+    debug_assert!(!g.adjacent(x, y));
+    let na_t = g.na(y, x).union(t);
+    if !g.is_clique(&na_t) {
+        return false;
+    }
+    // Every semi-directed path from Y to X must pass through NA ∪ T:
+    // equivalently no such path exists once NA ∪ T is blocked.
+    !check_path || !g.has_semi_directed_path(y, x, &na_t)
+}
+
+/// Delete validity (Chickering Thm 17).
+pub fn valid_delete(g: &Pdag, x: usize, y: usize, h: &BitSet) -> bool {
+    debug_assert!(g.has_directed(x, y) || g.has_undirected(x, y));
+    let mut na_minus_h = g.na(y, x);
+    na_minus_h.difference_with(h);
+    g.is_clique(&na_minus_h)
+}
+
+/// Best valid Insert(x, y, ·) by exhaustive / greedy T search.
+/// Returns `None` when no valid positive-candidate structure exists
+/// (all deltas are still reported; caller filters on `delta > 0`).
+pub fn best_insert(
+    scorer: &BdeuScorer,
+    g: &Pdag,
+    x: usize,
+    y: usize,
+    max_parents: Option<usize>,
+) -> Option<Operator> {
+    best_insert_opt(scorer, g, x, y, max_parents, true)
+}
+
+/// [`best_insert`] with the path check optionally deferred (see
+/// [`valid_insert_opt`]).
+pub fn best_insert_opt(
+    scorer: &BdeuScorer,
+    g: &Pdag,
+    x: usize,
+    y: usize,
+    max_parents: Option<usize>,
+    check_path: bool,
+) -> Option<Operator> {
+    if g.adjacent(x, y) {
+        return None;
+    }
+    let n = g.n();
+    // T pool: neighbors of Y not adjacent to X.
+    let mut pool = g.neighbors(y).clone();
+    pool.difference_with(&g.adjacents(x));
+    pool.remove(x);
+    let pool_vec: Vec<usize> = pool.iter().collect();
+
+    if let Some(cap) = max_parents {
+        // Even T = ∅ implies |Pa ∪ NA| + 1 parents for Y in the DAG view.
+        let lower = g.parents(y).count() + 1;
+        if lower > cap {
+            return None;
+        }
+    }
+
+    let mut best: Option<(f64, BitSet)> = None;
+    let mut consider = |t: &BitSet, scorer: &BdeuScorer| {
+        if !valid_insert_opt(g, x, y, t, check_path) {
+            return;
+        }
+        let width = g.na(y, x).union(t).union(g.parents(y)).count() + 1;
+        if width > max_parents.unwrap_or(MAX_EVAL_WIDTH).min(MAX_EVAL_WIDTH) {
+            return;
+        }
+        let d = insert_delta(scorer, g, x, y, t);
+        if best.as_ref().map(|(bd, _)| d > *bd).unwrap_or(true) {
+            best = Some((d, t.clone()));
+        }
+    };
+
+    if pool_vec.len() <= EXHAUSTIVE_LIMIT {
+        // All subsets of the pool.
+        let k = pool_vec.len();
+        for bits in 0..(1u32 << k) {
+            let mut t = BitSet::new(n);
+            for (i, &v) in pool_vec.iter().enumerate() {
+                if bits >> i & 1 == 1 {
+                    t.insert(v);
+                }
+            }
+            consider(&t, scorer);
+        }
+    } else {
+        // Greedy grow from ∅.
+        let mut t = BitSet::new(n);
+        consider(&t, scorer);
+        loop {
+            let mut improved = false;
+            let current_best = best.as_ref().map(|(d, _)| *d).unwrap_or(f64::NEG_INFINITY);
+            let mut best_add: Option<(f64, usize)> = None;
+            for &v in &pool_vec {
+                if t.contains(v) {
+                    continue;
+                }
+                let mut t2 = t.clone();
+                t2.insert(v);
+                if !valid_insert_opt(g, x, y, &t2, check_path) {
+                    continue;
+                }
+                let d = insert_delta(scorer, g, x, y, &t2);
+                if d > current_best && best_add.map(|(bd, _)| d > bd).unwrap_or(true) {
+                    best_add = Some((d, v));
+                }
+            }
+            if let Some((d, v)) = best_add {
+                t.insert(v);
+                best = Some((d, t.clone()));
+                improved = true;
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+
+    best.map(|(delta, t)| Operator { is_insert: true, x, y, set: t.to_vec(), delta })
+}
+
+/// Insert restricted to T = ∅ (fGES's forward heuristic — skips the
+/// T-subset search entirely; validity still fully checked).
+pub fn best_insert_empty_t(
+    scorer: &BdeuScorer,
+    g: &Pdag,
+    x: usize,
+    y: usize,
+    max_parents: Option<usize>,
+) -> Option<Operator> {
+    if g.adjacent(x, y) {
+        return None;
+    }
+    let t = BitSet::new(g.n());
+    if !valid_insert(g, x, y, &t) {
+        return None;
+    }
+    if let Some(cap) = max_parents {
+        if g.na(y, x).union(g.parents(y)).count() + 1 > cap {
+            return None;
+        }
+    }
+    let delta = insert_delta(scorer, g, x, y, &t);
+    Some(Operator { is_insert: true, x, y, set: Vec::new(), delta })
+}
+
+/// Best valid Delete(x, y, ·) by exhaustive / greedy H search.
+pub fn best_delete(scorer: &BdeuScorer, g: &Pdag, x: usize, y: usize) -> Option<Operator> {
+    if !(g.has_directed(x, y) || g.has_undirected(x, y)) {
+        return None;
+    }
+    let n = g.n();
+    let pool_vec: Vec<usize> = g.na(y, x).iter().collect();
+
+    let mut best: Option<(f64, BitSet)> = None;
+    let mut consider = |h: &BitSet, scorer: &BdeuScorer| {
+        if !valid_delete(g, x, y, h) {
+            return;
+        }
+        let d = delete_delta(scorer, g, x, y, h);
+        if best.as_ref().map(|(bd, _)| d > *bd).unwrap_or(true) {
+            best = Some((d, h.clone()));
+        }
+    };
+
+    if pool_vec.len() <= EXHAUSTIVE_LIMIT {
+        let k = pool_vec.len();
+        for bits in 0..(1u32 << k) {
+            let mut h = BitSet::new(n);
+            for (i, &v) in pool_vec.iter().enumerate() {
+                if bits >> i & 1 == 1 {
+                    h.insert(v);
+                }
+            }
+            consider(&h, scorer);
+        }
+    } else {
+        let mut h = BitSet::new(n);
+        consider(&h, scorer);
+        loop {
+            let current_best = best.as_ref().map(|(d, _)| *d).unwrap_or(f64::NEG_INFINITY);
+            let mut best_add: Option<(f64, usize)> = None;
+            for &v in &pool_vec {
+                if h.contains(v) {
+                    continue;
+                }
+                let mut h2 = h.clone();
+                h2.insert(v);
+                if !valid_delete(g, x, y, &h2) {
+                    continue;
+                }
+                let d = delete_delta(scorer, g, x, y, &h2);
+                if d > current_best && best_add.map(|(bd, _)| d > bd).unwrap_or(true) {
+                    best_add = Some((d, v));
+                }
+            }
+            match best_add {
+                Some((d, v)) => {
+                    h.insert(v);
+                    best = Some((d, h.clone()));
+                }
+                None => break,
+            }
+        }
+    }
+
+    best.map(|(delta, h)| Operator { is_insert: false, x, y, set: h.to_vec(), delta })
+}
+
+/// Apply an operator to the PDAG (caller re-completes afterwards).
+pub fn apply(g: &mut Pdag, op: &Operator) {
+    if op.is_insert {
+        g.add_directed(op.x, op.y);
+        for &t in &op.set {
+            g.orient(t, op.y);
+        }
+    } else {
+        g.remove_between(op.x, op.y);
+        for &h in &op.set {
+            g.orient(op.y, h);
+            if g.has_undirected(op.x, h) {
+                g.orient(op.x, h);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::graph::{complete_pdag, Dag, Pdag};
+    use crate::rng::Rng;
+    use std::sync::Arc;
+
+    fn chain_data() -> Arc<Dataset> {
+        // X0 -> X1 -> X2, strong links, 1000 rows.
+        let mut rng = Rng::new(17);
+        let m = 1000;
+        let mut c0 = vec![0u8; m];
+        let mut c1 = vec![0u8; m];
+        let mut c2 = vec![0u8; m];
+        for t in 0..m {
+            c0[t] = rng.bool(0.5) as u8;
+            c1[t] = if rng.bool(0.9) { c0[t] } else { 1 - c0[t] };
+            c2[t] = if rng.bool(0.9) { c1[t] } else { 1 - c1[t] };
+        }
+        Arc::new(Dataset::unnamed(vec![2, 2, 2], vec![c0, c1, c2]))
+    }
+
+    #[test]
+    fn insert_delta_on_empty_graph_is_pair_gain() {
+        let d = chain_data();
+        let sc = BdeuScorer::new(d, 10.0);
+        let g = Pdag::new(3);
+        let t = BitSet::new(3);
+        let delta = insert_delta(&sc, &g, 0, 1, &t);
+        let expect = sc.local(1, &[0]) - sc.local(1, &[]);
+        assert!((delta - expect).abs() < 1e-12);
+        assert!(delta > 0.0);
+    }
+
+    #[test]
+    fn valid_insert_respects_paths() {
+        // CPDAG 0 -> 1 -> 2 (directed): inserting 2 -> ... back to 0
+        // must be blocked (semi-directed path 0 ⇝ 2 exists).
+        let mut g = Pdag::new(3);
+        g.add_directed(0, 1);
+        g.add_directed(1, 2);
+        let t = BitSet::new(3);
+        // Insert(x=2, y=0): semi-directed path y=0 ⇝ x=2 exists -> invalid
+        // (a 2 -> 0 edge would close a cycle in every consistent DAG).
+        assert!(!valid_insert(&g, 2, 0, &t));
+        // Insert(x=0, y=2): no path 2 ⇝ 0 -> valid.
+        assert!(valid_insert(&g, 0, 2, &t));
+    }
+
+    #[test]
+    fn apply_insert_then_complete() {
+        let d = chain_data();
+        let sc = BdeuScorer::new(d, 10.0);
+        let mut g = Pdag::new(3);
+        let op = best_insert(&sc, &g, 0, 1, None).unwrap();
+        assert!(op.delta > 0.0);
+        apply(&mut g, &op);
+        let c = complete_pdag(&g).unwrap();
+        // Single edge: reversible, so undirected in the CPDAG.
+        assert!(c.has_undirected(0, 1));
+    }
+
+    #[test]
+    fn delete_undoes_insert_delta() {
+        let d = chain_data();
+        let sc = BdeuScorer::new(d.clone(), 10.0);
+        // Graph with undirected 0 - 1 (CPDAG of 0 -> 1).
+        let dag = Dag::from_edges(3, &[(0, 1)]);
+        let g = crate::graph::dag_to_cpdag(&dag);
+        let op = best_delete(&sc, &g, 0, 1).unwrap();
+        // Deleting the (true) edge must lose score.
+        assert!(op.delta < 0.0);
+        let ins = insert_delta(&sc, &Pdag::new(3), 0, 1, &BitSet::new(3));
+        assert!((op.delta + ins).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_insert_skips_adjacent() {
+        let d = chain_data();
+        let sc = BdeuScorer::new(d, 10.0);
+        let mut g = Pdag::new(3);
+        g.add_undirected(0, 1);
+        assert!(best_insert(&sc, &g, 0, 1, None).is_none());
+    }
+
+    #[test]
+    fn max_parents_cap_respected() {
+        let d = chain_data();
+        let sc = BdeuScorer::new(d, 10.0);
+        let mut g = Pdag::new(3);
+        g.add_directed(0, 2);
+        g.add_directed(1, 2);
+        // Cap of 2 parents: inserting a third parent into 2 is refused.
+        assert!(best_insert(&sc, &g, 1, 0, Some(2)).is_some());
+        let mut g3 = Pdag::new(3);
+        g3.add_directed(0, 1);
+        assert!(best_insert(&sc, &g3, 2, 1, Some(1)).is_none());
+    }
+}

@@ -1,0 +1,41 @@
+//! # cGES — Ring-Based Distributed Learning of High-Dimensional Bayesian Networks
+//!
+//! Rust + JAX/Pallas reproduction of *"A Ring-Based Distributed
+//! Algorithm for Learning High-Dimensional Bayesian Networks"*
+//! (Laborda, Torrijos, Puerta, Gámez — LNCS 14294).
+//!
+//! Three layers:
+//! * **L3 (this crate)** — the ring coordinator, GES/fGES learners,
+//!   BN fusion, edge partitioning, scoring, metrics and CLI;
+//! * **L2 (python/compile/model.py)** — the pairwise-BDeu similarity
+//!   graph, AOT-lowered to HLO text at build time;
+//! * **L1 (python/compile/kernels/)** — the blocked Pallas kernel the
+//!   L2 graph calls.
+//!
+//! The learning path is pure Rust; XLA artifacts are loaded through
+//! [`runtime`] and executed via PJRT. See `DESIGN.md` for the full
+//! system inventory.
+
+pub mod bn;
+pub mod cli;
+pub mod coordinator;
+pub mod fusion;
+pub mod data;
+pub mod graph;
+pub mod learn;
+pub mod metrics;
+pub mod partition;
+pub mod rng;
+pub mod runtime;
+pub mod score;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::bn::{forward_sample, load_domain, DiscreteBn, Domain, NetGenConfig};
+    pub use crate::data::Dataset;
+    pub use crate::graph::{Dag, Pdag};
+    pub use crate::rng::Rng;
+    pub use crate::coordinator::{cges, RingConfig, RingResult};
+    pub use crate::score::BdeuScorer;
+}

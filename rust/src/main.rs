@@ -1,0 +1,283 @@
+//! cges — CLI for the ring-distributed Bayesian-network learner.
+//!
+//! Subcommands:
+//!   gen-net    generate a ground-truth network (paper analogs or random)
+//!   sample     forward-sample a dataset from a .bif network
+//!   partition  show the stage-1 edge partition for a dataset
+//!   learn      run cges / cges-l / ges / fges on a dataset
+//!   eval       score a learned structure against truth + data
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use cges::bn::{forward_sample, generate, load_domain, read_bif, write_bif, Domain, NetGenConfig};
+use cges::cli::Args;
+use cges::coordinator::{cges as run_cges, PartitionSource, RingConfig};
+use cges::data::{read_csv, write_csv, Dataset};
+use cges::graph::Dag;
+use cges::learn::{fges, ges, FgesConfig, GesConfig};
+use cges::metrics::evaluate;
+use cges::partition::{partition_edges, partition_stats};
+use cges::score::BdeuScorer;
+use cges::util::Timer;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match cmd {
+        "gen-net" => cmd_gen_net(rest),
+        "sample" => cmd_sample(rest),
+        "partition" => cmd_partition(rest),
+        "learn" => cmd_learn(rest),
+        "eval" => cmd_eval(rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (see `cges help`)"),
+    }
+}
+
+const HELP: &str = "\
+cges — ring-based distributed Bayesian-network structure learning
+
+USAGE: cges <subcommand> [options]
+
+SUBCOMMANDS
+  gen-net    --family link|pigs|munin|random --out net.bif
+             [--scale 1.0] [--nodes N --edges E --max-parents P] [--seed S]
+  sample     --net net.bif --out data.csv [--rows 5000] [--seed S]
+  partition  --data data.csv --k 4 [--ess 10] [--artifacts DIR]
+  learn      --algo cges|cges-l|ges|fges --data data.csv [--out learned.dag]
+             [--k 4] [--ess 10] [--threads N] [--artifacts DIR]
+             [--trace trace.tsv] [--max-rounds 50]
+  eval       --learned learned.dag|.bif --truth net.bif --data data.csv [--ess 10]
+";
+
+fn cmd_gen_net(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(
+        &["family", "out", "scale", "nodes", "edges", "max-parents", "seed"],
+        &[],
+    )?;
+    let family = a.get("family").unwrap_or("random");
+    let seed: u64 = a.get_parse("seed", 1)?;
+    let scale: f64 = a.get_parse("scale", 1.0)?;
+    let bn = if let Some(domain) = Domain::parse(family) {
+        load_domain(domain, scale)
+    } else if family == "random" {
+        let cfg = NetGenConfig {
+            nodes: a.get_parse("nodes", 50)?,
+            edges: a.get_parse("edges", 75)?,
+            max_parents: a.get_parse("max-parents", 3)?,
+            ..Default::default()
+        };
+        generate(&cfg, seed)
+    } else {
+        bail!("unknown family '{family}' (link|pigs|munin|random)");
+    };
+    let out = PathBuf::from(a.require("out")?);
+    write_bif(&bn, &out)?;
+    println!(
+        "wrote {}: {} nodes, {} edges, max parents {}, {} parameters",
+        out.display(),
+        bn.n(),
+        bn.dag.edge_count(),
+        bn.dag.max_in_degree(),
+        bn.parameter_count()
+    );
+    Ok(())
+}
+
+fn cmd_sample(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(&["net", "out", "rows", "seed"], &[])?;
+    let bn = read_bif(Path::new(a.require("net")?))?;
+    let rows: usize = a.get_parse("rows", 5000)?;
+    let seed: u64 = a.get_parse("seed", 1)?;
+    let data = forward_sample(&bn, rows, seed);
+    let out = PathBuf::from(a.require("out")?);
+    write_csv(&data, &out)?;
+    println!("wrote {}: {} rows x {} vars", out.display(), rows, data.n_vars());
+    Ok(())
+}
+
+/// Stage-1 similarity source from an optional artifacts dir.
+fn similarity_source(artifacts: Option<&str>) -> PartitionSource {
+    match artifacts {
+        Some(dir) => PartitionSource::Artifacts(PathBuf::from(dir)),
+        None => PartitionSource::RustFallback,
+    }
+}
+
+fn cmd_partition(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(&["data", "k", "ess", "artifacts", "threads"], &[])?;
+    let data = Arc::new(read_csv(Path::new(a.require("data")?))?);
+    let k: usize = a.get_parse("k", 4)?;
+    let ess: f64 = a.get_parse("ess", 10.0)?;
+    let threads: usize = a.get_parse("threads", cges::util::num_threads())?;
+
+    let t = Timer::start();
+    let (pw, source) = match similarity_source(a.get("artifacts")) {
+        PartitionSource::Artifacts(dir) => {
+            let rt = cges::runtime::SimilarityRuntime::load(&dir)?;
+            (rt.pairwise(&data, ess)?, format!("xla:{}", rt.platform()))
+        }
+        PartitionSource::RustFallback => (
+            cges::score::pairwise_similarity(&data, ess, threads),
+            "rust-fallback".to_string(),
+        ),
+    };
+    let sim_secs = t.secs();
+    let masks = partition_edges(&pw.s, k);
+    let stats = partition_stats(&masks, data.n_vars());
+    println!("similarity: {source} in {sim_secs:.2}s");
+    println!(
+        "partition into k={k}: sizes {:?} (total {} / expected {})",
+        stats.sizes, stats.total, stats.expected
+    );
+    Ok(())
+}
+
+fn cmd_learn(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(
+        &[
+            "algo",
+            "data",
+            "out",
+            "k",
+            "ess",
+            "threads",
+            "artifacts",
+            "trace",
+            "max-rounds",
+            "max-parents",
+        ],
+        &[],
+    )?;
+    let algo = a.require("algo")?;
+    let data = Arc::new(read_csv(Path::new(a.require("data")?))?);
+    let ess: f64 = a.get_parse("ess", 10.0)?;
+    let threads: usize = a.get_parse("threads", cges::util::num_threads())?;
+    let k: usize = a.get_parse("k", 4)?;
+    let n = data.n_vars();
+
+    let t = Timer::start();
+    let (dag, score) = match algo {
+        "cges" | "cges-l" => {
+            let cfg = RingConfig {
+                k,
+                limit_inserts: algo == "cges-l",
+                ess,
+                threads,
+                max_rounds: a.get_parse("max-rounds", 50)?,
+                partition_source: similarity_source(a.get("artifacts")),
+                fine_tune: true,
+                max_parents: a.get("max-parents").map(|v| v.parse()).transpose()?,
+            };
+            let r = run_cges(data.clone(), &cfg)?;
+            println!(
+                "ring converged in {} rounds (partition {:.2}s [{}], learning {:.2}s, fine-tune {:.2}s; cache {}/{} hit/computed)",
+                r.rounds,
+                r.telemetry.partition_secs,
+                r.telemetry.partition_source,
+                r.telemetry.learning_secs,
+                r.telemetry.fine_tune_secs,
+                r.telemetry.cache_hits,
+                r.telemetry.cache_misses,
+            );
+            if let Some(path) = a.get("trace") {
+                r.telemetry.write_tsv(Path::new(path))?;
+                println!("trace written to {path}");
+            }
+            (r.dag, r.score)
+        }
+        "ges" => {
+            let sc = BdeuScorer::new(data.clone(), ess);
+            let r = ges(&sc, &Dag::new(n), &GesConfig { threads, ..Default::default() });
+            (r.dag, r.score)
+        }
+        "fges" => {
+            let sc = BdeuScorer::new(data.clone(), ess);
+            let r = fges(&sc, &Dag::new(n), &FgesConfig { threads, ..Default::default() });
+            (r.dag, r.score)
+        }
+        other => bail!("unknown algo '{other}' (cges|cges-l|ges|fges)"),
+    };
+    let secs = t.secs();
+    println!(
+        "{algo}: score {score:.4} (normalized {:.4}), {} edges, {secs:.2}s",
+        score / data.n_rows() as f64,
+        dag.edge_count()
+    );
+
+    if let Some(out) = a.get("out") {
+        write_structure(&dag, data.names(), Path::new(out))?;
+        println!("structure written to {out}");
+    }
+    Ok(())
+}
+
+/// Write a learned structure as an edge list (`.dag` text format:
+/// one `parent<TAB>child` line per edge, names resolved).
+fn write_structure(dag: &Dag, names: &[String], path: &Path) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for (u, v) in dag.edges() {
+        writeln!(f, "{}\t{}", names[u], names[v])?;
+    }
+    Ok(())
+}
+
+/// Read a structure written by [`write_structure`].
+fn read_structure(path: &Path, data: &Dataset) -> Result<Dag> {
+    let text = std::fs::read_to_string(path)?;
+    let mut dag = Dag::new(data.n_vars());
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut it = line.split('\t');
+        let (u, v) =
+            (it.next().context("missing parent")?, it.next().context("missing child")?);
+        let ui =
+            data.index_of(u).with_context(|| format!("line {}: unknown var {u}", lineno + 1))?;
+        let vi =
+            data.index_of(v).with_context(|| format!("line {}: unknown var {v}", lineno + 1))?;
+        dag.add_edge(ui, vi);
+    }
+    Ok(dag)
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(&["learned", "truth", "data", "ess"], &[])?;
+    let data = Arc::new(read_csv(Path::new(a.require("data")?))?);
+    let ess: f64 = a.get_parse("ess", 10.0)?;
+    let truth = read_bif(Path::new(a.require("truth")?))?;
+    let learned_path = Path::new(a.require("learned")?);
+    let learned = if learned_path.extension().map(|e| e == "bif").unwrap_or(false) {
+        read_bif(learned_path)?.dag
+    } else {
+        read_structure(learned_path, &data)?
+    };
+    let sc = BdeuScorer::new(data.clone(), ess);
+    let r = evaluate(&learned, &truth.dag, &sc);
+    println!(
+        "BDeu {:.4} (normalized {:.4}) | SMHD {} | edges {} | skeleton P {:.3} R {:.3} F1 {:.3}",
+        r.bdeu, r.bdeu_normalized, r.smhd, r.edges, r.precision, r.recall, r.f1
+    );
+    Ok(())
+}

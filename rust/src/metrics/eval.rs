@@ -1,0 +1,109 @@
+//! Learned-structure evaluation: the three scores of the paper's
+//! tables (normalized BDeu, SMHD, CPU time) plus skeleton
+//! precision/recall diagnostics.
+
+use crate::graph::Dag;
+use crate::metrics::smhd::smhd;
+use crate::score::BdeuScorer;
+
+/// Evaluation report for one learned structure.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    /// BDeu / n_rows — the normalization the paper's Table 2a uses.
+    pub bdeu_normalized: f64,
+    /// Raw BDeu.
+    pub bdeu: f64,
+    /// Structural Moral Hamming Distance to the reference.
+    pub smhd: usize,
+    /// Learned edge count.
+    pub edges: usize,
+    /// Skeleton precision/recall/F1 against the reference DAG.
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+/// Evaluate `learned` against ground truth + data.
+pub fn evaluate(learned: &Dag, truth: &Dag, scorer: &BdeuScorer) -> EvalReport {
+    let bdeu = scorer.score_dag(learned);
+    let n_rows = scorer.data().n_rows() as f64;
+
+    let skel_l = learned.skeleton();
+    let skel_t = truth.skeleton();
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut fn_ = 0usize;
+    for v in 0..learned.n() {
+        let mut inter = skel_l[v].clone();
+        inter.intersect_with(&skel_t[v]);
+        tp += inter.count();
+        let mut onlyl = skel_l[v].clone();
+        onlyl.difference_with(&skel_t[v]);
+        fp += onlyl.count();
+        let mut onlyt = skel_t[v].clone();
+        onlyt.difference_with(&skel_l[v]);
+        fn_ += onlyt.count();
+    }
+    let (tp, fp, fn_) = (tp / 2, fp / 2, fn_ / 2);
+    let precision = if tp + fp > 0 { tp as f64 / (tp + fp) as f64 } else { 1.0 };
+    let recall = if tp + fn_ > 0 { tp as f64 / (tp + fn_) as f64 } else { 1.0 };
+    let f1 = if precision + recall > 0.0 {
+        2.0 * precision * recall / (precision + recall)
+    } else {
+        0.0
+    };
+
+    EvalReport {
+        bdeu_normalized: bdeu / n_rows,
+        bdeu,
+        smhd: smhd(learned, truth),
+        edges: learned.edge_count(),
+        precision,
+        recall,
+        f1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use std::sync::Arc;
+
+    fn scorer() -> BdeuScorer {
+        let d = Dataset::unnamed(
+            vec![2, 2, 2],
+            vec![vec![0, 1, 0, 1], vec![0, 1, 0, 1], vec![1, 0, 1, 0]],
+        );
+        BdeuScorer::new(Arc::new(d), 10.0)
+    }
+
+    #[test]
+    fn perfect_recovery() {
+        let truth = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let r = evaluate(&truth, &truth, &scorer());
+        assert_eq!(r.smhd, 0);
+        assert_eq!((r.precision, r.recall, r.f1), (1.0, 1.0, 1.0));
+        assert!((r.bdeu_normalized - r.bdeu / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_recovery_counts() {
+        let truth = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let learned = Dag::from_edges(3, &[(0, 1), (0, 2)]);
+        let r = evaluate(&learned, &truth, &scorer());
+        // tp = 1 ({0,1}), fp = 1 ({0,2}), fn = 1 ({1,2})
+        assert!((r.precision - 0.5).abs() < 1e-12);
+        assert!((r.recall - 0.5).abs() < 1e-12);
+        assert!(r.smhd > 0);
+    }
+
+    #[test]
+    fn empty_learned_graph() {
+        let truth = Dag::from_edges(3, &[(0, 1)]);
+        let r = evaluate(&Dag::new(3), &truth, &scorer());
+        assert_eq!(r.edges, 0);
+        assert_eq!(r.recall, 0.0);
+        assert_eq!(r.precision, 1.0); // no claims, none wrong
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation metrics: SMHD (the paper's structural score) and the
+//! combined per-run report.
+
+pub mod eval;
+pub mod smhd;
+
+pub use eval::{evaluate, EvalReport};
+pub use smhd::{smhd, smhd_vs_empty};

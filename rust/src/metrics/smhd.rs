@@ -1,0 +1,64 @@
+//! Structural Moral Hamming Distance (SMHD) — the paper's structural
+//! quality metric: the Hamming distance between the moralized graphs
+//! of the learned and true networks (de Jongh & Druzdzel 2009).
+
+use crate::graph::{moral_graph, Dag};
+
+/// SMHD between two DAGs over the same variable set.
+pub fn smhd(a: &Dag, b: &Dag) -> usize {
+    assert_eq!(a.n(), b.n());
+    let ma = moral_graph(a);
+    let mb = moral_graph(b);
+    let mut dist = 0usize;
+    for v in 0..a.n() {
+        // Symmetric difference of adjacency rows, each edge seen twice.
+        let mut diff = ma[v].clone();
+        diff.difference_with(&mb[v]);
+        dist += diff.count();
+        let mut diff2 = mb[v].clone();
+        diff2.difference_with(&ma[v]);
+        dist += diff2.count();
+    }
+    dist / 2
+}
+
+/// SMHD of a DAG against the empty graph (Table 1's "Empty SMHD").
+pub fn smhd_vs_empty(g: &Dag) -> usize {
+    smhd(g, &Dag::new(g.n()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_zero() {
+        let g = Dag::from_edges(4, &[(0, 1), (1, 2), (0, 3)]);
+        assert_eq!(smhd(&g, &g), 0);
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = Dag::from_edges(4, &[(0, 1), (1, 2)]);
+        let b = Dag::from_edges(4, &[(0, 1), (2, 3)]);
+        assert_eq!(smhd(&a, &b), smhd(&b, &a));
+    }
+
+    #[test]
+    fn counts_moral_edges() {
+        // a: 0 -> 2 <- 1 moralizes to triangle (3 edges);
+        // b: empty. SMHD = 3.
+        let a = Dag::from_edges(3, &[(0, 2), (1, 2)]);
+        let b = Dag::new(3);
+        assert_eq!(smhd(&a, &b), 3);
+        assert_eq!(smhd_vs_empty(&a), 3);
+    }
+
+    #[test]
+    fn equivalent_dags_zero_distance() {
+        // Markov-equivalent chains share the moral graph.
+        let a = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let b = Dag::from_edges(3, &[(1, 0), (1, 2)]);
+        assert_eq!(smhd(&a, &b), 0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Edge-subset assignment (stage 1, second half).
+//!
+//! With k variable clusters in hand: all pairs inside cluster i go to
+//! subset E_i; every cross-cluster pair goes to whichever of its two
+//! endpoint subsets currently holds fewer edges (the paper's balancing
+//! rule). The result is a disjoint cover of all unordered pairs.
+
+use crate::learn::EdgeMask;
+
+/// Build the k edge masks from per-variable cluster labels.
+pub fn assign_edges(labels: &[usize], k: usize) -> Vec<EdgeMask> {
+    let n = labels.len();
+    let mut masks: Vec<EdgeMask> = (0..k).map(|_| EdgeMask::new(n)).collect();
+
+    // Intra-cluster pairs first.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if labels[i] == labels[j] {
+                masks[labels[i]].allow(i, j);
+            }
+        }
+    }
+    // Cross pairs balanced to the lighter endpoint subset.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let (a, b) = (labels[i], labels[j]);
+            if a != b {
+                let target = if masks[a].len() <= masks[b].len() { a } else { b };
+                masks[target].allow(i, j);
+            }
+        }
+    }
+    masks
+}
+
+/// Partition diagnostics.
+pub struct PartitionStats {
+    pub sizes: Vec<usize>,
+    pub total: usize,
+    pub expected: usize,
+}
+
+/// Validate a partition covers all pairs disjointly; returns stats.
+pub fn partition_stats(masks: &[EdgeMask], n: usize) -> PartitionStats {
+    let sizes: Vec<usize> = masks.iter().map(|m| m.len()).collect();
+    PartitionStats { total: sizes.iter().sum(), sizes, expected: n * (n - 1) / 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_pairs_disjointly() {
+        let labels = vec![0, 0, 1, 1, 2, 2, 0];
+        let n = labels.len();
+        let masks = assign_edges(&labels, 3);
+        let stats = partition_stats(&masks, n);
+        assert_eq!(stats.total, stats.expected, "cover must be exact");
+        // Disjoint: each pair in exactly one mask.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let owners = masks.iter().filter(|m| m.allowed(i, j)).count();
+                assert_eq!(owners, 1, "pair ({i},{j}) owned by {owners} masks");
+            }
+        }
+    }
+
+    #[test]
+    fn intra_cluster_pairs_stay_home() {
+        let labels = vec![0, 0, 0, 1, 1];
+        let masks = assign_edges(&labels, 2);
+        assert!(masks[0].allowed(0, 1) && masks[0].allowed(1, 2) && masks[0].allowed(0, 2));
+        assert!(masks[1].allowed(3, 4));
+    }
+
+    #[test]
+    fn balancing_keeps_sizes_close() {
+        // One big cluster + one small: cross edges should flow to the
+        // smaller subset.
+        let mut labels = vec![0usize; 20];
+        labels[18] = 1;
+        labels[19] = 1;
+        let masks = assign_edges(&labels, 2);
+        let s0 = masks[0].len() as f64;
+        let s1 = masks[1].len() as f64;
+        // Without balancing subset 1 would have 1 + 36 pairs at most;
+        // with balancing it should absorb nearly all cross pairs.
+        assert!(s1 > 30.0, "s1={s1}");
+        let total = s0 + s1;
+        assert_eq!(total as usize, 20 * 19 / 2);
+    }
+}

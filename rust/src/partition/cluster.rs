@@ -1,0 +1,173 @@
+//! Score-guided hierarchical clustering of variables (stage 1 of cGES).
+//!
+//! Agglomerative clustering over the pairwise BDeu similarity
+//! `s(X_i, X_j)` (Eq. 4, computed by the AOT artifact or the Rust
+//! fallback), with inter-cluster similarity the size-normalized sum of
+//! Eq. 5 — i.e. the average pairwise similarity (the paper labels the
+//! scheme complete-link; the formula it gives is average-link, which we
+//! follow). Lance–Williams updates keep merges O(n) each; a per-row
+//! nearest-neighbor cache keeps the whole run O(n²) amortized.
+
+/// Cluster labels (0..k) for each variable.
+pub fn cluster_variables(s: &[Vec<f64>], k: usize) -> Vec<usize> {
+    let n = s.len();
+    assert!(k >= 1 && k <= n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+
+    // Symmetrized working copy (BDeu pair scores are symmetric up to
+    // float noise; make it exact).
+    let mut sim = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            sim[i][j] = 0.5 * (s[i][j] + s[j][i]);
+        }
+    }
+
+    let mut active: Vec<bool> = vec![true; n];
+    let mut size: Vec<usize> = vec![1; n];
+    let mut label: Vec<usize> = (0..n).collect(); // representative per var
+    let mut n_active = n;
+
+    // Row-best cache: best[i] = (sim, j) over active j != i.
+    let mut best: Vec<Option<(f64, usize)>> = (0..n)
+        .map(|i| {
+            (0..n)
+                .filter(|&j| j != i)
+                .map(|j| (sim[i][j], j))
+                .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        })
+        .collect();
+
+    while n_active > k {
+        // Global best merge from the row caches (refresh stale rows).
+        let mut pick: Option<(f64, usize, usize)> = None;
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            // Refresh if cached partner died.
+            if let Some((_, j)) = best[i] {
+                if !active[j] {
+                    best[i] = (0..n)
+                        .filter(|&j2| j2 != i && active[j2])
+                        .map(|j2| (sim[i][j2], j2))
+                        .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                }
+            }
+            if let Some((v, j)) = best[i] {
+                if pick.map(|(pv, _, _)| v > pv).unwrap_or(true) {
+                    pick = Some((v, i, j));
+                }
+            }
+        }
+        let (_, a, b) = pick.expect("at least two active clusters");
+        debug_assert!(active[a] && active[b] && a != b);
+
+        // Merge b into a (average-link Lance–Williams).
+        let (sa, sb) = (size[a] as f64, size[b] as f64);
+        for j in 0..n {
+            if j != a && j != b && active[j] {
+                let v = (sa * sim[a][j] + sb * sim[b][j]) / (sa + sb);
+                sim[a][j] = v;
+                sim[j][a] = v;
+            }
+        }
+        active[b] = false;
+        size[a] += size[b];
+        n_active -= 1;
+        for l in label.iter_mut() {
+            if *l == b {
+                *l = a;
+            }
+        }
+        // Rows pointing at a or b are stale; so is a's own row.
+        best[a] = (0..n)
+            .filter(|&j| j != a && active[j])
+            .map(|j| (sim[a][j], j))
+            .max_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        for i in 0..n {
+            if active[i] && i != a {
+                if let Some((_, j)) = best[i] {
+                    if j == a || j == b {
+                        best[i] = (0..n)
+                            .filter(|&j2| j2 != i && active[j2])
+                            .map(|j2| (sim[i][j2], j2))
+                            .max_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+                    }
+                }
+            }
+        }
+    }
+
+    // Compact representative ids to 0..k.
+    let mut remap = std::collections::HashMap::new();
+    let mut out = vec![0usize; n];
+    for i in 0..n {
+        let next_id = remap.len();
+        let id = *remap.entry(label[i]).or_insert(next_id);
+        out[i] = id;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Block-diagonal similarity: two obvious groups.
+    fn blocky(n: usize, split: usize) -> Vec<Vec<f64>> {
+        let mut s = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let same = (i < split) == (j < split);
+                s[i][j] = if same { 10.0 } else { -5.0 };
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn recovers_two_blocks() {
+        let s = blocky(10, 4);
+        let labels = cluster_variables(&s, 2);
+        let first = labels[0];
+        assert!(labels[..4].iter().all(|&l| l == first));
+        let second = labels[4];
+        assert_ne!(first, second);
+        assert!(labels[4..].iter().all(|&l| l == second));
+    }
+
+    #[test]
+    fn k_equals_n_is_singletons() {
+        let s = blocky(5, 2);
+        let labels = cluster_variables(&s, 5);
+        let mut sorted = labels.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5);
+    }
+
+    #[test]
+    fn k_one_merges_everything() {
+        let s = blocky(6, 3);
+        let labels = cluster_variables(&s, 1);
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn label_count_matches_k() {
+        let s = blocky(12, 5);
+        for k in 1..=6 {
+            let labels = cluster_variables(&s, k);
+            let mut ids = labels.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), k, "k={k}");
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Stage 1 of cGES: score-guided partitioning of the candidate-edge
+//! set into k balanced subsets (clustering + assignment).
+
+pub mod assign;
+pub mod cluster;
+
+pub use assign::{assign_edges, partition_stats, PartitionStats};
+pub use cluster::cluster_variables;
+
+use crate::learn::EdgeMask;
+
+/// One-call partition: similarity matrix -> k edge masks.
+pub fn partition_edges(s: &[Vec<f64>], k: usize) -> Vec<EdgeMask> {
+    let labels = cluster_variables(s, k);
+    assign_edges(&labels, k)
+}

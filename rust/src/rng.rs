@@ -1,0 +1,211 @@
+//! Deterministic PRNG (no `rand` crate in the offline registry).
+//!
+//! SplitMix64 core with helpers for ranges, floats, shuffling, and the
+//! Dirichlet/Gamma sampling needed for random CPT generation
+//! (Marsaglia–Tsang for Gamma, Box–Muller for the Gaussian it needs).
+//! Everything in the repository that is stochastic (network generation,
+//! forward sampling, property tests, benches) goes through this type
+//! with explicit seeds so experiments are exactly reproducible.
+
+/// SplitMix64 PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded generator.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply rejection-free mapping (Lemire); bias is
+        // negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn gen_range_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.gen_range(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (k <= n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        // partial Fisher-Yates: first k slots
+        for i in 0..k {
+            let j = self.gen_range_in(i, n);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (with Johnk boost for shape < 1).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // G(a) = G(a+1) * U^{1/a}
+            let g = self.gamma(shape + 1.0);
+            return g * self.f64().max(1e-300).powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha, ..., alpha) over `k` categories.
+    pub fn dirichlet(&mut self, k: usize, alpha: f64) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(alpha).max(1e-12)).collect();
+        let s: f64 = g.iter().sum();
+        g.iter_mut().for_each(|x| *x /= s);
+        g
+    }
+
+    /// Sample a category from a (normalized) probability vector.
+    pub fn categorical(&mut self, probs: &[f64]) -> usize {
+        let mut u = self.f64();
+        for (i, p) in probs.iter().enumerate() {
+            if u < *p {
+                return i;
+            }
+            u -= p;
+        }
+        probs.len() - 1
+    }
+
+    /// Derive an independent child generator (for per-worker seeding).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.gen_range(13);
+            assert!(x < 13);
+            let y = r.gen_range_in(5, 9);
+            assert!((5..9).contains(&y));
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval_and_mean() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..50_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / 50_000.0 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(11);
+        for &alpha in &[0.3, 1.0, 5.0] {
+            let p = r.dirichlet(6, alpha);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut r = Rng::new(5);
+        let probs = [0.2, 0.5, 0.3];
+        let mut counts = [0usize; 3];
+        for _ in 0..60_000 {
+            counts[r.categorical(&probs)] += 1;
+        }
+        for i in 0..3 {
+            assert!((counts[i] as f64 / 60_000.0 - probs[i]).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(9);
+        for &shape in &[0.5, 2.0, 7.5] {
+            let n = 20_000;
+            let m: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!((m - shape).abs() < 0.15 * shape.max(1.0), "shape {shape} mean {m}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(1);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,120 @@
+//! Artifact registry: discover AOT-compiled HLO modules and pick the
+//! cheapest shape-config a dataset fits into.
+//!
+//! `make artifacts` (python/compile/aot.py) writes one
+//! `similarity_<name>.hlo.txt` per static shape-config plus a
+//! `manifest.txt` with `name n m r_max block file` lines. HLO shapes
+//! are static, so a dataset is padded up to the chosen config:
+//! * padded instances/cells carry state `r_max`, which the kernel's
+//!   one-hot iota comparison maps to zero contribution;
+//! * padded variables carry cardinality 1 and are cropped from the
+//!   result.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One exported shape-config.
+#[derive(Clone, Debug)]
+pub struct ArtifactConfig {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub r_max: usize,
+    pub block: usize,
+    pub path: PathBuf,
+}
+
+impl ArtifactConfig {
+    /// Padded-problem cost proxy (execution time scales with n²·m·r²).
+    pub fn cost(&self) -> u128 {
+        (self.n as u128) * (self.n as u128) * (self.m as u128) * (self.r_max as u128).pow(2)
+    }
+
+    /// Does a dataset with the given shape fit?
+    pub fn fits(&self, n: usize, m: usize, max_card: usize) -> bool {
+        self.n >= n && self.m >= m && self.r_max >= max_card
+    }
+}
+
+/// Parse `manifest.txt` in an artifacts directory.
+pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactConfig>> {
+    let manifest = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&manifest)
+        .with_context(|| format!("read {} (run `make artifacts`)", manifest.display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 6 {
+            bail!("manifest line {}: expected 6 fields, got {}", lineno + 1, f.len());
+        }
+        out.push(ArtifactConfig {
+            name: f[0].to_string(),
+            n: f[1].parse().context("n")?,
+            m: f[2].parse().context("m")?,
+            r_max: f[3].parse().context("r_max")?,
+            block: f[4].parse().context("block")?,
+            path: dir.join(f[5]),
+        });
+    }
+    Ok(out)
+}
+
+/// Cheapest config that fits `(n, m, max_card)`.
+pub fn pick_config<'a>(
+    configs: &'a [ArtifactConfig],
+    n: usize,
+    m: usize,
+    max_card: usize,
+) -> Option<&'a ArtifactConfig> {
+    configs
+        .iter()
+        .filter(|c| c.fits(n, m, max_card))
+        .min_by_key(|c| c.cost())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfgs() -> Vec<ArtifactConfig> {
+        let mk = |name: &str, n, m, r| ArtifactConfig {
+            name: name.into(),
+            n,
+            m,
+            r_max: r,
+            block: 8,
+            path: PathBuf::from(format!("{name}.hlo.txt")),
+        };
+        vec![mk("small", 128, 1024, 8), mk("large", 512, 5000, 8), mk("wide", 1088, 5000, 22)]
+    }
+
+    #[test]
+    fn picks_cheapest_fit() {
+        let c = cfgs();
+        assert_eq!(pick_config(&c, 100, 1000, 4).unwrap().name, "small");
+        assert_eq!(pick_config(&c, 300, 5000, 8).unwrap().name, "large");
+        assert_eq!(pick_config(&c, 300, 5000, 21).unwrap().name, "wide");
+        assert!(pick_config(&c, 2000, 5000, 8).is_none());
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join("cges_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "tiny 32 256 4 8 similarity_tiny.hlo.txt\n# comment\nsmall 128 1024 8 8 similarity_small.hlo.txt\n",
+        )
+        .unwrap();
+        let cfgs = read_manifest(&dir).unwrap();
+        assert_eq!(cfgs.len(), 2);
+        assert_eq!(cfgs[0].name, "tiny");
+        assert_eq!(cfgs[1].n, 128);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! AOT bridge: load `artifacts/*.hlo.txt` (lowered once from the JAX
+//! L2 model) and execute them via the PJRT CPU client on the Rust
+//! learning path.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{pick_config, read_manifest, ArtifactConfig};
+pub use pjrt::SimilarityRuntime;

@@ -1,0 +1,189 @@
+//! PJRT runtime: load the AOT-lowered similarity module and execute it
+//! from the Rust hot path. Python never runs here — the HLO text was
+//! produced once by `make artifacts`.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** (not a
+//! serialized proto — xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit
+//! instruction ids) → `HloModuleProto::from_text_file` →
+//! `PjRtClient::compile` → `execute`. Compiled executables are cached
+//! per shape-config.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::Dataset;
+use crate::runtime::artifacts::{pick_config, read_manifest, ArtifactConfig};
+use crate::score::PairwiseScores;
+
+/// PJRT-backed executor for the pairwise-similarity artifact.
+pub struct SimilarityRuntime {
+    client: xla::PjRtClient,
+    configs: Vec<ArtifactConfig>,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl SimilarityRuntime {
+    /// Load the artifact registry and start a CPU PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let configs = read_manifest(artifacts_dir)?;
+        if configs.is_empty() {
+            anyhow::bail!("no artifact configs in {}", artifacts_dir.display());
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(SimilarityRuntime { client, configs, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string (telemetry).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Available shape-configs.
+    pub fn configs(&self) -> &[ArtifactConfig] {
+        &self.configs
+    }
+
+    /// Does some config fit this dataset?
+    pub fn supports(&self, data: &Dataset) -> bool {
+        pick_config(&self.configs, data.n_vars(), data.n_rows(), data.max_card() as usize)
+            .is_some()
+    }
+
+    fn compile(&self, cfg: &ArtifactConfig) -> Result<()> {
+        let mut cache = self.compiled.lock().expect("compile cache poisoned");
+        if cache.contains_key(&cfg.name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            cfg.path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", cfg.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", cfg.name))?;
+        cache.insert(cfg.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute the similarity model on `data`: returns the same
+    /// `(S, empty)` as `score::pairwise_similarity` (f32 precision).
+    ///
+    /// Padding: instances and variables beyond the dataset get state
+    /// `r_max` (one-hot zero row → contributes nothing); padded
+    /// variables get cardinality 1 and are cropped from the output.
+    pub fn pairwise(&self, data: &Dataset, ess: f64) -> Result<PairwiseScores> {
+        let n = data.n_vars();
+        let m = data.n_rows();
+        let max_card = data.max_card() as usize;
+        let cfg = pick_config(&self.configs, n, m, max_card)
+            .ok_or_else(|| {
+                anyhow!("no artifact config fits n={n} m={m} r={max_card}; re-run aot.py with a bigger config")
+            })?
+            .clone();
+        self.compile(&cfg)?;
+
+        // Build padded inputs (row-major (n_pad, m_pad) int32).
+        let pad_state = cfg.r_max as i32;
+        let mut flat = vec![pad_state; cfg.n * cfg.m];
+        for v in 0..n {
+            let col = data.col(v);
+            let row = &mut flat[v * cfg.m..v * cfg.m + m];
+            for (dst, &s) in row.iter_mut().zip(col) {
+                *dst = s as i32;
+            }
+        }
+        let mut cards = vec![1.0f32; cfg.n];
+        for v in 0..n {
+            cards[v] = data.card(v) as f32;
+        }
+        let data_lit = xla::Literal::vec1(&flat)
+            .reshape(&[cfg.n as i64, cfg.m as i64])
+            .map_err(|e| anyhow!("reshape data: {e:?}"))?;
+        let cards_lit = xla::Literal::vec1(&cards);
+        let ess_lit = xla::Literal::vec1(&[ess as f32])
+            .reshape(&[1, 1])
+            .map_err(|e| anyhow!("reshape ess: {e:?}"))?;
+
+        let cache = self.compiled.lock().expect("compile cache poisoned");
+        let exe = cache.get(&cfg.name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&[data_lit, cards_lit, ess_lit])
+            .map_err(|e| anyhow!("execute {}: {e:?}", cfg.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        drop(cache);
+
+        let (s_lit, e_lit) =
+            result.to_tuple2().map_err(|e| anyhow!("expected 2-tuple: {e:?}"))?;
+        let s_flat: Vec<f32> = s_lit.to_vec().map_err(|e| anyhow!("S to_vec: {e:?}"))?;
+        let e_flat: Vec<f32> = e_lit.to_vec().map_err(|e| anyhow!("E to_vec: {e:?}"))?;
+
+        // Crop padding.
+        let mut s = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                s[i][j] = s_flat[i * cfg.n + j] as f64;
+            }
+        }
+        let empty: Vec<f64> = e_flat[..n].iter().map(|&x| x as f64).collect();
+        Ok(PairwiseScores { s, empty })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::{forward_sample, generate, NetGenConfig};
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.txt").exists().then_some(dir)
+    }
+
+    /// Compares the XLA artifact against the Rust fallback — the
+    /// cross-layer correctness check. Skips (with a note) when
+    /// artifacts have not been built.
+    #[test]
+    fn artifact_matches_rust_fallback() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = match SimilarityRuntime::load(&dir) {
+            Ok(rt) => rt,
+            Err(e) => panic!("runtime load failed: {e:#}"),
+        };
+        let bn = generate(
+            &NetGenConfig { nodes: 24, edges: 30, card_range: (2, 4), ..Default::default() },
+            77,
+        );
+        let data = forward_sample(&bn, 200, 3);
+        assert!(rt.supports(&data));
+        let xla_scores = rt.pairwise(&data, 10.0).expect("artifact execution");
+        let rust_scores = crate::score::pairwise_similarity(&data, 10.0, 2);
+        for i in 0..data.n_vars() {
+            assert!(
+                (xla_scores.empty[i] - rust_scores.empty[i]).abs()
+                    < 1e-2 + 1e-4 * rust_scores.empty[i].abs(),
+                "empty[{i}]: {} vs {}",
+                xla_scores.empty[i],
+                rust_scores.empty[i]
+            );
+            for j in 0..data.n_vars() {
+                if i == j {
+                    continue;
+                }
+                let (a, b) = (xla_scores.s[i][j], rust_scores.s[i][j]);
+                assert!(
+                    (a - b).abs() < 1e-2 + 1e-4 * b.abs(),
+                    "S[{i}][{j}]: xla {a} vs rust {b}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Lock-striped concurrent local-score cache.
+//!
+//! The paper: "all the processes store the scores computed in a
+//! concurrent safe data structure to avoid unnecessary calculations" —
+//! this is that structure. BDeu local scores are keyed by (child,
+//! sorted parent set); the cache is shared across all ring workers and
+//! all GES scoring threads, so the same family is never counted twice
+//! anywhere in a run.
+//!
+//! No dashmap offline → 64 shards of `RwLock<HashMap>` with an FxHash-
+//! style mixer selecting the shard; reads (the common case late in the
+//! search) take a shared lock only.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+const SHARDS: usize = 64;
+
+/// Inline capacity of a family key: parent sets beyond this spill to
+/// the heap. Learned networks here have ≤3-4 parents almost always, so
+/// probes are allocation-free on the hot path (§Perf: the boxed-slice
+/// key showed up as ~15% malloc/free time in the ring profile).
+const INLINE: usize = 6;
+
+/// Family key: child + sorted parents, inlined when small.
+#[derive(Clone, PartialEq, Eq, Hash)]
+enum Key {
+    Inline { child: u32, len: u8, parents: [u32; INLINE] },
+    Heap { child: u32, parents: Box<[u32]> },
+}
+
+impl Key {
+    #[inline]
+    fn new(child: u32, parents: &[u32]) -> Key {
+        if parents.len() <= INLINE {
+            let mut arr = [0u32; INLINE];
+            arr[..parents.len()].copy_from_slice(parents);
+            Key::Inline { child, len: parents.len() as u8, parents: arr }
+        } else {
+            Key::Heap { child, parents: parents.into() }
+        }
+    }
+}
+
+/// Concurrent map from families to local scores.
+pub struct ScoreCache {
+    shards: Vec<RwLock<HashMap<Key, f64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for ScoreCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScoreCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        ScoreCache {
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, child: u32, parents: &[u32]) -> usize {
+        // FxHash-style multiply-rotate mix of child and parents.
+        let mut h = 0xcbf29ce484222325u64 ^ (child as u64).wrapping_mul(0x100000001b3);
+        for &p in parents {
+            h = (h.rotate_left(5) ^ (p as u64)).wrapping_mul(0x517cc1b727220a95);
+        }
+        (h >> 56) as usize & (SHARDS - 1)
+    }
+
+    /// Lookup; `parents` must be sorted ascending.
+    pub fn get(&self, child: u32, parents: &[u32]) -> Option<f64> {
+        debug_assert!(parents.windows(2).all(|w| w[0] < w[1]));
+        let shard = &self.shards[self.shard(child, parents)];
+        let guard = shard.read().expect("cache poisoned");
+        let key = Key::new(child, parents); // allocation-free for ≤ INLINE parents
+        let r = guard.get(&key).copied();
+        drop(guard);
+        if r.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    /// Insert (last write wins; scores are deterministic so races are
+    /// benign).
+    pub fn put(&self, child: u32, parents: &[u32], score: f64) {
+        debug_assert!(parents.windows(2).all(|w| w[0] < w[1]));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let shard = &self.shards[self.shard(child, parents)];
+        shard.write().expect("cache poisoned").insert(Key::new(child, parents), score);
+    }
+
+    /// (hits, computed) counters for telemetry.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Total cached families.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().expect("cache poisoned").len()).sum()
+    }
+
+    /// True if no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let c = ScoreCache::new();
+        assert_eq!(c.get(3, &[1, 2]), None);
+        c.put(3, &[1, 2], -12.5);
+        assert_eq!(c.get(3, &[1, 2]), Some(-12.5));
+        assert_eq!(c.get(3, &[1]), None);
+        assert_eq!(c.get(2, &[1, 2]), None);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_consistency() {
+        let c = std::sync::Arc::new(ScoreCache::new());
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for i in 0..1000u32 {
+                        let child = (i + t) % 50;
+                        let parents = [i % 7, 7 + i % 11];
+                        let score = -((child + parents[0]) as f64);
+                        c.put(child, &parents, score);
+                        assert_eq!(c.get(child, &parents), Some(score));
+                    }
+                });
+            }
+        });
+        let (h, m) = c.stats();
+        assert!(h >= 8000 && m >= 1000);
+    }
+}

@@ -1,0 +1,186 @@
+//! Contingency-table counting: the measured hot path of every learner.
+//!
+//! `family_counts` computes the `N_ijk` frequencies for a (child,
+//! parent-set) family. Two strategies, picked by the dense table size
+//! `q·r`:
+//!   * dense radix accumulation into a `Vec<u32>` when `q·r` fits a
+//!     sane budget — one multiply-add per parent per row, fully
+//!     branchless, streaming column-major data;
+//!   * hashed sparse accumulation otherwise (large parent sets only
+//!     materialize the configurations that occur, ≤ n_rows of them).
+
+use std::collections::HashMap;
+
+use crate::data::Dataset;
+
+/// Max dense table cells before switching to the sparse counter
+/// (8M cells = 32 MB of u32; reached only by pathological parent sets).
+const DENSE_LIMIT: u64 = 8 << 20;
+
+/// Counts for one family: per observed parent configuration `j`, the
+/// child-state histogram `n[j*r..(j+1)*r]`.
+pub struct FamilyCounts {
+    /// Child cardinality.
+    pub r: usize,
+    /// Histograms: flat `(config, child_state)`; *dense* tables include
+    /// all-zero configs, *sparse* only observed ones — both score
+    /// identically under BDeu because zero-count configs contribute 0.
+    pub table: CountsTable,
+}
+
+/// Dense or sparse count storage.
+pub enum CountsTable {
+    /// `counts[j * r + k]`, `q * r` cells.
+    Dense(Vec<u32>),
+    /// config-index -> child histogram of length `r`.
+    Sparse(HashMap<u64, Vec<u32>>),
+}
+
+/// Compute family counts of `child` given `parents` over `data`.
+///
+/// `parents` must not contain `child`; order does not matter for the
+/// score but determines the (internal) configuration encoding.
+pub fn family_counts(data: &Dataset, child: usize, parents: &[usize]) -> FamilyCounts {
+    let r = data.card(child) as usize;
+    let m = data.n_rows();
+    // Configuration strides: mixed-radix encoding over parent states.
+    let mut q: u64 = 1;
+    let mut strides = Vec::with_capacity(parents.len());
+    for &p in parents {
+        strides.push(q);
+        q = q.saturating_mul(data.card(p) as u64);
+    }
+
+    let child_col = data.col(child);
+    if q * r as u64 <= DENSE_LIMIT {
+        let mut counts = vec![0u32; (q as usize) * r];
+        match parents.len() {
+            0 => {
+                for t in 0..m {
+                    counts[child_col[t] as usize] += 1;
+                }
+            }
+            1 => {
+                // Specialized single-parent loop: the dominant call
+                // shape in GES (pairwise deltas) — keep it branch-free.
+                let p0 = data.col(parents[0]);
+                for t in 0..m {
+                    counts[p0[t] as usize * r + child_col[t] as usize] += 1;
+                }
+            }
+            _ => {
+                let pcols: Vec<&[u8]> = parents.iter().map(|&p| data.col(p)).collect();
+                for t in 0..m {
+                    let mut cfg = 0u64;
+                    for (s, col) in strides.iter().zip(&pcols) {
+                        cfg += s * col[t] as u64;
+                    }
+                    counts[cfg as usize * r + child_col[t] as usize] += 1;
+                }
+            }
+        }
+        FamilyCounts { r, table: CountsTable::Dense(counts) }
+    } else {
+        let pcols: Vec<&[u8]> = parents.iter().map(|&p| data.col(p)).collect();
+        let mut map: HashMap<u64, Vec<u32>> = HashMap::new();
+        for t in 0..m {
+            let mut cfg = 0u64;
+            for (s, col) in strides.iter().zip(&pcols) {
+                cfg += s * col[t] as u64;
+            }
+            map.entry(cfg).or_insert_with(|| vec![0u32; r])[child_col[t] as usize] += 1;
+        }
+        FamilyCounts { r, table: CountsTable::Sparse(map) }
+    }
+}
+
+impl FamilyCounts {
+    /// Iterate parent-configuration histograms (observed configs only
+    /// for sparse tables; dense tables include empty configs, which
+    /// score 0 under BDeu).
+    pub fn for_each_config<F: FnMut(&[u32])>(&self, mut f: F) {
+        match &self.table {
+            CountsTable::Dense(v) => {
+                for chunk in v.chunks_exact(self.r) {
+                    f(chunk);
+                }
+            }
+            CountsTable::Sparse(m) => {
+                for hist in m.values() {
+                    f(hist);
+                }
+            }
+        }
+    }
+
+    /// Total instance count (sanity checks).
+    pub fn total(&self) -> u64 {
+        let mut t = 0u64;
+        self.for_each_config(|h| t += h.iter().map(|&x| x as u64).sum::<u64>());
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        // X0 (card 2), X1 (card 3), X2 (card 2)
+        Dataset::unnamed(
+            vec![2, 3, 2],
+            vec![
+                vec![0, 0, 1, 1, 0, 1],
+                vec![0, 1, 2, 0, 1, 1],
+                vec![0, 0, 1, 1, 1, 0],
+            ],
+        )
+    }
+
+    #[test]
+    fn no_parent_counts() {
+        let d = toy();
+        let fc = family_counts(&d, 0, &[]);
+        match &fc.table {
+            CountsTable::Dense(v) => assert_eq!(v, &vec![3, 3]),
+            _ => panic!("expected dense"),
+        }
+        assert_eq!(fc.total(), 6);
+    }
+
+    #[test]
+    fn one_parent_counts() {
+        let d = toy();
+        let fc = family_counts(&d, 0, &[1]);
+        // configs of X1 (0,1,2) x states of X0: rows (0,0),(0,1),(1,2),(1,0),(0,1),(1,1)
+        // X1=0: X0 in {0, 1} -> [1,1]; X1=1: {0,0,1} -> [2,1]; X1=2: {1} -> [0,1]
+        match &fc.table {
+            CountsTable::Dense(v) => assert_eq!(v, &vec![1, 1, 2, 1, 0, 1]),
+            _ => panic!("expected dense"),
+        }
+    }
+
+    #[test]
+    fn two_parent_total_preserved() {
+        let d = toy();
+        let fc = family_counts(&d, 0, &[1, 2]);
+        assert_eq!(fc.total(), 6);
+        let mut nconfigs = 0;
+        fc.for_each_config(|_| nconfigs += 1);
+        assert_eq!(nconfigs, 6); // q = 3 * 2 dense configs
+    }
+
+    #[test]
+    fn sparse_matches_dense_totals() {
+        // Force sparse by a synthetic huge-q family: craft via many
+        // parents over the toy data is impossible (q small), so check
+        // the sparse path directly through a low DENSE_LIMIT simulation:
+        // emulate by calling with enough parents to overflow is not
+        // feasible here; instead assert the encoding invariants on the
+        // dense path (sparse path is exercised in integration tests on
+        // wide networks).
+        let d = toy();
+        let fc = family_counts(&d, 2, &[0, 1]);
+        assert_eq!(fc.total(), d.n_rows() as u64);
+    }
+}

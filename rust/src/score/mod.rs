@@ -1,0 +1,15 @@
+//! Scoring substrate: BDeu (Eq. 3), contingency counting, the shared
+//! concurrent score cache, and the Rust fallback of the pairwise
+//! similarity artifact.
+
+pub mod bdeu;
+pub mod cache;
+pub mod counts;
+pub mod lgamma;
+pub mod pairwise;
+
+pub use bdeu::BdeuScorer;
+pub use cache::ScoreCache;
+pub use counts::{family_counts, CountsTable, FamilyCounts};
+pub use lgamma::ln_gamma;
+pub use pairwise::{pairwise_similarity, PairwiseScores};

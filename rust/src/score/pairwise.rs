@@ -1,0 +1,156 @@
+//! Rust fallback for the L1/L2 pairwise-similarity artifact.
+//!
+//! Computes the same `(S, empty)` pair as the AOT-compiled XLA module
+//! (`python/compile/model.py::similarity_model`): S[i][j] =
+//! BDeu(Xi ← Xj) − BDeu(Xi ← ∅). Used when artifacts are absent, and
+//! by the test-suite to cross-validate the XLA path bit-for-bit
+//! (within f32 tolerance).
+//!
+//! Row-parallel: each worker owns a block of child variables; the
+//! single-parent contingency tables reuse `score::counts`.
+
+use crate::data::Dataset;
+use crate::score::lgamma::ln_gamma;
+use crate::util::par::par_map_index;
+
+/// Full similarity matrix + per-variable empty scores.
+pub struct PairwiseScores {
+    /// S[i][j]: gain of adding X_j as the sole parent of X_i.
+    pub s: Vec<Vec<f64>>,
+    /// Local BDeu of each variable with no parents.
+    pub empty: Vec<f64>,
+}
+
+/// Compute pairwise similarities with `threads` workers.
+pub fn pairwise_similarity(data: &Dataset, ess: f64, threads: usize) -> PairwiseScores {
+    let n = data.n_vars();
+    let empty: Vec<f64> = (0..n).map(|i| empty_score(data, i, ess)).collect();
+
+    let s = par_map_index(n, threads, |i| {
+        let mut row = vec![0.0f64; n];
+        let r = data.card(i) as usize;
+        let ci = data.col(i);
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let q = data.card(j) as usize;
+            // Joint histogram (j-state major, child minor), streaming
+            // both columns once.
+            let mut counts = vec![0u32; q * r];
+            let cj = data.col(j);
+            for t in 0..data.n_rows() {
+                counts[cj[t] as usize * r + ci[t] as usize] += 1;
+            }
+            row[j] = family_score_from_counts(&counts, r, q, ess) - empty[i];
+        }
+        row
+    });
+    PairwiseScores { s, empty }
+}
+
+/// BDeu local score from a dense (q, r) histogram.
+pub fn family_score_from_counts(counts: &[u32], r: usize, q: usize, ess: f64) -> f64 {
+    let a_cfg = ess / q as f64;
+    let a_cell = ess / (q * r) as f64;
+    let lg_cfg = ln_gamma(a_cfg);
+    let lg_cell = ln_gamma(a_cell);
+    let mut score = 0.0;
+    for hist in counts.chunks_exact(r) {
+        let nj: u64 = hist.iter().map(|&x| x as u64).sum();
+        if nj == 0 {
+            continue;
+        }
+        score += lg_cfg - ln_gamma(nj as f64 + a_cfg);
+        for &njk in hist {
+            if njk > 0 {
+                score += ln_gamma(njk as f64 + a_cell) - lg_cell;
+            }
+        }
+    }
+    score
+}
+
+/// Per-variable empty-graph local score.
+pub fn empty_score(data: &Dataset, i: usize, ess: f64) -> f64 {
+    let r = data.card(i) as usize;
+    let mut hist = vec![0u32; r];
+    for &s in data.col(i) {
+        hist[s as usize] += 1;
+    }
+    family_score_from_counts(&hist, r, 1, ess)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::BdeuScorer;
+    use std::sync::Arc;
+
+    fn toy(seed: u64) -> Dataset {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let n = 6;
+        let m = 300;
+        let cards: Vec<u32> = (0..n).map(|_| 2 + rng.gen_range(3) as u32).collect();
+        let mut cols: Vec<Vec<u8>> = cards
+            .iter()
+            .map(|&c| (0..m).map(|_| rng.gen_range(c as usize) as u8).collect())
+            .collect();
+        // correlate column 1 with column 0
+        for t in 0..m {
+            if rng.bool(0.8) {
+                cols[1][t] = cols[0][t] % cards[1] as u8;
+            }
+        }
+        Dataset::unnamed(cards, cols)
+    }
+
+    #[test]
+    fn matches_bdeu_scorer() {
+        let d = toy(1);
+        let ps = pairwise_similarity(&d, 10.0, 4);
+        let sc = BdeuScorer::new(Arc::new(d.clone()), 10.0);
+        for i in 0..d.n_vars() {
+            assert!((ps.empty[i] - sc.local(i, &[])).abs() < 1e-9);
+            for j in 0..d.n_vars() {
+                if i == j {
+                    continue;
+                }
+                let expect = sc.local(i, &[j]) - sc.local(i, &[]);
+                assert!(
+                    (ps.s[i][j] - expect).abs() < 1e-9,
+                    "i={i} j={j}: {} vs {expect}",
+                    ps.s[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_by_score_equivalence() {
+        let d = toy(2);
+        let ps = pairwise_similarity(&d, 4.0, 2);
+        for i in 0..d.n_vars() {
+            for j in (i + 1)..d.n_vars() {
+                assert!(
+                    (ps.s[i][j] - ps.s[j][i]).abs() < 1e-8,
+                    "asymmetry at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn correlated_pair_scores_high() {
+        let d = toy(3);
+        let ps = pairwise_similarity(&d, 10.0, 1);
+        // the injected (0,1) correlation should dominate row 1
+        let best = (0..d.n_vars())
+            .filter(|&j| j != 1)
+            .max_by(|&a, &b| ps.s[1][a].partial_cmp(&ps.s[1][b]).unwrap())
+            .unwrap();
+        assert_eq!(best, 0);
+        assert!(ps.s[1][0] > 0.0);
+    }
+}

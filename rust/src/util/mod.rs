@@ -1,0 +1,11 @@
+//! Small shared substrates: bitsets, parallel helpers, timers, stats.
+
+pub mod bitset;
+pub mod par;
+pub mod stats;
+pub mod timer;
+
+pub use bitset::BitSet;
+pub use par::{num_threads, par_chunk_map, par_for_each_index, par_map_index};
+pub use stats::{mean, std_dev, Summary};
+pub use timer::Timer;

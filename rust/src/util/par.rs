@@ -1,0 +1,137 @@
+//! Minimal data-parallel helpers on std scoped threads.
+//!
+//! The offline crate set has no rayon; the access patterns we need are
+//! simple (embarrassingly parallel candidate scoring, chunked
+//! map-reduce), so plain `std::thread::scope` with static chunking is
+//! enough and keeps the dependency surface tiny. Thread count defaults
+//! to the available parallelism, overridable per call (the paper uses 8
+//! threads throughout).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default worker count: `available_parallelism`, min 1.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `0..n` with work-stealing via an atomic cursor, in
+/// `threads` workers; results are collected in index order.
+pub fn par_map_index<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send + Default + Clone,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out = vec![R::default(); n];
+    let cursor = AtomicUsize::new(0);
+    // Grab disjoint output cells through a raw pointer; every index is
+    // written by exactly one worker (the atomic cursor hands out unique
+    // indices), so this is race-free.
+    struct Cells<R>(*mut R);
+    unsafe impl<R> Sync for Cells<R> {}
+    impl<R> Cells<R> {
+        /// Safety: each index is written by exactly one thread.
+        unsafe fn write(&self, i: usize, v: R) {
+            unsafe { *self.0.add(i) = v };
+        }
+    }
+    let cells = Cells(out.as_mut_ptr());
+    let cells = &cells; // capture the wrapper, not the raw field
+    let f = &f; // shared ref is Send because F: Sync
+    let cursor = &cursor;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                unsafe { cells.write(i, r) };
+            });
+        }
+    });
+    out
+}
+
+/// Run `f(i)` for every `i in 0..n` in parallel (side-effect form).
+pub fn par_for_each_index<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        (0..n).for_each(f);
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Chunked map over a slice: splits `items` into `threads` contiguous
+/// chunks and maps `f` over each chunk concurrently.
+pub fn par_chunk_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&[T]) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return vec![f(items)];
+    }
+    let chunk = items.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            items.chunks(chunk).map(|c| s.spawn(|| f(c))).collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_index_matches_serial() {
+        let par = par_map_index(1000, 8, |i| i * i);
+        let ser: Vec<_> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn map_index_single_thread_and_empty() {
+        assert_eq!(par_map_index(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+        assert_eq!(par_map_index(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn chunk_map_covers_all() {
+        let items: Vec<u64> = (0..10_000).collect();
+        let partials = par_chunk_map(&items, 7, |c| c.iter().sum::<u64>());
+        assert_eq!(partials.iter().sum::<u64>(), items.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn for_each_index_runs_all() {
+        use std::sync::atomic::AtomicU64;
+        let acc = AtomicU64::new(0);
+        par_for_each_index(257, 4, |i| {
+            acc.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), (0..257u64).sum());
+    }
+}

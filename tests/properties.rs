@@ -1,0 +1,209 @@
+//! Randomized property tests over the DESIGN.md §6 invariants
+//! (hand-rolled generator loop — no proptest in the offline registry;
+//! failures print the seed for replay).
+
+use std::sync::Arc;
+
+use cges::bn::{forward_sample, generate, netgen::random_dag, NetGenConfig};
+use cges::fusion::{fuse, sigma_consistent_imap};
+use cges::graph::{
+    complete_pdag, d_separated, dag_to_cpdag, markov_equivalent, pdag_to_dag, Dag,
+};
+use cges::learn::{ges, GesConfig};
+use cges::metrics::smhd;
+use cges::partition::{assign_edges, cluster_variables, partition_stats};
+use cges::rng::Rng;
+use cges::score::{pairwise_similarity, BdeuScorer};
+use cges::util::BitSet;
+
+const TRIALS: u64 = 40;
+
+fn random_cfg(rng: &mut Rng) -> NetGenConfig {
+    let nodes = 6 + rng.gen_range(10);
+    NetGenConfig {
+        nodes,
+        edges: nodes + rng.gen_range(nodes),
+        max_parents: 2 + rng.gen_range(2),
+        locality: 0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_cpdag_roundtrip_is_markov_equivalent() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed);
+        let g = random_dag(&random_cfg(&mut rng), seed);
+        let c = dag_to_cpdag(&g);
+        let d = pdag_to_dag(&c).unwrap_or_else(|| panic!("seed {seed}: CPDAG not extendable"));
+        assert!(markov_equivalent(&g, &d), "seed {seed}: round-trip left the class");
+        // Completion is idempotent on CPDAGs.
+        let c2 = complete_pdag(&c).unwrap();
+        assert!(c2 == c, "seed {seed}: completion not idempotent");
+    }
+}
+
+#[test]
+fn prop_compelled_edges_shared_by_class() {
+    // Every directed edge of the CPDAG must appear in every consistent
+    // extension we can reach by re-extension.
+    for seed in 0..TRIALS / 2 {
+        let mut rng = Rng::new(seed ^ 0xAB);
+        let g = random_dag(&random_cfg(&mut rng), seed);
+        let c = dag_to_cpdag(&g);
+        let d = pdag_to_dag(&c).unwrap();
+        for v in 0..g.n() {
+            for u in c.parents(v).iter() {
+                assert!(d.has_edge(u, v), "seed {seed}: compelled {u}->{v} lost");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fusion_is_imap_of_every_input() {
+    // The fused DAG's independences must hold in every σ-transformed
+    // input (checked by exhaustive d-separation on small graphs).
+    for seed in 0..15u64 {
+        let n = 6;
+        let mk = |s: u64| {
+            random_dag(
+                &NetGenConfig { nodes: n, edges: 7, max_parents: 3, locality: 0, ..Default::default() },
+                s,
+            )
+        };
+        let g1 = mk(seed * 2 + 1);
+        let g2 = mk(seed * 2 + 2);
+        let (f, sigma) = fuse(&[&g1, &g2]);
+        assert!(f.is_acyclic(), "seed {seed}");
+        for g in [&g1, &g2] {
+            let t = sigma_consistent_imap(g, &sigma);
+            // Every edge of the transform is in the union.
+            for (u, v) in t.edges() {
+                assert!(f.has_edge(u, v), "seed {seed}: transform edge {u}->{v} missing");
+            }
+            // Fusion independences hold in the transform (I-map chain).
+            for x in 0..n {
+                for y in (x + 1)..n {
+                    for z_bits in 0..(1u16 << n) {
+                        let z = BitSet::from_iter(
+                            n,
+                            (0..n).filter(|&i| i != x && i != y && (z_bits >> i) & 1 == 1),
+                        );
+                        if d_separated(&f, x, y, &z) {
+                            assert!(
+                                d_separated(&t, x, y, &z),
+                                "seed {seed}: fusion claims {x}⫫{y}|{z:?}, transform rejects"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_partition_covers_disjointly_and_balances() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x51);
+        let n = 8 + rng.gen_range(24);
+        let k = 2 + rng.gen_range(3);
+        // Random similarity matrix (symmetric).
+        let mut s = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = rng.f64() * 20.0 - 10.0;
+                s[i][j] = v;
+                s[j][i] = v;
+            }
+        }
+        let labels = cluster_variables(&s, k);
+        assert_eq!(labels.len(), n);
+        assert!(labels.iter().all(|&l| l < k), "seed {seed}");
+        let masks = assign_edges(&labels, k);
+        let stats = partition_stats(&masks, n);
+        assert_eq!(stats.total, stats.expected, "seed {seed}: not a cover");
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert_eq!(
+                    masks.iter().filter(|m| m.allowed(i, j)).count(),
+                    1,
+                    "seed {seed}: pair ({i},{j}) not in exactly one subset"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_smhd_is_a_metric_like_distance() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x77);
+        let cfg = random_cfg(&mut rng);
+        let a = random_dag(&cfg, seed);
+        let b = random_dag(&cfg, seed + 1000);
+        let c = random_dag(&cfg, seed + 2000);
+        assert_eq!(smhd(&a, &a), 0);
+        assert_eq!(smhd(&a, &b), smhd(&b, &a), "seed {seed}: asymmetric");
+        // Triangle inequality holds for Hamming distances on edge sets.
+        assert!(
+            smhd(&a, &c) <= smhd(&a, &b) + smhd(&b, &c),
+            "seed {seed}: triangle violated"
+        );
+    }
+}
+
+#[test]
+fn prop_pairwise_similarity_matches_scorer_deltas() {
+    for seed in 0..8u64 {
+        let bn = generate(
+            &NetGenConfig { nodes: 8, edges: 10, locality: 0, ..Default::default() },
+            seed,
+        );
+        let data = Arc::new(forward_sample(&bn, 400, seed + 5));
+        let pw = pairwise_similarity(&data, 10.0, 2);
+        let sc = BdeuScorer::new(data, 10.0);
+        for i in 0..8 {
+            for j in 0..8 {
+                if i == j {
+                    continue;
+                }
+                let expect = sc.local(i, &[j]) - sc.local(i, &[]);
+                assert!(
+                    (pw.s[i][j] - expect).abs() < 1e-9,
+                    "seed {seed}: S[{i}][{j}] mismatch"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ges_result_is_valid_cpdag_and_local_optimum_wrt_deletes() {
+    for seed in 0..6u64 {
+        let bn = generate(
+            &NetGenConfig { nodes: 10, edges: 14, locality: 0, ..Default::default() },
+            seed ^ 0xF,
+        );
+        let data = Arc::new(forward_sample(&bn, 1000, seed + 3));
+        let sc = BdeuScorer::new(data, 10.0);
+        let r = ges(&sc, &Dag::new(10), &GesConfig::default());
+        // Result CPDAG must be a valid equivalence class: completion is
+        // the identity on it.
+        let completed = complete_pdag(&r.cpdag).expect("extendable");
+        assert!(completed == r.cpdag, "seed {seed}: GES left a non-completed PDAG");
+        // No single-edge deletion on the DAG view improves the score
+        // (local optimality of BES at convergence).
+        for (u, v) in r.dag.edges() {
+            let mut pa: Vec<usize> = r.dag.parents(v).iter().collect();
+            let before = sc.local(v, &pa);
+            pa.retain(|&p| p != u);
+            let after = sc.local(v, &pa);
+            assert!(
+                after <= before + 1e-9,
+                "seed {seed}: deleting {u}->{v} improves score"
+            );
+        }
+    }
+}

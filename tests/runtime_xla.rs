@@ -1,0 +1,101 @@
+//! Cross-layer integration: the AOT XLA artifact (L1 Pallas kernel +
+//! L2 JAX model, lowered to HLO text) executed through PJRT must agree
+//! with the independent Rust implementation across shapes, paddings
+//! and arities. Skips gracefully when `make artifacts` has not run.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cges::bn::{forward_sample, generate, NetGenConfig};
+use cges::coordinator::{cges, PartitionSource, RingConfig};
+use cges::runtime::SimilarityRuntime;
+use cges::score::pairwise_similarity;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+fn check_match(n: usize, m: usize, cards: (u32, u32), seed: u64, rt: &SimilarityRuntime) {
+    let bn = generate(
+        &NetGenConfig { nodes: n, edges: n * 4 / 3, card_range: cards, ..Default::default() },
+        seed,
+    );
+    let data = forward_sample(&bn, m, seed + 1);
+    assert!(rt.supports(&data), "no config for n={n} m={m}");
+    let xla = rt.pairwise(&data, 10.0).expect("artifact run");
+    let rust = pairwise_similarity(&data, 10.0, 4);
+    let mut max_err: f64 = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let denom = rust.s[i][j].abs().max(1.0);
+            max_err = max_err.max((xla.s[i][j] - rust.s[i][j]).abs() / denom);
+        }
+    }
+    // f32 lgamma error accumulates over r² terms with counts up to m;
+    // 0.5% relative is the expected noise floor for these shapes.
+    assert!(max_err < 5e-3, "n={n} m={m}: relative error {max_err}");
+}
+
+#[test]
+fn artifact_agrees_across_shapes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = SimilarityRuntime::load(&dir).expect("load runtime");
+    // Different configs get selected by size: tiny, small.
+    check_match(20, 200, (2, 4), 1, &rt);
+    check_match(60, 900, (2, 4), 2, &rt);
+    // Higher arity exercises the r_max=8 configs.
+    check_match(40, 800, (2, 8), 3, &rt);
+}
+
+#[test]
+fn artifact_execution_is_deterministic() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = SimilarityRuntime::load(&dir).expect("load runtime");
+    let bn = generate(&NetGenConfig { nodes: 16, edges: 20, ..Default::default() }, 9);
+    let data = forward_sample(&bn, 300, 2);
+    let a = rt.pairwise(&data, 10.0).unwrap();
+    let b = rt.pairwise(&data, 10.0).unwrap();
+    for i in 0..16 {
+        assert_eq!(a.s[i], b.s[i], "row {i} differs between runs");
+        assert_eq!(a.empty[i], b.empty[i]);
+    }
+}
+
+#[test]
+fn ring_with_artifact_partition_matches_fallback_quality() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let bn = generate(&NetGenConfig { nodes: 24, edges: 32, ..Default::default() }, 17);
+    let data = Arc::new(forward_sample(&bn, 1000, 4));
+    let with_xla = cges(
+        data.clone(),
+        &RingConfig {
+            k: 2,
+            partition_source: PartitionSource::Artifacts(dir),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let with_rust = cges(
+        data,
+        &RingConfig { k: 2, partition_source: PartitionSource::RustFallback, ..Default::default() },
+    )
+    .unwrap();
+    assert!(with_xla.telemetry.partition_source.starts_with("xla"));
+    // f32 similarity can reorder a few clustering merges; final scores
+    // must land within a small relative band.
+    let gap = (with_xla.score - with_rust.score).abs() / with_rust.score.abs();
+    assert!(gap < 0.02, "xla {} vs rust {}", with_xla.score, with_rust.score);
+}
