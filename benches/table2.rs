@@ -29,6 +29,7 @@ use cges::util::{mean, Timer};
 const ALGOS: &[&str] = &["fges", "ges", "cges-2", "cges-4", "cges-8", "cges-l-2", "cges-l-4", "cges-l-8"];
 
 fn main() -> anyhow::Result<()> {
+    let wall = Timer::start();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let full = args.iter().any(|a| a == "--full");
     let get = |key: &str| -> Option<String> {
@@ -124,7 +125,70 @@ fn main() -> anyhow::Result<()> {
         let s = mean(&time[di][ges_i]) / mean(&time[di][cl4_i]).max(1e-9);
         println!("{:<8} {:.2}x", domain.name(), s);
     }
+
+    // Machine-readable perf record: one JSON file per run so the
+    // trajectory across PRs can be diffed (BENCH_table2.json in CWD).
+    let json = perf_record_json(
+        scale,
+        datasets,
+        rows,
+        threads,
+        wall.secs(),
+        &domains,
+        &bdeu,
+        &smhd,
+        &time,
+    );
+    let out = "BENCH_table2.json";
+    std::fs::write(out, &json)?;
+    println!("\nperf record written to {out}");
     Ok(())
+}
+
+/// Hand-rolled JSON (the offline registry has no serde): the schema is
+/// flat enough that formatting it directly is the simpler dependency.
+#[allow(clippy::too_many_arguments)]
+fn perf_record_json(
+    scale: f64,
+    datasets: usize,
+    rows: usize,
+    threads: usize,
+    wall_secs: f64,
+    domains: &[Domain],
+    bdeu: &[Vec<Vec<f64>>],
+    smhd: &[Vec<Vec<f64>>],
+    time: &[Vec<Vec<f64>>],
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"bench\": \"table2\",");
+    let _ = writeln!(s, "  \"scale\": {scale},");
+    let _ = writeln!(s, "  \"datasets\": {datasets},");
+    let _ = writeln!(s, "  \"rows\": {rows},");
+    let _ = writeln!(s, "  \"threads\": {threads},");
+    let _ = writeln!(s, "  \"wall_secs\": {wall_secs:.3},");
+    s.push_str("  \"results\": [\n");
+    let mut first = true;
+    for (di, domain) in domains.iter().enumerate() {
+        for (ai, algo) in ALGOS.iter().enumerate() {
+            if !first {
+                s.push_str(",\n");
+            }
+            first = false;
+            let _ = write!(
+                s,
+                "    {{\"domain\": \"{}\", \"algo\": \"{}\", \"bdeu_n\": {:.6}, \"smhd\": {:.3}, \"secs\": {:.3}}}",
+                domain.name(),
+                algo,
+                mean(&bdeu[di][ai]),
+                mean(&smhd[di][ai]),
+                mean(&time[di][ai])
+            );
+        }
+    }
+    s.push_str("\n  ]\n}\n");
+    s
 }
 
 fn run_algo(

@@ -6,25 +6,30 @@
 //! ring, where they are fused and refined — privacy-preserving in the
 //! sense that raw data is never shared, only models.
 //!
-//! This composes the library's public pieces (fusion + masked GES) into
-//! a variant the paper only gestures at, showing the modularity claim.
+//! Since the ring became a message-passing runtime, this example rides
+//! the real thing: each site is a [`RingWorker`] bound to a *private*
+//! scorer (no shared cache — scores are site-local statistics), and
+//! [`run_ring`] wires them through the channel transport with the
+//! same circulating-token convergence the distributed learner uses.
+//! Swapping `RingMode::Channel` for `RingMode::Tcp` moves every model
+//! across a socket — the federated deployment in miniature.
 //!
 //! Run: `cargo run --release --example federated`
 
 use std::sync::Arc;
 
 use cges::bn::{forward_sample, generate, NetGenConfig};
+use cges::coordinator::{run_ring, RingMode, RingRunOptions};
 use cges::data::Dataset;
 use cges::fusion::fuse;
 use cges::graph::Dag;
-use cges::learn::{ges, GesConfig};
+use cges::learn::{ges, GesConfig, RingWorker};
 use cges::metrics::{evaluate, smhd};
 use cges::score::BdeuScorer;
 
 fn main() -> anyhow::Result<()> {
     let n = 40;
     let k = 4; // sites
-    let rounds = 3;
     let truth = generate(
         &NetGenConfig { nodes: n, edges: 56, max_parents: 3, ..Default::default() },
         23,
@@ -49,30 +54,39 @@ fn main() -> anyhow::Result<()> {
     let scorers: Vec<BdeuScorer> =
         shards.iter().map(|d| BdeuScorer::new(d.clone(), 10.0)).collect();
 
-    let mut models: Vec<Dag> = vec![Dag::new(n); k];
-    for round in 0..rounds {
-        let prev = models.clone();
-        for i in 0..k {
-            // Receive predecessor's structure, fuse with own, refine on
-            // local data only.
-            let init = if round == 0 {
-                Dag::new(n)
-            } else {
-                let (fused, _) = fuse(&[&prev[i], &prev[(i + k - 1) % k]]);
-                fused
-            };
-            let r = ges(&scorers[i], &init, &GesConfig::default());
-            models[i] = r.dag;
-        }
-        let avg_smhd: f64 = models.iter().map(|m| smhd(m, &truth.dag) as f64).sum::<f64>() / k as f64;
-        println!("round {round}: avg site SMHD to truth = {avg_smhd:.1}");
+    // One persistent worker per site; models travel, data does not.
+    let workers: Vec<RingWorker> = scorers
+        .iter()
+        .map(|sc| RingWorker::new(sc.clone(), GesConfig { threads: 2, ..Default::default() }))
+        .collect();
+    let outcome =
+        run_ring(workers, &RingRunOptions { max_rounds: 8, mode: RingMode::Channel })?;
+    println!(
+        "ring converged in {} rounds over the channel transport ({} model handoffs recorded)",
+        outcome.rounds,
+        outcome.records.len()
+    );
+    for round in 0..outcome.rounds {
+        let hops: Vec<_> =
+            outcome.records.iter().filter(|r| r.round == round).collect();
+        let best = hops.iter().map(|r| r.score).fold(f64::NEG_INFINITY, f64::max);
+        let avg_edges =
+            hops.iter().map(|r| r.edges as f64).sum::<f64>() / hops.len().max(1) as f64;
+        println!("round {round}: best local BDeu {best:.1}, avg edges {avg_edges:.1}");
     }
+    let avg_smhd: f64 =
+        outcome.models.iter().map(|m| smhd(m, &truth.dag) as f64).sum::<f64>() / k as f64;
+    println!("final: avg site SMHD to truth = {avg_smhd:.1}");
 
     // Final consensus: fuse all site models.
-    let refs: Vec<&Dag> = models.iter().collect();
+    let refs: Vec<&Dag> = outcome.models.iter().collect();
     let (consensus, _) = fuse(&refs);
     // Evaluate the consensus against each site's view and the truth.
-    println!("\nconsensus: {} edges, SMHD to truth {}", consensus.edge_count(), smhd(&consensus, &truth.dag));
+    println!(
+        "\nconsensus: {} edges, SMHD to truth {}",
+        consensus.edge_count(),
+        smhd(&consensus, &truth.dag)
+    );
     for (i, sc) in scorers.iter().enumerate() {
         let rep = evaluate(&consensus, &truth.dag, sc);
         println!(
@@ -85,7 +99,7 @@ fn main() -> anyhow::Result<()> {
     // ring's stage 3, a local GES refinement from the consensus start
     // prunes it — still touching only local data.
     let refined = ges(&scorers[0], &consensus, &GesConfig::default());
-    let solo_smhd = smhd(&models[0], &truth.dag);
+    let solo_smhd = smhd(&outcome.models[0], &truth.dag);
     let refined_smhd = smhd(&refined.dag, &truth.dag);
     println!(
         "\nsite-0 alone SMHD {} | consensus refined at site-0: SMHD {} ({} edges)",

@@ -6,18 +6,22 @@
 //!
 //! Run:  cargo run --release --example ring_learning -- [link|pigs|munin]
 //!           [--scale 0.25] [--datasets 3] [--rows 2000] [--full] [--trace]
+//!           [--transport channel|tcp|sync]
 //!
 //! `--full` = paper scale (724-1041 vars, 11 datasets x 5000 rows) —
 //! expect hours, like the original. Defaults reproduce the *shape* of
 //! the results in minutes. `--xla` sources stage-1 similarities from
-//! the AOT artifact instead of the Rust fallback. Results land in
-//! EXPERIMENTS.md.
+//! the AOT artifact instead of the Rust fallback. `--transport` picks
+//! the ring runtime: pipelined in-process actors (channel, default),
+//! pipelined over loopback TCP through the wire codec (tcp), or the
+//! barrier-synchronous deterministic scheduler (sync) — all three
+//! produce the same (dag, score). Results land in EXPERIMENTS.md.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use cges::bn::{forward_sample, load_domain, Domain};
-use cges::coordinator::{cges, PartitionSource, RingConfig};
+use cges::coordinator::{cges, PartitionSource, RingConfig, RingMode};
 use cges::graph::Dag;
 use cges::learn::{fges, ges, FgesConfig, GesConfig};
 use cges::metrics::evaluate;
@@ -50,16 +54,28 @@ fn main() -> anyhow::Result<()> {
     let n_datasets = if full { 11 } else { get("--datasets", 3.0) as usize };
     let rows = if full { 5000 } else { get("--rows", 2000.0) as usize };
     let threads = 8; // the paper's testbed width
+    let mode = match args.iter().position(|a| a == "--transport") {
+        None => RingMode::default(),
+        Some(i) => {
+            let v = args.get(i + 1).ok_or_else(|| {
+                anyhow::anyhow!("--transport expects a value (channel|tcp|sync)")
+            })?;
+            RingMode::parse(v).ok_or_else(|| {
+                anyhow::anyhow!("--transport: unknown mode '{v}' (channel|tcp|sync)")
+            })?
+        }
+    };
 
     let truth = load_domain(domain, scale);
     println!(
-        "domain {} (scale {scale}): {} nodes, {} edges | {} datasets x {} rows | {} threads",
+        "domain {} (scale {scale}): {} nodes, {} edges | {} datasets x {} rows | {} threads | ring transport {}",
         domain.name(),
         truth.n(),
         truth.dag.edge_count(),
         n_datasets,
         rows,
-        threads
+        threads,
+        mode.name()
     );
 
     // Stage-1 via the XLA artifact is opt-in here: at reduced bench
@@ -107,6 +123,7 @@ fn main() -> anyhow::Result<()> {
                         } else {
                             PartitionSource::RustFallback
                         },
+                        mode,
                         ..Default::default()
                     };
                     let r = cges(data.clone(), &cfg)?;

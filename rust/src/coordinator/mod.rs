@@ -1,8 +1,18 @@
 //! The paper's system contribution: the directed-ring distributed
-//! learning coordinator (Algorithm 1) plus run telemetry.
+//! learning coordinator (Algorithm 1) as a message-passing runtime —
+//! actor-style workers over a pluggable [`transport`] — plus run
+//! telemetry.
 
 pub mod ring;
 pub mod telemetry;
+pub mod transport;
 
-pub use ring::{cges, insert_limit, PartitionSource, RingConfig, RingResult};
-pub use telemetry::{RoundRecord, Telemetry};
+pub use ring::{
+    cges, insert_limit, run_ring, PartitionSource, RingConfig, RingMode, RingOutcome,
+    RingResult, RingRunOptions,
+};
+pub use telemetry::{RoundRecord, Telemetry, WorkerTimeline};
+pub use transport::{
+    ChannelTransport, ModelMsg, RingLink, RingMessage, RingRx, RingToken, RingTransport,
+    RingTx, RoundProbe, WireTransport,
+};

@@ -1,35 +1,58 @@
-//! The cGES ring coordinator — Algorithm 1 of the paper.
+//! The cGES ring coordinator — Algorithm 1 of the paper, as a
+//! message-passing runtime.
 //!
 //! Stage 1 (edge partitioning): pairwise BDeu similarities — from the
 //! AOT XLA artifact when available, the threaded Rust fallback
 //! otherwise — feed the hierarchical clustering and the balanced edge
 //! assignment (`partition`).
 //!
-//! Stage 2 (ring learning): k workers, one per edge subset E_i,
-//! synchronous rounds. In round t worker i fuses its own model
-//! G_i^{t-1} with its predecessor's G_{i-1}^{t-1} (`fusion`), then runs
-//! GES restricted to E_i, optionally capped at l = (10/k)·√n inserts
-//! (cGES-L). All workers share one concurrent score cache; candidate
-//! scoring inside each worker is threaded so the whole machine stays at
-//! `threads` busy cores (the paper's 8).
+//! Stage 2 (ring learning): k long-lived workers, one per edge subset
+//! E_i, connected in a directed ring through a
+//! [`RingTransport`](crate::coordinator::transport). Each worker owns
+//! its [`RingWorker`] search state for the whole run: it receives its
+//! predecessor's round-(t−1) model, fuses it with its own (`fusion`),
+//! runs GES restricted to E_i — optionally capped at l = (10/k)·√n
+//! inserts (cGES-L) — and sends the result to its successor. No global
+//! barrier: worker i can be at round t+2 while worker j is still at
+//! round t (the paper's true dataflow, which the previous
+//! Jacobi-synchronous implementation serialized).
 //!
-//! Convergence: the round's best BDeu must beat the best seen so far,
-//! else the learning stage stops (Algorithm 1 lines 11-16).
+//! Convergence: a token circulates the ring carrying the best-seen
+//! BDeu per round (see `transport::RoundProbe`). The ring head applies
+//! the paper's rule — stop when a round fails to improve the best
+//! score seen so far (Algorithm 1 lines 11–16) — and a `Stop` marker
+//! then makes one circuit so every link drains. The coordinator also
+//! folds the workers' event stream and raises a stop flag as soon as
+//! the deciding round completes, bounding speculative work to ~1 round
+//! instead of the k-round token latency.
+//!
+//! Determinism: per-worker dataflow is identical in every mode (same
+//! fusion inputs, same search steps), and the stop round is a pure
+//! function of the per-round scores, so the pipelined runtime returns
+//! the *same* `(dag, score)` as [`RingMode::Deterministic`] — the
+//! barrier-synchronous reference scheduler kept for paper-comparable
+//! (Table 2) runs. Pipelining only changes wall-clock and how many
+//! speculative hops past the stop round get computed (they are
+//! recorded in telemetry but never affect the result).
 //!
 //! Stage 3 (fine tuning): one unrestricted GES from the ring's best
 //! model — this run is what transfers GES's theoretical guarantees to
 //! cGES.
 
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 
 use anyhow::Result;
 
 use crate::coordinator::telemetry::{RoundRecord, Telemetry};
+use crate::coordinator::transport::{
+    ChannelTransport, ModelMsg, RingLink, RingMessage, RingRx, RingToken, RingTransport, RingTx,
+    RoundProbe, WireTransport,
+};
 use crate::data::Dataset;
-use crate::fusion::fuse;
 use crate::graph::Dag;
-use crate::learn::{ges, EdgeMask, GesConfig, RingWorker};
+use crate::learn::{EdgeMask, GesConfig, RingWorker};
 use crate::partition::partition_edges;
 use crate::score::{BdeuScorer, PairwiseScores, ScoreCache};
 use crate::util::Timer;
@@ -43,6 +66,44 @@ pub enum PartitionSource {
     /// Always use the threaded Rust implementation.
     #[default]
     RustFallback,
+}
+
+/// How the stage-2 ring executes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RingMode {
+    /// Barrier-synchronous reference scheduler: all workers step in
+    /// lock-step, no speculation. Same `(dag, score)` as the pipelined
+    /// modes; kept for reproducing the paper's Table 2 exactly and for
+    /// debugging.
+    Deterministic,
+    /// Actor threads over in-process mpsc channels (the default).
+    #[default]
+    Channel,
+    /// Actor threads over loopback TCP: every model crosses a real
+    /// byte boundary through the wire codec. Same results, measurable
+    /// `codec_secs` — and the proof that the ring is remotable.
+    Tcp,
+}
+
+impl RingMode {
+    /// Parse a CLI name (`sync`/`deterministic`, `channel`, `tcp`/`wire`).
+    pub fn parse(s: &str) -> Option<RingMode> {
+        match s {
+            "sync" | "deterministic" => Some(RingMode::Deterministic),
+            "channel" | "mpsc" => Some(RingMode::Channel),
+            "tcp" | "wire" => Some(RingMode::Tcp),
+            _ => None,
+        }
+    }
+
+    /// Telemetry name.
+    pub fn name(self) -> &'static str {
+        match self {
+            RingMode::Deterministic => "deterministic",
+            RingMode::Channel => "channel",
+            RingMode::Tcp => "tcp",
+        }
+    }
 }
 
 /// Ring configuration.
@@ -64,6 +125,8 @@ pub struct RingConfig {
     pub fine_tune: bool,
     /// Optional hard max-parents cap passed to the learners.
     pub max_parents: Option<usize>,
+    /// Stage-2 execution mode / transport.
+    pub mode: RingMode,
 }
 
 impl Default for RingConfig {
@@ -77,6 +140,7 @@ impl Default for RingConfig {
             partition_source: PartitionSource::RustFallback,
             fine_tune: true,
             max_parents: None,
+            mode: RingMode::default(),
         }
     }
 }
@@ -87,9 +151,10 @@ pub struct RingResult {
     pub dag: Dag,
     /// Its BDeu score.
     pub score: f64,
-    /// Learning-stage rounds executed.
+    /// Learning-stage rounds counted toward convergence.
     pub rounds: usize,
-    /// Telemetry (per-round records, stage times, cache stats).
+    /// Telemetry (per-hop records, worker timelines, stage times,
+    /// cache stats).
     pub telemetry: Telemetry,
 }
 
@@ -98,32 +163,384 @@ pub fn insert_limit(k: usize, n: usize) -> usize {
     ((10.0 / k as f64) * (n as f64).sqrt()).ceil() as usize
 }
 
-/// Compute stage-1 similarities, preferring the artifact path.
-fn stage1_similarity(
-    data: &Arc<Dataset>,
-    cfg: &RingConfig,
-) -> (PairwiseScores, String) {
-    match &cfg.partition_source {
-        PartitionSource::Artifacts(dir) => {
-            match crate::runtime::SimilarityRuntime::load(dir) {
-                Ok(rt) if rt.supports(data) => match rt.pairwise(data, cfg.ess) {
-                    Ok(s) => return (s, format!("xla:{}", rt.platform())),
-                    Err(e) => eprintln!("warning: artifact execution failed ({e}); falling back to Rust"),
-                },
-                Ok(_) => eprintln!(
-                    "warning: no artifact config fits n={} m={} r={}; falling back to Rust",
-                    data.n_vars(),
-                    data.n_rows(),
-                    data.max_card()
-                ),
-                Err(e) => eprintln!("warning: artifact load failed ({e}); falling back to Rust"),
-            }
-            (crate::score::pairwise_similarity(data, cfg.ess, cfg.threads), "rust-fallback".into())
-        }
-        PartitionSource::RustFallback => {
-            (crate::score::pairwise_similarity(data, cfg.ess, cfg.threads), "rust-fallback".into())
+/// Compute stage-1 similarities, preferring the artifact path. Every
+/// miss (load failure, no fitting config, execution failure) warns and
+/// falls through to the single Rust-fallback path at the bottom.
+fn stage1_similarity(data: &Arc<Dataset>, cfg: &RingConfig) -> (PairwiseScores, String) {
+    if let PartitionSource::Artifacts(dir) = &cfg.partition_source {
+        match crate::runtime::SimilarityRuntime::load(dir) {
+            Ok(rt) if rt.supports(data) => match rt.pairwise(data, cfg.ess) {
+                Ok(s) => return (s, format!("xla:{}", rt.platform())),
+                Err(e) => {
+                    eprintln!("warning: artifact execution failed ({e}); falling back to Rust")
+                }
+            },
+            Ok(_) => eprintln!(
+                "warning: no artifact config fits n={} m={} r={}; falling back to Rust",
+                data.n_vars(),
+                data.n_rows(),
+                data.max_card()
+            ),
+            Err(e) => eprintln!("warning: artifact load failed ({e}); falling back to Rust"),
         }
     }
+    (crate::score::pairwise_similarity(data, cfg.ess, cfg.threads), "rust-fallback".into())
+}
+
+// =====================================================================
+// The generic ring runtime
+// =====================================================================
+
+/// Options for [`run_ring`] (what the runtime needs beyond the workers
+/// themselves — each [`RingWorker`] already owns its scorer, mask and
+/// cGES-L insert cap through its `GesConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct RingRunOptions {
+    /// Hard cap on rounds.
+    pub max_rounds: usize,
+    /// Scheduler / transport.
+    pub mode: RingMode,
+}
+
+/// What a ring run produced.
+pub struct RingOutcome {
+    /// Best model over all counted rounds (paper's G_best).
+    pub best_dag: Dag,
+    /// Its BDeu score.
+    pub best_score: f64,
+    /// Rounds counted toward convergence: the first non-improving
+    /// round is included, speculative hops past it are not.
+    pub rounds: usize,
+    /// Each worker's model at the last counted round.
+    pub models: Vec<Dag>,
+    /// Every hop record, including speculative ones, sorted by
+    /// (round, worker).
+    pub records: Vec<RoundRecord>,
+}
+
+/// Run a ring of pre-built workers to convergence. This is the
+/// runtime under [`cges`], exposed so other ring topologies (e.g. the
+/// federated example, where every worker scores against a private
+/// shard) can reuse it.
+pub fn run_ring(workers: Vec<RingWorker>, opts: &RingRunOptions) -> Result<RingOutcome> {
+    assert!(!workers.is_empty(), "ring needs at least one worker");
+    match opts.mode {
+        RingMode::Deterministic => run_deterministic(workers, opts),
+        RingMode::Channel => run_pipelined(workers, &ChannelTransport, opts),
+        RingMode::Tcp => run_pipelined(workers, &WireTransport, opts),
+    }
+}
+
+/// Barrier-synchronous reference scheduler: one scoped thread per
+/// worker per round, a convergence test at the barrier. Dataflow is
+/// identical to the pipelined runtime (worker i always fuses its own
+/// round-(t−1) model with its predecessor's round-(t−1) model), so the
+/// outcome is too.
+fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Result<RingOutcome> {
+    let k = workers.len();
+    let n = workers[0].n();
+    let mut records: Vec<RoundRecord> = Vec::new();
+    let mut models: Vec<Dag> = vec![Dag::new(n); k];
+    let mut best_score = f64::NEG_INFINITY;
+    let mut best_dag = Dag::new(n);
+    let mut rounds = 0usize;
+
+    'rounds: for round in 0..opts.max_rounds {
+        rounds = round + 1;
+        let prev = models.clone();
+        let results: Vec<(Dag, RoundRecord)> = std::thread::scope(|s| {
+            let handles: Vec<_> = workers
+                .iter_mut()
+                .enumerate()
+                .map(|(i, worker)| {
+                    let pred = &prev[(i + k - 1) % k];
+                    s.spawn(move || {
+                        let ft = Timer::start();
+                        if round > 0 {
+                            worker.absorb_fused(pred);
+                        }
+                        let fusion_secs = ft.secs();
+
+                        let gt = Timer::start();
+                        let (inserts, deletes) = worker.step();
+                        let ges_secs = gt.secs();
+                        let dag = worker.dag();
+                        let rec = RoundRecord {
+                            round,
+                            worker: i,
+                            fusion_secs,
+                            ges_secs,
+                            wait_secs: 0.0,
+                            codec_secs: 0.0,
+                            score: worker.score_of(&dag),
+                            edges: dag.edge_count(),
+                            inserts,
+                            deletes,
+                        };
+                        (dag, rec)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("ring worker panicked")).collect()
+        });
+
+        // Convergence check (Algorithm 1, lines 11-16).
+        let mut improved = false;
+        for (i, (dag, rec)) in results.into_iter().enumerate() {
+            if rec.score > best_score {
+                best_score = rec.score;
+                best_dag = dag.clone();
+                improved = true;
+            }
+            records.push(rec);
+            models[i] = dag;
+        }
+        if !improved {
+            break 'rounds;
+        }
+    }
+    Ok(RingOutcome { best_dag, best_score, rounds, models, records })
+}
+
+/// Actor runtime: one long-lived thread per worker, connected through
+/// the transport; the calling thread folds the event stream.
+fn run_pipelined(
+    workers: Vec<RingWorker>,
+    transport: &dyn RingTransport,
+    opts: &RingRunOptions,
+) -> Result<RingOutcome> {
+    let k = workers.len();
+    let n = workers[0].n();
+    let links = transport.connect(k)?;
+    let stop = AtomicBool::new(false);
+    let (events_tx, events_rx) = mpsc::channel::<(RoundRecord, Dag)>();
+    let max_rounds = opts.max_rounds;
+
+    std::thread::scope(|s| {
+        for (i, (worker, link)) in workers.into_iter().zip(links).enumerate() {
+            let events = events_tx.clone();
+            let stop = &stop;
+            s.spawn(move || worker_loop(i, k, worker, link, events, stop, max_rounds));
+        }
+        drop(events_tx);
+        collect(k, n, max_rounds, &stop, events_rx)
+    })
+}
+
+/// Send `Stop` (unless the peer's already arrived) and drain the
+/// inbound link so no writer is left blocked mid-frame.
+fn stop_and_drain(tx: &mut dyn RingTx, rx: &mut dyn RingRx) {
+    let _ = tx.send(RingMessage::Stop);
+    loop {
+        match rx.recv() {
+            Ok((RingMessage::Stop, _)) | Err(_) => break,
+            Ok(_) => {} // discard late speculative models
+        }
+    }
+}
+
+/// The actor body: receive, fuse, learn, send — plus token folding and
+/// shutdown. Errors from the transport mean the runtime is tearing
+/// down; the loop exits quietly and the coordinator already has every
+/// record that matters.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    i: usize,
+    k: usize,
+    mut worker: RingWorker,
+    link: RingLink,
+    events: mpsc::Sender<(RoundRecord, Dag)>,
+    stop: &AtomicBool,
+    max_rounds: usize,
+) {
+    let RingLink { mut tx, mut rx } = link;
+    // My score per round (what token probes fold in).
+    let mut history: Vec<f64> = Vec::new();
+    // Probes received last hop, to forward with the next send.
+    let mut pending: Vec<RoundProbe> = Vec::new();
+    // Ring head only: best score over completed (token-confirmed) rounds.
+    let mut head_best = f64::NEG_INFINITY;
+
+    for round in 0..max_rounds {
+        if stop.load(Ordering::Acquire) {
+            stop_and_drain(tx.as_mut(), rx.as_mut());
+            return;
+        }
+
+        let mut wait_secs = 0.0;
+        let mut codec_secs = 0.0;
+        let mut fusion_secs = 0.0;
+        if round > 0 {
+            let (msg, timing) = match rx.recv() {
+                Ok(x) => x,
+                Err(_) => return, // predecessor gone: tear-down
+            };
+            wait_secs = timing.wait_secs;
+            codec_secs += timing.codec_secs;
+            match msg {
+                RingMessage::Stop => {
+                    // Forward once so the circuit completes, then exit:
+                    // the predecessor sends nothing after Stop.
+                    let _ = tx.send(RingMessage::Stop);
+                    return;
+                }
+                RingMessage::Model(mut m) => {
+                    if i == 0 {
+                        // Probes have completed the circuit: apply the
+                        // paper's convergence rule in round order.
+                        for p in &m.token.probes {
+                            debug_assert_eq!(p.hops, k, "probe returned early");
+                            if p.best > head_best {
+                                head_best = p.best;
+                            } else {
+                                stop_and_drain(tx.as_mut(), rx.as_mut());
+                                return;
+                            }
+                        }
+                    } else {
+                        for p in &mut m.token.probes {
+                            if let Some(&s) = history.get(p.round) {
+                                if s > p.best {
+                                    p.best = s;
+                                }
+                            }
+                            p.hops += 1;
+                        }
+                        pending = std::mem::take(&mut m.token.probes);
+                    }
+                    let ft = Timer::start();
+                    worker.absorb_fused(&m.dag);
+                    fusion_secs = ft.secs();
+                }
+            }
+        }
+
+        let gt = Timer::start();
+        let (inserts, deletes) = worker.step();
+        let ges_secs = gt.secs();
+        let dag = worker.dag();
+        let score = worker.score_of(&dag);
+        history.push(score);
+
+        let mut probes = std::mem::take(&mut pending);
+        let mut self_converged = false;
+        if i == 0 {
+            let own = RoundProbe { round, best: score, hops: 1 };
+            if k == 1 {
+                // Self-ring: the probe is complete at creation.
+                if own.best > head_best {
+                    head_best = own.best;
+                } else {
+                    self_converged = true;
+                }
+            } else {
+                probes.push(own);
+            }
+        }
+
+        // Hand the model to the successor first (unless this is the
+        // self-ring's non-improving round, which nobody consumes) so
+        // the hop's record includes the serialization cost.
+        let mut peer_gone = false;
+        if !self_converged {
+            let msg = RingMessage::Model(ModelMsg {
+                from: i,
+                round,
+                score,
+                dag: dag.clone(),
+                token: RingToken { probes },
+            });
+            match tx.send(msg) {
+                Ok(secs) => codec_secs += secs,
+                Err(_) => peer_gone = true, // successor gone: tear-down
+            }
+        }
+
+        // The coordinator needs the record (and model) even for the
+        // non-improving round — it is counted, per Algorithm 1.
+        let rec = RoundRecord {
+            round,
+            worker: i,
+            fusion_secs,
+            ges_secs,
+            wait_secs,
+            codec_secs,
+            score,
+            edges: dag.edge_count(),
+            inserts,
+            deletes,
+        };
+        let _ = events.send((rec, dag));
+
+        if self_converged {
+            stop_and_drain(tx.as_mut(), rx.as_mut());
+            return;
+        }
+        if peer_gone {
+            return;
+        }
+    }
+}
+
+/// Fold the workers' event stream: count rounds in order, apply the
+/// convergence rule as soon as a round completes, raise the stop flag,
+/// and keep the best model — the same strict-improvement scan, in the
+/// same (round, worker) order, as the deterministic scheduler.
+fn collect(
+    k: usize,
+    n: usize,
+    max_rounds: usize,
+    stop: &AtomicBool,
+    events: mpsc::Receiver<(RoundRecord, Dag)>,
+) -> Result<RingOutcome> {
+    use std::collections::BTreeMap;
+
+    let mut buffer: BTreeMap<usize, Vec<Option<(RoundRecord, Dag)>>> = BTreeMap::new();
+    let mut records: Vec<RoundRecord> = Vec::new();
+    let mut next_round = 0usize;
+    let mut best_score = f64::NEG_INFINITY;
+    let mut best_dag = Dag::new(n);
+    let mut models: Vec<Dag> = vec![Dag::new(n); k];
+    let mut rounds = 0usize;
+    let mut decided = false;
+
+    while let Ok((rec, dag)) = events.recv() {
+        records.push(rec.clone());
+        let slots =
+            buffer.entry(rec.round).or_insert_with(|| (0..k).map(|_| None).collect());
+        slots[rec.worker] = Some((rec, dag));
+
+        while !decided {
+            let complete = buffer
+                .get(&next_round)
+                .map(|s| s.iter().all(|x| x.is_some()))
+                .unwrap_or(false);
+            if !complete {
+                break;
+            }
+            let slots = buffer.remove(&next_round).expect("checked above");
+            rounds = next_round + 1;
+            let mut improved = false;
+            let mut new_models = Vec::with_capacity(k);
+            for entry in slots {
+                let (rec, dag) = entry.expect("complete round");
+                if rec.score > best_score {
+                    best_score = rec.score;
+                    best_dag = dag.clone();
+                    improved = true;
+                }
+                new_models.push(dag);
+            }
+            models = new_models;
+            next_round += 1;
+            if !improved || rounds == max_rounds {
+                decided = true;
+                stop.store(true, Ordering::Release);
+            }
+        }
+    }
+    records.sort_by_key(|r| (r.round, r.worker));
+    Ok(RingOutcome { best_dag, best_score, rounds, models, records })
 }
 
 /// Run cGES on a dataset.
@@ -154,7 +571,7 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     // fusion actually changed (see learn::ges::RingWorker — the §Perf
     // optimization that makes the ring competitive with heap-GES).
     let t = Timer::start();
-    let mut workers: Vec<RingWorker> = (0..cfg.k)
+    let workers: Vec<RingWorker> = (0..cfg.k)
         .map(|i| {
             let ges_cfg = GesConfig {
                 threads: worker_threads,
@@ -168,70 +585,12 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
             RingWorker::new(scorer.clone(), ges_cfg)
         })
         .collect();
-    let mut models: Vec<Dag> = vec![Dag::new(n); cfg.k];
-    let mut best_score = f64::NEG_INFINITY;
-    let mut best_dag = Dag::new(n);
-    let mut rounds = 0usize;
-
-    'rounds: for round in 0..cfg.max_rounds {
-        rounds = round + 1;
-        // Jacobi-synchronous ring step: worker i consumes its own model
-        // and predecessor (i-1)'s model from the previous round.
-        let prev = models.clone();
-        let results: Vec<(Dag, RoundRecord)> = std::thread::scope(|s| {
-            let handles: Vec<_> = workers
-                .iter_mut()
-                .enumerate()
-                .map(|(i, worker)| {
-                    let scorer = scorer.clone();
-                    let own = &prev[i];
-                    let pred = &prev[(i + cfg.k - 1) % cfg.k];
-                    s.spawn(move || {
-                        // Fusion (skipped in round 0: nothing learned yet).
-                        let ft = Timer::start();
-                        if round > 0 {
-                            let (fused, _sigma) = fuse(&[own, pred]);
-                            worker.absorb(&fused);
-                        }
-                        let fusion_secs = ft.secs();
-
-                        // Constrained GES resuming the persistent state.
-                        let gt = Timer::start();
-                        let (inserts, deletes) = worker.step(limit);
-                        let dag = worker.dag();
-                        let rec = RoundRecord {
-                            round,
-                            worker: i,
-                            fusion_secs,
-                            ges_secs: gt.secs(),
-                            score: scorer.score_dag(&dag),
-                            edges: dag.edge_count(),
-                            inserts,
-                            deletes,
-                        };
-                        (dag, rec)
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("ring worker panicked")).collect()
-        });
-
-        // Convergence check (Algorithm 1, lines 11-16).
-        let mut improved = false;
-        for (i, (dag, rec)) in results.into_iter().enumerate() {
-            if rec.score > best_score {
-                best_score = rec.score;
-                best_dag = dag.clone();
-                improved = true;
-            }
-            telemetry.records.push(rec);
-            models[i] = dag;
-        }
-        if !improved {
-            break 'rounds;
-        }
-    }
+    let outcome =
+        run_ring(workers, &RingRunOptions { max_rounds: cfg.max_rounds, mode: cfg.mode })?;
     telemetry.learning_secs = t.secs();
+    telemetry.records = outcome.records;
+    telemetry.transport = cfg.mode.name().into();
+    telemetry.converged_rounds = outcome.rounds;
 
     // ---- Stage 3: fine tuning --------------------------------------
     let t = Timer::start();
@@ -245,10 +604,10 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
             iterate_until_stable: false,
             forward_empty_t: false,
         };
-        let r = ges(&scorer, &best_dag, &ges_cfg);
+        let r = crate::learn::ges(&scorer, &outcome.best_dag, &ges_cfg);
         (r.dag, r.score)
     } else {
-        (best_dag, best_score)
+        (outcome.best_dag, outcome.best_score)
     };
     telemetry.fine_tune_secs = t.secs();
 
@@ -256,14 +615,14 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     telemetry.cache_hits = hits;
     telemetry.cache_misses = misses;
 
-    Ok(RingResult { dag, score, rounds, telemetry })
+    Ok(RingResult { dag, score, rounds: outcome.rounds, telemetry })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bn::{forward_sample, generate, NetGenConfig};
-    use crate::learn::GesConfig;
+    use crate::learn::{ges, GesConfig};
 
     fn workload(nodes: usize, edges: usize, seed: u64) -> (crate::bn::DiscreteBn, Arc<Dataset>) {
         let bn = generate(&NetGenConfig { nodes, edges, ..Default::default() }, seed);
@@ -318,6 +677,21 @@ mod tests {
     }
 
     #[test]
+    fn insert_limit_matches_paper_formula() {
+        // l = ceil((10/k)·√n), spot-checked against hand computation.
+        for (k, n, expected) in [
+            (1usize, 100usize, 100usize), // 10·10
+            (2, 100, 50),                 // 5·10
+            (4, 400, 50),                 // 2.5·20
+            (8, 1000, 40),                // 1.25·31.62… → ceil(39.53)
+            (8, 724, 34),                 // link-sized: 1.25·26.90… → ceil(33.63)
+            (4, 1, 3),                    // tiny n still positive: ceil(2.5)
+        ] {
+            assert_eq!(insert_limit(k, n), expected, "l({k}, {n})");
+        }
+    }
+
+    #[test]
     fn fine_tune_only_improves() {
         let (_bn, data) = workload(18, 26, 11);
         let base = RingConfig { k: 2, threads: 4, fine_tune: false, ..Default::default() };
@@ -325,4 +699,26 @@ mod tests {
         let with_ft = cges(data, &RingConfig { fine_tune: true, ..base }).unwrap();
         assert!(with_ft.score >= no_ft.score - 1e-9);
     }
+
+    #[test]
+    fn counted_rounds_are_complete_and_speculation_is_bounded() {
+        let (_bn, data) = workload(18, 24, 29);
+        let k = 3;
+        let cfg = RingConfig { k, threads: 3, fine_tune: false, ..Default::default() };
+        let r = cges(data, &cfg).unwrap();
+        // Every counted round has exactly k records.
+        for round in 0..r.rounds {
+            let cnt = r.telemetry.records.iter().filter(|rec| rec.round == round).count();
+            assert_eq!(cnt, k, "round {round} incomplete");
+        }
+        // Speculative hops exist only past the stop round and are
+        // bounded by the token circuit length.
+        let max_round = r.telemetry.records.iter().map(|rec| rec.round).max().unwrap();
+        assert!(max_round < r.rounds + 2 * k, "unbounded speculation: {max_round} vs {}", r.rounds);
+    }
+
+    // Cross-mode result equality (deterministic vs channel vs tcp) is
+    // covered once, end-to-end, by
+    // `ring_transports_and_deterministic_mode_agree` in
+    // tests/pipeline.rs — the acceptance gate for this runtime.
 }

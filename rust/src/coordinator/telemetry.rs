@@ -1,20 +1,47 @@
-//! Run telemetry: per-round, per-worker records of the ring — the data
+//! Run telemetry: per-hop, per-worker records of the ring — the data
 //! behind the paper's Table 2c and our convergence-trace "figure".
+//!
+//! With the message-passing runtime each worker produces one
+//! [`RoundRecord`] per hop, now including the time it spent *blocked*
+//! on its predecessor (`wait_secs`) and in the wire codec
+//! (`codec_secs`) — the numbers that distinguish a compute-bound ring
+//! from a communication-bound one. [`Telemetry::timelines`] regroups
+//! the flat record stream into one [`WorkerTimeline`] per worker, the
+//! actor-centric view of the same data.
 
 use std::io::Write;
 use std::path::Path;
 
-/// One worker's activity in one ring round.
+/// One worker's activity in one ring hop (= one round of its loop).
 #[derive(Debug, Clone)]
 pub struct RoundRecord {
     pub round: usize,
     pub worker: usize,
+    /// Seconds fusing the predecessor's model into the search state.
     pub fusion_secs: f64,
+    /// Seconds in the constrained GES step.
     pub ges_secs: f64,
+    /// Seconds blocked waiting on the predecessor's message
+    /// (0 in deterministic mode, where a barrier replaces the wait).
+    pub wait_secs: f64,
+    /// Seconds serializing/deserializing models (wire transport only).
+    pub codec_secs: f64,
     pub score: f64,
     pub edges: usize,
     pub inserts: usize,
     pub deletes: usize,
+}
+
+/// One worker's whole run, hop by hop, with per-activity totals.
+#[derive(Debug, Clone)]
+pub struct WorkerTimeline {
+    pub worker: usize,
+    /// This worker's records in round order.
+    pub hops: Vec<RoundRecord>,
+    pub fusion_secs: f64,
+    pub ges_secs: f64,
+    pub wait_secs: f64,
+    pub codec_secs: f64,
 }
 
 /// Full run telemetry.
@@ -30,6 +57,13 @@ pub struct Telemetry {
     pub fine_tune_secs: f64,
     /// Partition source ("xla:<config>" or "rust-fallback").
     pub partition_source: String,
+    /// Ring execution mode ("deterministic", "channel", "tcp").
+    pub transport: String,
+    /// Rounds the learning stage counted toward convergence; records
+    /// with `round >= converged_rounds` are speculative pipeline work
+    /// past the stop round (also emitted in the TSV `#summary` line so
+    /// trace readers can split counted from speculative hops).
+    pub converged_rounds: usize,
 }
 
 impl Telemetry {
@@ -50,20 +84,75 @@ impl Telemetry {
         out
     }
 
-    /// Dump as TSV (one row per record plus a `#summary` trailer).
+    /// Per-worker timelines: each worker's hops in round order plus
+    /// fusion/learn/wait/codec totals.
+    pub fn timelines(&self) -> Vec<WorkerTimeline> {
+        let n_workers = self.records.iter().map(|r| r.worker + 1).max().unwrap_or(0);
+        let mut out: Vec<WorkerTimeline> = (0..n_workers)
+            .map(|worker| WorkerTimeline {
+                worker,
+                hops: Vec::new(),
+                fusion_secs: 0.0,
+                ges_secs: 0.0,
+                wait_secs: 0.0,
+                codec_secs: 0.0,
+            })
+            .collect();
+        for r in &self.records {
+            let t = &mut out[r.worker];
+            t.fusion_secs += r.fusion_secs;
+            t.ges_secs += r.ges_secs;
+            t.wait_secs += r.wait_secs;
+            t.codec_secs += r.codec_secs;
+            t.hops.push(r.clone());
+        }
+        for t in &mut out {
+            t.hops.sort_by_key(|h| h.round);
+        }
+        out
+    }
+
+    /// Dump as TSV (one row per record plus `#worker` timeline
+    /// summaries and a `#summary` trailer).
     pub fn write_tsv(&self, path: &Path) -> std::io::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(f, "round\tworker\tfusion_secs\tges_secs\tscore\tedges\tinserts\tdeletes")?;
+        writeln!(
+            f,
+            "round\tworker\tfusion_secs\tges_secs\twait_secs\tcodec_secs\tscore\tedges\tinserts\tdeletes"
+        )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{}\t{}\t{:.4}\t{:.4}\t{:.4}\t{}\t{}\t{}",
-                r.round, r.worker, r.fusion_secs, r.ges_secs, r.score, r.edges, r.inserts, r.deletes
+                "{}\t{}\t{:.4}\t{:.4}\t{:.4}\t{:.4}\t{:.4}\t{}\t{}\t{}",
+                r.round,
+                r.worker,
+                r.fusion_secs,
+                r.ges_secs,
+                r.wait_secs,
+                r.codec_secs,
+                r.score,
+                r.edges,
+                r.inserts,
+                r.deletes
+            )?;
+        }
+        for t in self.timelines() {
+            writeln!(
+                f,
+                "#worker {}\thops={}\tfusion={:.3}s\tges={:.3}s\twait={:.3}s\tcodec={:.3}s",
+                t.worker,
+                t.hops.len(),
+                t.fusion_secs,
+                t.ges_secs,
+                t.wait_secs,
+                t.codec_secs
             )?;
         }
         writeln!(
             f,
-            "#summary\tpartition={:.3}s ({})\tlearning={:.3}s\tfine_tune={:.3}s\tcache_hits={}\tcache_misses={}",
+            "#summary\ttransport={}\tcounted_rounds={}\tpartition={:.3}s ({})\tlearning={:.3}s\tfine_tune={:.3}s\tcache_hits={}\tcache_misses={}",
+            if self.transport.is_empty() { "-" } else { &self.transport },
+            self.converged_rounds,
             self.partition_secs,
             self.partition_source,
             self.learning_secs,
@@ -79,32 +168,68 @@ impl Telemetry {
 mod tests {
     use super::*;
 
+    fn rec(round: usize, worker: usize, score: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            worker,
+            fusion_secs: 0.01,
+            ges_secs: 0.1,
+            wait_secs: 0.02,
+            codec_secs: 0.001,
+            score,
+            edges: round + 1,
+            inserts: 1,
+            deletes: 0,
+        }
+    }
+
     #[test]
     fn round_best_scores_tracks_max() {
         let t = Telemetry {
-            records: vec![
-                RoundRecord { round: 0, worker: 0, fusion_secs: 0.0, ges_secs: 0.1, score: -10.0, edges: 1, inserts: 1, deletes: 0 },
-                RoundRecord { round: 0, worker: 1, fusion_secs: 0.0, ges_secs: 0.1, score: -8.0, edges: 2, inserts: 2, deletes: 0 },
-                RoundRecord { round: 1, worker: 0, fusion_secs: 0.1, ges_secs: 0.1, score: -7.0, edges: 3, inserts: 1, deletes: 0 },
-            ],
+            records: vec![rec(0, 0, -10.0), rec(0, 1, -8.0), rec(1, 0, -7.0)],
             ..Default::default()
         };
         assert_eq!(t.round_best_scores(), vec![(0, -8.0), (1, -7.0)]);
     }
 
     #[test]
-    fn tsv_roundtrip_lines() {
+    fn timelines_group_and_total() {
         let t = Telemetry {
-            records: vec![RoundRecord { round: 0, worker: 0, fusion_secs: 0.0, ges_secs: 0.5, score: -1.0, edges: 4, inserts: 4, deletes: 1 }],
+            // Deliberately out of round order for worker 1.
+            records: vec![rec(0, 0, -10.0), rec(1, 1, -6.0), rec(0, 1, -8.0), rec(1, 0, -7.0)],
+            ..Default::default()
+        };
+        let tl = t.timelines();
+        assert_eq!(tl.len(), 2);
+        for w in &tl {
+            assert_eq!(w.hops.len(), 2);
+            assert_eq!(w.hops[0].round, 0);
+            assert_eq!(w.hops[1].round, 1);
+            assert!((w.fusion_secs - 0.02).abs() < 1e-12);
+            assert!((w.wait_secs - 0.04).abs() < 1e-12);
+            assert!((w.codec_secs - 0.002).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tsv_has_records_timelines_and_summary() {
+        let t = Telemetry {
+            records: vec![rec(0, 0, -1.0), rec(0, 1, -2.0)],
             partition_source: "rust-fallback".into(),
+            transport: "channel".into(),
             ..Default::default()
         };
         let tmp = std::env::temp_dir().join("cges_telemetry.tsv");
         t.write_tsv(&tmp).unwrap();
         let text = std::fs::read_to_string(&tmp).unwrap();
         assert!(text.starts_with("round\t"));
+        assert!(text.contains("wait_secs"));
+        assert!(text.contains("#worker 0"));
+        assert!(text.contains("#worker 1"));
         assert!(text.contains("#summary"));
-        assert_eq!(text.lines().count(), 3);
+        assert!(text.contains("transport=channel"));
+        // header + 2 records + 2 worker lines + summary
+        assert_eq!(text.lines().count(), 6);
         std::fs::remove_file(&tmp).ok();
     }
 }

@@ -1,0 +1,465 @@
+//! Pluggable message transport for the ring runtime.
+//!
+//! Algorithm 1 of the paper is a *directed ring*: processor i receives
+//! a model from its predecessor, fuses, learns on its edge subset, and
+//! sends the result to its successor. This module is the communication
+//! substrate of that ring, abstracted so the same worker loop can run
+//! over different media:
+//!
+//! * [`ChannelTransport`] — in-process `std::sync::mpsc` channels, the
+//!   default. Messages move by value; zero serialization cost.
+//! * [`WireTransport`] — length-prefixed binary frames over loopback
+//!   TCP sockets. Every model crosses a real byte boundary through the
+//!   [`graph::codec`](crate::graph::codec) wire format, proving the
+//!   abstraction is remotable: pointing the connector at remote
+//!   addresses instead of `127.0.0.1` is a deployment change, not a
+//!   code change (the direction FedGES takes for federated structure
+//!   learning).
+//!
+//! # Topology
+//!
+//! [`RingTransport::connect`]`(k)` materializes the k directed links
+//! of the ring and hands worker i a [`RingLink`]: a sender to its
+//! successor (link i) and a receiver from its predecessor (link
+//! (i−1) mod k). Exactly one message per round flows on each link, so
+//! FIFO order per link is the only delivery guarantee the runtime
+//! needs — precisely what both mpsc channels and TCP streams provide.
+//!
+//! # Messages and the convergence token
+//!
+//! A [`RingMessage`] is either a [`ModelMsg`] — the learned [`Dag`]
+//! plus its BDeu score for one round — or `Stop`, the shutdown marker
+//! that circulates once around the ring so every link drains cleanly.
+//!
+//! Termination detection replaces the old global barrier test with a
+//! circulating token ([`RingToken`]): the ring head (worker 0) attaches
+//! a [`RoundProbe`] carrying its round-r score to its round-r message;
+//! every worker folds its own round-r score into the probe (a running
+//! max of best-seen BDeu) and forwards it with its next message. After
+//! k hops the probe returns to the head carrying the exact global best
+//! score of round r, and the head applies the paper's convergence rule
+//! (Algorithm 1 lines 11–16: stop when a round fails to improve the
+//! best score seen so far) without ever stopping the pipeline.
+//!
+//! # Timing
+//!
+//! Send returns its serialization seconds and receive reports
+//! (blocked-wait, decode) seconds separately, feeding the per-hop
+//! worker timelines in [`telemetry`](crate::coordinator::telemetry).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::codec::{
+    decode_dag, encode_dag, put_f64, put_u32, take_f64, take_u32, take_u8,
+};
+use crate::graph::Dag;
+use crate::util::Timer;
+
+/// One probe of the convergence token: the best BDeu score seen for
+/// `round` across the `hops` workers it has visited so far.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundProbe {
+    /// Ring round this probe measures.
+    pub round: usize,
+    /// Max BDeu score over the visited workers' round-`round` models.
+    pub best: f64,
+    /// Workers folded in so far (complete when `hops == k`).
+    pub hops: usize,
+}
+
+/// The circulating convergence token (piggybacked on model messages).
+#[derive(Clone, Debug, Default)]
+pub struct RingToken {
+    /// In-flight probes; in steady state exactly one per message.
+    pub probes: Vec<RoundProbe>,
+}
+
+/// A model handoff from one ring worker to its successor.
+#[derive(Clone, Debug)]
+pub struct ModelMsg {
+    /// Sending worker index.
+    pub from: usize,
+    /// Ring round the model belongs to.
+    pub round: usize,
+    /// BDeu score of `dag` (as computed by the sender).
+    pub score: f64,
+    /// The learned model.
+    pub dag: Dag,
+    /// Convergence-token probes riding along.
+    pub token: RingToken,
+}
+
+/// What flows on a ring link.
+#[derive(Clone, Debug)]
+pub enum RingMessage {
+    /// A round's learned model.
+    Model(ModelMsg),
+    /// Shutdown marker: the sender is done; forward once and drain.
+    Stop,
+}
+
+/// Timing breakdown of one receive.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecvTiming {
+    /// Seconds blocked waiting for the message to arrive.
+    pub wait_secs: f64,
+    /// Seconds spent reading + decoding the payload (wire only).
+    pub codec_secs: f64,
+}
+
+/// Sending half of a ring link (worker i → worker (i+1) mod k).
+pub trait RingTx: Send {
+    /// Send one message (by value — channels move it, wires encode
+    /// it); returns serialization seconds (0 for moves). An error
+    /// means the peer is gone — callers treat it as shutdown.
+    fn send(&mut self, msg: RingMessage) -> Result<f64>;
+}
+
+/// Receiving half of a ring link (worker (i−1) mod k → worker i).
+pub trait RingRx: Send {
+    /// Block for the next message. An error means the peer closed the
+    /// link without a `Stop` — callers treat it as shutdown.
+    fn recv(&mut self) -> Result<(RingMessage, RecvTiming)>;
+}
+
+/// Both endpoints owned by one worker.
+pub struct RingLink {
+    /// To the successor.
+    pub tx: Box<dyn RingTx>,
+    /// From the predecessor.
+    pub rx: Box<dyn RingRx>,
+}
+
+/// A way to materialize the k directed links of a ring. (Telemetry
+/// naming comes from `RingMode::name` — the single source — so the
+/// trait stays a pure connector.)
+pub trait RingTransport {
+    /// Build the ring: element i of the result is worker i's link pair
+    /// (tx to successor, rx from predecessor).
+    fn connect(&self, k: usize) -> Result<Vec<RingLink>>;
+}
+
+// ---------------------------------------------------------------------
+// Channel transport (in-process, the default)
+// ---------------------------------------------------------------------
+
+/// In-process transport over unbounded `mpsc` channels.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChannelTransport;
+
+struct ChannelTx {
+    sender: mpsc::Sender<RingMessage>,
+}
+
+struct ChannelRx {
+    receiver: mpsc::Receiver<RingMessage>,
+}
+
+impl RingTx for ChannelTx {
+    fn send(&mut self, msg: RingMessage) -> Result<f64> {
+        self.sender.send(msg).map_err(|_| anyhow!("ring successor hung up"))?;
+        Ok(0.0)
+    }
+}
+
+impl RingRx for ChannelRx {
+    fn recv(&mut self) -> Result<(RingMessage, RecvTiming)> {
+        let t = Timer::start();
+        let msg = self
+            .receiver
+            .recv()
+            .map_err(|_| anyhow!("ring predecessor hung up"))?;
+        Ok((msg, RecvTiming { wait_secs: t.secs(), codec_secs: 0.0 }))
+    }
+}
+
+impl RingTransport for ChannelTransport {
+    fn connect(&self, k: usize) -> Result<Vec<RingLink>> {
+        assert!(k >= 1, "ring needs at least one worker");
+        let mut txs: Vec<Option<mpsc::Sender<RingMessage>>> = Vec::with_capacity(k);
+        let mut rxs: Vec<Option<mpsc::Receiver<RingMessage>>> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let (tx, rx) = mpsc::channel();
+            txs.push(Some(tx));
+            rxs.push(Some(rx));
+        }
+        Ok((0..k)
+            .map(|i| RingLink {
+                tx: Box::new(ChannelTx { sender: txs[i].take().expect("tx taken once") }),
+                rx: Box::new(ChannelRx {
+                    receiver: rxs[(i + k - 1) % k].take().expect("rx taken once"),
+                }),
+            })
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire transport (length-prefixed binary frames over TCP)
+// ---------------------------------------------------------------------
+
+/// Hard cap on a single frame; a learned BN is O(n) edges, so even
+/// genome-scale rings stay far below this. Guards against corrupt
+/// length prefixes allocating unbounded buffers.
+const MAX_FRAME_BYTES: u32 = 64 << 20;
+
+const TAG_MODEL: u8 = 0;
+const TAG_STOP: u8 = 1;
+
+/// Encode a [`RingMessage`] to its wire form (appended to `buf`).
+pub fn encode_message(msg: &RingMessage, buf: &mut Vec<u8>) {
+    match msg {
+        RingMessage::Stop => buf.push(TAG_STOP),
+        RingMessage::Model(m) => {
+            buf.push(TAG_MODEL);
+            put_u32(buf, m.from as u32);
+            put_u32(buf, m.round as u32);
+            put_f64(buf, m.score);
+            put_u32(buf, m.token.probes.len() as u32);
+            for p in &m.token.probes {
+                put_u32(buf, p.round as u32);
+                put_u32(buf, p.hops as u32);
+                put_f64(buf, p.best);
+            }
+            encode_dag(&m.dag, buf);
+        }
+    }
+}
+
+/// Decode a full [`RingMessage`] frame.
+pub fn decode_message(bytes: &[u8]) -> Result<RingMessage> {
+    let mut cursor = bytes;
+    let tag = take_u8(&mut cursor)?;
+    let msg = match tag {
+        TAG_STOP => RingMessage::Stop,
+        TAG_MODEL => {
+            let from = take_u32(&mut cursor)? as usize;
+            let round = take_u32(&mut cursor)? as usize;
+            let score = take_f64(&mut cursor)?;
+            let n_probes = take_u32(&mut cursor)? as usize;
+            // Each probe encodes to 16 bytes; a count the remaining
+            // payload cannot hold is corrupt — reject before
+            // allocating for it.
+            if n_probes > cursor.len() / 16 {
+                bail!("probe count {n_probes} exceeds remaining frame ({} bytes)", cursor.len());
+            }
+            let mut probes = Vec::with_capacity(n_probes);
+            for _ in 0..n_probes {
+                let round = take_u32(&mut cursor)? as usize;
+                let hops = take_u32(&mut cursor)? as usize;
+                let best = take_f64(&mut cursor)?;
+                probes.push(RoundProbe { round, best, hops });
+            }
+            let dag = decode_dag(&mut cursor)?;
+            RingMessage::Model(ModelMsg { from, round, score, dag, token: RingToken { probes } })
+        }
+        other => bail!("unknown message tag {other}"),
+    };
+    if !cursor.is_empty() {
+        bail!("{} trailing bytes after message frame", cursor.len());
+    }
+    Ok(msg)
+}
+
+/// TCP-loopback transport: every hop serializes through the wire codec.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireTransport;
+
+struct WireTx {
+    stream: BufWriter<TcpStream>,
+    scratch: Vec<u8>,
+}
+
+struct WireRx {
+    stream: BufReader<TcpStream>,
+}
+
+impl RingTx for WireTx {
+    fn send(&mut self, msg: RingMessage) -> Result<f64> {
+        // Only serialization counts as codec time; blocking in the
+        // socket writes is communication, not encoding, and must not
+        // masquerade as codec cost in the worker timelines.
+        let t = Timer::start();
+        self.scratch.clear();
+        encode_message(&msg, &mut self.scratch);
+        let codec_secs = t.secs();
+
+        let len = u32::try_from(self.scratch.len()).context("frame too large for u32 prefix")?;
+        if len > MAX_FRAME_BYTES {
+            bail!("frame of {len} bytes exceeds cap {MAX_FRAME_BYTES}");
+        }
+        self.stream.write_all(&len.to_le_bytes()).context("write frame length")?;
+        self.stream.write_all(&self.scratch).context("write frame payload")?;
+        self.stream.flush().context("flush frame")?;
+        Ok(codec_secs)
+    }
+}
+
+impl RingRx for WireRx {
+    fn recv(&mut self) -> Result<(RingMessage, RecvTiming)> {
+        // All socket I/O (length prefix *and* payload) is wait;
+        // only the in-memory decode is codec.
+        let t = Timer::start();
+        let mut len_bytes = [0u8; 4];
+        self.stream.read_exact(&mut len_bytes).context("read frame length")?;
+        let len = u32::from_le_bytes(len_bytes);
+        if len > MAX_FRAME_BYTES {
+            bail!("incoming frame of {len} bytes exceeds cap {MAX_FRAME_BYTES}");
+        }
+        let mut payload = vec![0u8; len as usize];
+        self.stream.read_exact(&mut payload).context("read frame payload")?;
+        let wait_secs = t.secs();
+
+        let t = Timer::start();
+        let msg = decode_message(&payload)?;
+        Ok((msg, RecvTiming { wait_secs, codec_secs: t.secs() }))
+    }
+}
+
+impl RingTransport for WireTransport {
+    fn connect(&self, k: usize) -> Result<Vec<RingLink>> {
+        assert!(k >= 1, "ring needs at least one worker");
+        // One listener per directed link i → (i+1) mod k. Bind all
+        // first, then connect+accept pairwise: loopback connects
+        // complete against the listen backlog, so a single thread can
+        // wire the whole ring.
+        let listeners: Vec<TcpListener> = (0..k)
+            .map(|_| TcpListener::bind(("127.0.0.1", 0)).context("bind ring listener"))
+            .collect::<Result<_>>()?;
+        let mut out_streams: Vec<Option<TcpStream>> = Vec::with_capacity(k);
+        let mut in_streams: Vec<Option<TcpStream>> = Vec::with_capacity(k);
+        for listener in &listeners {
+            let addr = listener.local_addr().context("listener addr")?;
+            let out = TcpStream::connect(addr).context("connect ring link")?;
+            out.set_nodelay(true).context("set nodelay")?;
+            let (inc, _) = listener.accept().context("accept ring link")?;
+            inc.set_nodelay(true).context("set nodelay")?;
+            out_streams.push(Some(out));
+            in_streams.push(Some(inc));
+        }
+        Ok((0..k)
+            .map(|i| RingLink {
+                tx: Box::new(WireTx {
+                    stream: BufWriter::new(out_streams[i].take().expect("out taken once")),
+                    scratch: Vec::new(),
+                }),
+                rx: Box::new(WireRx {
+                    stream: BufReader::new(
+                        in_streams[(i + k - 1) % k].take().expect("in taken once"),
+                    ),
+                }),
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_msg() -> RingMessage {
+        RingMessage::Model(ModelMsg {
+            from: 2,
+            round: 7,
+            score: -1234.5678,
+            dag: Dag::from_edges(5, &[(0, 1), (1, 2), (0, 3), (3, 4)]),
+            token: RingToken {
+                probes: vec![
+                    RoundProbe { round: 6, best: -1300.25, hops: 3 },
+                    RoundProbe { round: 7, best: -1234.5678, hops: 1 },
+                ],
+            },
+        })
+    }
+
+    fn assert_msgs_equal(a: &RingMessage, b: &RingMessage) {
+        match (a, b) {
+            (RingMessage::Stop, RingMessage::Stop) => {}
+            (RingMessage::Model(x), RingMessage::Model(y)) => {
+                assert_eq!(x.from, y.from);
+                assert_eq!(x.round, y.round);
+                assert_eq!(x.score, y.score);
+                assert_eq!(x.dag.edges(), y.dag.edges());
+                assert_eq!(x.token.probes, y.token.probes);
+            }
+            _ => panic!("message variants differ"),
+        }
+    }
+
+    #[test]
+    fn message_codec_roundtrip() {
+        for msg in [model_msg(), RingMessage::Stop] {
+            let mut buf = Vec::new();
+            encode_message(&msg, &mut buf);
+            let back = decode_message(&buf).unwrap();
+            assert_msgs_equal(&msg, &back);
+        }
+    }
+
+    #[test]
+    fn message_codec_rejects_garbage() {
+        assert!(decode_message(&[]).is_err());
+        assert!(decode_message(&[42]).is_err());
+        let mut buf = Vec::new();
+        encode_message(&model_msg(), &mut buf);
+        buf.push(0); // trailing byte
+        assert!(decode_message(&buf).is_err());
+        assert!(decode_message(&buf[..buf.len() - 3]).is_err());
+    }
+
+    /// Pass a message all the way around a k-ring and check it arrives
+    /// intact — the same relay on both transports.
+    fn relay_roundtrip(transport: &dyn RingTransport) {
+        let k = 3;
+        let links = transport.connect(k).unwrap();
+        let results = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for (i, link) in links.into_iter().enumerate() {
+                let RingLink { mut tx, mut rx } = link;
+                let results = &results;
+                s.spawn(move || {
+                    if i == 0 {
+                        tx.send(model_msg()).unwrap();
+                        let (msg, _) = rx.recv().unwrap();
+                        results.lock().unwrap().push(msg);
+                    } else {
+                        let (msg, timing) = rx.recv().unwrap();
+                        assert!(timing.wait_secs >= 0.0);
+                        tx.send(msg).unwrap();
+                    }
+                });
+            }
+        });
+        let got = results.into_inner().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_msgs_equal(&got[0], &model_msg());
+    }
+
+    #[test]
+    fn channel_relay_roundtrip() {
+        relay_roundtrip(&ChannelTransport);
+    }
+
+    #[test]
+    fn tcp_relay_roundtrip() {
+        relay_roundtrip(&WireTransport);
+    }
+
+    #[test]
+    fn single_worker_self_loop() {
+        for transport in [&ChannelTransport as &dyn RingTransport, &WireTransport as &dyn RingTransport] {
+            let mut links = transport.connect(1).unwrap();
+            let RingLink { mut tx, mut rx } = links.pop().unwrap();
+            tx.send(model_msg()).unwrap();
+            tx.send(RingMessage::Stop).unwrap();
+            let (first, _) = rx.recv().unwrap();
+            assert_msgs_equal(&first, &model_msg());
+            let (second, _) = rx.recv().unwrap();
+            assert!(matches!(second, RingMessage::Stop));
+        }
+    }
+}

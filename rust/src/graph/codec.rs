@@ -1,0 +1,229 @@
+//! Binary wire codec for graph structures.
+//!
+//! The ring runtime's [`WireTransport`](crate::coordinator::transport)
+//! moves learned models between processors as bytes, so the [`Dag`]
+//! needs a stable serialized form. The format is deliberately dumb —
+//! little-endian, fixed-width, self-validating — because the payloads
+//! are small (a learned BN has O(n) edges) and the codec must be easy
+//! to reimplement in another language for cross-machine rings:
+//!
+//! ```text
+//! u8   version            (currently 1)
+//! u32  n                  node count
+//! u32  e                  edge count
+//! e ×  (u32 u32)          directed edges (parent, child)
+//! ```
+//!
+//! [`decode_dag`] validates everything it reads: version, node bounds,
+//! self-loops, duplicate edges, the DAG edge-count bound n·(n−1)/2 and
+//! — because downstream fusion/learning assume acyclicity — that the
+//! decoded graph is in fact acyclic. A corrupt or adversarial frame
+//! yields an error, never a poisoned search state.
+
+use anyhow::{bail, Result};
+
+use crate::graph::Dag;
+
+/// Current wire-format version byte.
+pub const DAG_CODEC_VERSION: u8 = 1;
+
+/// Append a `u32` in little-endian order.
+#[inline]
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f64` as its little-endian IEEE-754 bits.
+#[inline]
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Read one byte, advancing the cursor.
+#[inline]
+pub fn take_u8(input: &mut &[u8]) -> Result<u8> {
+    let Some((&b, rest)) = input.split_first() else {
+        bail!("truncated frame: expected u8");
+    };
+    *input = rest;
+    Ok(b)
+}
+
+/// Read a little-endian `u32`, advancing the cursor.
+#[inline]
+pub fn take_u32(input: &mut &[u8]) -> Result<u32> {
+    if input.len() < 4 {
+        bail!("truncated frame: expected u32, {} bytes left", input.len());
+    }
+    let (head, rest) = input.split_at(4);
+    *input = rest;
+    Ok(u32::from_le_bytes(head.try_into().expect("4-byte slice")))
+}
+
+/// Read a little-endian `f64`, advancing the cursor.
+#[inline]
+pub fn take_f64(input: &mut &[u8]) -> Result<f64> {
+    if input.len() < 8 {
+        bail!("truncated frame: expected f64, {} bytes left", input.len());
+    }
+    let (head, rest) = input.split_at(8);
+    *input = rest;
+    Ok(f64::from_le_bytes(head.try_into().expect("8-byte slice")))
+}
+
+/// Append the wire encoding of a DAG to `buf`.
+pub fn encode_dag(dag: &Dag, buf: &mut Vec<u8>) {
+    buf.push(DAG_CODEC_VERSION);
+    put_u32(buf, dag.n() as u32);
+    let edges = dag.edges();
+    put_u32(buf, edges.len() as u32);
+    for (u, v) in edges {
+        put_u32(buf, u as u32);
+        put_u32(buf, v as u32);
+    }
+}
+
+/// Wire encoding of a DAG as an owned buffer.
+pub fn dag_to_bytes(dag: &Dag) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(9 + 8 * dag.edge_count());
+    encode_dag(dag, &mut buf);
+    buf
+}
+
+/// Decode a DAG from the front of `input`, advancing the cursor past
+/// it (frames can therefore be concatenated). Fully validating.
+pub fn decode_dag(input: &mut &[u8]) -> Result<Dag> {
+    let version = take_u8(input)?;
+    if version != DAG_CODEC_VERSION {
+        bail!("unsupported dag codec version {version} (expected {DAG_CODEC_VERSION})");
+    }
+    let n = take_u32(input)? as usize;
+    let e = take_u32(input)? as usize;
+    let max_edges = n.saturating_mul(n.saturating_sub(1)) / 2;
+    if e > max_edges {
+        bail!("edge count {e} exceeds DAG bound {max_edges} for n={n}");
+    }
+    let mut dag = Dag::new(n);
+    for i in 0..e {
+        let u = take_u32(input)? as usize;
+        let v = take_u32(input)? as usize;
+        if u >= n || v >= n {
+            bail!("edge {i}: node ({u}, {v}) out of range for n={n}");
+        }
+        if u == v {
+            bail!("edge {i}: self-loop on node {u}");
+        }
+        if dag.has_edge(u, v) {
+            bail!("edge {i}: duplicate edge {u} -> {v}");
+        }
+        dag.add_edge(u, v);
+    }
+    if !dag.is_acyclic() {
+        bail!("decoded graph contains a directed cycle");
+    }
+    Ok(dag)
+}
+
+/// Decode a DAG from an exact buffer (trailing bytes are an error).
+pub fn dag_from_bytes(bytes: &[u8]) -> Result<Dag> {
+    let mut cursor = bytes;
+    let dag = decode_dag(&mut cursor)?;
+    if !cursor.is_empty() {
+        bail!("{} trailing bytes after dag frame", cursor.len());
+    }
+    Ok(dag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_edges() {
+        let dag = Dag::from_edges(6, &[(0, 1), (1, 2), (0, 3), (3, 4), (2, 5)]);
+        let bytes = dag_to_bytes(&dag);
+        let back = dag_from_bytes(&bytes).unwrap();
+        assert_eq!(back.n(), 6);
+        assert_eq!(back.edges(), dag.edges());
+    }
+
+    #[test]
+    fn empty_graph_roundtrips() {
+        let dag = Dag::new(0);
+        let back = dag_from_bytes(&dag_to_bytes(&dag)).unwrap();
+        assert_eq!(back.n(), 0);
+        assert_eq!(back.edge_count(), 0);
+    }
+
+    #[test]
+    fn frames_concatenate() {
+        let a = Dag::from_edges(3, &[(0, 1)]);
+        let b = Dag::from_edges(4, &[(1, 2), (2, 3)]);
+        let mut buf = Vec::new();
+        encode_dag(&a, &mut buf);
+        encode_dag(&b, &mut buf);
+        let mut cursor = buf.as_slice();
+        let a2 = decode_dag(&mut cursor).unwrap();
+        let b2 = decode_dag(&mut cursor).unwrap();
+        assert!(cursor.is_empty());
+        assert_eq!(a2.edges(), a.edges());
+        assert_eq!(b2.edges(), b.edges());
+    }
+
+    #[test]
+    fn rejects_corrupt_frames() {
+        let dag = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let bytes = dag_to_bytes(&dag);
+
+        // Truncation.
+        assert!(dag_from_bytes(&bytes[..bytes.len() - 2]).is_err());
+        // Bad version.
+        let mut bad = bytes.clone();
+        bad[0] = 99;
+        assert!(dag_from_bytes(&bad).is_err());
+        // Out-of-range node id.
+        let mut oob = bytes.clone();
+        let last_edge = bytes.len() - 8;
+        oob[last_edge..last_edge + 4].copy_from_slice(&7u32.to_le_bytes());
+        assert!(dag_from_bytes(&oob).is_err());
+        // Trailing garbage.
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(dag_from_bytes(&trailing).is_err());
+    }
+
+    #[test]
+    fn rejects_cycles_and_duplicates() {
+        // Hand-build a frame with a 2-cycle 0 -> 1 -> 0.
+        let mut buf = vec![DAG_CODEC_VERSION];
+        put_u32(&mut buf, 3); // n
+        put_u32(&mut buf, 2); // e
+        put_u32(&mut buf, 0);
+        put_u32(&mut buf, 1);
+        put_u32(&mut buf, 1);
+        put_u32(&mut buf, 0);
+        assert!(dag_from_bytes(&buf).is_err());
+
+        // Duplicate edge.
+        let mut dup = vec![DAG_CODEC_VERSION];
+        put_u32(&mut dup, 3);
+        put_u32(&mut dup, 2);
+        for _ in 0..2 {
+            put_u32(&mut dup, 0);
+            put_u32(&mut dup, 1);
+        }
+        assert!(dag_from_bytes(&dup).is_err());
+    }
+
+    #[test]
+    fn scalar_helpers_roundtrip() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_f64(&mut buf, -1234.5678e-9);
+        let mut cursor = buf.as_slice();
+        assert_eq!(take_u32(&mut cursor).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(take_f64(&mut cursor).unwrap(), -1234.5678e-9);
+        assert!(cursor.is_empty());
+        assert!(take_u32(&mut cursor).is_err());
+    }
+}

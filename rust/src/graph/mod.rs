@@ -2,12 +2,14 @@
 //! d-separation — everything the learners, the fusion stage and the
 //! metrics build on.
 
+pub mod codec;
 pub mod cpdag;
 pub mod dag;
 pub mod dsep;
 pub mod moral;
 pub mod pdag;
 
+pub use codec::{dag_from_bytes, dag_to_bytes, decode_dag, encode_dag};
 pub use cpdag::{complete_pdag, dag_to_cpdag, markov_equivalent, pdag_to_dag};
 pub use dag::Dag;
 pub use dsep::{d_connected, d_separated};

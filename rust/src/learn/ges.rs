@@ -514,15 +514,33 @@ impl RingWorker {
         }
     }
 
+    /// Number of variables this worker searches over.
+    pub fn n(&self) -> usize {
+        self.search.n()
+    }
+
     /// Absorb the fusion result as the new search state.
     pub fn absorb(&mut self, fused: &Dag) {
         self.search.absorb_graph(fused);
     }
 
-    /// One round: FES (optionally capped) + BES. Returns
-    /// `(inserts, deletes)`.
-    pub fn step(&mut self, insert_limit: Option<usize>) -> (usize, usize) {
-        let i = self.search.run_phase(Phase::Forward, insert_limit);
+    /// Ring-hop fusion: fuse the predecessor's model with this
+    /// worker's own current model (the paper's 2-argument fusion that
+    /// keeps structures sparse) and absorb the result. This is the
+    /// receive half of the actor lifecycle — the coordinator's runtime
+    /// calls it with whatever the transport delivered.
+    pub fn absorb_fused(&mut self, pred: &Dag) {
+        let own = self.dag();
+        let (fused, _sigma) = crate::fusion::fuse(&[&own, pred]);
+        self.search.absorb_graph(&fused);
+    }
+
+    /// One round: FES (capped at the worker's own
+    /// `GesConfig::insert_limit`, the single source of the cGES-L
+    /// knob) + BES. Returns `(inserts, deletes)`.
+    pub fn step(&mut self) -> (usize, usize) {
+        let limit = self.search.cfg.insert_limit;
+        let i = self.search.run_phase(Phase::Forward, limit);
         let d = self.search.run_phase(Phase::Backward, None);
         (i, d)
     }
@@ -530,6 +548,14 @@ impl RingWorker {
     /// Current model as a DAG.
     pub fn dag(&self) -> Dag {
         pdag_to_dag(&self.search.cpdag).expect("worker CPDAG must be extendable")
+    }
+
+    /// BDeu score of an already-extracted model (through the worker's
+    /// own scorer, so ring workers sharing a cache also share the
+    /// work) — takes the `dag()` the caller just materialized instead
+    /// of extending the CPDAG a second time.
+    pub fn score_of(&self, dag: &Dag) -> f64 {
+        self.search.scorer.score_dag(dag)
     }
 
     /// Candidate evaluations so far (telemetry).

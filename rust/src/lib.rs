@@ -36,6 +36,6 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::graph::{Dag, Pdag};
     pub use crate::rng::Rng;
-    pub use crate::coordinator::{cges, RingConfig, RingResult};
+    pub use crate::coordinator::{cges, run_ring, RingConfig, RingMode, RingResult};
     pub use crate::score::BdeuScorer;
 }

@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use cges::bn::{forward_sample, generate, load_domain, read_bif, write_bif, Domain, NetGenConfig};
 use cges::cli::Args;
-use cges::coordinator::{cges as run_cges, PartitionSource, RingConfig};
+use cges::coordinator::{cges as run_cges, PartitionSource, RingConfig, RingMode};
 use cges::data::{read_csv, write_csv, Dataset};
 use cges::graph::Dag;
 use cges::learn::{fges, ges, FgesConfig, GesConfig};
@@ -61,6 +61,10 @@ SUBCOMMANDS
   learn      --algo cges|cges-l|ges|fges --data data.csv [--out learned.dag]
              [--k 4] [--ess 10] [--threads N] [--artifacts DIR]
              [--trace trace.tsv] [--max-rounds 50]
+             [--transport channel|tcp|sync]   ring execution mode:
+             channel = pipelined in-process actors (default),
+             tcp     = pipelined over loopback TCP (wire codec),
+             sync    = deterministic barrier scheduler
   eval       --learned learned.dag|.bif --truth net.bif --data data.csv [--ess 10]
 ";
 
@@ -164,6 +168,7 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
             "trace",
             "max-rounds",
             "max-parents",
+            "transport",
         ],
         &[],
     )?;
@@ -177,6 +182,11 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
     let t = Timer::start();
     let (dag, score) = match algo {
         "cges" | "cges-l" => {
+            let mode = match a.get("transport") {
+                None => RingMode::default(),
+                Some(name) => RingMode::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("--transport: unknown mode '{name}' (channel|tcp|sync)"))?,
+            };
             let cfg = RingConfig {
                 k,
                 limit_inserts: algo == "cges-l",
@@ -186,10 +196,12 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
                 partition_source: similarity_source(a.get("artifacts")),
                 fine_tune: true,
                 max_parents: a.get("max-parents").map(|v| v.parse()).transpose()?,
+                mode,
             };
             let r = run_cges(data.clone(), &cfg)?;
             println!(
-                "ring converged in {} rounds (partition {:.2}s [{}], learning {:.2}s, fine-tune {:.2}s; cache {}/{} hit/computed)",
+                "ring [{}] converged in {} rounds (partition {:.2}s [{}], learning {:.2}s, fine-tune {:.2}s; cache {}/{} hit/computed)",
+                r.telemetry.transport,
                 r.rounds,
                 r.telemetry.partition_secs,
                 r.telemetry.partition_source,

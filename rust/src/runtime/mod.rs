@@ -1,9 +1,22 @@
 //! AOT bridge: load `artifacts/*.hlo.txt` (lowered once from the JAX
 //! L2 model) and execute them via the PJRT CPU client on the Rust
 //! learning path.
+//!
+//! The PJRT executor needs the `xla` crate, which the offline build
+//! environment does not provide. It is therefore gated behind the
+//! `xla` cargo feature: without it, [`SimilarityRuntime`] is the
+//! uninhabited stub from [`stub`] whose `load` fails with a clear
+//! message, and all callers (coordinator stage 1, the `partition`
+//! subcommand, benches) fall back to `score::pairwise_similarity`.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+pub mod stub;
 
 pub use artifacts::{pick_config, read_manifest, ArtifactConfig};
+#[cfg(feature = "xla")]
 pub use pjrt::SimilarityRuntime;
+#[cfg(not(feature = "xla"))]
+pub use stub::SimilarityRuntime;

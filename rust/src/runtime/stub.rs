@@ -1,0 +1,63 @@
+//! Offline stand-in for the PJRT executor (built when the `xla` cargo
+//! feature is off, i.e. in environments without the `xla` crate).
+//!
+//! [`SimilarityRuntime`] here is an *uninhabited* type: `load` always
+//! fails with an explanatory error, so no value of the type can exist
+//! and the artifact code paths are provably dead. Callers keep
+//! compiling unchanged and take their documented Rust-fallback branch
+//! (`score::pairwise_similarity`).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+use crate::runtime::artifacts::ArtifactConfig;
+use crate::score::PairwiseScores;
+
+/// Uninhabited placeholder for the PJRT-backed similarity executor.
+pub enum SimilarityRuntime {}
+
+impl SimilarityRuntime {
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        bail!(
+            "built without the `xla` feature; cannot execute artifacts in {} \
+             (rebuild with `--features xla` and the xla crate available, \
+             or drop --artifacts to use the Rust fallback)",
+            artifacts_dir.display()
+        )
+    }
+
+    /// Platform string (never reachable: the type is uninhabited).
+    pub fn platform(&self) -> String {
+        match *self {}
+    }
+
+    /// Available shape-configs (never reachable).
+    pub fn configs(&self) -> &[ArtifactConfig] {
+        match *self {}
+    }
+
+    /// Does some config fit this dataset? (never reachable).
+    pub fn supports(&self, _data: &Dataset) -> bool {
+        match *self {}
+    }
+
+    /// Execute the similarity model (never reachable).
+    pub fn pairwise(&self, _data: &Dataset, _ess: f64) -> Result<PairwiseScores> {
+        match *self {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = SimilarityRuntime::load(Path::new("/nonexistent/artifacts")).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("xla"), "error should name the missing feature: {msg}");
+    }
+}

@@ -16,26 +16,32 @@ pub fn num_threads() -> usize {
 
 /// Map `f` over `0..n` with work-stealing via an atomic cursor, in
 /// `threads` workers; results are collected in index order.
+///
+/// `R` needs no `Default`/`Clone`: results are written exactly once
+/// into `MaybeUninit` slots, so non-defaultable (and non-clonable)
+/// result types work too.
 pub fn par_map_index<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
 where
-    R: Send + Default + Clone,
+    R: Send,
     F: Fn(usize) -> R + Sync,
 {
+    use std::mem::{ManuallyDrop, MaybeUninit};
+
     let threads = threads.max(1).min(n.max(1));
     if threads <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
-    let mut out = vec![R::default(); n];
+    let mut out: Vec<MaybeUninit<R>> = (0..n).map(|_| MaybeUninit::uninit()).collect();
     let cursor = AtomicUsize::new(0);
     // Grab disjoint output cells through a raw pointer; every index is
     // written by exactly one worker (the atomic cursor hands out unique
     // indices), so this is race-free.
-    struct Cells<R>(*mut R);
+    struct Cells<R>(*mut MaybeUninit<R>);
     unsafe impl<R> Sync for Cells<R> {}
     impl<R> Cells<R> {
         /// Safety: each index is written by exactly one thread.
         unsafe fn write(&self, i: usize, v: R) {
-            unsafe { *self.0.add(i) = v };
+            unsafe { (*self.0.add(i)).write(v) };
         }
     }
     let cells = Cells(out.as_mut_ptr());
@@ -54,7 +60,13 @@ where
             });
         }
     });
-    out
+    // The scope joined every worker without panicking, so the cursor
+    // passed n and each of the n slots was written exactly once: the
+    // buffer is fully initialized. (If a worker panicked, the scope
+    // propagates the panic above and we never get here — the
+    // initialized slots leak rather than double-drop, which is safe.)
+    let mut out = ManuallyDrop::new(out);
+    unsafe { Vec::from_raw_parts(out.as_mut_ptr() as *mut R, out.len(), out.capacity()) }
 }
 
 /// Run `f(i)` for every `i in 0..n` in parallel (side-effect form).
@@ -110,6 +122,37 @@ mod tests {
         let par = par_map_index(1000, 8, |i| i * i);
         let ser: Vec<_> = (0..1000).map(|i| i * i).collect();
         assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn map_index_supports_non_default_results() {
+        // A result type with neither Default nor Clone.
+        struct Payload {
+            idx: usize,
+            text: String,
+        }
+        let out = par_map_index(257, 8, |i| Payload { idx: i, text: format!("item-{i}") });
+        assert_eq!(out.len(), 257);
+        for (i, p) in out.iter().enumerate() {
+            assert_eq!(p.idx, i);
+            assert_eq!(p.text, format!("item-{i}"));
+        }
+    }
+
+    #[test]
+    fn map_index_drops_results_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct Counted;
+        impl Drop for Counted {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let out = par_map_index(500, 4, |_| Counted);
+        assert_eq!(out.len(), 500);
+        drop(out);
+        assert_eq!(DROPS.load(Ordering::Relaxed), 500);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use cges::bn::{forward_sample, generate, parse_bif, write_bif, NetGenConfig};
-use cges::coordinator::{cges, RingConfig};
+use cges::coordinator::{cges, RingConfig, RingMode};
 use cges::data::{read_csv, write_csv};
 use cges::graph::Dag;
 use cges::learn::{fges, ges, FgesConfig, GesConfig};
@@ -107,6 +107,45 @@ probability ( B | A ) {
     let d = forward_sample(&bn, 500, 3);
     assert!(d.col(0).iter().all(|&s| s < 3));
     assert!(d.col(1).iter().all(|&s| s < 2));
+}
+
+/// Acceptance gate for the ring runtime: the same `cges()` call must
+/// produce the identical `(dag, score)` on the deterministic barrier
+/// scheduler, the pipelined in-process channel transport, and the
+/// pipelined TCP-loopback wire transport — per-worker dataflow and the
+/// convergence rule are mode-independent by construction.
+#[test]
+fn ring_transports_and_deterministic_mode_agree() {
+    let (_bn, data) = workload(18, 24, 2000, 33);
+    let base = RingConfig { k: 3, threads: 3, ..Default::default() };
+    let det = cges(
+        data.clone(),
+        &RingConfig { mode: RingMode::Deterministic, ..base.clone() },
+    )
+    .unwrap();
+    let chan =
+        cges(data.clone(), &RingConfig { mode: RingMode::Channel, ..base.clone() }).unwrap();
+    let tcp = cges(data, &RingConfig { mode: RingMode::Tcp, ..base }).unwrap();
+
+    for (name, r) in [("channel", &chan), ("tcp", &tcp)] {
+        assert_eq!(
+            det.dag.edges(),
+            r.dag.edges(),
+            "{name} transport changed the learned structure"
+        );
+        assert!(
+            (det.score - r.score).abs() < 1e-9,
+            "{name} score {} vs deterministic {}",
+            r.score,
+            det.score
+        );
+        assert_eq!(det.rounds, r.rounds, "{name} counted different rounds");
+    }
+    assert_eq!(det.telemetry.transport, "deterministic");
+    assert_eq!(chan.telemetry.transport, "channel");
+    assert_eq!(tcp.telemetry.transport, "tcp");
+    // The deterministic barrier never waits on a message.
+    assert!(det.telemetry.records.iter().all(|rec| rec.wait_secs == 0.0));
 }
 
 #[test]

@@ -7,7 +7,8 @@ use std::sync::Arc;
 use cges::bn::{forward_sample, generate, netgen::random_dag, NetGenConfig};
 use cges::fusion::{fuse, sigma_consistent_imap};
 use cges::graph::{
-    complete_pdag, d_separated, dag_to_cpdag, markov_equivalent, pdag_to_dag, Dag,
+    complete_pdag, d_separated, dag_from_bytes, dag_to_bytes, dag_to_cpdag, markov_equivalent,
+    pdag_to_dag, Dag,
 };
 use cges::learn::{ges, GesConfig};
 use cges::metrics::smhd;
@@ -99,6 +100,30 @@ fn prop_fusion_is_imap_of_every_input() {
                     }
                 }
             }
+        }
+    }
+}
+
+#[test]
+fn prop_dag_wire_codec_roundtrips() {
+    // The ring's wire transport ships models as bytes: for random DAGs
+    // the codec must be the identity, and any strict prefix of a frame
+    // must be rejected (a torn TCP read can never yield a wrong graph).
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xC0DE);
+        let g = random_dag(&random_cfg(&mut rng), seed);
+        let bytes = dag_to_bytes(&g);
+        let back = dag_from_bytes(&bytes).unwrap_or_else(|e| panic!("seed {seed}: decode failed: {e}"));
+        assert_eq!(back.n(), g.n(), "seed {seed}: node count changed");
+        assert_eq!(back.edges(), g.edges(), "seed {seed}: edge set changed");
+
+        let cuts = [0, 1, bytes.len() / 2, bytes.len() - 1];
+        for cut in cuts {
+            assert!(
+                dag_from_bytes(&bytes[..cut]).is_err(),
+                "seed {seed}: truncation to {cut}/{} bytes decoded",
+                bytes.len()
+            );
         }
     }
 }

@@ -1,7 +1,18 @@
 //! Cross-layer integration: the AOT XLA artifact (L1 Pallas kernel +
 //! L2 JAX model, lowered to HLO text) executed through PJRT must agree
 //! with the independent Rust implementation across shapes, paddings
-//! and arities. Skips gracefully when `make artifacts` has not run.
+//! and arities.
+//!
+//! Quarantined behind the `xla` cargo feature: the default offline
+//! build has neither the `xla` crate nor PJRT runtime artifacts, so
+//! this whole test crate compiles to nothing there. To run it in an
+//! artifact-equipped environment, first add the `xla` crate to
+//! `[dependencies]` in Cargo.toml (it is deliberately not listed —
+//! the offline registry cannot resolve it), then
+//! `cargo test --features xla`. Even with the feature on, each test
+//! skips gracefully — with a note — when `make artifacts` has not
+//! produced `artifacts/manifest.txt`.
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 use std::sync::Arc;
