@@ -1,0 +1,156 @@
+//! Inference bench: jointree build time and queries/sec on a
+//! netgen domain, with VE and likelihood weighting as comparators.
+//!
+//!   cargo bench --bench inference                       # 120-var default
+//!   cargo bench --bench inference -- --nodes 400 --queries 100
+//!
+//! Each "query" is one random single-variable evidence set; the
+//! jointree path answers with *all* marginals (the serve shape), VE
+//! answers one random target marginal, LW answers all marginals from
+//! `--samples` particles. Writes `BENCH_infer.json` so the perf
+//! trajectory is tracked from PR to PR next to `BENCH_table2.json`.
+
+use cges::bn::{fit, forward_sample, generate, NetGenConfig};
+use cges::graph::moral_graph;
+use cges::infer::{likelihood_weighting, triangulate, ve_marginal, JoinTree};
+use cges::rng::Rng;
+use cges::util::Timer;
+
+/// Past this clique state space the exact engine is skipped (matches
+/// the serve path's auto fallback).
+const EXACT_BUDGET: u64 = 1 << 24;
+
+fn main() -> anyhow::Result<()> {
+    let wall = Timer::start();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str, dflt: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(dflt)
+    };
+    let nodes = get("--nodes", 120);
+    let edges = get("--edges", 150);
+    let rows = get("--rows", 2000);
+    let queries = get("--queries", 200);
+    let samples = get("--samples", 2000);
+    let seed = get("--seed", 1) as u64;
+
+    println!("# inference bench: nodes={nodes} edges={edges} rows={rows} queries={queries} lw_samples={samples}");
+
+    let cfg = NetGenConfig { nodes, edges, max_parents: 2, card_range: (2, 3), ..Default::default() };
+    let truth = generate(&cfg, seed);
+    let data = forward_sample(&truth, rows, seed ^ 0xDA7A);
+
+    let t = Timer::start();
+    let bn = fit(&truth.dag, &data, 1.0)?;
+    let fit_secs = t.secs();
+    println!("fit: {} parameters in {fit_secs:.3}s", bn.parameter_count());
+
+    let tri = triangulate(&moral_graph(&bn.dag), &bn.cards);
+    println!(
+        "treewidth proxy: max clique {} vars / {} states",
+        tri.max_clique_vars, tri.max_clique_states
+    );
+
+    let (build_secs, jointree_qps) = if tri.max_clique_states <= EXACT_BUDGET {
+        let t = Timer::start();
+        let jt = JoinTree::build(&bn)?;
+        let build_secs = t.secs();
+        println!("jointree: {} cliques built in {build_secs:.3}s", jt.n_cliques());
+
+        let mut rng = Rng::new(seed + 11);
+        let t = Timer::start();
+        for _ in 0..queries {
+            let v = rng.gen_range(nodes);
+            let s = rng.gen_range(bn.cards[v] as usize);
+            jt.posterior(&[(v, s)])?;
+        }
+        let qps = queries as f64 / t.secs().max(1e-9);
+        println!("jointree: {qps:.1} full-posterior queries/sec");
+        (build_secs, qps)
+    } else {
+        println!("jointree: skipped (past exact budget {EXACT_BUDGET})");
+        (0.0, 0.0)
+    };
+
+    // VE: one random target marginal per query.
+    let mut rng = Rng::new(seed + 23);
+    let t = Timer::start();
+    let mut ve_ok = 0usize;
+    for _ in 0..queries {
+        let v = rng.gen_range(nodes);
+        let s = rng.gen_range(bn.cards[v] as usize);
+        let target = (v + 1 + rng.gen_range(nodes - 1)) % nodes;
+        if ve_marginal(&bn, target, &[(v, s)]).is_ok() {
+            ve_ok += 1;
+        }
+    }
+    let ve_qps = ve_ok as f64 / t.secs().max(1e-9);
+    println!("ve: {ve_qps:.1} single-marginal queries/sec ({ve_ok}/{queries} within cap)");
+
+    // LW: all marginals from `samples` particles per query.
+    let mut rng = Rng::new(seed + 37);
+    let t = Timer::start();
+    for i in 0..queries {
+        let v = rng.gen_range(nodes);
+        let s = rng.gen_range(bn.cards[v] as usize);
+        likelihood_weighting(&bn, &[(v, s)], samples, seed + i as u64)?;
+    }
+    let lw_qps = queries as f64 / t.secs().max(1e-9);
+    println!("lw: {lw_qps:.1} sampled-posterior queries/sec");
+
+    let wall_secs = wall.secs();
+    let json = perf_record_json(
+        nodes,
+        edges,
+        rows,
+        queries,
+        samples,
+        (tri.max_clique_vars, tri.max_clique_states),
+        fit_secs,
+        build_secs,
+        [jointree_qps, ve_qps, lw_qps],
+        wall_secs,
+    );
+    let out = "BENCH_infer.json";
+    std::fs::write(out, &json)?;
+    println!("\nperf record written to {out} (wall {wall_secs:.1}s)");
+    Ok(())
+}
+
+/// Hand-rolled JSON (no serde offline) — same convention as table2.
+#[allow(clippy::too_many_arguments)]
+fn perf_record_json(
+    nodes: usize,
+    edges: usize,
+    rows: usize,
+    queries: usize,
+    samples: usize,
+    tri: (usize, u64),
+    fit_secs: f64,
+    build_secs: f64,
+    qps: [f64; 3],
+    wall_secs: f64,
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"bench\": \"inference\",");
+    let _ = writeln!(s, "  \"nodes\": {nodes},");
+    let _ = writeln!(s, "  \"edges\": {edges},");
+    let _ = writeln!(s, "  \"rows\": {rows},");
+    let _ = writeln!(s, "  \"queries\": {queries},");
+    let _ = writeln!(s, "  \"lw_samples\": {samples},");
+    let _ = writeln!(s, "  \"max_clique_vars\": {},", tri.0);
+    let _ = writeln!(s, "  \"max_clique_states\": {},", tri.1);
+    let _ = writeln!(s, "  \"fit_secs\": {fit_secs:.4},");
+    let _ = writeln!(s, "  \"jointree_build_secs\": {build_secs:.4},");
+    let _ = writeln!(s, "  \"jointree_qps\": {:.2},", qps[0]);
+    let _ = writeln!(s, "  \"ve_qps\": {:.2},", qps[1]);
+    let _ = writeln!(s, "  \"lw_qps\": {:.2},", qps[2]);
+    let _ = writeln!(s, "  \"wall_secs\": {wall_secs:.2}");
+    s.push_str("}\n");
+    s
+}

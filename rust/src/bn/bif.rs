@@ -254,16 +254,28 @@ impl Parser {
             sorted.sort_unstable();
             let q: usize = sorted.iter().map(|&p| cards[p] as usize).product();
             let mut tbl = vec![0.0f64; q * r];
-            if let Some(vals) = table {
+            if let Some(mut vals) = table {
+                if !pidx.is_empty() {
+                    // BIF dialects disagree on the enumeration order of a
+                    // flat `table` under parents; guessing would silently
+                    // permute the CPT. Demand the unambiguous row form.
+                    bail!(
+                        "{child}: `table` form with parents is ambiguous across BIF dialects; \
+                         list one (parent states) row per configuration instead"
+                    );
+                }
                 if vals.len() != r {
                     bail!("{child}: table has {} values, expected {r}", vals.len());
                 }
+                check_cpt_row(&child, "table", &mut vals)?;
                 tbl.copy_from_slice(&vals);
             } else {
-                for (cfg_states, vals) in rows {
+                let mut filled = vec![false; q];
+                for (cfg_states, mut vals) in rows {
                     if cfg_states.len() != pidx.len() || vals.len() != r {
                         bail!("{child}: malformed cpt row");
                     }
+                    check_cpt_row(&child, &format!("({})", cfg_states.join(", ")), &mut vals)?;
                     let mut cfg = 0usize;
                     for (p_file, sname) in pidx.iter().zip(&cfg_states) {
                         let s = *state_index[*p_file]
@@ -279,7 +291,21 @@ impl Parser {
                         }
                         cfg += stride * s;
                     }
+                    if filled[cfg] {
+                        bail!(
+                            "{child}: duplicate CPT row for parent configuration ({})",
+                            cfg_states.join(", ")
+                        );
+                    }
+                    filled[cfg] = true;
                     tbl[cfg * r..(cfg + 1) * r].copy_from_slice(&vals);
+                }
+                let missing = filled.iter().filter(|&&f| !f).count();
+                if missing > 0 {
+                    bail!(
+                        "{child}: {missing} of {q} parent configurations have no CPT row \
+                         (downstream inference would silently read zeros)"
+                    );
                 }
             }
             cpts[c] = Some(Cpt { parents: sorted, table: tbl, r });
@@ -299,6 +325,27 @@ impl Parser {
         bn.validate().map_err(|e| anyhow!("invalid BN: {e}"))?;
         Ok(bn)
     }
+}
+
+/// Probability-row sanity for BIF input: every value must be a finite
+/// probability and the row must sum to ~1 (print-rounding tolerance).
+/// Valid rows are renormalized to sum exactly 1, so files written at
+/// limited precision never leak drift into inference. A clear error
+/// here beats silent NaN/zero propagation downstream.
+fn check_cpt_row(child: &str, row_desc: &str, vals: &mut [f64]) -> Result<()> {
+    for &v in vals.iter() {
+        if !v.is_finite() || !(-1e-9..=1.0 + 1e-9).contains(&v) {
+            bail!("{child}: probability {v} out of [0, 1] in row {row_desc}");
+        }
+    }
+    let sum: f64 = vals.iter().sum();
+    if (sum - 1.0).abs() > 1e-3 {
+        bail!("{child}: CPT row {row_desc} sums to {sum}, expected 1");
+    }
+    for v in vals.iter_mut() {
+        *v = (*v / sum).clamp(0.0, 1.0);
+    }
+    Ok(())
 }
 
 /// Write a network as BIF (states named `s0..s{r-1}`).
@@ -389,6 +436,56 @@ probability ( wet | rain, sprinkler ) {
         // cfg (no=1, on=0) -> stride rain=1 -> cfg 1
         assert!((bn.cpts[wet].row(1)[0] - 0.9).abs() < 1e-9);
         bn.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_row_that_does_not_sum_to_one() {
+        let bad = SAMPLE.replace("table 0.2, 0.8;", "table 0.6, 0.6;");
+        let e = parse_bif(&bad).unwrap_err();
+        assert!(format!("{e}").contains("sums to"), "unexpected error: {e}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_probability() {
+        // Sums to 1 but leaves [0, 1] — the sum check alone would miss it.
+        let bad = SAMPLE.replace("(yes, on) 0.99, 0.01;", "(yes, on) 1.4, -0.4;");
+        let e = parse_bif(&bad).unwrap_err();
+        assert!(format!("{e}").contains("out of [0, 1]"), "unexpected error: {e}");
+    }
+
+    #[test]
+    fn rejects_missing_and_duplicate_rows() {
+        let missing = SAMPLE.replace("(no, off) 0.05, 0.95;", "");
+        let e = parse_bif(&missing).unwrap_err();
+        assert!(format!("{e}").contains("no CPT row"), "unexpected error: {e}");
+
+        let dup = SAMPLE.replace("(no, off) 0.05, 0.95;", "(yes, on) 0.5, 0.5;");
+        let e = parse_bif(&dup).unwrap_err();
+        assert!(format!("{e}").contains("duplicate CPT row"), "unexpected error: {e}");
+    }
+
+    #[test]
+    fn rejects_table_form_under_parents() {
+        // A flat `table` for a conditioned node must be a clear error,
+        // not a length panic or a silently permuted CPT.
+        let bad = SAMPLE.replace(
+            "probability ( wet | rain, sprinkler ) {\n  (yes, on) 0.99, 0.01;",
+            "probability ( wet | rain, sprinkler ) {\n  table 0.99, 0.01;\n  (yes, on) 0.99, 0.01;",
+        );
+        let e = parse_bif(&bad).unwrap_err();
+        assert!(format!("{e}").contains("ambiguous"), "unexpected error: {e}");
+    }
+
+    #[test]
+    fn renormalizes_print_rounded_rows() {
+        // 1/3 + 2/3 at 7 digits sums to 0.9999999 — inside tolerance,
+        // and the parsed row must come back exactly normalized.
+        let rounded = SAMPLE.replace("table 0.2, 0.8;", "table 0.3333333, 0.6666666;");
+        let bn = parse_bif(&rounded).unwrap();
+        let rain = bn.names.iter().position(|n| n == "rain").unwrap();
+        let row = bn.cpts[rain].row(0);
+        assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((row[0] - 1.0 / 3.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! CPT estimation: a learned structure + data → a queryable network.
+//!
+//! Dirichlet-smoothed maximum likelihood with the BDeu-style prior the
+//! scorer already assumes: cell pseudo-count `ess / (q·r)`, so
+//! `P(x_k | pa_j) = (N_jk + ess/(q r)) / (N_j + ess/q)`. Unobserved
+//! parent configurations fall back to the uniform prior instead of
+//! NaN, and the sufficient statistics come from the same
+//! [`family_counts`] kernel the learners count with — fitting a
+//! 1000-variable network is one counting pass per family.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::bn::{Cpt, DiscreteBn};
+use crate::data::Dataset;
+use crate::graph::Dag;
+use crate::score::counts::{family_counts, CountsTable};
+
+/// Largest CPT (`q·r` cells) `fit` materializes. Kept at the dense
+/// counting limit so the sufficient statistics are always a dense
+/// table; a learned family past this is a modeling bug, not a memory
+/// plan.
+const MAX_CPT_CELLS: u64 = 4 << 20;
+
+/// Fit Dirichlet-smoothed maximum-likelihood CPTs for `dag` from
+/// `data` (`ess` > 0 is the equivalent sample size, matching the
+/// scorer's η).
+pub fn fit(dag: &Dag, data: &Dataset, ess: f64) -> Result<DiscreteBn> {
+    ensure!(
+        dag.n() == data.n_vars(),
+        "structure has {} nodes but data has {} variables",
+        dag.n(),
+        data.n_vars()
+    );
+    ensure!(ess > 0.0 && ess.is_finite(), "ess must be positive and finite (got {ess})");
+    ensure!(dag.is_acyclic(), "structure has a cycle");
+
+    let mut cpts = Vec::with_capacity(dag.n());
+    for v in 0..dag.n() {
+        let parents: Vec<usize> = dag.parents(v).iter().collect(); // ascending
+        let r = data.card(v) as usize;
+        let q64: u64 = parents.iter().map(|&p| data.card(p) as u64).product();
+        let cells = q64.saturating_mul(r as u64);
+        if cells > MAX_CPT_CELLS {
+            bail!(
+                "family of {} has {q64} parent configurations ({cells} cells > cap {MAX_CPT_CELLS}); \
+                 reduce its parent set before fitting",
+                data.name(v)
+            );
+        }
+        let q = q64 as usize;
+        let a_cell = ess / (q * r) as f64;
+        let a_cfg = ess / q as f64;
+
+        let counts = family_counts(data, v, &parents);
+        let dense = match &counts.table {
+            CountsTable::Dense(c) => c,
+            CountsTable::Sparse(_) => {
+                // Unreachable: MAX_CPT_CELLS is below the dense limit.
+                bail!("internal error: sparse counts for a {cells}-cell family")
+            }
+        };
+        let mut table = vec![0.0f64; q * r];
+        for (row, hist) in table.chunks_exact_mut(r).zip(dense.chunks_exact(r)) {
+            let nj: u64 = hist.iter().map(|&x| x as u64).sum();
+            let denom = nj as f64 + a_cfg;
+            for (slot, &njk) in row.iter_mut().zip(hist) {
+                *slot = (njk as f64 + a_cell) / denom;
+            }
+        }
+        cpts.push(Cpt { parents, table, r });
+    }
+
+    let bn = DiscreteBn {
+        dag: dag.clone(),
+        names: data.names().to_vec(),
+        cards: data.cards().to_vec(),
+        cpts,
+    };
+    bn.validate().map_err(|e| anyhow!("fitted network failed validation: {e}"))?;
+    Ok(bn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+    use crate::bn::sampler::forward_sample;
+
+    #[test]
+    fn recovers_generating_cpts() {
+        let truth = tiny_bn();
+        let data = forward_sample(&truth, 50_000, 11);
+        let fitted = fit(&truth.dag, &data, 1.0).unwrap();
+        fitted.validate().unwrap();
+        assert_eq!(fitted.names, truth.names);
+        for (fc, tc) in fitted.cpts.iter().zip(&truth.cpts) {
+            assert_eq!(fc.parents, tc.parents);
+            for (a, b) in fc.table.iter().zip(&tc.table) {
+                assert!((a - b).abs() < 0.02, "fitted {a} vs true {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn unobserved_configs_get_uniform_prior() {
+        // One-column dataset never shows state 2 of a 3-state variable.
+        let data = Dataset::unnamed(vec![3], vec![vec![0, 0, 1]]);
+        let dag = Dag::new(1);
+        let bn = fit(&dag, &data, 3.0).unwrap();
+        // counts [2, 1, 0], alpha_cell = 1 -> probs (3,2,1)/6.
+        let t = &bn.cpts[0].table;
+        assert!((t[0] - 0.5).abs() < 1e-12);
+        assert!((t[1] - 2.0 / 6.0).abs() < 1e-12);
+        assert!((t[2] - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_dataset_is_pure_prior() {
+        let data = Dataset::unnamed(vec![2, 2], vec![Vec::new(), Vec::new()]);
+        let dag = Dag::from_edges(2, &[(0, 1)]);
+        let bn = fit(&dag, &data, 8.0).unwrap();
+        for cpt in &bn.cpts {
+            for cfg in 0..cpt.q() {
+                for &p in cpt.row(cfg) {
+                    assert!((p - 0.5).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let truth = tiny_bn();
+        let data = forward_sample(&truth, 10, 3);
+        assert!(fit(&Dag::new(3), &data, 1.0).is_err()); // n mismatch
+        assert!(fit(&truth.dag, &data, 0.0).is_err()); // ess must be > 0
+        assert!(fit(&truth.dag, &data, -1.0).is_err());
+    }
+}

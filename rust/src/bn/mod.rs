@@ -2,12 +2,14 @@
 //! generators (paper-domain analogs) and forward sampling.
 
 pub mod bif;
+pub mod fit;
 pub mod netgen;
 pub mod network;
 pub mod repo;
 pub mod sampler;
 
 pub use bif::{parse_bif, read_bif, write_bif};
+pub use fit::fit;
 pub use netgen::{generate, NetGenConfig};
 pub use network::{Cpt, DiscreteBn};
 pub use repo::{load_domain, Domain};

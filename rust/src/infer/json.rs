@@ -1,0 +1,397 @@
+//! Minimal JSON value type, parser and writer.
+//!
+//! The offline registry has no `serde`, and the serve protocol
+//! (newline-delimited / length-prefixed JSON queries) only needs the
+//! core grammar: objects, arrays, strings with escapes, f64 numbers,
+//! booleans and null. Object keys keep insertion order so responses
+//! are byte-stable for a given request — convenient for tests and for
+//! diffing server logs.
+
+use anyhow::{bail, Result};
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any number (always carried as f64).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object as ordered key/value pairs.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing non-whitespace is an
+    /// error).
+    pub fn parse(text: &str) -> Result<Json> {
+        let b = text.as_bytes();
+        let mut p = 0usize;
+        let v = parse_value(b, &mut p)?;
+        skip_ws(b, &mut p);
+        if p != b.len() {
+            bail!("trailing characters at byte {p}");
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// String payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Numeric payload, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer payload, if this is a whole number.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 9e15 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    /// Boolean payload, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if this is an array.
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Object entries, if this is an object.
+    pub fn as_object(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(kv) => Some(kv.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(x) => {
+                if !x.is_finite() {
+                    // JSON has no NaN/Inf; null is the least-bad spelling.
+                    f.write_str("null")
+                } else if x.fract() == 0.0 && x.abs() < 9e15 {
+                    write!(f, "{}", *x as i64)
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(kv) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in kv.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut std::fmt::Formatter<'_>, s: &str) -> std::fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+fn skip_ws(b: &[u8], p: &mut usize) {
+    while *p < b.len() && matches!(b[*p], b' ' | b'\t' | b'\n' | b'\r') {
+        *p += 1;
+    }
+}
+
+fn parse_value(b: &[u8], p: &mut usize) -> Result<Json> {
+    skip_ws(b, p);
+    if *p >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*p] {
+        b'{' => parse_object(b, p),
+        b'[' => parse_array(b, p),
+        b'"' => Ok(Json::Str(parse_string(b, p)?)),
+        b't' => parse_literal(b, p, "true", Json::Bool(true)),
+        b'f' => parse_literal(b, p, "false", Json::Bool(false)),
+        b'n' => parse_literal(b, p, "null", Json::Null),
+        _ => parse_number(b, p),
+    }
+}
+
+fn parse_literal(b: &[u8], p: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if b.len() - *p >= lit.len() && &b[*p..*p + lit.len()] == lit.as_bytes() {
+        *p += lit.len();
+        Ok(value)
+    } else {
+        bail!("invalid literal at byte {}", *p)
+    }
+}
+
+fn parse_number(b: &[u8], p: &mut usize) -> Result<Json> {
+    let start = *p;
+    if *p < b.len() && b[*p] == b'-' {
+        *p += 1;
+    }
+    while *p < b.len() && matches!(b[*p], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-') {
+        *p += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*p]).expect("digits are ASCII");
+    match text.parse::<f64>() {
+        Ok(x) => Ok(Json::Num(x)),
+        Err(_) => bail!("invalid number '{text}' at byte {start}"),
+    }
+}
+
+fn parse_string(b: &[u8], p: &mut usize) -> Result<String> {
+    debug_assert_eq!(b[*p], b'"');
+    *p += 1;
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        if *p >= b.len() {
+            bail!("unterminated string");
+        }
+        match b[*p] {
+            b'"' => {
+                *p += 1;
+                return String::from_utf8(out).map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"));
+            }
+            b'\\' => {
+                *p += 1;
+                if *p >= b.len() {
+                    bail!("unterminated escape");
+                }
+                let esc = b[*p];
+                *p += 1;
+                match esc {
+                    b'"' => out.push(b'"'),
+                    b'\\' => out.push(b'\\'),
+                    b'/' => out.push(b'/'),
+                    b'b' => out.push(0x08),
+                    b'f' => out.push(0x0c),
+                    b'n' => out.push(b'\n'),
+                    b'r' => out.push(b'\r'),
+                    b't' => out.push(b'\t'),
+                    b'u' => {
+                        let hi = parse_hex4(b, p)?;
+                        let code = if (0xD800..0xDC00).contains(&hi) {
+                            // Surrogate pair: expect a following \uXXXX low half.
+                            if b.len() - *p >= 2 && b[*p] == b'\\' && b[*p + 1] == b'u' {
+                                *p += 2;
+                                let lo = parse_hex4(b, p)?;
+                                if (0xDC00..0xE000).contains(&lo) {
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    0xFFFD
+                                }
+                            } else {
+                                0xFFFD
+                            }
+                        } else if (0xDC00..0xE000).contains(&hi) {
+                            0xFFFD // unpaired low surrogate
+                        } else {
+                            hi
+                        };
+                        let c = char::from_u32(code).unwrap_or('\u{FFFD}');
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                    }
+                    other => bail!("invalid escape '\\{}'", other as char),
+                }
+            }
+            c => {
+                out.push(c);
+                *p += 1;
+            }
+        }
+    }
+}
+
+fn parse_hex4(b: &[u8], p: &mut usize) -> Result<u32> {
+    if b.len() - *p < 4 {
+        bail!("truncated \\u escape");
+    }
+    let mut code = 0u32;
+    for _ in 0..4 {
+        let d = match b[*p] {
+            c @ b'0'..=b'9' => (c - b'0') as u32,
+            c @ b'a'..=b'f' => (c - b'a' + 10) as u32,
+            c @ b'A'..=b'F' => (c - b'A' + 10) as u32,
+            other => bail!("invalid hex digit '{}' in \\u escape", other as char),
+        };
+        code = (code << 4) | d;
+        *p += 1;
+    }
+    Ok(code)
+}
+
+fn parse_array(b: &[u8], p: &mut usize) -> Result<Json> {
+    debug_assert_eq!(b[*p], b'[');
+    *p += 1;
+    let mut items = Vec::new();
+    skip_ws(b, p);
+    if *p < b.len() && b[*p] == b']' {
+        *p += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, p)?);
+        skip_ws(b, p);
+        if *p >= b.len() {
+            bail!("unterminated array");
+        }
+        match b[*p] {
+            b',' => *p += 1,
+            b']' => {
+                *p += 1;
+                return Ok(Json::Arr(items));
+            }
+            other => bail!("expected ',' or ']' in array, got '{}'", other as char),
+        }
+    }
+}
+
+fn parse_object(b: &[u8], p: &mut usize) -> Result<Json> {
+    debug_assert_eq!(b[*p], b'{');
+    *p += 1;
+    let mut kv = Vec::new();
+    skip_ws(b, p);
+    if *p < b.len() && b[*p] == b'}' {
+        *p += 1;
+        return Ok(Json::Obj(kv));
+    }
+    loop {
+        skip_ws(b, p);
+        if *p >= b.len() || b[*p] != b'"' {
+            bail!("expected object key at byte {}", *p);
+        }
+        let key = parse_string(b, p)?;
+        skip_ws(b, p);
+        if *p >= b.len() || b[*p] != b':' {
+            bail!("expected ':' after object key '{key}'");
+        }
+        *p += 1;
+        let value = parse_value(b, p)?;
+        kv.push((key, value));
+        skip_ws(b, p);
+        if *p >= b.len() {
+            bail!("unterminated object");
+        }
+        match b[*p] {
+            b',' => *p += 1,
+            b'}' => {
+                *p += 1;
+                return Ok(Json::Obj(kv));
+            }
+            other => bail!("expected ',' or '}}' in object, got '{}'", other as char),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_document() {
+        let doc = r#" {"id": 3, "ok": true, "xs": [1, -2.5, null], "s": "a\"b\n", "o": {}} "#;
+        let v = Json::parse(doc).unwrap();
+        assert_eq!(v.get("id").and_then(Json::as_usize), Some(3));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        let xs = v.get("xs").and_then(Json::as_array).unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[1].as_f64(), Some(-2.5));
+        assert_eq!(xs[2], Json::Null);
+        assert_eq!(v.get("s").and_then(Json::as_str), Some("a\"b\n"));
+        assert!(v.get("o").and_then(Json::as_object).unwrap().is_empty());
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn roundtrips_through_display() {
+        let doc = r#"{"a":[1,2.5,true,null],"b":{"c":"x\ty"}}"#;
+        let v = Json::parse(doc).unwrap();
+        let printed = v.to_string();
+        assert_eq!(printed, doc);
+        assert_eq!(Json::parse(&printed).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        // Raw UTF-8 passes through; \u escapes (incl. surrogate pairs) decode.
+        let v = Json::parse(r#""é€😀""#).unwrap();
+        assert_eq!(v, Json::Str("é€😀".to_string()));
+        let e = Json::parse(r#""\u00e9 \ud83d\ude00""#).unwrap();
+        assert_eq!(e, Json::Str("é 😀".to_string()));
+        let unpaired = Json::parse(r#""\ud83d""#).unwrap();
+        assert_eq!(unpaired, Json::Str("\u{FFFD}".to_string()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("tru").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+}

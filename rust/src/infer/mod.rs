@@ -1,0 +1,252 @@
+//! Probabilistic inference over fitted networks — the fifth pillar
+//! (data → learn → fuse → eval → **infer**).
+//!
+//! A learned [`Dag`](crate::graph::Dag) becomes a queryable model via
+//! [`bn::fit`](crate::bn::fit()); this module then answers `P(target |
+//! evidence)` three ways, sharing one [`Factor`] substrate:
+//!
+//! * [`JoinTree`] — compile once (moralize → min-fill triangulate →
+//!   clique tree), then each query is a two-pass sum-product sweep
+//!   that yields *all* marginals plus log P(evidence). The serving
+//!   engine.
+//! * [`ve_marginal`] — one-shot variable elimination for ad-hoc single
+//!   marginals, and the independent implementation the exactness tests
+//!   pit against the join tree.
+//! * [`likelihood_weighting`] — seeded sampling fallback for networks
+//!   whose treewidth blows the exact budget.
+//!
+//! [`Engine`] picks between the exact and sampled paths from a clique
+//! state-space budget, and [`QueryServer`] exposes the result over
+//! newline-delimited JSON or length-prefixed TCP frames.
+
+pub mod factor;
+pub mod jointree;
+pub mod json;
+pub mod lw;
+pub mod serve;
+pub mod triangulate;
+pub mod ve;
+
+pub use factor::Factor;
+pub use jointree::JoinTree;
+pub use lw::likelihood_weighting;
+pub use serve::QueryServer;
+pub use triangulate::{triangulate, Triangulation};
+pub use ve::ve_marginal;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::bn::DiscreteBn;
+use crate::graph::moral_graph;
+use crate::rng::Rng;
+
+/// Look up a variable by name (shared by the CLI and the serve
+/// protocol so both reject unknowns with the same wording).
+pub fn var_index(names: &[String], name: &str) -> Result<usize> {
+    names
+        .iter()
+        .position(|n| n == name)
+        .ok_or_else(|| anyhow!("unknown variable '{name}'"))
+}
+
+/// Parse a state written as an index (`"3"`) or an `s<k>` name
+/// (`"s3"`), range-checked against the variable's cardinality.
+pub fn parse_state(text: &str, card: u32) -> Result<usize> {
+    let digits = text.strip_prefix('s').unwrap_or(text);
+    let s: usize = digits
+        .parse()
+        .map_err(|_| anyhow!("cannot parse state '{text}' (use an index or s<k>)"))?;
+    ensure!(s < card as usize, "state {s} out of range (cardinality {card})");
+    Ok(s)
+}
+
+/// Posterior over every variable of a network for one evidence set.
+#[derive(Clone, Debug)]
+pub struct Posterior {
+    /// Normalized per-variable marginals, indexed by variable.
+    pub marginals: Vec<Vec<f64>>,
+    /// ln P(evidence) — exact from the join tree, an estimate from
+    /// likelihood weighting.
+    pub log_evidence: f64,
+}
+
+impl Posterior {
+    /// Marginal distribution of variable `v`.
+    pub fn marginal(&self, v: usize) -> &[f64] {
+        &self.marginals[v]
+    }
+
+    /// Posterior mode (argmax state) of variable `v`.
+    pub fn mode(&self, v: usize) -> usize {
+        let m = &self.marginals[v];
+        let mut best = 0usize;
+        for (s, &p) in m.iter().enumerate() {
+            if p > m[best] {
+                best = s;
+            }
+        }
+        best
+    }
+}
+
+/// Inference method selector (CLI `--method`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Exact when the treewidth budget allows, else likelihood
+    /// weighting.
+    Auto,
+    /// Force the join tree.
+    JoinTree,
+    /// One-shot variable elimination (per-target; `query` only).
+    Ve,
+    /// Force likelihood weighting.
+    Lw,
+}
+
+impl Method {
+    /// Parse a CLI name.
+    pub fn parse(name: &str) -> Option<Method> {
+        match name {
+            "auto" => Some(Method::Auto),
+            "jointree" | "jt" => Some(Method::JoinTree),
+            "ve" => Some(Method::Ve),
+            "lw" => Some(Method::Lw),
+            _ => None,
+        }
+    }
+}
+
+/// Engine construction parameters.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Method selector.
+    pub method: Method,
+    /// Max clique joint state space the exact engine may compile
+    /// (`Auto` falls back to sampling past it).
+    pub budget: u64,
+    /// Particles per likelihood-weighting query.
+    pub samples: usize,
+    /// Base seed for the sampling engine.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { method: Method::Auto, budget: 1 << 22, samples: 20_000, seed: 1 }
+    }
+}
+
+/// A compiled inference engine: exact clique tree or seeded sampler.
+pub enum Engine {
+    /// Exact two-pass propagation.
+    Exact(JoinTree),
+    /// Likelihood weighting over a retained copy of the network.
+    Sampled {
+        /// The fitted network.
+        bn: Box<DiscreteBn>,
+        /// Particles per query.
+        samples: usize,
+        /// Per-query seed source.
+        rng: Rng,
+    },
+}
+
+impl Engine {
+    /// Build an engine per `cfg`. `Method::Ve` has no persistent
+    /// engine; callers run [`ve_marginal`] directly.
+    pub fn build(bn: &DiscreteBn, cfg: &EngineConfig) -> Result<Engine> {
+        let sampled = |cfg: &EngineConfig| Engine::Sampled {
+            bn: Box::new(bn.clone()),
+            samples: cfg.samples,
+            rng: Rng::new(cfg.seed),
+        };
+        match cfg.method {
+            Method::JoinTree => Ok(Engine::Exact(JoinTree::build(bn)?)),
+            Method::Lw => Ok(sampled(cfg)),
+            Method::Auto => {
+                // Probe the treewidth before materializing potentials;
+                // the same triangulation seeds the tree build.
+                let tri = triangulate(&moral_graph(&bn.dag), &bn.cards);
+                if tri.max_clique_states <= cfg.budget {
+                    Ok(Engine::Exact(JoinTree::build_from(bn, tri)?))
+                } else {
+                    Ok(sampled(cfg))
+                }
+            }
+            Method::Ve => bail!(
+                "variable elimination is per-query; use `query --method ve` or ve_marginal()"
+            ),
+        }
+    }
+
+    /// Engine name for telemetry and responses.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Exact(_) => "jointree",
+            Engine::Sampled { .. } => "lw",
+        }
+    }
+
+    /// Posterior for one evidence set. The sampling engine draws a
+    /// fresh per-query seed so repeated identical queries are
+    /// independent estimates (but the whole sequence is deterministic
+    /// in the configured seed).
+    pub fn posterior(&mut self, evidence: &[(usize, usize)]) -> Result<Posterior> {
+        match self {
+            Engine::Exact(jt) => jt.posterior(evidence),
+            Engine::Sampled { bn, samples, rng } => {
+                let seed = rng.next_u64();
+                likelihood_weighting(bn, evidence, *samples, seed)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+
+    #[test]
+    fn auto_picks_exact_for_tiny_networks() {
+        let bn = tiny_bn();
+        let mut e = Engine::build(&bn, &EngineConfig::default()).unwrap();
+        assert_eq!(e.name(), "jointree");
+        let post = e.posterior(&[]).unwrap();
+        assert!((post.marginal(0)[0] - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_falls_back_past_budget() {
+        let bn = tiny_bn();
+        let cfg = EngineConfig { budget: 1, samples: 50_000, ..Default::default() };
+        let mut e = Engine::build(&bn, &cfg).unwrap();
+        assert_eq!(e.name(), "lw");
+        let post = e.posterior(&[]).unwrap();
+        assert!((post.marginal(0)[0] - 0.7).abs() < 0.02);
+    }
+
+    #[test]
+    fn ve_method_has_no_engine() {
+        let bn = tiny_bn();
+        let cfg = EngineConfig { method: Method::Ve, ..Default::default() };
+        assert!(Engine::build(&bn, &cfg).is_err());
+    }
+
+    #[test]
+    fn method_parse_names() {
+        assert_eq!(Method::parse("auto"), Some(Method::Auto));
+        assert_eq!(Method::parse("jointree"), Some(Method::JoinTree));
+        assert_eq!(Method::parse("jt"), Some(Method::JoinTree));
+        assert_eq!(Method::parse("ve"), Some(Method::Ve));
+        assert_eq!(Method::parse("lw"), Some(Method::Lw));
+        assert_eq!(Method::parse("magic"), None);
+    }
+
+    #[test]
+    fn posterior_mode_breaks_ties_low() {
+        let p = Posterior { marginals: vec![vec![0.5, 0.5], vec![0.1, 0.9]], log_evidence: 0.0 };
+        assert_eq!(p.mode(0), 0);
+        assert_eq!(p.mode(1), 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! One-shot variable elimination: ad-hoc exact marginals without
+//! compiling a join tree.
+//!
+//! The right tool when a caller wants a single `P(target | evidence)`
+//! and will not amortize a clique-tree build: factors are the CPTs plus
+//! evidence indicators, and variables are summed out greedily by
+//! minimum product-scope weight (the state-space analog of min-fill).
+//! The serve path prefers the jointree; the CLI `query --method ve`
+//! and the correctness tests (jointree and VE must agree to 1e-9) use
+//! this as the independent second implementation.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::bn::DiscreteBn;
+use crate::infer::factor::Factor;
+
+/// Refuse to materialize an intermediate factor beyond this many
+/// cells — past it, likelihood weighting is the sane fallback.
+const VE_MAX_CELLS: u64 = 1 << 26;
+
+/// Exact normalized marginal `P(target | evidence)` by variable
+/// elimination.
+pub fn ve_marginal(
+    bn: &DiscreteBn,
+    target: usize,
+    evidence: &[(usize, usize)],
+) -> Result<Vec<f64>> {
+    let n = bn.n();
+    ensure!(target < n, "target variable {target} out of range (n = {n})");
+    for &(v, s) in evidence {
+        ensure!(v < n, "evidence variable {v} out of range (n = {n})");
+        ensure!(
+            s < bn.cards[v] as usize,
+            "evidence state {s} out of range for variable {v} (cardinality {})",
+            bn.cards[v]
+        );
+    }
+
+    let mut factors: Vec<Factor> = (0..n).map(|v| Factor::from_cpt(bn, v)).collect();
+    for &(v, s) in evidence {
+        factors.push(Factor::indicator(v, bn.cards[v] as usize, s));
+    }
+
+    let mut to_elim: Vec<usize> = (0..n).filter(|&v| v != target).collect();
+    while !to_elim.is_empty() {
+        // Greedy min-weight: eliminate the variable whose merged factor
+        // scope has the smallest joint state space.
+        let mut best: Option<(u64, usize, usize)> = None; // (weight, var, position)
+        for (pos, &v) in to_elim.iter().enumerate() {
+            let mut scope: Vec<usize> = Vec::new();
+            for f in &factors {
+                if f.vars.contains(&v) {
+                    for &x in &f.vars {
+                        if !scope.contains(&x) {
+                            scope.push(x);
+                        }
+                    }
+                }
+            }
+            let weight = scope
+                .iter()
+                .fold(1u64, |acc, &x| acc.saturating_mul(bn.cards[x] as u64));
+            let key = (weight, v, pos);
+            let better = match best {
+                None => true,
+                Some(b) => key < b,
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        let (weight, v, pos) = best.expect("to_elim is nonempty");
+        if weight > VE_MAX_CELLS {
+            bail!(
+                "eliminating variable {v} needs a {weight}-cell factor (cap {VE_MAX_CELLS}); \
+                 use likelihood weighting for this query"
+            );
+        }
+        to_elim.swap_remove(pos);
+
+        let mut merged = Factor::unit();
+        let mut rest: Vec<Factor> = Vec::with_capacity(factors.len());
+        for f in factors {
+            if f.vars.contains(&v) {
+                merged = Factor::product(&merged, &f);
+            } else {
+                rest.push(f);
+            }
+        }
+        let keep: Vec<usize> = merged.vars.iter().copied().filter(|&x| x != v).collect();
+        rest.push(merged.marginalize_to(&keep));
+        factors = rest;
+    }
+
+    let mut result = Factor::unit();
+    for f in &factors {
+        result = Factor::product(&result, f);
+    }
+    let mut m = result.marginalize_to(&[target]);
+    if m.normalize() <= 0.0 {
+        bail!("evidence has probability zero");
+    }
+    Ok(m.table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+
+    #[test]
+    fn prior_and_posterior_on_tiny_bn() {
+        let bn = tiny_bn();
+        let pb = ve_marginal(&bn, 1, &[]).unwrap();
+        assert!((pb[0] - 0.69).abs() < 1e-12);
+        let pa = ve_marginal(&bn, 0, &[(1, 1)]).unwrap();
+        let pe = 0.7 * 0.1 + 0.3 * 0.8;
+        assert!((pa[0] - 0.07 / pe).abs() < 1e-12);
+        assert!((pa[1] - 0.24 / pe).abs() < 1e-12);
+    }
+
+    #[test]
+    fn target_with_evidence_on_itself_is_degenerate() {
+        let bn = tiny_bn();
+        let p = ve_marginal(&bn, 0, &[(0, 1)]).unwrap();
+        assert!(p[0] == 0.0 && (p[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let bn = tiny_bn();
+        assert!(ve_marginal(&bn, 7, &[]).is_err());
+        assert!(ve_marginal(&bn, 0, &[(1, 5)]).is_err());
+        assert!(ve_marginal(&bn, 0, &[(0, 0), (0, 1)]).is_err());
+    }
+}

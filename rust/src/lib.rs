@@ -22,6 +22,7 @@ pub mod coordinator;
 pub mod fusion;
 pub mod data;
 pub mod graph;
+pub mod infer;
 pub mod learn;
 pub mod metrics;
 pub mod partition;
@@ -32,9 +33,13 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::bn::{forward_sample, load_domain, DiscreteBn, Domain, NetGenConfig};
+    pub use crate::bn::{fit, forward_sample, load_domain, DiscreteBn, Domain, NetGenConfig};
     pub use crate::data::Dataset;
     pub use crate::graph::{Dag, Pdag};
+    pub use crate::infer::{
+        likelihood_weighting, ve_marginal, Engine, EngineConfig, JoinTree, Method, Posterior,
+        QueryServer,
+    };
     pub use crate::rng::Rng;
     pub use crate::coordinator::{cges, run_ring, RingConfig, RingMode, RingResult};
     pub use crate::score::BdeuScorer;

@@ -6,17 +6,25 @@
 //!   partition  show the stage-1 edge partition for a dataset
 //!   learn      run cges / cges-l / ges / fges on a dataset
 //!   eval       score a learned structure against truth + data
+//!   fit        estimate CPTs for a learned structure (Dirichlet-smoothed ML)
+//!   query      answer marginal queries against a fitted .bif network
+//!   serve      answer JSON queries over stdin or a loopback TCP listener
 
+use std::net::TcpListener;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use cges::bn::{forward_sample, generate, load_domain, read_bif, write_bif, Domain, NetGenConfig};
+use cges::bn::{
+    fit, forward_sample, generate, load_domain, read_bif, write_bif, DiscreteBn, Domain,
+    NetGenConfig,
+};
 use cges::cli::Args;
 use cges::coordinator::{cges as run_cges, PartitionSource, RingConfig, RingMode};
 use cges::data::{read_csv, write_csv, Dataset};
 use cges::graph::Dag;
+use cges::infer::{ve_marginal, Engine, EngineConfig, Method, QueryServer};
 use cges::learn::{fges, ges, FgesConfig, GesConfig};
 use cges::metrics::evaluate;
 use cges::partition::{partition_edges, partition_stats};
@@ -40,6 +48,9 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "partition" => cmd_partition(rest),
         "learn" => cmd_learn(rest),
         "eval" => cmd_eval(rest),
+        "fit" => cmd_fit(rest),
+        "query" => cmd_query(rest),
+        "serve" => cmd_serve(rest),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -66,6 +77,17 @@ SUBCOMMANDS
              tcp     = pipelined over loopback TCP (wire codec),
              sync    = deterministic barrier scheduler
   eval       --learned learned.dag|.bif --truth net.bif --data data.csv [--ess 10]
+  fit        --structure learned.dag|.bif --data data.csv --out fitted.bif [--ess 1]
+             Dirichlet-smoothed ML CPTs: P = (N_jk + e/qr) / (N_j + e/q)
+  query      --net fitted.bif --target A[,B...] [--evidence \"X1=0,X2=s1\"]
+             [--method auto|jointree|ve|lw] [--samples 20000] [--seed 1]
+             [--budget 4194304]   (budget = max clique state space for exact)
+  serve      --net fitted.bif [--listen 127.0.0.1:7878]
+             [--method auto|jointree|lw] [--samples 20000] [--seed 1] [--budget N]
+             stdin mode (default): one JSON query per line, one JSON answer per line
+             TCP mode (--listen): u32-LE length-prefixed JSON frames per request
+             query shape: {\"id\":1,\"type\":\"marginal\"|\"map\",
+                           \"targets\":[\"X3\"],\"evidence\":{\"X0\":0}}
 ";
 
 fn cmd_gen_net(argv: &[String]) -> Result<()> {
@@ -273,6 +295,161 @@ fn read_structure(path: &Path, data: &Dataset) -> Result<Dag> {
     Ok(dag)
 }
 
+/// Re-index a BIF-declared DAG into a dataset's column order by
+/// variable name (BIF declaration order need not match the CSV header;
+/// fitting by raw index would silently permute the structure).
+fn align_bif_dag(bn: &DiscreteBn, data: &Dataset) -> Result<Dag> {
+    let map: Vec<usize> = bn
+        .names
+        .iter()
+        .map(|name| {
+            data.index_of(name)
+                .ok_or_else(|| anyhow!("structure variable '{name}' not in the dataset"))
+        })
+        .collect::<Result<_>>()?;
+    let mut dag = Dag::new(data.n_vars());
+    for (u, v) in bn.dag.edges() {
+        dag.add_edge(map[u], map[v]);
+    }
+    Ok(dag)
+}
+
+fn cmd_fit(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(&["structure", "data", "out", "ess"], &[])?;
+    let data = read_csv(Path::new(a.require("data")?))?;
+    let spath = Path::new(a.require("structure")?);
+    let dag = if spath.extension().map(|e| e == "bif").unwrap_or(false) {
+        align_bif_dag(&read_bif(spath)?, &data)?
+    } else {
+        read_structure(spath, &data)?
+    };
+    let ess: f64 = a.get_parse("ess", 1.0)?;
+    let t = Timer::start();
+    let bn = fit(&dag, &data, ess)?;
+    let secs = t.secs();
+    let out = PathBuf::from(a.require("out")?);
+    write_bif(&bn, &out)?;
+    println!(
+        "fitted {} variables ({} edges, {} parameters, ess {ess}) from {} rows in {secs:.2}s -> {}",
+        bn.n(),
+        bn.dag.edge_count(),
+        bn.parameter_count(),
+        data.n_rows(),
+        out.display()
+    );
+    Ok(())
+}
+
+/// Parse `--evidence "X1=0,X2=s1"` against a network's variable names
+/// (same lookup/state helpers as the serve protocol).
+fn parse_evidence(spec: &str, bn: &DiscreteBn) -> Result<Vec<(usize, usize)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (name, state) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("evidence '{part}' is not name=state"))?;
+        let name = name.trim();
+        let v = cges::infer::var_index(&bn.names, name)?;
+        let s = cges::infer::parse_state(state.trim(), bn.cards[v])
+            .with_context(|| format!("evidence for '{name}'"))?;
+        out.push((v, s));
+    }
+    Ok(out)
+}
+
+fn print_marginal(name: &str, dist: &[f64]) {
+    let cells: Vec<String> =
+        dist.iter().enumerate().map(|(s, p)| format!("s{s} {p:.6}")).collect();
+    println!("P({name} | e): {}", cells.join("  "));
+}
+
+fn cmd_query(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(&["net", "target", "evidence", "method", "samples", "seed", "budget"], &[])?;
+    let bn = read_bif(Path::new(a.require("net")?))?;
+    let method_name = a.get("method").unwrap_or("auto");
+    let method = Method::parse(method_name)
+        .ok_or_else(|| anyhow!("--method: unknown '{method_name}' (auto|jointree|ve|lw)"))?;
+    let evidence = parse_evidence(a.get("evidence").unwrap_or(""), &bn)?;
+    let targets: Vec<usize> = a
+        .require("target")?
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|name| cges::infer::var_index(&bn.names, name))
+        .collect::<Result<_>>()?;
+    ensure!(!targets.is_empty(), "--target lists no variables");
+
+    let t = Timer::start();
+    if method == Method::Ve {
+        for &v in &targets {
+            let dist = ve_marginal(&bn, v, &evidence)?;
+            print_marginal(&bn.names[v], &dist);
+        }
+        println!("engine ve | {} target(s) in {:.3}s", targets.len(), t.secs());
+    } else {
+        let cfg = EngineConfig {
+            method,
+            budget: a.get_parse("budget", EngineConfig::default().budget)?,
+            samples: a.get_parse("samples", EngineConfig::default().samples)?,
+            seed: a.get_parse("seed", 1)?,
+        };
+        let mut engine = Engine::build(&bn, &cfg)?;
+        let post = engine.posterior(&evidence)?;
+        for &v in &targets {
+            print_marginal(&bn.names[v], post.marginal(v));
+        }
+        println!(
+            "engine {} | log P(evidence) = {:.6} | {:.3}s",
+            engine.name(),
+            post.log_evidence,
+            t.secs()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(&["net", "listen", "method", "samples", "seed", "budget"], &[])?;
+    let net = a.require("net")?;
+    let bn = read_bif(Path::new(net))?;
+    let method_name = a.get("method").unwrap_or("auto");
+    let method = Method::parse(method_name)
+        .ok_or_else(|| anyhow!("--method: unknown '{method_name}' (auto|jointree|lw)"))?;
+    ensure!(method != Method::Ve, "serve engines are auto|jointree|lw");
+    let cfg = EngineConfig {
+        method,
+        budget: a.get_parse("budget", EngineConfig::default().budget)?,
+        samples: a.get_parse("samples", EngineConfig::default().samples)?,
+        seed: a.get_parse("seed", 1)?,
+    };
+    let mut server = QueryServer::new(&bn, &cfg)?;
+    match a.get("listen") {
+        Some(addr) => {
+            let listener =
+                TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+            eprintln!(
+                "serving {net} on {} (engine {}; frames: u32 LE length + JSON)",
+                listener.local_addr().context("listener addr")?,
+                server.engine_name()
+            );
+            server.serve_tcp(&listener, None)
+        }
+        None => {
+            eprintln!(
+                "serving {net} on stdin/stdout (engine {}; one JSON query per line)",
+                server.engine_name()
+            );
+            let stdin = std::io::stdin();
+            let served = server.serve_lines(stdin.lock(), std::io::stdout().lock())?;
+            eprintln!("served {served} queries");
+            Ok(())
+        }
+    }
+}
+
 fn cmd_eval(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &[])?;
     a.check_known(&["learned", "truth", "data", "ess"], &[])?;
@@ -281,7 +458,7 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let truth = read_bif(Path::new(a.require("truth")?))?;
     let learned_path = Path::new(a.require("learned")?);
     let learned = if learned_path.extension().map(|e| e == "bif").unwrap_or(false) {
-        read_bif(learned_path)?.dag
+        align_bif_dag(&read_bif(learned_path)?, &data)?
     } else {
         read_structure(learned_path, &data)?
     };

@@ -1,0 +1,280 @@
+//! Inference exactness and serving-path integration tests.
+//!
+//! Ground truth is brute-force joint enumeration (feasible to ~12
+//! variables): the join tree and variable elimination must match it to
+//! 1e-9, likelihood weighting must converge on the 2-node network, and
+//! the serve path must answer the same numbers over both the line
+//! protocol and framed TCP.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use cges::bn::{fit, forward_sample, generate, Cpt, DiscreteBn, NetGenConfig};
+use cges::graph::Dag;
+use cges::infer::json::Json;
+use cges::infer::{likelihood_weighting, ve_marginal, EngineConfig, JoinTree, QueryServer};
+
+/// The 2-node network `a -> b` used across the unit tests, rebuilt
+/// here because integration tests cannot see `#[cfg(test)]` helpers.
+fn tiny_bn() -> DiscreteBn {
+    DiscreteBn {
+        dag: Dag::from_edges(2, &[(0, 1)]),
+        names: vec!["a".into(), "b".into()],
+        cards: vec![2, 2],
+        cpts: vec![
+            Cpt { parents: vec![], table: vec![0.7, 0.3], r: 2 },
+            Cpt { parents: vec![0], table: vec![0.9, 0.1, 0.2, 0.8], r: 2 },
+        ],
+    }
+}
+
+fn small_cfg(nodes: usize, edges: usize) -> NetGenConfig {
+    NetGenConfig { nodes, edges, max_parents: 3, card_range: (2, 3), locality: 0, alpha: 0.8 }
+}
+
+/// Brute-force posterior: enumerate every complete assignment, filter
+/// on evidence, accumulate marginals. Returns (marginals, P(evidence)).
+fn enumerate_posterior(bn: &DiscreteBn, evidence: &[(usize, usize)]) -> (Vec<Vec<f64>>, f64) {
+    let n = bn.n();
+    let cards: Vec<usize> = bn.cards.iter().map(|&c| c as usize).collect();
+    let mut marginals: Vec<Vec<f64>> = cards.iter().map(|&c| vec![0.0; c]).collect();
+    let mut p_evidence = 0.0f64;
+    let mut states = vec![0u8; n];
+    let mut done = false;
+    while !done {
+        let mut p = 1.0f64;
+        for v in 0..n {
+            let cfg = bn.parent_config(v, &states, &bn.cards);
+            p *= bn.cpts[v].row(cfg)[states[v] as usize];
+        }
+        if evidence.iter().all(|&(v, s)| states[v] as usize == s) {
+            p_evidence += p;
+            for (hist, &s) in marginals.iter_mut().zip(&states) {
+                hist[s as usize] += p;
+            }
+        }
+        // Mixed-radix increment.
+        done = true;
+        for (st, &c) in states.iter_mut().zip(&cards) {
+            *st += 1;
+            if (*st as usize) < c {
+                done = false;
+                break;
+            }
+            *st = 0;
+        }
+    }
+    assert!(p_evidence > 0.0, "test evidence must have positive probability");
+    for hist in &mut marginals {
+        hist.iter_mut().for_each(|x| *x /= p_evidence);
+    }
+    (marginals, p_evidence)
+}
+
+fn evidence_for(seed: u64, bn: &DiscreteBn, n_obs: usize) -> Vec<(usize, usize)> {
+    // Deterministic distinct evidence vars with in-range states.
+    let n = bn.n();
+    (0..n_obs)
+        .map(|i| {
+            let v = ((seed as usize) * 3 + i * 5) % n;
+            let s = ((seed as usize) + i) % bn.cards[v] as usize;
+            (v, s)
+        })
+        .filter({
+            // Drop duplicate vars (conflicts would zero the evidence).
+            let mut seen: Vec<usize> = Vec::new();
+            move |&(v, _)| {
+                if seen.contains(&v) {
+                    false
+                } else {
+                    seen.push(v);
+                    true
+                }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn jointree_matches_enumeration() {
+    for seed in 0..6u64 {
+        let bn = generate(&small_cfg(9, 12), seed);
+        let jt = JoinTree::build(&bn).unwrap();
+        for n_obs in 0..3usize {
+            let evidence = evidence_for(seed, &bn, n_obs);
+            let (want, pe) = enumerate_posterior(&bn, &evidence);
+            let post = jt.posterior(&evidence).unwrap();
+            assert!(
+                (post.log_evidence - pe.ln()).abs() < 1e-9,
+                "seed {seed} obs {n_obs}: log evidence {} vs {}",
+                post.log_evidence,
+                pe.ln()
+            );
+            for v in 0..bn.n() {
+                for (a, b) in post.marginal(v).iter().zip(&want[v]) {
+                    assert!(
+                        (a - b).abs() < 1e-9,
+                        "seed {seed} obs {n_obs} var {v}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ve_matches_enumeration_and_jointree() {
+    for seed in 0..4u64 {
+        let bn = generate(&small_cfg(10, 14), seed ^ 0x7E);
+        let evidence = evidence_for(seed, &bn, 2);
+        let (want, _) = enumerate_posterior(&bn, &evidence);
+        let jt = JoinTree::build(&bn).unwrap();
+        let post = jt.posterior(&evidence).unwrap();
+        for v in 0..bn.n() {
+            let ve = ve_marginal(&bn, v, &evidence).unwrap();
+            for ((a, b), c) in ve.iter().zip(&want[v]).zip(post.marginal(v)) {
+                assert!((a - b).abs() < 1e-9, "seed {seed} var {v}: ve {a} vs brute {b}");
+                assert!((a - c).abs() < 1e-9, "seed {seed} var {v}: ve {a} vs jointree {c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn likelihood_weighting_converges_on_tiny_bn() {
+    let bn = tiny_bn();
+    let evidence = vec![(1usize, 1usize)];
+    let (want, pe) = enumerate_posterior(&bn, &evidence);
+    let post = likelihood_weighting(&bn, &evidence, 400_000, 20260730).unwrap();
+    for v in 0..bn.n() {
+        for (a, b) in post.marginal(v).iter().zip(&want[v]) {
+            assert!((a - b).abs() < 0.01, "var {v}: lw {a} vs exact {b}");
+        }
+    }
+    assert!((post.log_evidence - pe.ln()).abs() < 0.05);
+}
+
+#[test]
+fn fit_then_query_closes_the_loop() {
+    // Learn-free end-to-end: sample from a known net, fit CPTs onto its
+    // structure, and check queries against the *fitted* network agree
+    // between engines — plus the fitted marginal lands near the truth.
+    let truth = generate(&small_cfg(8, 10), 99);
+    let data = forward_sample(&truth, 20_000, 4);
+    let fitted = fit(&truth.dag, &data, 1.0).unwrap();
+    fitted.validate().unwrap();
+
+    let evidence = vec![(0usize, 0usize)];
+    let (want_fitted, _) = enumerate_posterior(&fitted, &evidence);
+    let jt = JoinTree::build(&fitted).unwrap();
+    let post = jt.posterior(&evidence).unwrap();
+    let (want_truth, _) = enumerate_posterior(&truth, &evidence);
+    for v in 0..fitted.n() {
+        for (a, b) in post.marginal(v).iter().zip(&want_fitted[v]) {
+            assert!((a - b).abs() < 1e-9, "var {v}: {a} vs {b}");
+        }
+        // Fitted posterior tracks the generating posterior.
+        for (a, b) in post.marginal(v).iter().zip(&want_truth[v]) {
+            assert!((a - b).abs() < 0.05, "var {v}: fitted {a} far from truth {b}");
+        }
+    }
+}
+
+#[test]
+fn serve_line_protocol_matches_enumeration() {
+    let bn = generate(&small_cfg(7, 9), 5);
+    let mut server = QueryServer::new(&bn, &EngineConfig::default()).unwrap();
+    assert_eq!(server.engine_name(), "jointree");
+
+    let evidence = vec![(1usize, 0usize)];
+    let (want, pe) = enumerate_posterior(&bn, &evidence);
+    let req = format!(
+        r#"{{"id": 1, "type": "marginal", "targets": ["{}"], "evidence": {{"{}": 0}}}}"#,
+        bn.names[0], bn.names[1]
+    );
+    let v = Json::parse(&server.handle(&req)).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(v.get("id").and_then(Json::as_usize), Some(1));
+    let le = v.get("log_evidence").and_then(Json::as_f64).unwrap();
+    assert!((le - pe.ln()).abs() < 1e-9);
+    let dist = v
+        .get("marginals")
+        .and_then(|m| m.get(&bn.names[0]))
+        .and_then(Json::as_array)
+        .unwrap();
+    for (cell, b) in dist.iter().zip(&want[0]) {
+        assert!((cell.as_f64().unwrap() - b).abs() < 1e-9);
+    }
+
+    // MAP answers are the per-variable posterior modes.
+    let req = format!(r#"{{"id": 2, "type": "map", "evidence": {{"{}": 0}}}}"#, bn.names[1]);
+    let v = Json::parse(&server.handle(&req)).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    let map = v.get("map").unwrap();
+    for (vi, name) in bn.names.iter().enumerate() {
+        let got = map.get(name).and_then(Json::as_usize).unwrap();
+        let mut best = 0usize;
+        for (s, &p) in want[vi].iter().enumerate() {
+            if p > want[vi][best] {
+                best = s;
+            }
+        }
+        assert_eq!(got, best, "var {name}");
+    }
+}
+
+fn send_frame(writer: &mut impl Write, payload: &str) {
+    let bytes = payload.as_bytes();
+    writer.write_all(&(bytes.len() as u32).to_le_bytes()).unwrap();
+    writer.write_all(bytes).unwrap();
+    writer.flush().unwrap();
+}
+
+fn recv_frame(reader: &mut impl Read) -> String {
+    let mut len_bytes = [0u8; 4];
+    reader.read_exact(&mut len_bytes).unwrap();
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    let mut payload = vec![0u8; len];
+    reader.read_exact(&mut payload).unwrap();
+    String::from_utf8(payload).unwrap()
+}
+
+#[test]
+fn serve_tcp_framed_roundtrip() {
+    let bn = generate(&small_cfg(6, 8), 13);
+    let mut server = QueryServer::new(&bn, &EngineConfig::default()).unwrap();
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let handle = std::thread::spawn(move || {
+        server.serve_tcp(&listener, Some(1)).unwrap();
+    });
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+
+    // Two requests on one connection: a good one and an error one.
+    send_frame(&mut writer, r#"{"id": 10, "type": "marginal"}"#);
+    let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(v.get("id").and_then(Json::as_usize), Some(10));
+    let margs = v.get("marginals").and_then(Json::as_object).unwrap();
+    assert_eq!(margs.len(), bn.n());
+    let (want, _) = enumerate_posterior(&bn, &[]);
+    for (name, dist) in margs {
+        let vi = bn.names.iter().position(|n| n == name).unwrap();
+        for (cell, b) in dist.as_array().unwrap().iter().zip(&want[vi]) {
+            assert!((cell.as_f64().unwrap() - b).abs() < 1e-9);
+        }
+    }
+
+    send_frame(&mut writer, r#"{"id": 11, "targets": ["not_a_var"]}"#);
+    let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(v.get("id").and_then(Json::as_usize), Some(11));
+
+    drop(writer);
+    drop(reader);
+    handle.join().unwrap();
+}
