@@ -1,0 +1,201 @@
+//! Serving bench: multi-thread query throughput over one shared
+//! compiled model, plus batch-vs-singleton amortization.
+//!
+//!   cargo bench --bench serving                        # 120-var default
+//!   cargo bench --bench serving -- --nodes 200 --queries 800
+//!
+//! Three measurements on a fitted netgen domain:
+//!
+//! * **threads scaling** — the same query stream partitioned over 1,
+//!   4 and 8 handler threads, each with its own `Scratch` against one
+//!   `CompiledModel` (the `serve --threads` hot path, minus sockets);
+//! * **singleton** — one query per propagation, cold scratch per query
+//!   (PR 2 serving semantics) and warm scratch in arrival order;
+//! * **batch** — the same queries processed in canonical-evidence
+//!   order on one warm scratch, the `"type": "batch"` execution shape
+//!   (collect messages of shared evidence prefixes are reused).
+//!
+//! Writes `BENCH_serve.json` so serving throughput is tracked from PR
+//! to PR next to `BENCH_infer.json`/`BENCH_table2.json`.
+
+use cges::bn::{fit, forward_sample, generate, NetGenConfig};
+use cges::engine::CompiledModel;
+use cges::rng::Rng;
+use cges::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let wall = Timer::start();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str, dflt: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(dflt)
+    };
+    let nodes = get("--nodes", 120);
+    let edges = get("--edges", 150);
+    let rows = get("--rows", 2000);
+    let queries = get("--queries", 400);
+    let group = get("--group", 8).max(1); // queries per shared evidence prefix
+    let seed = get("--seed", 1) as u64;
+
+    println!("# serving bench: nodes={nodes} edges={edges} rows={rows} queries={queries} group={group}");
+
+    let cfg =
+        NetGenConfig { nodes, edges, max_parents: 2, card_range: (2, 3), ..Default::default() };
+    let truth = generate(&cfg, seed);
+    let data = forward_sample(&truth, rows, seed ^ 0xDA7A);
+    let bn = fit(&truth.dag, &data, 1.0)?;
+
+    let t = Timer::start();
+    let model = CompiledModel::compile(&bn)?;
+    let build_secs = t.secs();
+    println!(
+        "compiled: {} cliques, max clique state space {}, built in {build_secs:.3}s",
+        model.n_cliques(),
+        model.max_clique_states()
+    );
+
+    // Query stream with batch-like structure: `group` consecutive
+    // queries share a two-variable evidence prefix and vary a third
+    // variable — the shape the batch endpoint sorts for.
+    let mut rng = Rng::new(seed + 17);
+    let mut evidence_sets: Vec<Vec<(usize, usize)>> = Vec::with_capacity(queries);
+    while evidence_sets.len() < queries {
+        let a = rng.gen_range(nodes);
+        let b = (a + 1 + rng.gen_range(nodes - 1)) % nodes;
+        let sa = rng.gen_range(bn.cards[a] as usize);
+        let sb = rng.gen_range(bn.cards[b] as usize);
+        for _ in 0..group {
+            if evidence_sets.len() >= queries {
+                break;
+            }
+            let c = (b + 1 + rng.gen_range(nodes - 1)) % nodes;
+            let mut ev = vec![(a, sa), (b, sb)];
+            if c != a && c != b {
+                ev.push((c, rng.gen_range(bn.cards[c] as usize)));
+            }
+            evidence_sets.push(ev);
+        }
+    }
+
+    // Threads scaling: static partition of the stream, one scratch per
+    // worker, shared &model.
+    let mut thread_qps = [0.0f64; 3];
+    for (slot, threads) in [1usize, 4, 8].into_iter().enumerate() {
+        let t = Timer::start();
+        std::thread::scope(|s| {
+            for w in 0..threads {
+                let model = &model;
+                let evidence_sets = &evidence_sets;
+                s.spawn(move || {
+                    let mut scratch = model.new_scratch();
+                    let mut i = w;
+                    while i < evidence_sets.len() {
+                        model
+                            .marginals(&mut scratch, &evidence_sets[i])
+                            .expect("bench query must succeed");
+                        i += threads;
+                    }
+                });
+            }
+        });
+        let qps = queries as f64 / t.secs().max(1e-9);
+        thread_qps[slot] = qps;
+        println!("threads {threads}: {qps:.1} full-posterior queries/sec");
+    }
+
+    // Singleton, cold scratch per query (PR 2 serving semantics).
+    let t = Timer::start();
+    for ev in &evidence_sets {
+        let mut scratch = model.new_scratch();
+        model.marginals(&mut scratch, ev)?;
+    }
+    let singleton_cold_qps = queries as f64 / t.secs().max(1e-9);
+    println!("singleton (cold scratch): {singleton_cold_qps:.1} queries/sec");
+
+    // Singleton, one warm scratch in arrival order.
+    let t = Timer::start();
+    {
+        let mut scratch = model.new_scratch();
+        for ev in &evidence_sets {
+            model.marginals(&mut scratch, ev)?;
+        }
+    }
+    let singleton_warm_qps = queries as f64 / t.secs().max(1e-9);
+    println!("singleton (warm scratch): {singleton_warm_qps:.1} queries/sec");
+
+    // Batch execution shape: canonical-evidence order, one warm
+    // scratch — prefix collect passes are shared.
+    let mut sorted_sets = evidence_sets.clone();
+    for ev in &mut sorted_sets {
+        ev.sort_unstable();
+    }
+    sorted_sets.sort();
+    let t = Timer::start();
+    {
+        let mut scratch = model.new_scratch();
+        for ev in &sorted_sets {
+            model.marginals(&mut scratch, ev)?;
+        }
+    }
+    let batch_qps = queries as f64 / t.secs().max(1e-9);
+    println!("batch (evidence-sorted, warm scratch): {batch_qps:.1} queries/sec");
+
+    let wall_secs = wall.secs();
+    let json = perf_record_json(
+        nodes,
+        edges,
+        rows,
+        queries,
+        group,
+        build_secs,
+        thread_qps,
+        singleton_cold_qps,
+        singleton_warm_qps,
+        batch_qps,
+        wall_secs,
+    );
+    let out = "BENCH_serve.json";
+    std::fs::write(out, &json)?;
+    println!("\nperf record written to {out} (wall {wall_secs:.1}s)");
+    Ok(())
+}
+
+/// Hand-rolled JSON (no serde offline) — same convention as the other
+/// perf records.
+#[allow(clippy::too_many_arguments)]
+fn perf_record_json(
+    nodes: usize,
+    edges: usize,
+    rows: usize,
+    queries: usize,
+    group: usize,
+    build_secs: f64,
+    thread_qps: [f64; 3],
+    singleton_cold_qps: f64,
+    singleton_warm_qps: f64,
+    batch_qps: f64,
+    wall_secs: f64,
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"bench\": \"serving\",");
+    let _ = writeln!(s, "  \"nodes\": {nodes},");
+    let _ = writeln!(s, "  \"edges\": {edges},");
+    let _ = writeln!(s, "  \"rows\": {rows},");
+    let _ = writeln!(s, "  \"queries\": {queries},");
+    let _ = writeln!(s, "  \"group\": {group},");
+    let _ = writeln!(s, "  \"compile_secs\": {build_secs:.4},");
+    let _ = writeln!(s, "  \"qps_threads_1\": {:.2},", thread_qps[0]);
+    let _ = writeln!(s, "  \"qps_threads_4\": {:.2},", thread_qps[1]);
+    let _ = writeln!(s, "  \"qps_threads_8\": {:.2},", thread_qps[2]);
+    let _ = writeln!(s, "  \"singleton_cold_qps\": {singleton_cold_qps:.2},");
+    let _ = writeln!(s, "  \"singleton_warm_qps\": {singleton_warm_qps:.2},");
+    let _ = writeln!(s, "  \"batch_qps\": {batch_qps:.2},");
+    let _ = writeln!(s, "  \"wall_secs\": {wall_secs:.2}");
+    s.push_str("}\n");
+    s
+}

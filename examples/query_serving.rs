@@ -1,25 +1,47 @@
-//! End-to-end serving demo: ring-learn a structure, fit its CPTs, and
-//! answer probabilistic queries three ways — the full
-//! data → learn → **infer** loop the serve path productionizes.
+//! End-to-end serving demo: ring-learn a structure, fit its CPTs,
+//! compile it once, and serve it to concurrent clients — the full
+//! data → learn → **serve traffic** loop.
 //!
 //! Run:  cargo run --release --example query_serving -- \
-//!           [--nodes 60] [--edges 80] [--rows 3000] [--queries 200] [--seed 1]
+//!           [--nodes 60] [--edges 80] [--rows 3000] [--queries 200] \
+//!           [--threads 4] [--seed 1]
 //!
 //! Steps: (1) generate a ground-truth network and sample a dataset;
 //! (2) learn a structure with the k=2 ring; (3) fit Dirichlet-smoothed
-//! CPTs onto the learned DAG; (4) compile a junction tree and
-//! cross-check one query against variable elimination and likelihood
-//! weighting; (5) measure full-posterior queries/sec; (6) answer one
-//! JSON request through the same `QueryServer` the `cges serve`
-//! subcommand exposes.
+//! CPTs onto the learned DAG; (4) compile one shared `CompiledModel`
+//! and cross-check a query against variable elimination; (5) measure
+//! full-posterior queries/sec single-threaded vs `--threads` workers
+//! sharing the model with per-thread scratch; (6) start the
+//! multi-client TCP server, hit it from parallel framed clients with
+//! marginal, joint-MAP and batch requests, then stop it with the
+//! shutdown sentinel.
 
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
 use cges::bn::{fit, forward_sample, generate, NetGenConfig};
 use cges::coordinator::{cges, RingConfig};
-use cges::infer::{likelihood_weighting, ve_marginal, EngineConfig, JoinTree, QueryServer};
+use cges::engine::{CompiledModel, ServeConfig, Server};
+use cges::infer::json::Json;
+use cges::infer::{ve_marginal, EngineConfig};
 use cges::rng::Rng;
 use cges::util::Timer;
+
+fn send_frame(writer: &mut impl Write, payload: &str) {
+    let bytes = payload.as_bytes();
+    writer.write_all(&(bytes.len() as u32).to_le_bytes()).unwrap();
+    writer.write_all(bytes).unwrap();
+    writer.flush().unwrap();
+}
+
+fn recv_frame(reader: &mut impl Read) -> String {
+    let mut len_bytes = [0u8; 4];
+    reader.read_exact(&mut len_bytes).unwrap();
+    let mut payload = vec![0u8; u32::from_le_bytes(len_bytes) as usize];
+    reader.read_exact(&mut payload).unwrap();
+    String::from_utf8(payload).unwrap()
+}
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -34,6 +56,7 @@ fn main() -> anyhow::Result<()> {
     let edges = get("--edges", 80);
     let rows = get("--rows", 3000);
     let queries = get("--queries", 200);
+    let threads = get("--threads", 4).max(1);
     let seed = get("--seed", 1) as u64;
 
     // (1) Ground truth + data.
@@ -63,57 +86,138 @@ fn main() -> anyhow::Result<()> {
     let bn = fit(&learned.dag, &data, 1.0)?;
     println!("fitted: {} parameters in {:.3}s", bn.parameter_count(), t.secs());
 
-    // (4) Compile the junction tree and cross-check the engines.
+    // (4) Compile once; the model is Send + Sync and every query below
+    // shares this single allocation.
     let t = Timer::start();
-    let jt = JoinTree::build(&bn)?;
+    let model = CompiledModel::compile(&bn)?;
     println!(
-        "jointree: {} cliques, max clique state space {}, built in {:.3}s",
-        jt.n_cliques(),
-        jt.max_clique_states(),
+        "compiled: {} cliques, max clique state space {}, built in {:.3}s",
+        model.n_cliques(),
+        model.max_clique_states(),
         t.secs()
     );
     let target = nodes - 1;
     let evidence = vec![(0usize, 0usize)];
-    let post = jt.posterior(&evidence)?;
+    let mut scratch = model.new_scratch();
+    let post = model.marginals(&mut scratch, &evidence)?;
     let ve = ve_marginal(&bn, target, &evidence)?;
-    let lw = likelihood_weighting(&bn, &evidence, 100_000, seed + 7)?;
-    println!("P({} | {}=0):", bn.names[target], bn.names[0]);
-    println!("  jointree  {:?}", fmt3(post.marginal(target)));
-    println!("  ve        {:?}", fmt3(&ve));
-    println!("  lw (100k) {:?}", fmt3(lw.marginal(target)));
     let max_gap = ve
         .iter()
         .zip(post.marginal(target))
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f64, f64::max);
     anyhow::ensure!(max_gap < 1e-9, "exact engines disagree by {max_gap}");
+    println!(
+        "cross-check: P({} | {}=0) agrees with variable elimination to {max_gap:.1e}",
+        bn.names[target], bn.names[0]
+    );
+    let (map_states, log_prob) = model.joint_map(&mut scratch, &evidence)?;
+    println!(
+        "joint MAP given {}=0: ln P = {log_prob:.4} (first states {:?}...)",
+        bn.names[0],
+        &map_states[..map_states.len().min(8)]
+    );
 
-    // (5) Serving throughput: every query is one evidence set and a
-    // full propagation yielding all marginals.
+    // (5) Serving throughput, single-threaded vs shared-model pool.
     let mut rng = Rng::new(seed + 99);
-    let t = Timer::start();
+    let mut evidence_sets: Vec<Vec<(usize, usize)>> = Vec::with_capacity(queries);
     for _ in 0..queries {
         let v = rng.gen_range(nodes);
         let s = rng.gen_range(bn.cards[v] as usize);
-        jt.posterior(&[(v, s)])?;
+        evidence_sets.push(vec![(v, s)]);
     }
-    let secs = t.secs();
+    let t = Timer::start();
+    for ev in &evidence_sets {
+        model.marginals(&mut scratch, ev)?;
+    }
+    let single_qps = queries as f64 / t.secs().max(1e-9);
+    println!("1 thread : {single_qps:.0} full-posterior queries/sec");
+    let t = Timer::start();
+    std::thread::scope(|s| {
+        for w in 0..threads {
+            let model = &model;
+            let evidence_sets = &evidence_sets;
+            s.spawn(move || {
+                let mut scratch = model.new_scratch();
+                let mut i = w;
+                while i < evidence_sets.len() {
+                    model.marginals(&mut scratch, &evidence_sets[i]).expect("query");
+                    i += threads;
+                }
+            });
+        }
+    });
+    let pool_qps = queries as f64 / t.secs().max(1e-9);
     println!(
-        "{queries} full-posterior queries in {secs:.2}s ({:.0} queries/sec)",
-        queries as f64 / secs.max(1e-9)
+        "{threads} threads: {pool_qps:.0} queries/sec ({:.2}x, one CompiledModel, per-thread scratch)",
+        pool_qps / single_qps.max(1e-9)
     );
 
-    // (6) The serve path, in-process.
-    let mut server = QueryServer::new(&bn, &EngineConfig::default())?;
-    let request = format!(
-        r#"{{"id": 1, "type": "marginal", "targets": ["{}"], "evidence": {{"{}": 0}}}}"#,
-        bn.names[target], bn.names[0]
-    );
-    println!("serve> {request}");
-    println!("serve< {}", server.handle(&request));
+    // (6) The multi-client TCP server, in-process: parallel framed
+    // clients, a batch request, then the shutdown sentinel.
+    let server = Server::new(
+        &bn,
+        &EngineConfig::default(),
+        ServeConfig { threads, ..Default::default() },
+    )?;
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    println!("serving on {addr} with {threads} handler threads");
+    std::thread::scope(|s| {
+        let server = &server;
+        s.spawn(move || server.serve_tcp(&listener, None).expect("serve"));
+
+        // Three concurrent clients, one marginal query each.
+        let mut clients = Vec::new();
+        for c in 0..3usize {
+            let name = bn.names[c].clone();
+            clients.push(s.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = BufWriter::new(stream);
+                send_frame(
+                    &mut writer,
+                    &format!(r#"{{"id": {c}, "type": "marginal", "targets": ["{name}"]}}"#),
+                );
+                let resp = recv_frame(&mut reader);
+                let v = Json::parse(&resp).unwrap();
+                assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+                resp
+            }));
+        }
+        for (c, h) in clients.into_iter().enumerate() {
+            let resp = h.join().unwrap();
+            println!("client {c} < {}", &resp[..resp.len().min(100)]);
+        }
+
+        // One more client: a batch sharing an evidence prefix, a joint
+        // MAP, and finally the shutdown sentinel.
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        let batch = format!(
+            r#"{{"id": 10, "type": "batch", "queries": [
+                {{"id": 0, "targets": ["{t0}"], "evidence": {{"{e}": 0}}}},
+                {{"id": 1, "targets": ["{t1}"], "evidence": {{"{e}": 0}}}},
+                {{"id": 2, "type": "joint_map", "evidence": {{"{e}": 0}}}}
+            ]}}"#,
+            t0 = bn.names[target],
+            t1 = bn.names[target / 2],
+            e = bn.names[0],
+        );
+        send_frame(&mut writer, &batch);
+        let resp = recv_frame(&mut reader);
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        let n_results = v.get("results").and_then(Json::as_array).map(|r| r.len()).unwrap_or(0);
+        println!("batch   < {n_results} results, {} bytes (shared-prefix collect pass reused)", resp.len());
+
+        send_frame(&mut writer, r#"{"type": "shutdown"}"#);
+        let ack = recv_frame(&mut reader);
+        println!("shutdown < {ack}");
+        // serve_tcp returns once the sentinel latches; the scope joins
+        // the server thread.
+    });
+    println!("server drained cleanly");
     Ok(())
-}
-
-fn fmt3(dist: &[f64]) -> Vec<String> {
-    dist.iter().map(|p| format!("{p:.4}")).collect()
 }

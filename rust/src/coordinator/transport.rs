@@ -57,7 +57,7 @@ use crate::graph::codec::{
     decode_dag, encode_dag, put_f64, put_u32, take_f64, take_u32, take_u8,
 };
 use crate::graph::Dag;
-use crate::util::Timer;
+use crate::util::{ensure_frame_len, Timer};
 
 /// One probe of the convergence token: the best BDeu score seen for
 /// `round` across the `hops` workers it has visited so far.
@@ -289,9 +289,7 @@ impl RingTx for WireTx {
         let codec_secs = t.secs();
 
         let len = u32::try_from(self.scratch.len()).context("frame too large for u32 prefix")?;
-        if len > MAX_FRAME_BYTES {
-            bail!("frame of {len} bytes exceeds cap {MAX_FRAME_BYTES}");
-        }
+        ensure_frame_len("outgoing", len, MAX_FRAME_BYTES)?;
         self.stream.write_all(&len.to_le_bytes()).context("write frame length")?;
         self.stream.write_all(&self.scratch).context("write frame payload")?;
         self.stream.flush().context("flush frame")?;
@@ -307,9 +305,7 @@ impl RingRx for WireRx {
         let mut len_bytes = [0u8; 4];
         self.stream.read_exact(&mut len_bytes).context("read frame length")?;
         let len = u32::from_le_bytes(len_bytes);
-        if len > MAX_FRAME_BYTES {
-            bail!("incoming frame of {len} bytes exceeds cap {MAX_FRAME_BYTES}");
-        }
+        ensure_frame_len("incoming", len, MAX_FRAME_BYTES)?;
         let mut payload = vec![0u8; len as usize];
         self.stream.read_exact(&mut payload).context("read frame payload")?;
         let wait_secs = t.secs();

@@ -1,0 +1,567 @@
+//! The compiled-model / scratch split that makes serving concurrent.
+//!
+//! [`CompiledModel`] is everything about a fitted network that never
+//! changes between queries: the jointree topology (cliques, a *fixed*
+//! rooted message schedule with per-clique parents, children and
+//! separators), the evidence-free clique potentials with every CPT
+//! multiplied in, and each variable's home clique. It holds no
+//! interior mutability, so it is `Send + Sync` and one `Arc` (or plain
+//! reference) can back any number of connection-handler threads.
+//!
+//! [`Scratch`] is everything a propagation mutates: the current
+//! evidence-absorbed potentials and the message buffers. Each serving
+//! thread owns one, so the hot path `marginals(&self, &mut Scratch,
+//! ..)` takes no lock anywhere.
+//!
+//! The scratch doubles as an incremental-evidence cache: collect-pass
+//! messages are kept between queries together with the evidence each
+//! clique has absorbed, and changing evidence only invalidates the
+//! messages on the paths from re-absorbed cliques up to their roots
+//! (a collect message depends exactly on the potentials in its
+//! subtree). Consecutive queries that share an evidence prefix —
+//! the shape the batch endpoint sorts for — therefore reuse every
+//! message outside the changed subtrees, and identical evidence reuses
+//! the entire collect pass.
+//!
+//! [`joint_map`](CompiledModel::joint_map) runs max-product over the
+//! same compiled tree: a collect pass with max-marginalization, then a
+//! root-to-leaf decode that argmaxes each clique belief consistent
+//! with the states already decided (the running-intersection property
+//! makes those exactly the parent separator). Ties break toward the
+//! lowest mixed-radix table index (see
+//! [`Factor::argmax_consistent`]), so concurrent and sequential runs
+//! return byte-identical assignments.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::bn::DiscreteBn;
+use crate::graph::moral_graph;
+use crate::infer::factor::Factor;
+use crate::infer::triangulate::{triangulate, Triangulation};
+use crate::infer::Posterior;
+use crate::util::BitSet;
+
+/// A frozen, shareable compilation of one discrete Bayesian network:
+/// jointree topology, CPT-assigned potentials and message schedule.
+pub struct CompiledModel {
+    names: Vec<String>,
+    cards: Vec<usize>,
+    cliques: Vec<Vec<usize>>,
+    /// Schedule parent of each clique (`None` for component roots).
+    parent: Vec<Option<usize>>,
+    /// Schedule children of each clique.
+    children: Vec<Vec<usize>>,
+    /// Separator between a clique and its schedule parent (empty for
+    /// roots).
+    sep: Vec<Vec<usize>>,
+    /// BFS order over all components: every parent precedes its
+    /// children, so iterating forward is the distribute order and
+    /// backward the collect order.
+    order: Vec<usize>,
+    /// One root clique per tree component.
+    roots: Vec<usize>,
+    /// Evidence-free clique potentials (CPTs multiplied in).
+    base: Vec<Factor>,
+    /// For each variable, a clique containing its whole family.
+    var_home: Vec<usize>,
+    max_clique_states: u64,
+}
+
+/// Per-thread propagation state: current potentials, message buffers
+/// and the incremental-evidence cache. Create with
+/// [`CompiledModel::new_scratch`]; reuse across queries for the
+/// collect-message cache to pay off.
+pub struct Scratch {
+    /// Current potentials: base × absorbed evidence indicators.
+    pots: Vec<Factor>,
+    /// Evidence pairs currently absorbed into each clique (sorted).
+    clique_ev: Vec<Vec<(usize, usize)>>,
+    /// Cached collect message clique → schedule parent.
+    up: Vec<Option<Factor>>,
+    /// Log-normalizer of each cached collect message.
+    up_logz: Vec<f64>,
+    /// Is `up[c]` stale relative to `pots`?
+    dirty: Vec<bool>,
+    /// Distribute message schedule-parent → clique (rebuilt per query).
+    down: Vec<Option<Factor>>,
+    /// Canonical (sorted) evidence currently absorbed.
+    evidence: Vec<(usize, usize)>,
+}
+
+impl Scratch {
+    /// A scratch with no buffers, for engines that never propagate
+    /// (the sampling fallback).
+    pub fn empty() -> Scratch {
+        Scratch {
+            pots: Vec::new(),
+            clique_ev: Vec::new(),
+            up: Vec::new(),
+            up_logz: Vec::new(),
+            dirty: Vec::new(),
+            down: Vec::new(),
+            evidence: Vec::new(),
+        }
+    }
+}
+
+impl CompiledModel {
+    /// Compile `bn` (moralizes and triangulates internally).
+    pub fn compile(bn: &DiscreteBn) -> Result<CompiledModel> {
+        let tri = triangulate(&moral_graph(&bn.dag), &bn.cards);
+        Self::compile_from(bn, tri)
+    }
+
+    /// Compile from a precomputed triangulation of `bn`'s moral graph
+    /// (budget probes reuse their triangulation instead of running
+    /// min-fill twice).
+    pub fn compile_from(bn: &DiscreteBn, tri: Triangulation) -> Result<CompiledModel> {
+        let n = bn.n();
+        ensure!(n > 0, "cannot compile a model over zero variables");
+        let cards: Vec<usize> = bn.cards.iter().map(|&c| c as usize).collect();
+        let cliques = tri.cliques;
+        let nc = cliques.len();
+        let clique_sets: Vec<BitSet> =
+            cliques.iter().map(|c| BitSet::from_iter(n, c.iter().copied())).collect();
+
+        // Maximum-weight spanning forest over separator sizes (Kruskal):
+        // on a chordal graph's maximal cliques this yields a valid
+        // junction tree (running intersection property).
+        let mut candidates: Vec<(usize, usize, usize)> = Vec::new(); // (sep_size, i, j)
+        for i in 0..nc {
+            for j in (i + 1)..nc {
+                let s = clique_sets[i].intersection(&clique_sets[j]).count();
+                if s > 0 {
+                    candidates.push((s, i, j));
+                }
+            }
+        }
+        candidates.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+
+        let mut uf: Vec<usize> = (0..nc).collect();
+        fn find(uf: &mut [usize], mut x: usize) -> usize {
+            while uf[x] != x {
+                uf[x] = uf[uf[x]];
+                x = uf[x];
+            }
+            x
+        }
+        let mut adjacency: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); nc];
+        for (_, i, j) in candidates {
+            let (ri, rj) = (find(&mut uf, i), find(&mut uf, j));
+            if ri == rj {
+                continue;
+            }
+            uf[ri] = rj;
+            let s: Vec<usize> = clique_sets[i].intersection(&clique_sets[j]).to_vec();
+            adjacency[i].push((j, s.clone()));
+            adjacency[j].push((i, s));
+        }
+
+        // Freeze the message schedule: root every component at its
+        // lowest-index clique and BFS, so parents always precede
+        // children in `order`.
+        let mut parent: Vec<Option<usize>> = vec![None; nc];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); nc];
+        let mut sep: Vec<Vec<usize>> = vec![Vec::new(); nc];
+        let mut order: Vec<usize> = Vec::with_capacity(nc);
+        let mut roots: Vec<usize> = Vec::new();
+        let mut visited = vec![false; nc];
+        for r in 0..nc {
+            if visited[r] {
+                continue;
+            }
+            visited[r] = true;
+            roots.push(r);
+            let mut head = order.len();
+            order.push(r);
+            while head < order.len() {
+                let c = order[head];
+                head += 1;
+                for (o, s) in &adjacency[c] {
+                    if !visited[*o] {
+                        visited[*o] = true;
+                        parent[*o] = Some(c);
+                        children[c].push(*o);
+                        sep[*o] = s.clone();
+                        order.push(*o);
+                    }
+                }
+            }
+        }
+
+        // Assign each family to the smallest containing clique and
+        // multiply its CPT in.
+        let mut base: Vec<Factor> =
+            cliques.iter().map(|c| Factor::ones(c.clone(), &bn.cards)).collect();
+        let mut var_home = vec![usize::MAX; n];
+        for v in 0..n {
+            let mut fam = BitSet::new(n);
+            fam.insert(v);
+            fam.union_with(bn.dag.parents(v));
+            let mut chosen: Option<(u64, usize)> = None; // (state space, clique)
+            for (ci, cs) in clique_sets.iter().enumerate() {
+                if !fam.is_subset(cs) {
+                    continue;
+                }
+                let weight = cliques[ci]
+                    .iter()
+                    .fold(1u64, |acc, &x| acc.saturating_mul(cards[x] as u64));
+                let better = match chosen {
+                    None => true,
+                    Some((w, _)) => weight < w,
+                };
+                if better {
+                    chosen = Some((weight, ci));
+                }
+            }
+            let Some((_, ci)) = chosen else {
+                bail!("family of variable {v} fits no clique — triangulation is inconsistent");
+            };
+            var_home[v] = ci;
+            base[ci] = Factor::product(&base[ci], &Factor::from_cpt(bn, v));
+        }
+
+        Ok(CompiledModel {
+            names: bn.names.clone(),
+            cards,
+            cliques,
+            parent,
+            children,
+            sep,
+            order,
+            roots,
+            base,
+            var_home,
+            max_clique_states: tri.max_clique_states,
+        })
+    }
+
+    /// Number of variables.
+    pub fn n_vars(&self) -> usize {
+        self.cards.len()
+    }
+
+    /// Number of cliques.
+    pub fn n_cliques(&self) -> usize {
+        self.cliques.len()
+    }
+
+    /// Largest clique joint state space (treewidth proxy).
+    pub fn max_clique_states(&self) -> u64 {
+        self.max_clique_states
+    }
+
+    /// Variable names, in network order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Cardinality of variable `v`.
+    pub fn card(&self, v: usize) -> usize {
+        self.cards[v]
+    }
+
+    /// Fresh propagation buffers for this model (one per serving
+    /// thread; queries then need only `&self`).
+    pub fn new_scratch(&self) -> Scratch {
+        let nc = self.cliques.len();
+        Scratch {
+            pots: self.base.clone(),
+            clique_ev: vec![Vec::new(); nc],
+            up: vec![None; nc],
+            up_logz: vec![0.0; nc],
+            dirty: vec![true; nc],
+            down: vec![None; nc],
+            evidence: Vec::new(),
+        }
+    }
+
+    /// Absorb `evidence` into the scratch potentials, invalidating
+    /// exactly the cached collect messages whose subtree changed.
+    fn set_evidence(&self, s: &mut Scratch, evidence: &[(usize, usize)]) -> Result<()> {
+        let n = self.cards.len();
+        for &(v, st) in evidence {
+            ensure!(v < n, "evidence variable {v} out of range (n = {n})");
+            ensure!(
+                st < self.cards[v],
+                "evidence state {st} out of range for variable {v} (cardinality {})",
+                self.cards[v]
+            );
+        }
+        let mut ev: Vec<(usize, usize)> = evidence.to_vec();
+        ev.sort_unstable();
+        if ev == s.evidence {
+            return Ok(());
+        }
+        // Cliques whose absorbed indicators may differ between the old
+        // and new evidence sets.
+        let mut touched: Vec<usize> =
+            ev.iter().chain(s.evidence.iter()).map(|&(v, _)| self.var_home[v]).collect();
+        touched.sort_unstable();
+        touched.dedup();
+        for &c in &touched {
+            let new_ev: Vec<(usize, usize)> =
+                ev.iter().copied().filter(|&(v, _)| self.var_home[v] == c).collect();
+            if new_ev == s.clique_ev[c] {
+                continue;
+            }
+            let mut pot = self.base[c].clone();
+            for &(v, st) in &new_ev {
+                pot = Factor::product(&pot, &Factor::indicator(v, self.cards[v], st));
+            }
+            s.pots[c] = pot;
+            s.clique_ev[c] = new_ev;
+            // Invalidate every collect message between c and its root.
+            // Dirtiness is kept upward-closed along schedule paths, so
+            // the walk can stop at the first already-dirty hop.
+            let mut x = c;
+            loop {
+                if s.dirty[x] {
+                    break;
+                }
+                s.dirty[x] = true;
+                match self.parent[x] {
+                    Some(p) => x = p,
+                    None => break,
+                }
+            }
+        }
+        s.evidence = ev;
+        Ok(())
+    }
+
+    /// Collect pass: recompute only the stale messages (leaves toward
+    /// roots), reusing every cached message whose subtree evidence is
+    /// unchanged.
+    fn collect(&self, s: &mut Scratch) -> Result<()> {
+        for &c in self.order.iter().rev() {
+            if self.parent[c].is_none() {
+                s.dirty[c] = false;
+                continue;
+            }
+            if !s.dirty[c] {
+                continue;
+            }
+            let mut f = s.pots[c].clone();
+            for &k in &self.children[c] {
+                let inc = s.up[k].as_ref().expect("child collect message ready");
+                f = Factor::product(&f, inc);
+            }
+            let mut m = f.marginalize_to(&self.sep[c]);
+            let z = m.normalize();
+            if z <= 0.0 {
+                bail!("evidence has probability zero");
+            }
+            s.up_logz[c] = z.ln();
+            s.up[c] = Some(m);
+            s.dirty[c] = false;
+        }
+        Ok(())
+    }
+
+    /// Exact posterior over every variable given `evidence`
+    /// (`(variable, state)` pairs). Errors on out-of-range evidence or
+    /// evidence of probability zero. Lock-free: `&self` plus the
+    /// caller's scratch.
+    pub fn marginals(&self, s: &mut Scratch, evidence: &[(usize, usize)]) -> Result<Posterior> {
+        self.set_evidence(s, evidence)?;
+        self.collect(s)?;
+
+        // Message normalizers plus the root belief masses telescope to
+        // P(evidence), in log space.
+        let mut log_evidence: f64 = self
+            .order
+            .iter()
+            .filter(|&&c| self.parent[c].is_some())
+            .map(|&c| s.up_logz[c])
+            .sum();
+        for &r in &self.roots {
+            let mut b = s.pots[r].clone();
+            for &k in &self.children[r] {
+                b = Factor::product(&b, s.up[k].as_ref().expect("root message ready"));
+            }
+            let z = b.total();
+            if z <= 0.0 {
+                bail!("evidence has probability zero");
+            }
+            log_evidence += z.ln();
+        }
+
+        // Distribute pass, roots toward leaves. Not cached: each
+        // message folds in every other branch of the tree, so almost
+        // any evidence change would invalidate it anyway.
+        for &c in &self.order {
+            for &k in &self.children[c] {
+                let mut f = s.pots[c].clone();
+                if self.parent[c].is_some() {
+                    f = Factor::product(&f, s.down[c].as_ref().expect("parent message ready"));
+                }
+                for &k2 in &self.children[c] {
+                    if k2 == k {
+                        continue;
+                    }
+                    f = Factor::product(&f, s.up[k2].as_ref().expect("sibling message ready"));
+                }
+                let mut m = f.marginalize_to(&self.sep[k]);
+                if m.normalize() <= 0.0 {
+                    bail!("evidence has probability zero");
+                }
+                s.down[k] = Some(m);
+            }
+        }
+
+        // Calibrated beliefs → all single-variable marginals.
+        let n = self.cards.len();
+        let mut beliefs: Vec<Option<Factor>> = vec![None; self.cliques.len()];
+        let mut marginals: Vec<Vec<f64>> = Vec::with_capacity(n);
+        for v in 0..n {
+            let c = self.var_home[v];
+            if beliefs[c].is_none() {
+                let mut b = s.pots[c].clone();
+                if self.parent[c].is_some() {
+                    b = Factor::product(&b, s.down[c].as_ref().expect("down message ready"));
+                }
+                for &k in &self.children[c] {
+                    b = Factor::product(&b, s.up[k].as_ref().expect("up message ready"));
+                }
+                beliefs[c] = Some(b);
+            }
+            marginals.push(beliefs[c].as_ref().expect("belief just built").marginal_of(v));
+        }
+
+        Ok(Posterior { marginals, log_evidence })
+    }
+
+    /// Exact joint MAP: the single complete assignment maximizing
+    /// P(x | evidence), with `ln max_x P(x, evidence)`. Max-product
+    /// collect over the compiled tree, then a root-to-leaf decode; the
+    /// returned assignment always agrees with the evidence. Per-clique
+    /// ties break toward the lowest mixed-radix cell (see
+    /// [`Factor::argmax_consistent`]), deterministically.
+    pub fn joint_map(
+        &self,
+        s: &mut Scratch,
+        evidence: &[(usize, usize)],
+    ) -> Result<(Vec<usize>, f64)> {
+        self.set_evidence(s, evidence)?;
+        let nc = self.cliques.len();
+
+        // Max-product collect. Own message buffers: a different
+        // semiring than the cached sum-product sweep (the sum cache
+        // stays valid — both read the same absorbed potentials). The
+        // pre-marginalization clique products are kept: the decode
+        // pass below argmaxes exactly these, so recomputing them would
+        // double the factor-product work per query.
+        let mut up: Vec<Option<Factor>> = vec![None; nc];
+        let mut prods: Vec<Option<Factor>> = vec![None; nc];
+        let mut log_map = 0.0f64;
+        for &c in self.order.iter().rev() {
+            let mut f = s.pots[c].clone();
+            for &k in &self.children[c] {
+                f = Factor::product(&f, up[k].as_ref().expect("child max-message ready"));
+            }
+            if self.parent[c].is_some() {
+                let mut m = f.max_marginalize_to(&self.sep[c]);
+                let z = m.table.iter().fold(0.0f64, |a, &b| a.max(b));
+                if z <= 0.0 {
+                    bail!("evidence has probability zero");
+                }
+                let inv = 1.0 / z;
+                m.table.iter_mut().for_each(|x| *x *= inv);
+                log_map += z.ln();
+                up[c] = Some(m);
+            }
+            prods[c] = Some(f);
+        }
+
+        // Decode, roots toward leaves: argmax each clique belief
+        // consistent with the states already decided. By the running
+        // intersection property the decided variables of a clique are
+        // exactly its parent separator, so any consistent argmax
+        // extends to a global maximizer.
+        let n = self.cards.len();
+        let mut assign: Vec<Option<usize>> = vec![None; n];
+        for &c in &self.order {
+            let b = prods[c].as_ref().expect("clique max-product ready");
+            let (digits, val) = b.argmax_consistent(&assign);
+            if val <= 0.0 {
+                bail!("evidence has probability zero");
+            }
+            if self.parent[c].is_none() {
+                // Root maxima close each component's MAP mass; inner
+                // cliques' mass is already inside the messages.
+                log_map += val.ln();
+            }
+            for (&v, &d) in b.vars.iter().zip(&digits) {
+                assign[v] = Some(d);
+            }
+        }
+        let assignment: Vec<usize> =
+            assign.into_iter().map(|a| a.expect("every variable lives in a clique")).collect();
+        Ok((assignment, log_map))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+
+    #[test]
+    fn compiled_model_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<CompiledModel>();
+    }
+
+    #[test]
+    fn marginals_match_jointree_semantics() {
+        let bn = tiny_bn();
+        let m = CompiledModel::compile(&bn).unwrap();
+        let mut s = m.new_scratch();
+        let post = m.marginals(&mut s, &[]).unwrap();
+        assert!((post.marginal(0)[0] - 0.7).abs() < 1e-12);
+        assert!((post.marginal(1)[0] - 0.69).abs() < 1e-12);
+        assert!(post.log_evidence.abs() < 1e-12);
+
+        let post = m.marginals(&mut s, &[(1, 1)]).unwrap();
+        let pe = 0.7 * 0.1 + 0.3 * 0.8;
+        assert!((post.log_evidence - pe.ln()).abs() < 1e-12);
+        assert!((post.marginal(0)[0] - 0.07 / pe).abs() < 1e-12);
+
+        // Back to no evidence on the same scratch: the cache must not
+        // leak the old indicators.
+        let post = m.marginals(&mut s, &[]).unwrap();
+        assert!((post.marginal(0)[0] - 0.7).abs() < 1e-12);
+        assert!(post.log_evidence.abs() < 1e-12);
+    }
+
+    #[test]
+    fn joint_map_on_tiny_bn() {
+        // Joint probabilities: (0,0)=0.63 (0,1)=0.07 (1,0)=0.06 (1,1)=0.24.
+        let bn = tiny_bn();
+        let m = CompiledModel::compile(&bn).unwrap();
+        let mut s = m.new_scratch();
+        let (x, lp) = m.joint_map(&mut s, &[]).unwrap();
+        assert_eq!(x, vec![0, 0]);
+        assert!((lp - 0.63f64.ln()).abs() < 1e-12);
+
+        // Conditioning on b=1 flips the maximizer to (1,1).
+        let (x, lp) = m.joint_map(&mut s, &[(1, 1)]).unwrap();
+        assert_eq!(x, vec![1, 1]);
+        assert!((lp - 0.24f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_and_zero_probability_evidence() {
+        let bn = tiny_bn();
+        let m = CompiledModel::compile(&bn).unwrap();
+        let mut s = m.new_scratch();
+        assert!(m.marginals(&mut s, &[(5, 0)]).is_err());
+        assert!(m.marginals(&mut s, &[(0, 9)]).is_err());
+        assert!(m.marginals(&mut s, &[(0, 0), (0, 1)]).is_err());
+        assert!(m.joint_map(&mut s, &[(0, 0), (0, 1)]).is_err());
+        // The scratch stays usable after a zero-probability bail.
+        let post = m.marginals(&mut s, &[]).unwrap();
+        assert!((post.marginal(0)[0] - 0.7).abs() < 1e-12);
+    }
+}

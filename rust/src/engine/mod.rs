@@ -1,0 +1,183 @@
+//! Concurrent batched query engine — the serving layer.
+//!
+//! PR 2's [`infer`](crate::infer) answered queries through a
+//! single-threaded `&mut Engine`; this subsystem splits that into an
+//! immutable [`CompiledModel`] (frozen jointree topology, CPT-assigned
+//! potentials, precomputed message schedule — `Send + Sync`, shared by
+//! reference or `Arc`) and cheap per-thread [`Scratch`] buffers, so
+//! `query(&self, &mut Scratch, ..)` holds no lock on the propagation
+//! hot path. On top of it:
+//!
+//! * [`SharedEngine`] — the concurrent analog of
+//!   [`infer::Engine`](crate::infer::Engine): exact compiled model or
+//!   seeded likelihood-weighting fallback, method/budget selection per
+//!   the same [`EngineConfig`];
+//! * [`protocol`] — the JSON request surface (`marginal`, `map`,
+//!   `joint_map`, `batch`, shutdown sentinel), shared by every medium;
+//! * [`server`] — a multi-client TCP server (bounded thread pool,
+//!   per-connection framing, graceful shutdown) with the NDJSON line
+//!   mode as a thin adapter.
+//!
+//! `infer::Engine`, `infer::JoinTree` and `infer::QueryServer` remain
+//! as compatibility shims over these types.
+
+pub mod compiled;
+pub mod protocol;
+pub mod server;
+
+pub use compiled::{CompiledModel, Scratch};
+pub use server::{Server, ServeConfig};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::bn::DiscreteBn;
+use crate::graph::moral_graph;
+use crate::infer::triangulate::triangulate;
+use crate::infer::{likelihood_weighting, EngineConfig, Method, Posterior};
+
+/// A compiled inference engine whose queries take `&self`: safe to
+/// share across serving threads.
+pub enum SharedEngine {
+    /// Exact two-pass propagation over a compiled jointree.
+    Exact(CompiledModel),
+    /// Likelihood weighting over a retained copy of the network. Each
+    /// query draws a fresh particle seed from the shared counter, so
+    /// repeated identical queries are independent estimates; under
+    /// concurrency the seed *assignment* to queries follows arrival
+    /// order (the estimate sequence is deterministic only
+    /// single-threaded).
+    Sampled {
+        /// The fitted network.
+        bn: Box<DiscreteBn>,
+        /// Particles per query.
+        samples: usize,
+        /// Base seed.
+        seed: u64,
+        /// Per-query sequence number.
+        counter: AtomicU64,
+    },
+}
+
+impl SharedEngine {
+    /// Build an engine per `cfg` — same selection rules as
+    /// [`infer::Engine::build`](crate::infer::Engine::build).
+    pub fn build(bn: &DiscreteBn, cfg: &EngineConfig) -> Result<SharedEngine> {
+        let sampled = |cfg: &EngineConfig| SharedEngine::Sampled {
+            bn: Box::new(bn.clone()),
+            samples: cfg.samples,
+            seed: cfg.seed,
+            counter: AtomicU64::new(0),
+        };
+        match cfg.method {
+            Method::JoinTree => Ok(SharedEngine::Exact(CompiledModel::compile(bn)?)),
+            Method::Lw => Ok(sampled(cfg)),
+            Method::Auto => {
+                let tri = triangulate(&moral_graph(&bn.dag), &bn.cards);
+                if tri.max_clique_states <= cfg.budget {
+                    Ok(SharedEngine::Exact(CompiledModel::compile_from(bn, tri)?))
+                } else {
+                    Ok(sampled(cfg))
+                }
+            }
+            Method::Ve => bail!(
+                "variable elimination is per-query; use `query --method ve` or ve_marginal()"
+            ),
+        }
+    }
+
+    /// Engine name for telemetry and responses.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SharedEngine::Exact(_) => "jointree",
+            SharedEngine::Sampled { .. } => "lw",
+        }
+    }
+
+    /// Variable names, in network order.
+    pub fn names(&self) -> &[String] {
+        match self {
+            SharedEngine::Exact(m) => m.names(),
+            SharedEngine::Sampled { bn, .. } => &bn.names,
+        }
+    }
+
+    /// Cardinality of variable `v`.
+    pub fn card(&self, v: usize) -> u32 {
+        match self {
+            SharedEngine::Exact(m) => m.card(v) as u32,
+            SharedEngine::Sampled { bn, .. } => bn.cards[v],
+        }
+    }
+
+    /// Number of variables.
+    pub fn n_vars(&self) -> usize {
+        self.names().len()
+    }
+
+    /// Fresh per-thread propagation buffers (empty for the sampling
+    /// engine, which keeps no state between queries).
+    pub fn new_scratch(&self) -> Scratch {
+        match self {
+            SharedEngine::Exact(m) => m.new_scratch(),
+            SharedEngine::Sampled { .. } => Scratch::empty(),
+        }
+    }
+
+    /// Posterior for one evidence set.
+    pub fn posterior(&self, scratch: &mut Scratch, evidence: &[(usize, usize)]) -> Result<Posterior> {
+        match self {
+            SharedEngine::Exact(m) => m.marginals(scratch, evidence),
+            SharedEngine::Sampled { bn, samples, seed, counter } => {
+                let k = counter.fetch_add(1, Ordering::Relaxed);
+                // splitmix-style spread so consecutive queries land on
+                // well-separated particle streams.
+                let qseed = seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+                likelihood_weighting(bn, evidence, *samples, qseed)
+            }
+        }
+    }
+
+    /// Exact joint MAP assignment (exact engine only).
+    pub fn joint_map(
+        &self,
+        scratch: &mut Scratch,
+        evidence: &[(usize, usize)],
+    ) -> Result<(Vec<usize>, f64)> {
+        match self {
+            SharedEngine::Exact(m) => m.joint_map(scratch, evidence),
+            SharedEngine::Sampled { .. } => bail!(
+                "joint_map needs the exact engine (network exceeded the clique budget; \
+                 raise --budget or force --method jointree)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+
+    #[test]
+    fn shared_engine_is_send_sync_and_selects_like_engine() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SharedEngine>();
+
+        let bn = tiny_bn();
+        let e = SharedEngine::build(&bn, &EngineConfig::default()).unwrap();
+        assert_eq!(e.name(), "jointree");
+        let mut s = e.new_scratch();
+        let post = e.posterior(&mut s, &[]).unwrap();
+        assert!((post.marginal(0)[0] - 0.7).abs() < 1e-12);
+
+        let cfg = EngineConfig { budget: 1, samples: 50_000, ..Default::default() };
+        let e = SharedEngine::build(&bn, &cfg).unwrap();
+        assert_eq!(e.name(), "lw");
+        let mut s = e.new_scratch();
+        let post = e.posterior(&mut s, &[]).unwrap();
+        assert!((post.marginal(0)[0] - 0.7).abs() < 0.02);
+        assert!(e.joint_map(&mut s, &[]).is_err());
+    }
+}

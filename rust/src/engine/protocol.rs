@@ -1,0 +1,346 @@
+//! The JSON query protocol, shared by every serving medium.
+//!
+//! One JSON object per request, one per response; the same shapes ride
+//! the NDJSON line mode and the length-prefixed TCP frames. Evidence
+//! states are indices or `s<k>` names; `targets` defaults to every
+//! variable.
+//!
+//! ```json
+//! {"id": 1, "type": "marginal", "targets": ["X3"], "evidence": {"X0": 0}}
+//! {"id": 2, "type": "map", "evidence": {"X1": "s1"}}
+//! {"id": 3, "type": "joint_map", "evidence": {"X1": 1}}
+//! {"id": 4, "type": "batch", "queries": [{"id": 0, ...}, {"id": 1, ...}]}
+//! {"type": "shutdown"}
+//! ```
+//!
+//! * `marginal` answers `"marginals": {name: [p...]}`;
+//! * `map` answers `"map": {name: state}` — *per-variable* posterior
+//!   modes (each variable's own argmax, ties to the lowest state);
+//! * `joint_map` answers `"assignment": {name: state}` plus
+//!   `"log_prob"` — the single most probable *complete* assignment,
+//!   from a max-product sweep (not the same thing as `map` once
+//!   variables are correlated);
+//! * `batch` carries sub-queries and answers `"results": [...]`, one
+//!   full response object per sub-query in request order. Before
+//!   answering, sub-queries are *processed* in canonical-evidence
+//!   order so consecutive ones share evidence prefixes and the scratch
+//!   message cache reuses their collect passes; answers are identical
+//!   to issuing the queries one at a time (exact engine).
+//! * `shutdown` is the serving sentinel; media decide what it stops
+//!   (the TCP server drains its pool, the line adapter returns).
+//!
+//! Responses echo `id`, report the engine and, for posterior queries,
+//! `log_evidence`. Failures answer `{"ok": false, "error": ...}`
+//! without dropping the stream; inside a batch, a failing sub-query
+//! yields a failing *sub-result* while its siblings still answer.
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::engine::{Scratch, SharedEngine};
+use crate::infer::json::Json;
+use crate::infer::Posterior;
+
+/// Default cap on sub-queries per batch request (CLI `--batch`).
+pub const DEFAULT_MAX_BATCH: usize = 256;
+
+/// Answer one JSON request text with one JSON response text.
+pub fn handle_request(
+    engine: &SharedEngine,
+    scratch: &mut Scratch,
+    request: &str,
+    max_batch: usize,
+) -> String {
+    let parsed = match Json::parse(request) {
+        Ok(v) => v,
+        Err(e) => return error_response(Json::Null, &format!("bad json: {e:#}")).to_string(),
+    };
+    answer(engine, scratch, &parsed, max_batch).to_string()
+}
+
+/// Answer one parsed request; never errors (failures become error
+/// response objects).
+pub fn answer(engine: &SharedEngine, scratch: &mut Scratch, req: &Json, max_batch: usize) -> Json {
+    let id = req.get("id").cloned().unwrap_or(Json::Null);
+    match answer_inner(engine, scratch, req, max_batch) {
+        Ok(body) => body,
+        Err(e) => error_response(id, &format!("{e:#}")),
+    }
+}
+
+/// Is this request the shutdown sentinel?
+pub fn is_shutdown(req: &Json) -> bool {
+    req.get("type").and_then(Json::as_str) == Some("shutdown")
+}
+
+/// Acknowledgement for the shutdown sentinel.
+pub fn shutdown_response(id: Json) -> Json {
+    Json::Obj(vec![
+        ("id".to_string(), id),
+        ("ok".to_string(), Json::Bool(true)),
+        ("shutdown".to_string(), Json::Bool(true)),
+    ])
+}
+
+/// A failure response echoing the request id.
+pub fn error_response(id: Json, message: &str) -> Json {
+    Json::Obj(vec![
+        ("id".to_string(), id),
+        ("ok".to_string(), Json::Bool(false)),
+        ("error".to_string(), Json::Str(message.to_string())),
+    ])
+}
+
+fn answer_inner(
+    engine: &SharedEngine,
+    scratch: &mut Scratch,
+    req: &Json,
+    max_batch: usize,
+) -> Result<Json> {
+    let id = req.get("id").cloned().unwrap_or(Json::Null);
+    let qtype = match req.get("type") {
+        None => "marginal",
+        Some(t) => t.as_str().ok_or_else(|| anyhow!("'type' must be a string"))?,
+    };
+    match qtype {
+        "marginal" | "map" => {
+            let targets = parse_targets(engine, req)?;
+            let evidence = parse_evidence(engine, req)?;
+            let post = engine.posterior(scratch, &evidence)?;
+            Ok(compose_posterior(engine, id, qtype, &targets, &post))
+        }
+        "joint_map" => {
+            let evidence = parse_evidence(engine, req)?;
+            let (assignment, log_prob) = engine.joint_map(scratch, &evidence)?;
+            Ok(compose_joint_map(engine, id, &assignment, log_prob))
+        }
+        "batch" => answer_batch(engine, scratch, id, req, max_batch),
+        other => bail!("unknown query type '{other}' (marginal|map|joint_map|batch)"),
+    }
+}
+
+fn answer_batch(
+    engine: &SharedEngine,
+    scratch: &mut Scratch,
+    id: Json,
+    req: &Json,
+    max_batch: usize,
+) -> Result<Json> {
+    let queries = req
+        .get("queries")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("'queries' must be an array"))?;
+    ensure!(!queries.is_empty(), "batch lists no queries");
+    ensure!(
+        queries.len() <= max_batch,
+        "batch of {} queries exceeds cap {max_batch} (--batch)",
+        queries.len()
+    );
+    ensure!(
+        queries.iter().all(|q| q.get("type").and_then(Json::as_str) != Some("batch")),
+        "batches do not nest"
+    );
+
+    // Process in canonical-evidence order so adjacent sub-queries share
+    // evidence prefixes: the scratch collect-message cache then reuses
+    // every message whose subtree evidence did not change between
+    // neighbors (identical evidence reuses the whole collect pass).
+    // Results go back into request order, so the reordering is
+    // invisible in the response.
+    let keys: Vec<Vec<(usize, usize)>> = queries
+        .iter()
+        .map(|q| {
+            let mut ev = parse_evidence(engine, q).unwrap_or_default();
+            ev.sort_unstable();
+            ev
+        })
+        .collect();
+    let mut by_evidence: Vec<usize> = (0..queries.len()).collect();
+    by_evidence.sort_by(|&a, &b| keys[a].cmp(&keys[b]).then(a.cmp(&b)));
+
+    let mut results: Vec<Json> = vec![Json::Null; queries.len()];
+    for &i in &by_evidence {
+        results[i] = answer(engine, scratch, &queries[i], max_batch);
+    }
+    Ok(Json::Obj(vec![
+        ("id".to_string(), id),
+        ("ok".to_string(), Json::Bool(true)),
+        ("engine".to_string(), Json::Str(engine.name().to_string())),
+        ("results".to_string(), Json::Arr(results)),
+    ]))
+}
+
+fn parse_targets(engine: &SharedEngine, req: &Json) -> Result<Vec<usize>> {
+    let names = engine.names();
+    match req.get("targets") {
+        None => Ok((0..names.len()).collect()),
+        Some(t) => {
+            let items = t.as_array().ok_or_else(|| anyhow!("'targets' must be an array"))?;
+            if items.is_empty() {
+                Ok((0..names.len()).collect())
+            } else {
+                items
+                    .iter()
+                    .map(|x| {
+                        let name = x.as_str().ok_or_else(|| anyhow!("target must be a string"))?;
+                        crate::infer::var_index(names, name)
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+fn parse_evidence(engine: &SharedEngine, req: &Json) -> Result<Vec<(usize, usize)>> {
+    let mut evidence: Vec<(usize, usize)> = Vec::new();
+    if let Some(ev) = req.get("evidence") {
+        let entries = ev.as_object().ok_or_else(|| anyhow!("'evidence' must be an object"))?;
+        for (name, val) in entries {
+            let v = crate::infer::var_index(engine.names(), name)?;
+            let s = state_index(val, engine.card(v))
+                .with_context(|| format!("evidence for '{name}'"))?;
+            evidence.push((v, s));
+        }
+    }
+    Ok(evidence)
+}
+
+/// Parse an evidence state: a non-negative integer, or an `s<k>` /
+/// integer string (string forms share [`crate::infer::parse_state`]
+/// with the CLI).
+fn state_index(val: &Json, card: u32) -> Result<usize> {
+    match val {
+        Json::Num(_) => {
+            let s = val
+                .as_usize()
+                .ok_or_else(|| anyhow!("state must be a non-negative integer"))?;
+            ensure!(s < card as usize, "state {s} out of range (cardinality {card})");
+            Ok(s)
+        }
+        Json::Str(text) => crate::infer::parse_state(text, card),
+        _ => bail!("state must be an integer or a state name"),
+    }
+}
+
+fn compose_posterior(
+    engine: &SharedEngine,
+    id: Json,
+    qtype: &str,
+    targets: &[usize],
+    post: &Posterior,
+) -> Json {
+    let names = engine.names();
+    let mut fields: Vec<(String, Json)> = vec![
+        ("id".to_string(), id),
+        ("ok".to_string(), Json::Bool(true)),
+        ("engine".to_string(), Json::Str(engine.name().to_string())),
+        ("log_evidence".to_string(), Json::Num(post.log_evidence)),
+    ];
+    if qtype == "map" {
+        let modes: Vec<(String, Json)> = targets
+            .iter()
+            .map(|&v| (names[v].clone(), Json::Num(post.mode(v) as f64)))
+            .collect();
+        fields.push(("map".to_string(), Json::Obj(modes)));
+    } else {
+        let margs: Vec<(String, Json)> = targets
+            .iter()
+            .map(|&v| {
+                let dist: Vec<Json> = post.marginal(v).iter().map(|&p| Json::Num(p)).collect();
+                (names[v].clone(), Json::Arr(dist))
+            })
+            .collect();
+        fields.push(("marginals".to_string(), Json::Obj(margs)));
+    }
+    Json::Obj(fields)
+}
+
+fn compose_joint_map(engine: &SharedEngine, id: Json, assignment: &[usize], log_prob: f64) -> Json {
+    let names = engine.names();
+    let cells: Vec<(String, Json)> = assignment
+        .iter()
+        .enumerate()
+        .map(|(v, &s)| (names[v].clone(), Json::Num(s as f64)))
+        .collect();
+    Json::Obj(vec![
+        ("id".to_string(), id),
+        ("ok".to_string(), Json::Bool(true)),
+        ("engine".to_string(), Json::Str(engine.name().to_string())),
+        ("log_prob".to_string(), Json::Num(log_prob)),
+        ("assignment".to_string(), Json::Obj(cells)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+    use crate::infer::EngineConfig;
+
+    fn engine() -> SharedEngine {
+        SharedEngine::build(&tiny_bn(), &EngineConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn joint_map_request_roundtrip() {
+        let e = engine();
+        let mut s = e.new_scratch();
+        let resp =
+            handle_request(&e, &mut s, r#"{"id": 3, "type": "joint_map", "evidence": {"b": 1}}"#, 8);
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("id").and_then(Json::as_usize), Some(3));
+        let a = v.get("assignment").unwrap();
+        assert_eq!(a.get("a").and_then(Json::as_usize), Some(1));
+        assert_eq!(a.get("b").and_then(Json::as_usize), Some(1));
+        let lp = v.get("log_prob").and_then(Json::as_f64).unwrap();
+        assert!((lp - 0.24f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_results_keep_request_order() {
+        let e = engine();
+        let mut s = e.new_scratch();
+        let req = r#"{"id": 9, "type": "batch", "queries": [
+            {"id": 0, "type": "marginal", "evidence": {"b": 1}},
+            {"id": 1, "type": "marginal"},
+            {"id": 2, "targets": ["nope"]},
+            {"id": 3, "type": "joint_map"}
+        ]}"#;
+        let v = Json::parse(&handle_request(&e, &mut s, req, 8)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("id").and_then(Json::as_usize), Some(9));
+        let results = v.get("results").and_then(Json::as_array).unwrap();
+        assert_eq!(results.len(), 4);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.get("id").and_then(Json::as_usize), Some(i), "slot {i}");
+        }
+        assert_eq!(results[0].get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(results[2].get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(results[3].get("assignment").unwrap().get("a").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn batch_caps_and_nesting_are_rejected() {
+        let e = engine();
+        let mut s = e.new_scratch();
+        let over = r#"{"type": "batch", "queries": [{}, {}, {}]}"#;
+        let v = Json::parse(&handle_request(&e, &mut s, over, 2)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        let nested = r#"{"type": "batch", "queries": [{"type": "batch", "queries": []}]}"#;
+        let v = Json::parse(&handle_request(&e, &mut s, nested, 8)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        let empty = r#"{"type": "batch", "queries": []}"#;
+        let v = Json::parse(&handle_request(&e, &mut s, empty, 8)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn shutdown_sentinel_detection() {
+        let req = Json::parse(r#"{"id": 1, "type": "shutdown"}"#).unwrap();
+        assert!(is_shutdown(&req));
+        assert!(!is_shutdown(&Json::parse(r#"{"type": "map"}"#).unwrap()));
+        let ack = shutdown_response(Json::Num(1.0)).to_string();
+        let v = Json::parse(&ack).unwrap();
+        assert_eq!(v.get("shutdown").and_then(Json::as_bool), Some(true));
+    }
+}

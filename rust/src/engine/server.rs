@@ -1,0 +1,370 @@
+//! Multi-client query serving over a shared compiled engine.
+//!
+//! [`Server`] owns one [`SharedEngine`] and answers the
+//! [`protocol`] request surface over two media:
+//!
+//! * **TCP** ([`Server::serve_tcp`]) — a bounded pool of
+//!   connection-handler threads, each with its own [`Scratch`],
+//!   pulling accepted connections from a queue. Requests and
+//!   responses are `u32` little-endian length prefix plus JSON
+//!   payload, the same framing idiom as the ring's
+//!   [`transport`](crate::coordinator::transport) wire format, with a
+//!   configurable per-frame cap sharing the transport's
+//!   oversized-frame wording ([`crate::util::ensure_frame_len`]).
+//!   A `{"type": "shutdown"}` sentinel stops the accept loop and
+//!   drains the pool gracefully: in-flight requests finish and flush,
+//!   then connections close. A client that vanishes mid-stream
+//!   (reset, SIGPIPE-style broken pipe) fails only its own
+//!   connection.
+//! * **lines** ([`Server::serve_lines`]) — the original
+//!   newline-delimited JSON adapter over any `BufRead`/`Write` pair
+//!   (the CLI wires stdin/stdout), one response per request line,
+//!   single-threaded by construction.
+//!
+//! Because the engine is shared behind `&self` and every propagation
+//! runs in caller-owned scratch, N clients cost N scratches — the
+//! compiled model (the big allocation) exists once.
+//!
+//! The pool is thread-per-connection: a persistent connection occupies
+//! its handler for the connection's lifetime, so size
+//! [`ServeConfig::threads`] to the number of *concurrent clients* you
+//! expect (the CLI defaults to the core count), not to request
+//! volume. Idle and even mid-frame-stalled connections stop blocking
+//! shutdown: every read path polls the shutdown latch on its idle
+//! timeout.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bn::DiscreteBn;
+use crate::engine::protocol::{self, DEFAULT_MAX_BATCH};
+use crate::engine::{Scratch, SharedEngine};
+use crate::infer::json::Json;
+use crate::infer::EngineConfig;
+use crate::util::ensure_frame_len;
+
+/// Default cap on one framed request/response (1 MiB; the ring
+/// transport uses its own, larger cap for model frames). CLI
+/// `--max-frame-bytes`.
+pub const DEFAULT_MAX_FRAME_BYTES: u32 = 1 << 20;
+
+/// How often an idle connection read wakes up to check the shutdown
+/// flag.
+const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// Serving parameters (transport-level; engine selection lives in
+/// [`EngineConfig`]).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Connection-handler threads for [`Server::serve_tcp`].
+    pub threads: usize,
+    /// Per-frame byte cap (requests and responses).
+    pub max_frame_bytes: u32,
+    /// Max sub-queries per batch request.
+    pub max_batch: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            threads: 1,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            max_batch: DEFAULT_MAX_BATCH,
+        }
+    }
+}
+
+/// A query server bound to one fitted network: a shared engine, the
+/// serve configuration and the shutdown latch.
+pub struct Server {
+    engine: SharedEngine,
+    cfg: ServeConfig,
+    shutdown: AtomicBool,
+}
+
+impl Server {
+    /// Compile an engine for `bn` per `engine_cfg` and wrap it for
+    /// serving per `cfg`.
+    pub fn new(bn: &DiscreteBn, engine_cfg: &EngineConfig, cfg: ServeConfig) -> Result<Server> {
+        Ok(Server {
+            engine: SharedEngine::build(bn, engine_cfg)?,
+            cfg,
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// The shared engine (for in-process querying next to serving).
+    pub fn engine(&self) -> &SharedEngine {
+        &self.engine
+    }
+
+    /// Which engine backs this server (`"jointree"` or `"lw"`).
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// Fresh per-thread propagation buffers.
+    pub fn new_scratch(&self) -> Scratch {
+        self.engine.new_scratch()
+    }
+
+    /// Has the shutdown sentinel been received?
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Answer one JSON request with one JSON response. The shutdown
+    /// sentinel is acknowledged and latches the shutdown flag.
+    pub fn handle(&self, scratch: &mut Scratch, request: &str) -> String {
+        let parsed = match Json::parse(request) {
+            Ok(v) => v,
+            Err(e) => {
+                return protocol::error_response(Json::Null, &format!("bad json: {e:#}"))
+                    .to_string()
+            }
+        };
+        if protocol::is_shutdown(&parsed) {
+            self.shutdown.store(true, Ordering::SeqCst);
+            let id = parsed.get("id").cloned().unwrap_or(Json::Null);
+            return protocol::shutdown_response(id).to_string();
+        }
+        protocol::answer(&self.engine, scratch, &parsed, self.cfg.max_batch).to_string()
+    }
+
+    /// Serve newline-delimited JSON until the reader closes or the
+    /// shutdown sentinel arrives; returns the number of requests
+    /// answered.
+    pub fn serve_lines<R: BufRead, W: Write>(&self, reader: R, mut writer: W) -> Result<usize> {
+        let mut scratch = self.engine.new_scratch();
+        let mut served = 0usize;
+        for line in reader.lines() {
+            let line = line.context("read request line")?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let response = self.handle(&mut scratch, &line);
+            writeln!(writer, "{response}").context("write response")?;
+            writer.flush().context("flush response")?;
+            served += 1;
+            if self.is_shutting_down() {
+                break;
+            }
+        }
+        Ok(served)
+    }
+
+    /// Serve length-prefixed JSON frames over TCP with a bounded pool
+    /// of `cfg.threads` handler threads. `max_conns` bounds the number
+    /// of accepted connections (tests); `None` serves until the
+    /// shutdown sentinel. Returns after every accepted connection has
+    /// drained.
+    pub fn serve_tcp(&self, listener: &TcpListener, max_conns: Option<usize>) -> Result<()> {
+        let local = listener.local_addr().context("listener addr")?;
+        // The shutdown wake-up must be a *connectable* address: an
+        // unspecified bind (0.0.0.0 / ::) is reached via loopback.
+        let wake = if local.ip().is_unspecified() {
+            let loopback: std::net::IpAddr = if local.is_ipv4() {
+                std::net::Ipv4Addr::LOCALHOST.into()
+            } else {
+                std::net::Ipv6Addr::LOCALHOST.into()
+            };
+            SocketAddr::new(loopback, local.port())
+        } else {
+            local
+        };
+        let threads = self.cfg.threads.max(1);
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(2 * threads);
+        let rx = Mutex::new(rx);
+        std::thread::scope(|scope| -> Result<()> {
+            for _ in 0..threads {
+                let rx = &rx;
+                scope.spawn(move || {
+                    let mut scratch = self.engine.new_scratch();
+                    loop {
+                        // Hold the lock only for the dequeue, never
+                        // while handling a connection.
+                        let next = rx.lock().expect("connection queue poisoned").recv();
+                        let Ok(stream) = next else { break };
+                        let peer = stream.peer_addr().ok();
+                        if let Err(e) = self.serve_conn(stream, &mut scratch, wake) {
+                            match peer {
+                                Some(p) => eprintln!("connection {p}: {e:#}"),
+                                None => eprintln!("connection: {e:#}"),
+                            }
+                        }
+                    }
+                });
+            }
+            let mut conns = 0usize;
+            loop {
+                if self.is_shutting_down() {
+                    break;
+                }
+                if let Some(m) = max_conns {
+                    if conns >= m {
+                        break;
+                    }
+                }
+                let (stream, _) = listener.accept().context("accept query connection")?;
+                if self.is_shutting_down() {
+                    // The wake connection a handler opened after the
+                    // sentinel; nothing to serve on it.
+                    break;
+                }
+                conns += 1;
+                tx.send(stream).expect("connection pool alive");
+            }
+            // Closing the queue lets idle handlers exit; the scope
+            // join below waits for the busy ones to drain.
+            drop(tx);
+            Ok(())
+        })
+    }
+
+    /// Handle one framed connection until EOF or shutdown.
+    fn serve_conn(
+        &self,
+        stream: TcpStream,
+        scratch: &mut Scratch,
+        wake: SocketAddr,
+    ) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        // Idle reads wake periodically so a latched shutdown can close
+        // quiet persistent connections too.
+        stream.set_read_timeout(Some(IDLE_POLL)).ok();
+        let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+        let mut writer = BufWriter::new(stream);
+        let cap = self.cfg.max_frame_bytes;
+        loop {
+            let Some(len) = self.read_len_prefix(&mut reader)? else {
+                return Ok(());
+            };
+            ensure_frame_len("incoming", len, cap)?;
+            let mut payload = vec![0u8; len as usize];
+            self.read_exact_patient(&mut reader, &mut payload, "frame payload")?;
+            let text = String::from_utf8(payload).context("request frame is not UTF-8")?;
+
+            let response = self.handle(scratch, &text);
+            let out = response.as_bytes();
+            let out_len = u32::try_from(out.len()).context("response too large for u32 prefix")?;
+            ensure_frame_len("outgoing", out_len, cap)?;
+            writer.write_all(&out_len.to_le_bytes()).context("write response length")?;
+            writer.write_all(out).context("write response payload")?;
+            writer.flush().context("flush response")?;
+
+            if self.is_shutting_down() {
+                // Wake the acceptor (it is blocked in accept) and close
+                // this connection; the response above already flushed.
+                let _ = TcpStream::connect(wake);
+                return Ok(());
+            }
+        }
+    }
+
+    /// Read one 4-byte length prefix. `Ok(None)` = clean EOF between
+    /// frames, or an idle connection observed after shutdown latched.
+    fn read_len_prefix(&self, reader: &mut impl Read) -> Result<Option<u32>> {
+        let mut buf = [0u8; 4];
+        let mut got = 0usize;
+        while got < 4 {
+            match reader.read(&mut buf[got..]) {
+                Ok(0) => {
+                    if got == 0 {
+                        return Ok(None);
+                    }
+                    bail!("eof inside frame length");
+                }
+                Ok(k) => got += k,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    // Idle between frames: close quietly once shutdown
+                    // latched; mid-prefix a latched shutdown closes
+                    // loudly (the client half-sent a frame).
+                    if self.is_shutting_down() {
+                        if got == 0 {
+                            return Ok(None);
+                        }
+                        bail!("shutdown while awaiting frame length");
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("read frame length"),
+            }
+        }
+        Ok(Some(u32::from_le_bytes(buf)))
+    }
+
+    /// Finish filling `buf`, riding out read timeouts. Mid-frame we
+    /// keep waiting (abandoning an in-flight frame would desync the
+    /// stream) — unless shutdown latches, which closes the connection
+    /// so a stalled client cannot pin its handler thread and block the
+    /// pool from draining.
+    fn read_exact_patient(&self, reader: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+        let mut got = 0usize;
+        while got < buf.len() {
+            match reader.read(&mut buf[got..]) {
+                Ok(0) => bail!("eof inside {what}"),
+                Ok(k) => got += k,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if self.is_shutting_down() {
+                        bail!("shutdown while awaiting {what}");
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).with_context(|| format!("read {what}")),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+
+    fn server(cfg: ServeConfig) -> Server {
+        Server::new(&tiny_bn(), &EngineConfig::default(), cfg).unwrap()
+    }
+
+    #[test]
+    fn line_adapter_answers_and_stops_on_shutdown() {
+        let s = server(ServeConfig::default());
+        let input = b"{\"id\":1}\n{\"type\":\"shutdown\"}\n{\"id\":2}\n".to_vec();
+        let mut out = Vec::new();
+        let served = s.serve_lines(&input[..], &mut out).unwrap();
+        // The request after the sentinel is never read.
+        assert_eq!(served, 2);
+        assert!(s.is_shutting_down());
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let ack = Json::parse(lines[1]).unwrap();
+        assert_eq!(ack.get("shutdown").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn handle_reports_errors_without_latching_shutdown() {
+        let s = server(ServeConfig::default());
+        let mut scratch = s.new_scratch();
+        let v = Json::parse(&s.handle(&mut scratch, "not json")).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(!s.is_shutting_down());
+        let v = Json::parse(&s.handle(&mut scratch, r#"{"id": 2}"#)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    }
+}

@@ -174,6 +174,76 @@ impl Factor {
         Factor { vars, cards, table }
     }
 
+    /// Max out every variable not in `keep` — the max-product analog
+    /// of [`marginalize_to`](Factor::marginalize_to), used by the joint
+    /// MAP pass. Tables are nonnegative, so 0 is the fold identity.
+    pub fn max_marginalize_to(&self, keep: &[usize]) -> Factor {
+        let vars: Vec<usize> = self.vars.iter().copied().filter(|v| keep.contains(v)).collect();
+        let cards: Vec<usize> = vars
+            .iter()
+            .map(|&v| {
+                let i = self.vars.iter().position(|&x| x == v).expect("kept var is in scope");
+                self.cards[i]
+            })
+            .collect();
+        let size: usize = cards.iter().product();
+        let so = Self::strides_into(&self.vars, &vars, &cards);
+        let mut table = vec![0.0; size];
+        let mut digits = vec![0usize; self.vars.len()];
+        let mut io = 0usize;
+        for &val in &self.table {
+            if val > table[io] {
+                table[io] = val;
+            }
+            for i in 0..digits.len() {
+                digits[i] += 1;
+                io += so[i];
+                if digits[i] < self.cards[i] {
+                    break;
+                }
+                digits[i] = 0;
+                io -= so[i] * self.cards[i];
+            }
+        }
+        Factor { vars, cards, table }
+    }
+
+    /// Largest cell among those consistent with `fixed` (a per-variable
+    /// assignment indexed by *global* variable id; `None` = free), as
+    /// `(digits aligned with self.vars, value)`. Deterministic: among
+    /// equal maxima the lowest mixed-radix index wins — since the
+    /// first variable is the least-significant digit, that is the
+    /// assignment whose *highest*-indexed variables sit at their
+    /// lowest tied states.
+    pub fn argmax_consistent(&self, fixed: &[Option<usize>]) -> (Vec<usize>, f64) {
+        let constrained: Vec<Option<usize>> = self
+            .vars
+            .iter()
+            .map(|&v| fixed.get(v).copied().flatten())
+            .collect();
+        let mut best_digits = vec![0usize; self.vars.len()];
+        let mut best = f64::NEG_INFINITY;
+        let mut digits = vec![0usize; self.vars.len()];
+        for &val in &self.table {
+            let ok = digits.iter().zip(&constrained).all(|(&d, &c)| match c {
+                Some(s) => s == d,
+                None => true,
+            });
+            if ok && val > best {
+                best = val;
+                best_digits.copy_from_slice(&digits);
+            }
+            for (d, &c) in digits.iter_mut().zip(&self.cards) {
+                *d += 1;
+                if *d < c {
+                    break;
+                }
+                *d = 0;
+            }
+        }
+        (best_digits, best)
+    }
+
     /// Sum of all cells.
     pub fn total(&self) -> f64 {
         self.table.iter().sum()
@@ -258,6 +328,31 @@ mod tests {
         }
         let with_unit = Factor::product(&ab, &Factor::unit());
         assert_eq!(with_unit.table, ab.table);
+    }
+
+    #[test]
+    fn max_marginalize_keeps_cell_maxima() {
+        let f = Factor { vars: vec![0, 1], cards: vec![2, 2], table: vec![0.1, 0.4, 0.3, 0.2] };
+        let m0 = f.max_marginalize_to(&[0]);
+        assert_eq!(m0.vars, vec![0]);
+        assert!((m0.table[0] - 0.3).abs() < 1e-15); // max(0.1, 0.3)
+        assert!((m0.table[1] - 0.4).abs() < 1e-15); // max(0.4, 0.2)
+        let scalar = f.max_marginalize_to(&[]);
+        assert!((scalar.table[0] - 0.4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn argmax_consistent_respects_constraints_and_ties() {
+        let f = Factor { vars: vec![0, 2], cards: vec![2, 2], table: vec![0.4, 0.1, 0.2, 0.4] };
+        // Unconstrained: 0.4 appears at cells (0,0) and (1,1); the
+        // lowest mixed-radix index wins.
+        let (digits, val) = f.argmax_consistent(&[None, None, None]);
+        assert_eq!(digits, vec![0, 0]);
+        assert!((val - 0.4).abs() < 1e-15);
+        // Fixing global var 2 to state 1 restricts to cells (·, 1).
+        let (digits, val) = f.argmax_consistent(&[None, None, Some(1)]);
+        assert_eq!(digits, vec![1, 1]);
+        assert!((val - 0.4).abs() < 1e-15);
     }
 
     #[test]

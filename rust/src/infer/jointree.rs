@@ -1,294 +1,80 @@
-//! Junction-tree (clique-tree) exact inference.
+//! Junction-tree (clique-tree) exact inference — compatibility shim.
 //!
-//! Build once per network, query many times: `build` moralizes,
-//! triangulates (min-fill), extracts maximal cliques, connects them
-//! into a maximum-separator-weight spanning forest (which gives the
-//! running-intersection property on chordal graphs), and multiplies
-//! each variable's CPT into the smallest clique containing its family.
-//! `posterior` then answers one evidence set with a single two-pass
-//! sum-product sweep — collect to a root, distribute back — yielding
-//! *every* single-variable marginal plus the evidence log-probability,
-//! which is exactly the shape a query-serving path wants: one
-//! propagation amortizes over all targets of a request.
+//! The compilation (moralize → min-fill triangulate → maximal cliques
+//! → maximum-separator Kruskal forest → CPT assignment → frozen
+//! message schedule) and the two-pass propagation now live in
+//! [`engine::CompiledModel`](crate::engine::CompiledModel), the
+//! `Send + Sync` half of the compiled/scratch split that concurrent
+//! serving shares across threads. [`JoinTree`] keeps the original
+//! build-once/query-many API for single-threaded callers: each
+//! [`posterior`](JoinTree::posterior) call runs in a private
+//! [`Scratch`](crate::engine::Scratch), so `&self` stays lock-free
+//! and results are identical to the shared path (same code runs).
 //!
-//! Evidence is absorbed as indicator factors multiplied into one
-//! clique per observed variable, so clique scopes never change and the
-//! prebuilt potentials are reusable across queries. Collect-pass
-//! messages are normalized with their log-normalizers accumulated;
-//! the product of those normalizers times the root belief mass
-//! telescopes to P(evidence), kept in log space to survive many-
-//! evidence queries on large networks.
+//! Callers that answer many queries or serve traffic should use the
+//! model directly: [`JoinTree::model`] exposes it, and
+//! `CompiledModel::new_scratch` amortizes both the buffer allocations
+//! and the collect-message cache across queries.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::Result;
 
 use crate::bn::DiscreteBn;
-use crate::graph::moral_graph;
-use crate::infer::factor::Factor;
-use crate::infer::triangulate::{triangulate, Triangulation};
+use crate::engine::CompiledModel;
+use crate::infer::triangulate::Triangulation;
 use crate::infer::Posterior;
-use crate::util::BitSet;
 
 /// A compiled clique tree over one discrete Bayesian network.
 pub struct JoinTree {
-    cards: Vec<usize>,
-    cliques: Vec<Vec<usize>>,
-    /// Tree edges: `(clique_a, clique_b, separator vars)`.
-    edges: Vec<(usize, usize, Vec<usize>)>,
-    /// Per clique: `(neighbor clique, edge index)`.
-    neighbors: Vec<Vec<(usize, usize)>>,
-    /// Evidence-free clique potentials (CPTs multiplied in).
-    base: Vec<Factor>,
-    /// For each variable, a clique containing its whole family.
-    var_home: Vec<usize>,
-    max_clique_states: u64,
+    model: CompiledModel,
 }
 
 impl JoinTree {
     /// Compile `bn` into a clique tree (moralizes and triangulates
     /// internally).
     pub fn build(bn: &DiscreteBn) -> Result<JoinTree> {
-        let tri = triangulate(&moral_graph(&bn.dag), &bn.cards);
-        Self::build_from(bn, tri)
+        Ok(JoinTree { model: CompiledModel::compile(bn)? })
     }
 
     /// Compile from a precomputed triangulation of `bn`'s moral graph
     /// (lets budget probes reuse their triangulation instead of
     /// running min-fill twice).
     pub fn build_from(bn: &DiscreteBn, tri: Triangulation) -> Result<JoinTree> {
-        let n = bn.n();
-        ensure!(n > 0, "cannot build a join tree over zero variables");
-        let cards: Vec<usize> = bn.cards.iter().map(|&c| c as usize).collect();
-        let cliques = tri.cliques;
-        let nc = cliques.len();
-        let clique_sets: Vec<BitSet> =
-            cliques.iter().map(|c| BitSet::from_iter(n, c.iter().copied())).collect();
+        Ok(JoinTree { model: CompiledModel::compile_from(bn, tri)? })
+    }
 
-        // Maximum-weight spanning forest over separator sizes (Kruskal):
-        // on a chordal graph's maximal cliques this yields a valid
-        // junction tree (running intersection property).
-        let mut candidates: Vec<(usize, usize, usize)> = Vec::new(); // (sep_size, i, j)
-        for i in 0..nc {
-            for j in (i + 1)..nc {
-                let sep = clique_sets[i].intersection(&clique_sets[j]).count();
-                if sep > 0 {
-                    candidates.push((sep, i, j));
-                }
-            }
-        }
-        candidates.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+    /// The underlying shared-serving model.
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
+    }
 
-        let mut uf: Vec<usize> = (0..nc).collect();
-        fn find(uf: &mut [usize], mut x: usize) -> usize {
-            while uf[x] != x {
-                uf[x] = uf[uf[x]];
-                x = uf[x];
-            }
-            x
-        }
-        let mut edges: Vec<(usize, usize, Vec<usize>)> = Vec::with_capacity(nc.saturating_sub(1));
-        let mut neighbors: Vec<Vec<(usize, usize)>> = vec![Vec::new(); nc];
-        for (_, i, j) in candidates {
-            let (ri, rj) = (find(&mut uf, i), find(&mut uf, j));
-            if ri == rj {
-                continue;
-            }
-            uf[ri] = rj;
-            let sep: Vec<usize> = clique_sets[i].intersection(&clique_sets[j]).to_vec();
-            let e = edges.len();
-            neighbors[i].push((j, e));
-            neighbors[j].push((i, e));
-            edges.push((i, j, sep));
-        }
-
-        // Assign each family to the smallest containing clique and
-        // multiply its CPT in.
-        let mut base: Vec<Factor> =
-            cliques.iter().map(|c| Factor::ones(c.clone(), &bn.cards)).collect();
-        let mut var_home = vec![usize::MAX; n];
-        for v in 0..n {
-            let mut fam = BitSet::new(n);
-            fam.insert(v);
-            fam.union_with(bn.dag.parents(v));
-            let mut chosen: Option<(u64, usize)> = None; // (state space, clique)
-            for (ci, cs) in clique_sets.iter().enumerate() {
-                if !fam.is_subset(cs) {
-                    continue;
-                }
-                let weight = cliques[ci]
-                    .iter()
-                    .fold(1u64, |acc, &x| acc.saturating_mul(cards[x] as u64));
-                let better = match chosen {
-                    None => true,
-                    Some((w, _)) => weight < w,
-                };
-                if better {
-                    chosen = Some((weight, ci));
-                }
-            }
-            let Some((_, ci)) = chosen else {
-                bail!(
-                    "family of variable {v} fits no clique — triangulation is inconsistent"
-                );
-            };
-            var_home[v] = ci;
-            base[ci] = Factor::product(&base[ci], &Factor::from_cpt(bn, v));
-        }
-
-        Ok(JoinTree {
-            cards,
-            cliques,
-            edges,
-            neighbors,
-            base,
-            var_home,
-            max_clique_states: tri.max_clique_states,
-        })
+    /// Unwrap into the shared-serving model.
+    pub fn into_model(self) -> CompiledModel {
+        self.model
     }
 
     /// Number of variables.
     pub fn n_vars(&self) -> usize {
-        self.cards.len()
+        self.model.n_vars()
     }
 
     /// Number of cliques.
     pub fn n_cliques(&self) -> usize {
-        self.cliques.len()
+        self.model.n_cliques()
     }
 
     /// Largest clique joint state space (treewidth proxy).
     pub fn max_clique_states(&self) -> u64 {
-        self.max_clique_states
-    }
-
-    /// Directed message slot for edge `e` leaving clique `from`.
-    fn dir(&self, e: usize, from: usize) -> usize {
-        if self.edges[e].0 == from {
-            2 * e
-        } else {
-            2 * e + 1
-        }
+        self.model.max_clique_states()
     }
 
     /// Exact posterior over every variable given `evidence`
     /// (`(variable, state)` pairs). Errors on out-of-range evidence or
-    /// evidence of probability zero.
+    /// evidence of probability zero. Runs in a private scratch; hot
+    /// paths should hold their own via
+    /// [`CompiledModel::new_scratch`].
     pub fn posterior(&self, evidence: &[(usize, usize)]) -> Result<Posterior> {
-        let n = self.cards.len();
-        for &(v, s) in evidence {
-            ensure!(v < n, "evidence variable {v} out of range (n = {n})");
-            ensure!(
-                s < self.cards[v],
-                "evidence state {s} out of range for variable {v} (cardinality {})",
-                self.cards[v]
-            );
-        }
-
-        let mut pots = self.base.clone();
-        for &(v, s) in evidence {
-            let c = self.var_home[v];
-            pots[c] = Factor::product(&pots[c], &Factor::indicator(v, self.cards[v], s));
-        }
-
-        let nc = self.cliques.len();
-        let mut msgs: Vec<Option<Factor>> = vec![None; 2 * self.edges.len()];
-        let mut visited = vec![false; nc];
-        let mut log_evidence = 0.0f64;
-
-        for root in 0..nc {
-            if visited[root] {
-                continue;
-            }
-            // BFS tree of this component.
-            let mut order = vec![root];
-            let mut parent_edge: Vec<Option<(usize, usize)>> = vec![None; nc];
-            visited[root] = true;
-            let mut head = 0;
-            while head < order.len() {
-                let c = order[head];
-                head += 1;
-                for &(o, e) in &self.neighbors[c] {
-                    if !visited[o] {
-                        visited[o] = true;
-                        parent_edge[o] = Some((c, e));
-                        order.push(o);
-                    }
-                }
-            }
-
-            // Collect: leaves toward the root.
-            for &c in order.iter().rev() {
-                let Some((p, e)) = parent_edge[c] else { continue };
-                let mut f = pots[c].clone();
-                for &(o, e2) in &self.neighbors[c] {
-                    if o == p && e2 == e {
-                        continue;
-                    }
-                    let inc = msgs[self.dir(e2, o)].as_ref().expect("child message ready");
-                    f = Factor::product(&f, inc);
-                }
-                let mut m = f.marginalize_to(&self.edges[e].2);
-                let z = m.normalize();
-                if z <= 0.0 {
-                    bail!("evidence has probability zero");
-                }
-                log_evidence += z.ln();
-                msgs[self.dir(e, c)] = Some(m);
-            }
-
-            // Root belief mass closes the component's evidence mass.
-            let mut root_belief = pots[root].clone();
-            for &(o, e) in &self.neighbors[root] {
-                let inc = msgs[self.dir(e, o)].as_ref().expect("root message ready");
-                root_belief = Factor::product(&root_belief, inc);
-            }
-            let z_root = root_belief.total();
-            if z_root <= 0.0 {
-                bail!("evidence has probability zero");
-            }
-            log_evidence += z_root.ln();
-
-            // Distribute: root toward the leaves.
-            for &c in &order {
-                for &(o, e) in &self.neighbors[c] {
-                    let downstream = matches!(parent_edge[o], Some((p, pe)) if p == c && pe == e);
-                    if !downstream {
-                        continue;
-                    }
-                    let mut f = pots[c].clone();
-                    for &(o2, e2) in &self.neighbors[c] {
-                        if o2 == o && e2 == e {
-                            continue;
-                        }
-                        let inc = msgs[self.dir(e2, o2)].as_ref().expect("incoming message ready");
-                        f = Factor::product(&f, inc);
-                    }
-                    let mut m = f.marginalize_to(&self.edges[e].2);
-                    if m.normalize() <= 0.0 {
-                        bail!("evidence has probability zero");
-                    }
-                    msgs[self.dir(e, c)] = Some(m);
-                }
-            }
-        }
-
-        // Calibrated beliefs -> all single-variable marginals.
-        let mut beliefs: Vec<Option<Factor>> = vec![None; nc];
-        let mut marginals: Vec<Vec<f64>> = Vec::with_capacity(n);
-        for v in 0..n {
-            let c = self.var_home[v];
-            if beliefs[c].is_none() {
-                let mut b = pots[c].clone();
-                for &(o, e) in &self.neighbors[c] {
-                    let inc = msgs[self.dir(e, o)].as_ref().expect("calibrated message ready");
-                    b = Factor::product(&b, inc);
-                }
-                beliefs[c] = Some(b);
-            }
-            let belief = beliefs[c].as_ref().expect("belief just built");
-            marginals.push(belief.marginal_of(v));
-        }
-
-        Ok(Posterior { marginals, log_evidence })
+        let mut scratch = self.model.new_scratch();
+        self.model.marginals(&mut scratch, evidence)
     }
 }
 

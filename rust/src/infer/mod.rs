@@ -18,6 +18,12 @@
 //! [`Engine`] picks between the exact and sampled paths from a clique
 //! state-space budget, and [`QueryServer`] exposes the result over
 //! newline-delimited JSON or length-prefixed TCP frames.
+//!
+//! The heavy machinery behind the exact path — the compiled
+//! jointree, per-thread scratch buffers, joint MAP, batching and the
+//! multi-client server — lives in [`engine`](crate::engine);
+//! [`JoinTree`], [`Engine`] and [`QueryServer`] are the
+//! single-threaded compatibility surface over it.
 
 pub mod factor;
 pub mod jointree;
@@ -77,6 +83,14 @@ impl Posterior {
     }
 
     /// Posterior mode (argmax state) of variable `v`.
+    ///
+    /// Deterministic MAP tie-breaking: among equal maxima the *lowest
+    /// state index* wins (strict `>` never displaces an earlier
+    /// maximum), so `"map"` answers are byte-identical between
+    /// concurrent and sequential serving, across batch orderings, and
+    /// from run to run. The joint-MAP decode is deterministic by its
+    /// own documented rule (lowest mixed-radix clique cell, see
+    /// [`Factor::argmax_consistent`](crate::infer::factor::Factor::argmax_consistent)).
     pub fn mode(&self, v: usize) -> usize {
         let m = &self.marginals[v];
         let mut best = 0usize;
@@ -248,5 +262,13 @@ mod tests {
         let p = Posterior { marginals: vec![vec![0.5, 0.5], vec![0.1, 0.9]], log_evidence: 0.0 };
         assert_eq!(p.mode(0), 0);
         assert_eq!(p.mode(1), 1);
+        // Ties anywhere resolve to the lowest tied state, so MAP
+        // answers are reproducible bit-for-bit.
+        let p = Posterior {
+            marginals: vec![vec![0.1, 0.45, 0.45], vec![0.25, 0.25, 0.25, 0.25]],
+            log_evidence: 0.0,
+        };
+        assert_eq!(p.mode(0), 1);
+        assert_eq!(p.mode(1), 0);
     }
 }

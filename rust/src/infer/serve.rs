@@ -1,14 +1,14 @@
-//! Query serving: the learn → fit → **answer traffic** endpoint.
+//! Query serving — compatibility shim over [`engine`](crate::engine).
 //!
-//! [`QueryServer`] owns a compiled inference [`Engine`] and speaks a
-//! one-JSON-per-request protocol over two media:
-//!
-//! * **lines** — newline-delimited JSON on any `BufRead`/`Write` pair
-//!   (the CLI wires stdin/stdout), one response line per request line;
-//! * **TCP** — a loopback listener where each request/response is a
-//!   `u32` little-endian length prefix plus a JSON payload, the same
-//!   framing (and oversized-frame guard) idiom as the ring's
-//!   [`transport`](crate::coordinator::transport) wire format.
+//! [`QueryServer`] keeps PR 2's single-threaded serving API (owned
+//! engine, `&mut self` handlers) while delegating everything to the
+//! concurrent [`engine::Server`](crate::engine::Server): the same
+//! [`protocol`](crate::engine::protocol) answers requests, the same
+//! framing moves bytes, so a caller migrating to the multi-client
+//! server sees byte-identical responses. The shim holds one
+//! [`Scratch`](crate::engine::Scratch) for [`handle`](QueryServer::handle),
+//! which makes consecutive requests share the collect-message cache —
+//! the single-threaded degenerate case of the serving pool.
 //!
 //! Request shape (`targets` defaults to every variable; evidence
 //! states are indices or `s<k>` names):
@@ -16,237 +16,71 @@
 //! ```json
 //! {"id": 1, "type": "marginal", "targets": ["X3"], "evidence": {"X0": 0}}
 //! {"id": 2, "type": "map", "evidence": {"X1": "s1"}}
+//! {"id": 3, "type": "joint_map", "evidence": {"X1": 1}}
+//! {"id": 4, "type": "batch", "queries": [...]}
 //! ```
 //!
 //! Responses echo `id`, report the engine and `log_evidence`, and
-//! carry either `"marginals": {name: [p...]}` or `"map": {name:
-//! state}` (per-variable posterior modes). Failures answer `{"ok":
-//! false, "error": ...}` instead of closing the stream.
+//! carry `"marginals"`, `"map"` (per-variable posterior modes, ties to
+//! the lowest state), `"assignment"` + `"log_prob"` (joint MAP) or
+//! `"results"` (batch). Failures answer `{"ok": false, "error": ...}`
+//! instead of closing the stream.
 
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::{BufRead, Write};
+use std::net::TcpListener;
 
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::Result;
 
 use crate::bn::DiscreteBn;
-use crate::infer::json::Json;
-use crate::infer::{Engine, EngineConfig, Posterior};
+use crate::engine::{Scratch, ServeConfig, Server};
+use crate::infer::EngineConfig;
 
-/// Hard cap on one framed request/response (guards against corrupt
-/// length prefixes, as in the ring transport).
-const MAX_FRAME_BYTES: u32 = 1 << 20;
-
-/// A stateful query server bound to one fitted network.
+/// A stateful query server bound to one fitted network
+/// (single-threaded compatibility wrapper; new callers should use
+/// [`engine::Server`](crate::engine::Server) directly).
 pub struct QueryServer {
-    names: Vec<String>,
-    cards: Vec<u32>,
-    engine: Engine,
+    inner: Server,
+    scratch: Scratch,
 }
 
 impl QueryServer {
     /// Compile an engine for `bn` per `cfg` and wrap it for serving.
     pub fn new(bn: &DiscreteBn, cfg: &EngineConfig) -> Result<QueryServer> {
-        Ok(QueryServer {
-            names: bn.names.clone(),
-            cards: bn.cards.clone(),
-            engine: Engine::build(bn, cfg)?,
-        })
+        let inner = Server::new(bn, cfg, ServeConfig::default())?;
+        let scratch = inner.new_scratch();
+        Ok(QueryServer { inner, scratch })
     }
 
     /// Which engine backs this server (`"jointree"` or `"lw"`).
     pub fn engine_name(&self) -> &'static str {
-        self.engine.name()
+        self.inner.engine_name()
     }
 
     /// Answer one JSON request line with one JSON response line.
     pub fn handle(&mut self, request: &str) -> String {
-        let parsed = match Json::parse(request) {
-            Ok(v) => v,
-            Err(e) => return error_response(Json::Null, &format!("bad json: {e:#}")),
-        };
-        let id = parsed.get("id").cloned().unwrap_or(Json::Null);
-        match self.answer(&parsed) {
-            Ok(body) => body.to_string(),
-            Err(e) => error_response(id, &format!("{e:#}")),
-        }
-    }
-
-    fn answer(&mut self, req: &Json) -> Result<Json> {
-        let id = req.get("id").cloned().unwrap_or(Json::Null);
-        let qtype = match req.get("type") {
-            None => "marginal",
-            Some(t) => t.as_str().ok_or_else(|| anyhow!("'type' must be a string"))?,
-        };
-        ensure!(
-            qtype == "marginal" || qtype == "map",
-            "unknown query type '{qtype}' (marginal|map)"
-        );
-
-        let targets: Vec<usize> = match req.get("targets") {
-            None => (0..self.names.len()).collect(),
-            Some(t) => {
-                let items = t.as_array().ok_or_else(|| anyhow!("'targets' must be an array"))?;
-                if items.is_empty() {
-                    (0..self.names.len()).collect()
-                } else {
-                    items
-                        .iter()
-                        .map(|x| {
-                            let name =
-                                x.as_str().ok_or_else(|| anyhow!("target must be a string"))?;
-                            self.var_index(name)
-                        })
-                        .collect::<Result<_>>()?
-                }
-            }
-        };
-
-        let mut evidence: Vec<(usize, usize)> = Vec::new();
-        if let Some(ev) = req.get("evidence") {
-            let entries =
-                ev.as_object().ok_or_else(|| anyhow!("'evidence' must be an object"))?;
-            for (name, val) in entries {
-                let v = self.var_index(name)?;
-                let s = state_index(val, self.cards[v])
-                    .with_context(|| format!("evidence for '{name}'"))?;
-                evidence.push((v, s));
-            }
-        }
-
-        let post = self.engine.posterior(&evidence)?;
-        Ok(self.compose(id, qtype, &targets, &post))
-    }
-
-    fn compose(&self, id: Json, qtype: &str, targets: &[usize], post: &Posterior) -> Json {
-        let mut fields: Vec<(String, Json)> = vec![
-            ("id".to_string(), id),
-            ("ok".to_string(), Json::Bool(true)),
-            ("engine".to_string(), Json::Str(self.engine.name().to_string())),
-            ("log_evidence".to_string(), Json::Num(post.log_evidence)),
-        ];
-        if qtype == "map" {
-            let modes: Vec<(String, Json)> = targets
-                .iter()
-                .map(|&v| (self.names[v].clone(), Json::Num(post.mode(v) as f64)))
-                .collect();
-            fields.push(("map".to_string(), Json::Obj(modes)));
-        } else {
-            let margs: Vec<(String, Json)> = targets
-                .iter()
-                .map(|&v| {
-                    let dist: Vec<Json> =
-                        post.marginal(v).iter().map(|&p| Json::Num(p)).collect();
-                    (self.names[v].clone(), Json::Arr(dist))
-                })
-                .collect();
-            fields.push(("marginals".to_string(), Json::Obj(margs)));
-        }
-        Json::Obj(fields)
-    }
-
-    fn var_index(&self, name: &str) -> Result<usize> {
-        crate::infer::var_index(&self.names, name)
+        self.inner.handle(&mut self.scratch, request)
     }
 
     /// Serve newline-delimited JSON until the reader closes; returns
     /// the number of requests answered.
-    pub fn serve_lines<R: BufRead, W: Write>(&mut self, reader: R, mut writer: W) -> Result<usize> {
-        let mut served = 0usize;
-        for line in reader.lines() {
-            let line = line.context("read request line")?;
-            if line.trim().is_empty() {
-                continue;
-            }
-            let response = self.handle(&line);
-            writeln!(writer, "{response}").context("write response")?;
-            writer.flush().context("flush response")?;
-            served += 1;
-        }
-        Ok(served)
+    pub fn serve_lines<R: BufRead, W: Write>(&mut self, reader: R, writer: W) -> Result<usize> {
+        self.inner.serve_lines(reader, writer)
     }
 
-    /// Serve length-prefixed JSON frames over TCP, one connection at a
-    /// time. `max_conns` bounds the accept loop (tests); `None` serves
-    /// forever.
+    /// Serve length-prefixed JSON frames over TCP (the pool has one
+    /// thread under the default [`ServeConfig`]). `max_conns` bounds
+    /// the accept loop (tests); `None` serves until the shutdown
+    /// sentinel.
     pub fn serve_tcp(&mut self, listener: &TcpListener, max_conns: Option<usize>) -> Result<()> {
-        let mut conns = 0usize;
-        loop {
-            if let Some(m) = max_conns {
-                if conns >= m {
-                    return Ok(());
-                }
-            }
-            let (stream, peer) = listener.accept().context("accept query connection")?;
-            conns += 1;
-            if let Err(e) = self.serve_conn(stream) {
-                eprintln!("connection {peer}: {e:#}");
-            }
-        }
+        self.inner.serve_tcp(listener, max_conns)
     }
-
-    fn serve_conn(&mut self, stream: TcpStream) -> Result<()> {
-        stream.set_nodelay(true).ok();
-        let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
-        let mut writer = BufWriter::new(stream);
-        loop {
-            let mut len_bytes = [0u8; 4];
-            match reader.read_exact(&mut len_bytes) {
-                Ok(()) => {}
-                // Clean EOF between frames = client done.
-                Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
-                Err(e) => return Err(e).context("read frame length"),
-            }
-            let len = u32::from_le_bytes(len_bytes);
-            if len > MAX_FRAME_BYTES {
-                bail!("incoming frame of {len} bytes exceeds cap {MAX_FRAME_BYTES}");
-            }
-            let mut payload = vec![0u8; len as usize];
-            reader.read_exact(&mut payload).context("read frame payload")?;
-            let text = String::from_utf8(payload).context("request frame is not UTF-8")?;
-
-            let response = self.handle(&text);
-            let out = response.as_bytes();
-            let out_len = u32::try_from(out.len()).context("response too large for u32 prefix")?;
-            if out_len > MAX_FRAME_BYTES {
-                bail!("response frame of {out_len} bytes exceeds cap {MAX_FRAME_BYTES}");
-            }
-            writer.write_all(&out_len.to_le_bytes()).context("write response length")?;
-            writer.write_all(out).context("write response payload")?;
-            writer.flush().context("flush response")?;
-        }
-    }
-}
-
-/// Parse an evidence state: a non-negative integer, or an `s<k>` /
-/// integer string (string forms share [`crate::infer::parse_state`]
-/// with the CLI).
-fn state_index(val: &Json, card: u32) -> Result<usize> {
-    match val {
-        Json::Num(_) => {
-            let s = val
-                .as_usize()
-                .ok_or_else(|| anyhow!("state must be a non-negative integer"))?;
-            ensure!(s < card as usize, "state {s} out of range (cardinality {card})");
-            Ok(s)
-        }
-        Json::Str(text) => crate::infer::parse_state(text, card),
-        _ => bail!("state must be an integer or a state name"),
-    }
-}
-
-fn error_response(id: Json, message: &str) -> String {
-    Json::Obj(vec![
-        ("id".to_string(), id),
-        ("ok".to_string(), Json::Bool(false)),
-        ("error".to_string(), Json::Str(message.to_string())),
-    ])
-    .to_string()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bn::network::tiny_bn;
+    use crate::infer::json::Json;
 
     fn server() -> QueryServer {
         QueryServer::new(&tiny_bn(), &EngineConfig::default()).unwrap()

@@ -19,6 +19,7 @@
 pub mod bn;
 pub mod cli;
 pub mod coordinator;
+pub mod engine;
 pub mod fusion;
 pub mod data;
 pub mod graph;
@@ -36,6 +37,7 @@ pub mod prelude {
     pub use crate::bn::{fit, forward_sample, load_domain, DiscreteBn, Domain, NetGenConfig};
     pub use crate::data::Dataset;
     pub use crate::graph::{Dag, Pdag};
+    pub use crate::engine::{CompiledModel, Scratch, ServeConfig, Server, SharedEngine};
     pub use crate::infer::{
         likelihood_weighting, ve_marginal, Engine, EngineConfig, JoinTree, Method, Posterior,
         QueryServer,

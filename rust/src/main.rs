@@ -23,8 +23,11 @@ use cges::bn::{
 use cges::cli::Args;
 use cges::coordinator::{cges as run_cges, PartitionSource, RingConfig, RingMode};
 use cges::data::{read_csv, write_csv, Dataset};
+use cges::engine::protocol::DEFAULT_MAX_BATCH;
+use cges::engine::server::DEFAULT_MAX_FRAME_BYTES;
+use cges::engine::{ServeConfig, Server};
 use cges::graph::Dag;
-use cges::infer::{ve_marginal, Engine, EngineConfig, Method, QueryServer};
+use cges::infer::{ve_marginal, Engine, EngineConfig, Method};
 use cges::learn::{fges, ges, FgesConfig, GesConfig};
 use cges::metrics::evaluate;
 use cges::partition::{partition_edges, partition_stats};
@@ -82,12 +85,16 @@ SUBCOMMANDS
   query      --net fitted.bif --target A[,B...] [--evidence \"X1=0,X2=s1\"]
              [--method auto|jointree|ve|lw] [--samples 20000] [--seed 1]
              [--budget 4194304]   (budget = max clique state space for exact)
-  serve      --net fitted.bif [--listen 127.0.0.1:7878]
+  serve      --net fitted.bif [--listen 127.0.0.1:7878] [--threads N]
              [--method auto|jointree|lw] [--samples 20000] [--seed 1] [--budget N]
+             [--batch 256] [--max-frame-bytes 1048576]
              stdin mode (default): one JSON query per line, one JSON answer per line
-             TCP mode (--listen): u32-LE length-prefixed JSON frames per request
-             query shape: {\"id\":1,\"type\":\"marginal\"|\"map\",
+             TCP mode (--listen): u32-LE length-prefixed JSON frames, N handler
+             threads over one shared compiled model; {\"type\":\"shutdown\"} stops
+             query shape: {\"id\":1,\"type\":\"marginal\"|\"map\"|\"joint_map\",
                            \"targets\":[\"X3\"],\"evidence\":{\"X0\":0}}
+             batch shape: {\"id\":2,\"type\":\"batch\",\"queries\":[...]} (answers
+             match singletons; shared-evidence prefixes amortize propagation)
 ";
 
 fn cmd_gen_net(argv: &[String]) -> Result<()> {
@@ -412,7 +419,20 @@ fn cmd_query(argv: &[String]) -> Result<()> {
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &[])?;
-    a.check_known(&["net", "listen", "method", "samples", "seed", "budget"], &[])?;
+    a.check_known(
+        &[
+            "net",
+            "listen",
+            "method",
+            "samples",
+            "seed",
+            "budget",
+            "threads",
+            "batch",
+            "max-frame-bytes",
+        ],
+        &[],
+    )?;
     let net = a.require("net")?;
     let bn = read_bif(Path::new(net))?;
     let method_name = a.get("method").unwrap_or("auto");
@@ -425,15 +445,27 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         samples: a.get_parse("samples", EngineConfig::default().samples)?,
         seed: a.get_parse("seed", 1)?,
     };
-    let mut server = QueryServer::new(&bn, &cfg)?;
+    let serve_cfg = ServeConfig {
+        threads: a.get_parse("threads", cges::util::num_threads())?,
+        max_frame_bytes: a.get_parse("max-frame-bytes", DEFAULT_MAX_FRAME_BYTES)?,
+        max_batch: a.get_parse("batch", DEFAULT_MAX_BATCH)?,
+    };
+    ensure!(serve_cfg.threads >= 1, "--threads must be at least 1");
+    ensure!(serve_cfg.max_frame_bytes >= 64, "--max-frame-bytes must be at least 64");
+    ensure!(serve_cfg.max_batch >= 1, "--batch must be at least 1");
+    let server = Server::new(&bn, &cfg, serve_cfg.clone())?;
     match a.get("listen") {
         Some(addr) => {
             let listener =
                 TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
             eprintln!(
-                "serving {net} on {} (engine {}; frames: u32 LE length + JSON)",
+                "serving {net} on {} (engine {}; {} handler thread(s); frames: u32 LE length + \
+                 JSON, cap {} bytes; batch cap {}; send {{\"type\":\"shutdown\"}} to stop)",
                 listener.local_addr().context("listener addr")?,
-                server.engine_name()
+                server.engine_name(),
+                serve_cfg.threads,
+                serve_cfg.max_frame_bytes,
+                serve_cfg.max_batch,
             );
             server.serve_tcp(&listener, None)
         }

@@ -9,3 +9,23 @@ pub use bitset::BitSet;
 pub use par::{num_threads, par_chunk_map, par_for_each_index, par_map_index};
 pub use stats::{mean, std_dev, Summary};
 pub use timer::Timer;
+
+/// Oversized-frame guard shared by every length-prefixed wire in the
+/// crate (the ring transport and the query server): a corrupt or
+/// hostile length prefix must be rejected with one wording everywhere,
+/// before any buffer is allocated for it. `direction` is `"outgoing"`
+/// or `"incoming"`.
+pub fn ensure_frame_len(direction: &str, len: u32, cap: u32) -> anyhow::Result<()> {
+    anyhow::ensure!(len <= cap, "{direction} frame of {len} bytes exceeds cap {cap}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn frame_len_guard_wording() {
+        assert!(super::ensure_frame_len("incoming", 10, 10).is_ok());
+        let e = super::ensure_frame_len("incoming", 11, 10).unwrap_err();
+        assert_eq!(format!("{e}"), "incoming frame of 11 bytes exceeds cap 10");
+    }
+}

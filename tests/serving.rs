@@ -1,0 +1,384 @@
+//! Concurrent serving, joint MAP and batch equivalence tests.
+//!
+//! The contracts under test: (1) the compiled model is genuinely
+//! shareable — N simultaneous TCP clients get answers byte-identical
+//! to a single-threaded server; (2) `joint_map` equals brute-force
+//! joint argmax enumeration at 1e-9; (3) a `batch` request equals
+//! issuing its sub-queries individually; (4) the scratch
+//! collect-message cache never leaks evidence between queries; (5) the
+//! frame cap is configurable and the shutdown sentinel drains the
+//! pool.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use cges::bn::{generate, DiscreteBn, NetGenConfig};
+use cges::engine::{CompiledModel, ServeConfig, Server, SharedEngine};
+use cges::infer::json::Json;
+use cges::infer::EngineConfig;
+
+fn small_cfg(nodes: usize, edges: usize) -> NetGenConfig {
+    NetGenConfig { nodes, edges, max_parents: 3, card_range: (2, 3), locality: 0, alpha: 0.8 }
+}
+
+/// Deterministic distinct evidence vars with in-range states (same
+/// recipe as tests/inference.rs).
+fn evidence_for(seed: u64, bn: &DiscreteBn, n_obs: usize) -> Vec<(usize, usize)> {
+    let n = bn.n();
+    (0..n_obs)
+        .map(|i| {
+            let v = ((seed as usize) * 3 + i * 5) % n;
+            let s = ((seed as usize) + i) % bn.cards[v] as usize;
+            (v, s)
+        })
+        .filter({
+            let mut seen: Vec<usize> = Vec::new();
+            move |&(v, _)| {
+                if seen.contains(&v) {
+                    false
+                } else {
+                    seen.push(v);
+                    true
+                }
+            }
+        })
+        .collect()
+}
+
+/// Probability of one complete assignment under `bn`.
+fn joint_prob(bn: &DiscreteBn, states: &[u8]) -> f64 {
+    let mut p = 1.0f64;
+    for v in 0..bn.n() {
+        let cfg = bn.parent_config(v, states, &bn.cards);
+        p *= bn.cpts[v].row(cfg)[states[v] as usize];
+    }
+    p
+}
+
+/// Brute-force joint MAP: enumerate every complete assignment
+/// consistent with the evidence, keep the strict maximum. (Ties would
+/// go to the first assignment enumerated; the generated CPTs are
+/// generic, so the tested networks have a unique maximizer and the
+/// engine's per-clique tie rule never comes into play.)
+fn brute_force_map(bn: &DiscreteBn, evidence: &[(usize, usize)]) -> (Vec<usize>, f64) {
+    let n = bn.n();
+    let cards: Vec<usize> = bn.cards.iter().map(|&c| c as usize).collect();
+    let mut states = vec![0u8; n];
+    let mut best_states: Vec<usize> = vec![0; n];
+    let mut best_p = -1.0f64;
+    let mut done = false;
+    while !done {
+        if evidence.iter().all(|&(v, s)| states[v] as usize == s) {
+            let p = joint_prob(bn, &states);
+            if p > best_p {
+                best_p = p;
+                best_states = states.iter().map(|&s| s as usize).collect();
+            }
+        }
+        done = true;
+        for (st, &c) in states.iter_mut().zip(&cards) {
+            *st += 1;
+            if (*st as usize) < c {
+                done = false;
+                break;
+            }
+            *st = 0;
+        }
+    }
+    (best_states, best_p)
+}
+
+fn send_frame(writer: &mut impl Write, payload: &str) {
+    let bytes = payload.as_bytes();
+    writer.write_all(&(bytes.len() as u32).to_le_bytes()).unwrap();
+    writer.write_all(bytes).unwrap();
+    writer.flush().unwrap();
+}
+
+fn recv_frame(reader: &mut impl Read) -> String {
+    let mut len_bytes = [0u8; 4];
+    reader.read_exact(&mut len_bytes).unwrap();
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    let mut payload = vec![0u8; len];
+    reader.read_exact(&mut payload).unwrap();
+    String::from_utf8(payload).unwrap()
+}
+
+/// JSON evidence object text for a list of (var, state) pairs.
+fn evidence_json(bn: &DiscreteBn, evidence: &[(usize, usize)]) -> String {
+    let cells: Vec<String> =
+        evidence.iter().map(|&(v, s)| format!("\"{}\": {s}", bn.names[v])).collect();
+    format!("{{{}}}", cells.join(", "))
+}
+
+#[test]
+fn engine_types_are_send_sync() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<CompiledModel>();
+    assert_send_sync::<SharedEngine>();
+    assert_send_sync::<Server>();
+}
+
+#[test]
+fn scratch_cache_never_leaks_evidence_between_queries() {
+    // One long-lived scratch walking through evidence sets that grow,
+    // shrink, repeat and permute must answer exactly like a fresh
+    // scratch per query (the cache is invisible except in speed).
+    let bn = generate(&small_cfg(9, 12), 7);
+    let model = CompiledModel::compile(&bn).unwrap();
+    let mut warm = model.new_scratch();
+
+    let mut sequences: Vec<Vec<(usize, usize)>> = Vec::new();
+    for seed in 0..8u64 {
+        for n_obs in [0usize, 1, 2, 3, 2, 0, 3] {
+            sequences.push(evidence_for(seed, &bn, n_obs));
+        }
+    }
+    // Repeat a set twice in a row (full cache hit) and reversed
+    // spellings of the same set (canonicalization).
+    let dup = evidence_for(3, &bn, 3);
+    sequences.push(dup.clone());
+    sequences.push(dup.clone());
+    let mut rev = dup;
+    rev.reverse();
+    sequences.push(rev);
+
+    for (i, evidence) in sequences.iter().enumerate() {
+        let mut fresh = model.new_scratch();
+        let want = model.marginals(&mut fresh, evidence).unwrap();
+        let got = model.marginals(&mut warm, evidence).unwrap();
+        assert!(
+            (got.log_evidence - want.log_evidence).abs() < 1e-12,
+            "step {i}: log evidence {} vs {}",
+            got.log_evidence,
+            want.log_evidence
+        );
+        for v in 0..bn.n() {
+            for (a, b) in got.marginal(v).iter().zip(want.marginal(v)) {
+                assert!((a - b).abs() < 1e-12, "step {i} var {v}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn joint_map_matches_brute_force_argmax() {
+    for seed in 0..6u64 {
+        let bn = generate(&small_cfg(8, 11), seed ^ 0x3A);
+        let model = CompiledModel::compile(&bn).unwrap();
+        let mut scratch = model.new_scratch();
+        for n_obs in 0..3usize {
+            let evidence = evidence_for(seed, &bn, n_obs);
+            let (want_states, want_p) = brute_force_map(&bn, &evidence);
+            let (got_states, got_log) = model.joint_map(&mut scratch, &evidence).unwrap();
+            assert!(
+                (got_log - want_p.ln()).abs() < 1e-9,
+                "seed {seed} obs {n_obs}: log MAP {got_log} vs {}",
+                want_p.ln()
+            );
+            // The returned assignment achieves the maximum...
+            let got_u8: Vec<u8> = got_states.iter().map(|&s| s as u8).collect();
+            let got_p = joint_prob(&bn, &got_u8);
+            assert!(
+                (got_p - want_p).abs() <= 1e-9 * want_p.max(1e-300),
+                "seed {seed} obs {n_obs}: P(assignment) {got_p} vs max {want_p}"
+            );
+            // ...and respects the evidence.
+            for &(v, s) in &evidence {
+                assert_eq!(got_states[v], s, "seed {seed}: evidence var {v}");
+            }
+            // Generic tables have no exact ties, so the argmax itself
+            // must agree with enumeration.
+            assert_eq!(got_states, want_states, "seed {seed} obs {n_obs}");
+        }
+    }
+}
+
+#[test]
+fn concurrent_tcp_clients_match_single_threaded_answers() {
+    const CLIENTS: usize = 4;
+    const QUERIES: usize = 8;
+
+    let bn = generate(&small_cfg(9, 12), 5);
+    let cfg = EngineConfig::default();
+
+    // Per-client request scripts mixing every query type.
+    let requests: Vec<Vec<String>> = (0..CLIENTS)
+        .map(|c| {
+            (0..QUERIES)
+                .map(|q| {
+                    let evidence = evidence_for((c * QUERIES + q) as u64, &bn, q % 3);
+                    let ev = evidence_json(&bn, &evidence);
+                    match q % 4 {
+                        0 => format!(r#"{{"id": {q}, "type": "marginal", "evidence": {ev}}}"#),
+                        1 => format!(
+                            r#"{{"id": {q}, "type": "map", "targets": ["{}"], "evidence": {ev}}}"#,
+                            bn.names[q % bn.n()]
+                        ),
+                        2 => format!(r#"{{"id": {q}, "type": "joint_map", "evidence": {ev}}}"#),
+                        _ => format!(
+                            r#"{{"id": {q}, "type": "batch", "queries": [{{"id": 0, "evidence": {ev}}}, {{"id": 1, "type": "joint_map"}}]}}"#
+                        ),
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    // Single-threaded reference answers.
+    let reference = Server::new(&bn, &cfg, ServeConfig::default()).unwrap();
+    let mut ref_scratch = reference.new_scratch();
+    let expected: Vec<Vec<String>> = requests
+        .iter()
+        .map(|qs| qs.iter().map(|q| reference.handle(&mut ref_scratch, q)).collect())
+        .collect();
+
+    let server =
+        Server::new(&bn, &cfg, ServeConfig { threads: CLIENTS, ..Default::default() }).unwrap();
+    assert_eq!(server.engine_name(), "jointree");
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|s| {
+        let server = &server;
+        s.spawn(move || server.serve_tcp(&listener, Some(CLIENTS)).unwrap());
+        let mut clients = Vec::new();
+        for c in 0..CLIENTS {
+            let reqs = &requests[c];
+            let exps = &expected[c];
+            clients.push(s.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = BufWriter::new(stream);
+                for (req, want) in reqs.iter().zip(exps) {
+                    send_frame(&mut writer, req);
+                    let got = recv_frame(&mut reader);
+                    assert_eq!(&got, want, "client {c} diverged from single-threaded answer");
+                }
+            }));
+        }
+        for h in clients {
+            h.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn batch_answers_match_singleton_answers() {
+    let bn = generate(&small_cfg(9, 13), 11);
+    let cfg = EngineConfig::default();
+
+    // Sub-queries with heavy evidence-prefix sharing: duplicates,
+    // permuted spellings of one set, and a failing query mixed in.
+    let e2 = evidence_for(4, &bn, 2);
+    let mut e2_rev = e2.clone();
+    e2_rev.reverse();
+    let e3 = evidence_for(4, &bn, 3);
+    let singles = [
+        format!(r#"{{"id": 0, "type": "marginal", "evidence": {}}}"#, evidence_json(&bn, &e2)),
+        format!(r#"{{"id": 1, "type": "map", "evidence": {}}}"#, evidence_json(&bn, &e3)),
+        format!(r#"{{"id": 2, "type": "marginal", "evidence": {}}}"#, evidence_json(&bn, &e2_rev)),
+        format!(r#"{{"id": 3, "type": "joint_map", "evidence": {}}}"#, evidence_json(&bn, &e2)),
+        r#"{"id": 4, "type": "marginal", "targets": ["not_a_var"]}"#.to_string(),
+        r#"{"id": 5, "type": "marginal"}"#.to_string(),
+        format!(r#"{{"id": 6, "type": "marginal", "evidence": {}}}"#, evidence_json(&bn, &e2)),
+    ];
+
+    // Individually issued, each on a cold server.
+    let expected: Vec<Json> = singles
+        .iter()
+        .map(|q| {
+            let cold = Server::new(&bn, &cfg, ServeConfig::default()).unwrap();
+            let mut scratch = cold.new_scratch();
+            Json::parse(&cold.handle(&mut scratch, q)).unwrap()
+        })
+        .collect();
+
+    let batch = format!(r#"{{"id": 99, "type": "batch", "queries": [{}]}}"#, singles.join(", "));
+    let server = Server::new(&bn, &cfg, ServeConfig::default()).unwrap();
+    let mut scratch = server.new_scratch();
+    let v = Json::parse(&server.handle(&mut scratch, &batch)).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(v.get("id").and_then(Json::as_usize), Some(99));
+    let results = v.get("results").and_then(Json::as_array).unwrap();
+    assert_eq!(results.len(), singles.len());
+    for (i, (got, want)) in results.iter().zip(&expected).enumerate() {
+        assert_eq!(got, want, "batch slot {i} diverged from its singleton answer");
+    }
+}
+
+#[test]
+fn frame_cap_is_configurable_and_shared_wording() {
+    let bn = generate(&small_cfg(6, 8), 2);
+    let server = Server::new(
+        &bn,
+        &EngineConfig::default(),
+        ServeConfig { max_frame_bytes: 256, ..Default::default() },
+    )
+    .unwrap();
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|s| {
+        let server = &server;
+        s.spawn(move || server.serve_tcp(&listener, Some(2)).unwrap());
+
+        // Connection 1: an oversized length prefix is rejected before
+        // the payload is read; the connection dies, the server lives.
+        {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut writer = BufWriter::new(stream.try_clone().unwrap());
+            writer.write_all(&1024u32.to_le_bytes()).unwrap();
+            writer.flush().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut buf = [0u8; 4];
+            // Server closes without answering.
+            assert!(reader.read_exact(&mut buf).is_err());
+        }
+
+        // Connection 2: under the cap still answers.
+        {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = BufWriter::new(stream);
+            send_frame(&mut writer, r#"{"id": 1, "type": "map"}"#);
+            let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        }
+    });
+}
+
+#[test]
+fn shutdown_sentinel_drains_the_pool() {
+    let bn = generate(&small_cfg(6, 8), 9);
+    let server = Server::new(
+        &bn,
+        &EngineConfig::default(),
+        ServeConfig { threads: 2, ..Default::default() },
+    )
+    .unwrap();
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|s| {
+        let server = &server;
+        let handle = s.spawn(move || server.serve_tcp(&listener, None).unwrap());
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        // A real query first, then the sentinel.
+        send_frame(&mut writer, r#"{"id": 1}"#);
+        let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        send_frame(&mut writer, r#"{"id": 2, "type": "shutdown"}"#);
+        let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+        assert_eq!(v.get("shutdown").and_then(Json::as_bool), Some(true));
+        drop(writer);
+        drop(reader);
+
+        // serve_tcp(None) returns only because the sentinel latched.
+        handle.join().unwrap();
+        assert!(server.is_shutting_down());
+    });
+}
