@@ -1,0 +1,298 @@
+//! Factor-kernel bench: blocked kernels vs the retained scalar
+//! reference, per table size and operand shape, plus the end-to-end
+//! serving effect.
+//!
+//!   cargo bench --bench kernels                  # default sizes
+//!   cargo bench --bench kernels -- --nodes 200 --queries 200
+//!
+//! Three microbench ops on random factors over `k` variables of
+//! cardinality 4 (tables of 4^k cells), each against three operand
+//! shapes — the operand scope a *prefix* of the walk (stride-1 inner
+//! runs for the operand), a *suffix* (stride-1 runs for the walk,
+//! constant operand), and *interleaved* (worst case, small blocks):
+//!
+//! * **product** — `Factor::product` vs `reference::product`;
+//! * **marginalize** — `Factor::marginalize_to` vs
+//!   `reference::marginalize_to`;
+//! * **fused** — `kernel::absorb_marginalize_into` vs scalar
+//!   product-then-marginalize (the collect-message shape).
+//!
+//! Every blocked result is checked bit-identical to its scalar
+//! counterpart before timing. The serving section fits a netgen
+//! domain and compares `CompiledModel::marginals` (warm scratch and
+//! cold scratch) against `marginals_reference` (the pre-rework scalar
+//! engine). Writes `BENCH_kernels.json` so the kernel speedups are
+//! tracked from PR to PR next to the other perf records.
+
+use std::hint::black_box;
+
+use cges::bn::{fit, forward_sample, generate, NetGenConfig};
+use cges::engine::CompiledModel;
+use cges::infer::factor::Factor;
+use cges::infer::kernel::{self, reference};
+use cges::rng::Rng;
+use cges::util::Timer;
+
+/// Past this clique state space the engine section is skipped
+/// (matches the serve path's auto fallback).
+const EXACT_BUDGET: u64 = 1 << 24;
+const CARD: usize = 4;
+
+struct Case {
+    op: &'static str,
+    shape: &'static str,
+    cells: usize,
+    scalar_ns: f64,
+    blocked_ns: f64,
+}
+
+fn random_factor(vars: Vec<usize>, rng: &mut Rng) -> Factor {
+    let cards = vec![CARD; vars.len()];
+    let size = CARD.pow(vars.len() as u32);
+    let table: Vec<f64> = (0..size).map(|_| rng.f64() + 0.01).collect();
+    Factor { vars, cards, table }
+}
+
+/// Operand/kept variable pattern over a walk of `k` vars (global ids
+/// `0..k`): the first half, the last half, or every other variable.
+fn pattern(k: usize, shape: &str) -> Vec<usize> {
+    match shape {
+        "prefix" => (0..k / 2).collect(),
+        "suffix" => (k / 2..k).collect(),
+        _ => (0..k).step_by(2).collect(),
+    }
+}
+
+fn time_pair(
+    reps: usize,
+    mut scalar: impl FnMut() -> f64,
+    mut blocked: impl FnMut() -> f64,
+) -> (f64, f64) {
+    // One checked warm-up call each, then timed loops.
+    let a = scalar();
+    let b = blocked();
+    assert_eq!(a.to_bits(), b.to_bits(), "blocked kernel diverged from scalar reference");
+    let t = Timer::start();
+    let mut acc = 0.0;
+    for _ in 0..reps {
+        acc += scalar();
+    }
+    let scalar_secs = t.secs();
+    black_box(acc);
+    let t = Timer::start();
+    let mut acc = 0.0;
+    for _ in 0..reps {
+        acc += blocked();
+    }
+    let blocked_secs = t.secs();
+    black_box(acc);
+    (scalar_secs, blocked_secs)
+}
+
+fn main() -> anyhow::Result<()> {
+    let wall = Timer::start();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str, dflt: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(dflt)
+    };
+    let nodes = get("--nodes", 120);
+    let edges = get("--edges", 150);
+    let rows = get("--rows", 2000);
+    let queries = get("--queries", 200);
+    let seed = get("--seed", 1) as u64;
+
+    println!("# kernel bench: card={CARD} nodes={nodes} edges={edges} queries={queries}");
+
+    let mut cases: Vec<Case> = Vec::new();
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    for k in [4usize, 6, 8] {
+        let cells = CARD.pow(k as u32);
+        let reps = (8_000_000 / cells).max(8);
+        let walk = random_factor((0..k).collect(), &mut rng);
+        for shape in ["prefix", "suffix", "interleaved"] {
+            let sub_vars = pattern(k, shape);
+            let sub = random_factor(sub_vars.clone(), &mut rng);
+
+            // product: clique × message.
+            let (s, b) = time_pair(
+                reps,
+                || reference::product(&walk, &sub).table.iter().sum::<f64>(),
+                || Factor::product(&walk, &sub).table.iter().sum::<f64>(),
+            );
+            cases.push(Case {
+                op: "product",
+                shape,
+                cells,
+                scalar_ns: ns_per_cell(s, reps, cells),
+                blocked_ns: ns_per_cell(b, reps, cells),
+            });
+
+            // marginalize: clique → separator.
+            let (s, b) = time_pair(
+                reps,
+                || reference::marginalize_to(&walk, &sub_vars).table.iter().sum::<f64>(),
+                || walk.marginalize_to(&sub_vars).table.iter().sum::<f64>(),
+            );
+            cases.push(Case {
+                op: "marginalize",
+                shape,
+                cells,
+                scalar_ns: ns_per_cell(s, reps, cells),
+                blocked_ns: ns_per_cell(b, reps, cells),
+            });
+
+            // fused absorb-and-marginalize vs scalar product + marginalize,
+            // into a retained buffer (the zero-allocation serving shape).
+            let mut sm = Vec::new();
+            kernel::subset_strides_into(&walk.vars, &walk.cards, &sub.vars, &mut sm);
+            let out_size = CARD.pow(sub_vars.len() as u32);
+            let mut out = vec![0.0; out_size];
+            let (s, b) = time_pair(
+                reps,
+                || {
+                    let p = reference::product(&walk, &sub);
+                    reference::marginalize_to(&p, &sub_vars).table.iter().sum::<f64>()
+                },
+                || {
+                    kernel::absorb_marginalize_into(
+                        &mut out, &walk.table, &sub.table, &walk.cards, &sm, &sm, false,
+                    );
+                    out.iter().sum::<f64>()
+                },
+            );
+            cases.push(Case {
+                op: "fused",
+                shape,
+                cells,
+                scalar_ns: ns_per_cell(s, reps, cells),
+                blocked_ns: ns_per_cell(b, reps, cells),
+            });
+        }
+    }
+    for c in &cases {
+        println!(
+            "{:<12} {:<12} {:>8} cells: scalar {:>7.2} ns/cell, blocked {:>7.2} ns/cell, {:.2}x",
+            c.op,
+            c.shape,
+            c.cells,
+            c.scalar_ns,
+            c.blocked_ns,
+            c.scalar_ns / c.blocked_ns.max(1e-12)
+        );
+    }
+
+    // End-to-end: the serving engine against its retained scalar self.
+    let cfg =
+        NetGenConfig { nodes, edges, max_parents: 2, card_range: (2, 3), ..Default::default() };
+    let truth = generate(&cfg, seed);
+    let data = forward_sample(&truth, rows, seed ^ 0xDA7A);
+    let bn = fit(&truth.dag, &data, 1.0)?;
+    let model = CompiledModel::compile(&bn)?;
+    let serving = if model.max_clique_states() <= EXACT_BUDGET {
+        let evidence: Vec<(usize, usize)> = {
+            let mut r = Rng::new(seed + 11);
+            (0..queries)
+                .map(|_| {
+                    let v = r.gen_range(nodes);
+                    (v, r.gen_range(bn.cards[v] as usize))
+                })
+                .collect()
+        };
+        let t = Timer::start();
+        for &(v, st) in &evidence {
+            black_box(model.marginals_reference(&[(v, st)])?);
+        }
+        let scalar_qps = queries as f64 / t.secs().max(1e-9);
+        let t = Timer::start();
+        for &(v, st) in &evidence {
+            let mut s = model.new_scratch();
+            black_box(model.marginals(&mut s, &[(v, st)])?);
+        }
+        let cold_qps = queries as f64 / t.secs().max(1e-9);
+        let mut s = model.new_scratch();
+        let t = Timer::start();
+        for &(v, st) in &evidence {
+            black_box(model.marginals(&mut s, &[(v, st)])?);
+        }
+        let warm_qps = queries as f64 / t.secs().max(1e-9);
+        println!(
+            "serving: scalar {scalar_qps:.1} q/s, blocked cold {cold_qps:.1} q/s, \
+             blocked warm {warm_qps:.1} q/s"
+        );
+        Some((scalar_qps, cold_qps, warm_qps))
+    } else {
+        println!("serving: skipped (past exact budget {EXACT_BUDGET})");
+        None
+    };
+
+    let wall_secs = wall.secs();
+    let json = perf_record_json(nodes, edges, rows, queries, &cases, serving, wall_secs);
+    let out = "BENCH_kernels.json";
+    std::fs::write(out, &json)?;
+    println!("\nperf record written to {out} (wall {wall_secs:.1}s)");
+    Ok(())
+}
+
+fn ns_per_cell(secs: f64, reps: usize, cells: usize) -> f64 {
+    secs * 1e9 / (reps as f64 * cells as f64)
+}
+
+/// Hand-rolled JSON (no serde offline) — same convention as the other
+/// perf records.
+fn perf_record_json(
+    nodes: usize,
+    edges: usize,
+    rows: usize,
+    queries: usize,
+    cases: &[Case],
+    serving: Option<(f64, f64, f64)>,
+    wall_secs: f64,
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"bench\": \"kernels\",");
+    let _ = writeln!(s, "  \"card\": {CARD},");
+    let _ = writeln!(s, "  \"nodes\": {nodes},");
+    let _ = writeln!(s, "  \"edges\": {edges},");
+    let _ = writeln!(s, "  \"rows\": {rows},");
+    let _ = writeln!(s, "  \"queries\": {queries},");
+    let _ = writeln!(s, "  \"cases\": [");
+    for (i, c) in cases.iter().enumerate() {
+        let comma = if i + 1 == cases.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    {{\"op\": \"{}\", \"shape\": \"{}\", \"cells\": {}, \
+             \"scalar_ns_per_cell\": {:.3}, \"blocked_ns_per_cell\": {:.3}, \
+             \"speedup\": {:.3}}}{comma}",
+            c.op,
+            c.shape,
+            c.cells,
+            c.scalar_ns,
+            c.blocked_ns,
+            c.scalar_ns / c.blocked_ns.max(1e-12)
+        );
+    }
+    let _ = writeln!(s, "  ],");
+    match serving {
+        Some((scalar, cold, warm)) => {
+            let _ = writeln!(s, "  \"serving_scalar_qps\": {scalar:.2},");
+            let _ = writeln!(s, "  \"serving_blocked_cold_qps\": {cold:.2},");
+            let _ = writeln!(s, "  \"serving_blocked_warm_qps\": {warm:.2},");
+            let _ = writeln!(s, "  \"serving_speedup_warm\": {:.3},", warm / scalar.max(1e-12));
+        }
+        None => {
+            let _ = writeln!(s, "  \"serving_scalar_qps\": null,");
+            let _ = writeln!(s, "  \"serving_blocked_cold_qps\": null,");
+            let _ = writeln!(s, "  \"serving_blocked_warm_qps\": null,");
+            let _ = writeln!(s, "  \"serving_speedup_warm\": null,");
+        }
+    }
+    let _ = writeln!(s, "  \"wall_secs\": {wall_secs:.2}");
+    s.push_str("}\n");
+    s
+}

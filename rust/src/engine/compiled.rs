@@ -1,17 +1,29 @@
-//! The compiled-model / scratch split that makes serving concurrent.
+//! The compiled-model / scratch split that makes serving concurrent,
+//! and the precompiled kernel plans that make it allocation-free.
 //!
 //! [`CompiledModel`] is everything about a fitted network that never
 //! changes between queries: the jointree topology (cliques, a *fixed*
 //! rooted message schedule with per-clique parents, children and
 //! separators), the evidence-free clique potentials with every CPT
-//! multiplied in, and each variable's home clique. It holds no
-//! interior mutability, so it is `Send + Sync` and one `Arc` (or plain
-//! reference) can back any number of connection-handler threads.
+//! multiplied in, each variable's home clique — and, since the blocked
+//! kernel rework, a `CliquePlan` per schedule edge holding every
+//! stride vector and blocked split a propagation needs. The kernel
+//! walks never re-derive scopes, never call a `contains`/`position`
+//! scan, and never sort anything (evidence canonicalization still
+//! sorts two tiny scratch lists when the evidence set changes). It holds no interior mutability, so it is
+//! `Send + Sync` and one `Arc` (or plain reference) can back any
+//! number of connection-handler threads.
 //!
-//! [`Scratch`] is everything a propagation mutates: the current
-//! evidence-absorbed potentials and the message buffers. Each serving
-//! thread owns one, so the hot path `marginals(&self, &mut Scratch,
-//! ..)` takes no lock anywhere.
+//! [`Scratch`] is everything a propagation mutates: the
+//! evidence-absorbed potentials, all message buffers, a per-clique
+//! belief arena and one clique-sized work table. Every buffer has a
+//! shape fixed at compile time, so steady-state queries perform **zero
+//! heap allocations** in the kernel path — `marginalize_into` /
+//! `product_into` / `absorb_marginalize_into` (the fused
+//! message kernel that never materializes a clique product when a
+//! single absorb feeds a marginalization) write into these retained
+//! tables. Each serving thread owns one scratch, so the hot path
+//! `marginals(&self, &mut Scratch, ..)` takes no lock anywhere.
 //!
 //! The scratch doubles as an incremental-evidence cache: collect-pass
 //! messages are kept between queries together with the evidence each
@@ -28,21 +40,52 @@
 //! root-to-leaf decode that argmaxes each clique belief consistent
 //! with the states already decided (the running-intersection property
 //! makes those exactly the parent separator). Ties break toward the
-//! lowest mixed-radix table index (see
-//! [`Factor::argmax_consistent`]), so concurrent and sequential runs
+//! lowest mixed-radix table index, so concurrent and sequential runs
 //! return byte-identical assignments.
+//!
+//! Every blocked path is bit-for-bit identical to the retained scalar
+//! engine ([`marginals_reference`](CompiledModel::marginals_reference)
+//! / [`joint_map_reference`](CompiledModel::joint_map_reference), the
+//! verbatim pre-rework implementation over `kernel::reference` ops):
+//! same multiplies, same accumulation order. `tests/serving.rs` pins
+//! the equality to `to_bits`, which is what makes served responses
+//! byte-identical before and after the kernel rework.
 
 use anyhow::{bail, ensure, Result};
 
 use crate::bn::DiscreteBn;
 use crate::graph::moral_graph;
 use crate::infer::factor::Factor;
+use crate::infer::kernel::{self, reference, Split};
 use crate::infer::triangulate::{triangulate, Triangulation};
 use crate::infer::Posterior;
 use crate::util::BitSet;
 
+/// Precompiled kernel layout for one clique of the frozen schedule:
+/// the stride vectors and blocked splits every message touching this
+/// clique needs, derived once at compile time.
+struct CliquePlan {
+    /// Natural (contiguous) strides of the clique's own table along
+    /// its scope — the `a` operand of every clique-scope product.
+    self_strides: Vec<usize>,
+    /// Strides of the parent separator `sep[c]` along the clique scope
+    /// (collect-marginalize output; down-absorb operand). All zeros at
+    /// roots.
+    sep_strides: Vec<usize>,
+    /// `sep[c]` table size (up/down message length; 1 at roots).
+    sep_size: usize,
+    /// Blocked split of `sep_strides` against the clique walk.
+    sep_split: Split,
+    /// Aligned with `children[c]`: strides of `sep[child]` along
+    /// *this* clique's scope (up-absorb operand; down-marginalize
+    /// output), with their splits.
+    child_strides: Vec<Vec<usize>>,
+    child_splits: Vec<Split>,
+}
+
 /// A frozen, shareable compilation of one discrete Bayesian network:
-/// jointree topology, CPT-assigned potentials and message schedule.
+/// jointree topology, CPT-assigned potentials, message schedule and
+/// per-edge kernel plans.
 pub struct CompiledModel {
     names: Vec<String>,
     cards: Vec<usize>,
@@ -64,28 +107,55 @@ pub struct CompiledModel {
     base: Vec<Factor>,
     /// For each variable, a clique containing its whole family.
     var_home: Vec<usize>,
+    /// Vars homed at each clique (marginal-extraction grouping).
+    home_vars: Vec<Vec<usize>>,
+    /// Digit position of each variable inside its home clique's scope.
+    var_pos: Vec<usize>,
+    /// Per-clique kernel plans, aligned with `cliques`.
+    plans: Vec<CliquePlan>,
+    /// Largest clique table size (work-buffer length).
+    max_table: usize,
     max_clique_states: u64,
 }
 
-/// Per-thread propagation state: current potentials, message buffers
-/// and the incremental-evidence cache. Create with
-/// [`CompiledModel::new_scratch`]; reuse across queries for the
-/// collect-message cache to pay off.
+/// Per-thread propagation state: current potentials, message buffers,
+/// the belief arena and the incremental-evidence cache. Every table is
+/// retained between queries at its fixed compiled shape, so
+/// steady-state propagation allocates nothing. Create with
+/// [`CompiledModel::new_scratch`]; reuse across queries for both the
+/// buffers and the collect-message cache to pay off.
 pub struct Scratch {
-    /// Current potentials: base × absorbed evidence indicators.
-    pots: Vec<Factor>,
+    /// Current potentials: base × absorbed evidence indicators
+    /// (clique-scope tables).
+    pots: Vec<Vec<f64>>,
     /// Evidence pairs currently absorbed into each clique (sorted).
     clique_ev: Vec<Vec<(usize, usize)>>,
-    /// Cached collect message clique → schedule parent.
-    up: Vec<Option<Factor>>,
+    /// Cached collect messages clique → schedule parent (valid iff
+    /// `!dirty`).
+    up: Vec<Vec<f64>>,
     /// Log-normalizer of each cached collect message.
     up_logz: Vec<f64>,
     /// Is `up[c]` stale relative to `pots`?
     dirty: Vec<bool>,
-    /// Distribute message schedule-parent → clique (rebuilt per query).
-    down: Vec<Option<Factor>>,
+    /// Distribute messages schedule-parent → clique (rebuilt per
+    /// query).
+    down: Vec<Vec<f64>>,
+    /// Per-clique beliefs for the current query.
+    bel: Vec<Vec<f64>>,
+    /// Is `bel[c]` valid for the current query?
+    bel_ok: Vec<bool>,
+    /// Shared clique-sized product buffer.
+    work: Vec<f64>,
     /// Canonical (sorted) evidence currently absorbed.
     evidence: Vec<(usize, usize)>,
+    /// Reusable temporaries for evidence canonicalization.
+    ev_tmp: Vec<(usize, usize)>,
+    touched_tmp: Vec<usize>,
+    cev_tmp: Vec<(usize, usize)>,
+    /// Max-product message / clique-product arenas, sized lazily by
+    /// the first `joint_map` on this scratch.
+    max_up: Vec<Vec<f64>>,
+    max_prod: Vec<Vec<f64>>,
 }
 
 impl Scratch {
@@ -99,7 +169,15 @@ impl Scratch {
             up_logz: Vec::new(),
             dirty: Vec::new(),
             down: Vec::new(),
+            bel: Vec::new(),
+            bel_ok: Vec::new(),
+            work: Vec::new(),
             evidence: Vec::new(),
+            ev_tmp: Vec::new(),
+            touched_tmp: Vec::new(),
+            cev_tmp: Vec::new(),
+            max_up: Vec::new(),
+            max_prod: Vec::new(),
         }
     }
 }
@@ -221,6 +299,45 @@ impl CompiledModel {
             base[ci] = Factor::product(&base[ci], &Factor::from_cpt(bn, v));
         }
 
+        // Precompile the kernel plans: one stride vector + split per
+        // schedule edge, so queries never call `subset_strides_into`.
+        let mut plans: Vec<CliquePlan> = Vec::with_capacity(nc);
+        for c in 0..nc {
+            let cvars = &cliques[c];
+            let ccards = &base[c].cards;
+            let mut self_strides = Vec::new();
+            kernel::subset_strides_into(cvars, ccards, cvars, &mut self_strides);
+            let mut sep_strides = Vec::new();
+            kernel::subset_strides_into(cvars, ccards, &sep[c], &mut sep_strides);
+            let sep_size: usize = sep[c].iter().map(|&v| cards[v]).product();
+            let sep_split = Split::of(ccards, &sep_strides);
+            let mut child_strides: Vec<Vec<usize>> = Vec::with_capacity(children[c].len());
+            let mut child_splits: Vec<Split> = Vec::with_capacity(children[c].len());
+            for &k in &children[c] {
+                let mut s = Vec::new();
+                kernel::subset_strides_into(cvars, ccards, &sep[k], &mut s);
+                child_splits.push(Split::of(ccards, &s));
+                child_strides.push(s);
+            }
+            plans.push(CliquePlan {
+                self_strides,
+                sep_strides,
+                sep_size,
+                sep_split,
+                child_strides,
+                child_splits,
+            });
+        }
+
+        let mut home_vars: Vec<Vec<usize>> = vec![Vec::new(); nc];
+        let mut var_pos = vec![0usize; n];
+        for v in 0..n {
+            let c = var_home[v];
+            home_vars[c].push(v);
+            var_pos[v] = cliques[c].binary_search(&v).expect("home clique contains the variable");
+        }
+        let max_table = base.iter().map(|f| f.table.len()).max().unwrap_or(1);
+
         Ok(CompiledModel {
             names: bn.names.clone(),
             cards,
@@ -232,6 +349,10 @@ impl CompiledModel {
             roots,
             base,
             var_home,
+            home_vars,
+            var_pos,
+            plans,
+            max_table,
             max_clique_states: tri.max_clique_states,
         })
     }
@@ -262,23 +383,32 @@ impl CompiledModel {
     }
 
     /// Fresh propagation buffers for this model (one per serving
-    /// thread; queries then need only `&self`).
+    /// thread; queries then need only `&self`). Every table is
+    /// allocated here at its final shape — queries only overwrite.
     pub fn new_scratch(&self) -> Scratch {
         let nc = self.cliques.len();
         Scratch {
-            pots: self.base.clone(),
+            pots: self.base.iter().map(|f| f.table.clone()).collect(),
             clique_ev: vec![Vec::new(); nc],
-            up: vec![None; nc],
+            up: self.plans.iter().map(|p| vec![0.0; p.sep_size]).collect(),
             up_logz: vec![0.0; nc],
             dirty: vec![true; nc],
-            down: vec![None; nc],
+            down: self.plans.iter().map(|p| vec![0.0; p.sep_size]).collect(),
+            bel: self.base.iter().map(|f| vec![0.0; f.table.len()]).collect(),
+            bel_ok: vec![false; nc],
+            work: vec![0.0; self.max_table],
             evidence: Vec::new(),
+            ev_tmp: Vec::new(),
+            touched_tmp: Vec::new(),
+            cev_tmp: Vec::new(),
+            max_up: Vec::new(),
+            max_prod: Vec::new(),
         }
     }
 
-    /// Absorb `evidence` into the scratch potentials, invalidating
-    /// exactly the cached collect messages whose subtree changed.
-    fn set_evidence(&self, s: &mut Scratch, evidence: &[(usize, usize)]) -> Result<()> {
+    /// Range-check an evidence list (shared by the blocked and
+    /// reference paths so both reject with identical wording).
+    fn validate_evidence(&self, evidence: &[(usize, usize)]) -> Result<()> {
         let n = self.cards.len();
         for &(v, st) in evidence {
             ensure!(v < n, "evidence variable {v} out of range (n = {n})");
@@ -288,29 +418,47 @@ impl CompiledModel {
                 self.cards[v]
             );
         }
-        let mut ev: Vec<(usize, usize)> = evidence.to_vec();
-        ev.sort_unstable();
-        if ev == s.evidence {
+        Ok(())
+    }
+
+    /// Absorb `evidence` into the scratch potentials, invalidating
+    /// exactly the cached collect messages whose subtree changed.
+    /// Allocation-free in steady state: potentials are rebuilt in
+    /// place (base copy + indicator masks) and the canonicalization
+    /// temporaries live in the scratch.
+    fn set_evidence(&self, s: &mut Scratch, evidence: &[(usize, usize)]) -> Result<()> {
+        self.validate_evidence(evidence)?;
+        s.ev_tmp.clear();
+        s.ev_tmp.extend_from_slice(evidence);
+        s.ev_tmp.sort_unstable();
+        if s.ev_tmp == s.evidence {
             return Ok(());
         }
         // Cliques whose absorbed indicators may differ between the old
         // and new evidence sets.
-        let mut touched: Vec<usize> =
-            ev.iter().chain(s.evidence.iter()).map(|&(v, _)| self.var_home[v]).collect();
-        touched.sort_unstable();
-        touched.dedup();
-        for &c in &touched {
-            let new_ev: Vec<(usize, usize)> =
-                ev.iter().copied().filter(|&(v, _)| self.var_home[v] == c).collect();
-            if new_ev == s.clique_ev[c] {
+        s.touched_tmp.clear();
+        {
+            let homes = s.ev_tmp.iter().chain(s.evidence.iter()).map(|&(v, _)| self.var_home[v]);
+            s.touched_tmp.extend(homes);
+        }
+        s.touched_tmp.sort_unstable();
+        s.touched_tmp.dedup();
+        for &c in &s.touched_tmp {
+            s.cev_tmp.clear();
+            s.cev_tmp.extend(s.ev_tmp.iter().copied().filter(|&(v, _)| self.var_home[v] == c));
+            if s.cev_tmp == s.clique_ev[c] {
                 continue;
             }
-            let mut pot = self.base[c].clone();
-            for &(v, st) in &new_ev {
-                pot = Factor::product(&pot, &Factor::indicator(v, self.cards[v], st));
+            let base = &self.base[c];
+            s.pots[c].copy_from_slice(&base.table);
+            let pot = &mut s.pots[c];
+            for &(v, st) in &s.cev_tmp {
+                kernel::mask_assign(pot, &base.cards, self.var_pos[v], st);
             }
-            s.pots[c] = pot;
-            s.clique_ev[c] = new_ev;
+            // Copy rather than swap: each per-clique list keeps its own
+            // monotone capacity, so steady state stays allocation-free.
+            s.clique_ev[c].clear();
+            s.clique_ev[c].extend_from_slice(&s.cev_tmp);
             // Invalidate every collect message between c and its root.
             // Dirtiness is kept upward-closed along schedule paths, so
             // the walk can stop at the first already-dirty hop.
@@ -326,13 +474,16 @@ impl CompiledModel {
                 }
             }
         }
-        s.evidence = ev;
+        std::mem::swap(&mut s.evidence, &mut s.ev_tmp);
         Ok(())
     }
 
     /// Collect pass: recompute only the stale messages (leaves toward
     /// roots), reusing every cached message whose subtree evidence is
-    /// unchanged.
+    /// unchanged. Each message is produced by the fused
+    /// absorb-and-marginalize kernel — the full clique product is
+    /// materialized (into the shared work table) only when a clique
+    /// has three or more incoming factors.
     fn collect(&self, s: &mut Scratch) -> Result<()> {
         for &c in self.order.iter().rev() {
             if self.parent[c].is_none() {
@@ -342,91 +493,267 @@ impl CompiledModel {
             if !s.dirty[c] {
                 continue;
             }
-            let mut f = s.pots[c].clone();
-            for &k in &self.children[c] {
-                let inc = s.up[k].as_ref().expect("child collect message ready");
-                f = Factor::product(&f, inc);
+            let plan = &self.plans[c];
+            let kids = &self.children[c];
+            let cards = &self.base[c].cards;
+            // Buffers keep their compiled shape across queries (and
+            // across bails — every early return puts them back), so
+            // the kernels can overwrite without a redundant zero pass.
+            let mut msg = std::mem::take(&mut s.up[c]);
+            debug_assert_eq!(msg.len(), plan.sep_size);
+            match kids.len() {
+                0 => kernel::marginalize_into(
+                    &mut msg,
+                    &s.pots[c],
+                    cards,
+                    &plan.sep_strides,
+                    plan.sep_split,
+                    false,
+                ),
+                1 => kernel::absorb_marginalize_into(
+                    &mut msg,
+                    &s.pots[c],
+                    &s.up[kids[0]],
+                    cards,
+                    &plan.child_strides[0],
+                    &plan.sep_strides,
+                    false,
+                ),
+                m => {
+                    let tlen = s.pots[c].len();
+                    let w = &mut s.work[..tlen];
+                    kernel::product_into(
+                        w,
+                        &s.pots[c],
+                        &s.up[kids[0]],
+                        cards,
+                        &plan.self_strides,
+                        &plan.child_strides[0],
+                    );
+                    for j in 1..m - 1 {
+                        kernel::mul_assign(
+                            w,
+                            &s.up[kids[j]],
+                            cards,
+                            &plan.child_strides[j],
+                            plan.child_splits[j],
+                        );
+                    }
+                    kernel::absorb_marginalize_into(
+                        &mut msg,
+                        w,
+                        &s.up[kids[m - 1]],
+                        cards,
+                        &plan.child_strides[m - 1],
+                        &plan.sep_strides,
+                        false,
+                    );
+                }
             }
-            let mut m = f.marginalize_to(&self.sep[c]);
-            let z = m.normalize();
+            let z: f64 = msg.iter().sum();
             if z <= 0.0 {
+                s.up[c] = msg;
                 bail!("evidence has probability zero");
             }
+            let inv = 1.0 / z;
+            msg.iter_mut().for_each(|x| *x *= inv);
             s.up_logz[c] = z.ln();
-            s.up[c] = Some(m);
+            s.up[c] = msg;
             s.dirty[c] = false;
         }
         Ok(())
     }
 
+    /// Build clique `c`'s belief (pots × parent down-message × child
+    /// up-messages, in the reference multiplication order) into the
+    /// scratch belief arena.
+    fn belief_into(&self, s: &mut Scratch, c: usize) {
+        let plan = &self.plans[c];
+        let kids = &self.children[c];
+        let cards = &self.base[c].cards;
+        let mut b = std::mem::take(&mut s.bel[c]);
+        debug_assert_eq!(b.len(), s.pots[c].len());
+        let has_down = self.parent[c].is_some();
+        if !has_down && kids.is_empty() {
+            b.copy_from_slice(&s.pots[c]);
+        } else {
+            let (m0, s0): (&[f64], &[usize]) = if has_down {
+                (&s.down[c], &plan.sep_strides)
+            } else {
+                (&s.up[kids[0]], &plan.child_strides[0])
+            };
+            kernel::product_into(&mut b, &s.pots[c], m0, cards, &plan.self_strides, s0);
+            let start = if has_down { 0 } else { 1 };
+            for j in start..kids.len() {
+                kernel::mul_assign(
+                    &mut b,
+                    &s.up[kids[j]],
+                    cards,
+                    &plan.child_strides[j],
+                    plan.child_splits[j],
+                );
+            }
+        }
+        s.bel[c] = b;
+    }
+
     /// Exact posterior over every variable given `evidence`
     /// (`(variable, state)` pairs). Errors on out-of-range evidence or
-    /// evidence of probability zero. Lock-free: `&self` plus the
-    /// caller's scratch.
+    /// evidence of probability zero. Lock-free (`&self` plus the
+    /// caller's scratch) and allocation-free in the kernel path — only
+    /// the returned [`Posterior`] owns fresh memory.
     pub fn marginals(&self, s: &mut Scratch, evidence: &[(usize, usize)]) -> Result<Posterior> {
         self.set_evidence(s, evidence)?;
         self.collect(s)?;
 
         // Message normalizers plus the root belief masses telescope to
-        // P(evidence), in log space.
+        // P(evidence), in log space. Root beliefs land in the arena —
+        // the marginal pass below reuses them.
         let mut log_evidence: f64 = self
             .order
             .iter()
             .filter(|&&c| self.parent[c].is_some())
             .map(|&c| s.up_logz[c])
             .sum();
+        s.bel_ok.fill(false);
         for &r in &self.roots {
-            let mut b = s.pots[r].clone();
-            for &k in &self.children[r] {
-                b = Factor::product(&b, s.up[k].as_ref().expect("root message ready"));
-            }
-            let z = b.total();
+            self.belief_into(s, r);
+            let z: f64 = s.bel[r].iter().sum();
             if z <= 0.0 {
                 bail!("evidence has probability zero");
             }
             log_evidence += z.ln();
+            s.bel_ok[r] = true;
         }
 
         // Distribute pass, roots toward leaves. Not cached: each
         // message folds in every other branch of the tree, so almost
-        // any evidence change would invalidate it anyway.
+        // any evidence change would invalidate it anyway. The fused
+        // kernel computes each message without materializing the
+        // clique product unless ≥ 2 absorbs precede the marginalize.
         for &c in &self.order {
-            for &k in &self.children[c] {
-                let mut f = s.pots[c].clone();
-                if self.parent[c].is_some() {
-                    f = Factor::product(&f, s.down[c].as_ref().expect("parent message ready"));
-                }
-                for &k2 in &self.children[c] {
-                    if k2 == k {
-                        continue;
+            let kids = &self.children[c];
+            if kids.is_empty() {
+                continue;
+            }
+            let plan = &self.plans[c];
+            let cards = &self.base[c].cards;
+            let has_down = self.parent[c].is_some();
+            for ki in 0..kids.len() {
+                let k = kids[ki];
+                let mut msg = std::mem::take(&mut s.down[k]);
+                debug_assert_eq!(msg.len(), self.plans[k].sep_size);
+                let last_sib = (0..kids.len()).rev().find(|&j| j != ki);
+                let nops = has_down as usize + kids.len() - 1;
+                if nops == 0 {
+                    kernel::marginalize_into(
+                        &mut msg,
+                        &s.pots[c],
+                        cards,
+                        &plan.child_strides[ki],
+                        plan.child_splits[ki],
+                        false,
+                    );
+                } else if nops == 1 {
+                    let (m0, s0): (&[f64], &[usize]) = if has_down {
+                        (&s.down[c], &plan.sep_strides)
+                    } else {
+                        let j = last_sib.expect("one sibling operand");
+                        (&s.up[kids[j]], &plan.child_strides[j])
+                    };
+                    kernel::absorb_marginalize_into(
+                        &mut msg,
+                        &s.pots[c],
+                        m0,
+                        cards,
+                        s0,
+                        &plan.child_strides[ki],
+                        false,
+                    );
+                } else {
+                    let tlen = s.pots[c].len();
+                    let w = &mut s.work[..tlen];
+                    let mut first = true;
+                    if has_down {
+                        kernel::product_into(
+                            w,
+                            &s.pots[c],
+                            &s.down[c],
+                            cards,
+                            &plan.self_strides,
+                            &plan.sep_strides,
+                        );
+                        first = false;
                     }
-                    f = Factor::product(&f, s.up[k2].as_ref().expect("sibling message ready"));
+                    let last = last_sib.expect("nops >= 2 implies a sibling");
+                    for j in 0..kids.len() {
+                        if j == ki || j == last {
+                            continue;
+                        }
+                        if first {
+                            kernel::product_into(
+                                w,
+                                &s.pots[c],
+                                &s.up[kids[j]],
+                                cards,
+                                &plan.self_strides,
+                                &plan.child_strides[j],
+                            );
+                            first = false;
+                        } else {
+                            kernel::mul_assign(
+                                w,
+                                &s.up[kids[j]],
+                                cards,
+                                &plan.child_strides[j],
+                                plan.child_splits[j],
+                            );
+                        }
+                    }
+                    kernel::absorb_marginalize_into(
+                        &mut msg,
+                        w,
+                        &s.up[kids[last]],
+                        cards,
+                        &plan.child_strides[last],
+                        &plan.child_strides[ki],
+                        false,
+                    );
                 }
-                let mut m = f.marginalize_to(&self.sep[k]);
-                if m.normalize() <= 0.0 {
+                let z: f64 = msg.iter().sum();
+                if z <= 0.0 {
+                    s.down[k] = msg;
                     bail!("evidence has probability zero");
                 }
-                s.down[k] = Some(m);
+                let inv = 1.0 / z;
+                msg.iter_mut().for_each(|x| *x *= inv);
+                s.down[k] = msg;
             }
         }
 
-        // Calibrated beliefs → all single-variable marginals.
+        // Calibrated beliefs → all single-variable marginals, built
+        // clique by clique so each belief is assembled exactly once.
         let n = self.cards.len();
-        let mut beliefs: Vec<Option<Factor>> = vec![None; self.cliques.len()];
-        let mut marginals: Vec<Vec<f64>> = Vec::with_capacity(n);
-        for v in 0..n {
-            let c = self.var_home[v];
-            if beliefs[c].is_none() {
-                let mut b = s.pots[c].clone();
-                if self.parent[c].is_some() {
-                    b = Factor::product(&b, s.down[c].as_ref().expect("down message ready"));
-                }
-                for &k in &self.children[c] {
-                    b = Factor::product(&b, s.up[k].as_ref().expect("up message ready"));
-                }
-                beliefs[c] = Some(b);
+        let mut marginals: Vec<Vec<f64>> = vec![Vec::new(); n];
+        for &c in &self.order {
+            if self.home_vars[c].is_empty() {
+                continue;
             }
-            marginals.push(beliefs[c].as_ref().expect("belief just built").marginal_of(v));
+            if !s.bel_ok[c] {
+                self.belief_into(s, c);
+                s.bel_ok[c] = true;
+            }
+            for &v in &self.home_vars[c] {
+                let mut mv = vec![0.0; self.cards[v]];
+                let (bel, cc) = (&s.bel[c], &self.base[c].cards);
+                kernel::single_marginal_into(&mut mv, bel, cc, self.var_pos[v]);
+                let z: f64 = mv.iter().sum();
+                if z > 0.0 {
+                    let inv = 1.0 / z;
+                    mv.iter_mut().for_each(|x| *x *= inv);
+                }
+                marginals[v] = mv;
+            }
         }
 
         Ok(Posterior { marginals, log_evidence })
@@ -436,8 +763,10 @@ impl CompiledModel {
     /// P(x | evidence), with `ln max_x P(x, evidence)`. Max-product
     /// collect over the compiled tree, then a root-to-leaf decode; the
     /// returned assignment always agrees with the evidence. Per-clique
-    /// ties break toward the lowest mixed-radix cell (see
-    /// [`Factor::argmax_consistent`]), deterministically.
+    /// ties break toward the lowest mixed-radix cell
+    /// (see [`kernel::argmax_consistent`]), deterministically. The
+    /// max-product tables live in a scratch arena sized by the first
+    /// call, so repeated MAP queries allocate nothing but the result.
     pub fn joint_map(
         &self,
         s: &mut Scratch,
@@ -445,6 +774,10 @@ impl CompiledModel {
     ) -> Result<(Vec<usize>, f64)> {
         self.set_evidence(s, evidence)?;
         let nc = self.cliques.len();
+        if s.max_prod.len() != nc {
+            s.max_prod = self.base.iter().map(|f| vec![0.0; f.table.len()]).collect();
+            s.max_up = self.plans.iter().map(|p| vec![0.0; p.sep_size]).collect();
+        }
 
         // Max-product collect. Own message buffers: a different
         // semiring than the cached sum-product sweep (the sum cache
@@ -452,16 +785,212 @@ impl CompiledModel {
         // pre-marginalization clique products are kept: the decode
         // pass below argmaxes exactly these, so recomputing them would
         // double the factor-product work per query.
+        let mut log_map = 0.0f64;
+        for &c in self.order.iter().rev() {
+            let plan = &self.plans[c];
+            let kids = &self.children[c];
+            let cards = &self.base[c].cards;
+            let mut prod = std::mem::take(&mut s.max_prod[c]);
+            debug_assert_eq!(prod.len(), s.pots[c].len());
+            if kids.is_empty() {
+                prod.copy_from_slice(&s.pots[c]);
+            } else {
+                kernel::product_into(
+                    &mut prod,
+                    &s.pots[c],
+                    &s.max_up[kids[0]],
+                    cards,
+                    &plan.self_strides,
+                    &plan.child_strides[0],
+                );
+                for j in 1..kids.len() {
+                    kernel::mul_assign(
+                        &mut prod,
+                        &s.max_up[kids[j]],
+                        cards,
+                        &plan.child_strides[j],
+                        plan.child_splits[j],
+                    );
+                }
+            }
+            if self.parent[c].is_some() {
+                let mut msg = std::mem::take(&mut s.max_up[c]);
+                debug_assert_eq!(msg.len(), plan.sep_size);
+                kernel::marginalize_into(
+                    &mut msg,
+                    &prod,
+                    cards,
+                    &plan.sep_strides,
+                    plan.sep_split,
+                    true,
+                );
+                let z = msg.iter().fold(0.0f64, |a, &b| a.max(b));
+                if z <= 0.0 {
+                    s.max_up[c] = msg;
+                    s.max_prod[c] = prod;
+                    bail!("evidence has probability zero");
+                }
+                let inv = 1.0 / z;
+                msg.iter_mut().for_each(|x| *x *= inv);
+                log_map += z.ln();
+                s.max_up[c] = msg;
+            }
+            s.max_prod[c] = prod;
+        }
+
+        // Decode, roots toward leaves: argmax each clique product
+        // consistent with the states already decided. By the running
+        // intersection property the decided variables of a clique are
+        // exactly its parent separator, so any consistent argmax
+        // extends to a global maximizer.
+        let n = self.cards.len();
+        let mut assign: Vec<Option<usize>> = vec![None; n];
+        let mut digits = [0usize; kernel::MAX_DIGITS];
+        for &c in &self.order {
+            let cv = &self.cliques[c];
+            let val = kernel::argmax_consistent(
+                cv,
+                &self.base[c].cards,
+                &s.max_prod[c],
+                &assign,
+                &mut digits[..cv.len()],
+            );
+            if val <= 0.0 {
+                bail!("evidence has probability zero");
+            }
+            if self.parent[c].is_none() {
+                // Root maxima close each component's MAP mass; inner
+                // cliques' mass is already inside the messages.
+                log_map += val.ln();
+            }
+            for (i, &v) in cv.iter().enumerate() {
+                assign[v] = Some(digits[i]);
+            }
+        }
+        let assignment: Vec<usize> =
+            assign.into_iter().map(|a| a.expect("every variable lives in a clique")).collect();
+        Ok((assignment, log_map))
+    }
+
+    /// The pre-rework scalar engine path, retained verbatim as the
+    /// pinning oracle for the blocked kernels: fresh clone-and-allocate
+    /// `kernel::reference` operations, no cache, no plans, no arena.
+    /// `tests/serving.rs` asserts [`marginals`](CompiledModel::marginals)
+    /// matches this bit-for-bit; `benches/kernels.rs` measures the
+    /// speedup against it. Not a serving path.
+    pub fn marginals_reference(&self, evidence: &[(usize, usize)]) -> Result<Posterior> {
+        self.validate_evidence(evidence)?;
+        let nc = self.cliques.len();
+        let mut pots: Vec<Factor> = self.base.clone();
+        for &(v, st) in evidence {
+            let c = self.var_home[v];
+            pots[c] = reference::product(&pots[c], &Factor::indicator(v, self.cards[v], st));
+        }
+
+        let mut up: Vec<Option<Factor>> = vec![None; nc];
+        let mut up_logz = vec![0.0f64; nc];
+        for &c in self.order.iter().rev() {
+            if self.parent[c].is_none() {
+                continue;
+            }
+            let mut f = pots[c].clone();
+            for &k in &self.children[c] {
+                f = reference::product(&f, up[k].as_ref().expect("child collect message ready"));
+            }
+            let mut m = reference::marginalize_to(&f, &self.sep[c]);
+            let z = m.normalize();
+            if z <= 0.0 {
+                bail!("evidence has probability zero");
+            }
+            up_logz[c] = z.ln();
+            up[c] = Some(m);
+        }
+
+        let mut log_evidence: f64 = self
+            .order
+            .iter()
+            .filter(|&&c| self.parent[c].is_some())
+            .map(|&c| up_logz[c])
+            .sum();
+        for &r in &self.roots {
+            let mut b = pots[r].clone();
+            for &k in &self.children[r] {
+                b = reference::product(&b, up[k].as_ref().expect("root message ready"));
+            }
+            let z = b.total();
+            if z <= 0.0 {
+                bail!("evidence has probability zero");
+            }
+            log_evidence += z.ln();
+        }
+
+        let mut down: Vec<Option<Factor>> = vec![None; nc];
+        for &c in &self.order {
+            for &k in &self.children[c] {
+                let mut f = pots[c].clone();
+                if self.parent[c].is_some() {
+                    f = reference::product(&f, down[c].as_ref().expect("parent message ready"));
+                }
+                for &k2 in &self.children[c] {
+                    if k2 == k {
+                        continue;
+                    }
+                    f = reference::product(&f, up[k2].as_ref().expect("sibling message ready"));
+                }
+                let mut m = reference::marginalize_to(&f, &self.sep[k]);
+                if m.normalize() <= 0.0 {
+                    bail!("evidence has probability zero");
+                }
+                down[k] = Some(m);
+            }
+        }
+
+        let n = self.cards.len();
+        let mut beliefs: Vec<Option<Factor>> = vec![None; nc];
+        let mut marginals: Vec<Vec<f64>> = Vec::with_capacity(n);
+        for v in 0..n {
+            let c = self.var_home[v];
+            if beliefs[c].is_none() {
+                let mut b = pots[c].clone();
+                if self.parent[c].is_some() {
+                    b = reference::product(&b, down[c].as_ref().expect("down message ready"));
+                }
+                for &k in &self.children[c] {
+                    b = reference::product(&b, up[k].as_ref().expect("up message ready"));
+                }
+                beliefs[c] = Some(b);
+            }
+            let b = beliefs[c].as_ref().expect("belief just built");
+            let mut m = reference::marginalize_to(b, &[v]);
+            m.normalize();
+            marginals.push(m.table);
+        }
+
+        Ok(Posterior { marginals, log_evidence })
+    }
+
+    /// Scalar-reference joint MAP, the oracle counterpart of
+    /// [`joint_map`](CompiledModel::joint_map) (see
+    /// [`marginals_reference`](CompiledModel::marginals_reference)).
+    pub fn joint_map_reference(&self, evidence: &[(usize, usize)]) -> Result<(Vec<usize>, f64)> {
+        self.validate_evidence(evidence)?;
+        let nc = self.cliques.len();
+        let mut pots: Vec<Factor> = self.base.clone();
+        for &(v, st) in evidence {
+            let c = self.var_home[v];
+            pots[c] = reference::product(&pots[c], &Factor::indicator(v, self.cards[v], st));
+        }
+
         let mut up: Vec<Option<Factor>> = vec![None; nc];
         let mut prods: Vec<Option<Factor>> = vec![None; nc];
         let mut log_map = 0.0f64;
         for &c in self.order.iter().rev() {
-            let mut f = s.pots[c].clone();
+            let mut f = pots[c].clone();
             for &k in &self.children[c] {
-                f = Factor::product(&f, up[k].as_ref().expect("child max-message ready"));
+                f = reference::product(&f, up[k].as_ref().expect("child max-message ready"));
             }
             if self.parent[c].is_some() {
-                let mut m = f.max_marginalize_to(&self.sep[c]);
+                let mut m = reference::max_marginalize_to(&f, &self.sep[c]);
                 let z = m.table.iter().fold(0.0f64, |a, &b| a.max(b));
                 if z <= 0.0 {
                     bail!("evidence has probability zero");
@@ -474,22 +1003,15 @@ impl CompiledModel {
             prods[c] = Some(f);
         }
 
-        // Decode, roots toward leaves: argmax each clique belief
-        // consistent with the states already decided. By the running
-        // intersection property the decided variables of a clique are
-        // exactly its parent separator, so any consistent argmax
-        // extends to a global maximizer.
         let n = self.cards.len();
         let mut assign: Vec<Option<usize>> = vec![None; n];
         for &c in &self.order {
             let b = prods[c].as_ref().expect("clique max-product ready");
-            let (digits, val) = b.argmax_consistent(&assign);
+            let (digits, val) = reference::argmax_consistent(b, &assign);
             if val <= 0.0 {
                 bail!("evidence has probability zero");
             }
             if self.parent[c].is_none() {
-                // Root maxima close each component's MAP mass; inner
-                // cliques' mass is already inside the messages.
                 log_map += val.ln();
             }
             for (&v, &d) in b.vars.iter().zip(&digits) {
@@ -533,6 +1055,27 @@ mod tests {
         let post = m.marginals(&mut s, &[]).unwrap();
         assert!((post.marginal(0)[0] - 0.7).abs() < 1e-12);
         assert!(post.log_evidence.abs() < 1e-12);
+    }
+
+    #[test]
+    fn blocked_path_is_bit_identical_to_reference() {
+        let bn = tiny_bn();
+        let m = CompiledModel::compile(&bn).unwrap();
+        let mut s = m.new_scratch();
+        for ev in [vec![], vec![(1usize, 1usize)], vec![(0, 0)], vec![]] {
+            let got = m.marginals(&mut s, &ev).unwrap();
+            let want = m.marginals_reference(&ev).unwrap();
+            assert_eq!(got.log_evidence.to_bits(), want.log_evidence.to_bits());
+            for v in 0..2 {
+                for (a, b) in got.marginal(v).iter().zip(want.marginal(v)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "var {v}: {a} vs {b}");
+                }
+            }
+            let (ga, gl) = m.joint_map(&mut s, &ev).unwrap();
+            let (wa, wl) = m.joint_map_reference(&ev).unwrap();
+            assert_eq!(ga, wa);
+            assert_eq!(gl.to_bits(), wl.to_bits());
+        }
     }
 
     #[test]

@@ -3,10 +3,13 @@
 //! PR 2's [`infer`](crate::infer) answered queries through a
 //! single-threaded `&mut Engine`; this subsystem splits that into an
 //! immutable [`CompiledModel`] (frozen jointree topology, CPT-assigned
-//! potentials, precomputed message schedule — `Send + Sync`, shared by
-//! reference or `Arc`) and cheap per-thread [`Scratch`] buffers, so
-//! `query(&self, &mut Scratch, ..)` holds no lock on the propagation
-//! hot path. On top of it:
+//! potentials, precomputed message schedule *and per-edge kernel
+//! plans* — `Send + Sync`, shared by reference or `Arc`) and cheap
+//! per-thread [`Scratch`] buffer arenas, so `query(&self, &mut
+//! Scratch, ..)` holds no lock and performs no table allocation on
+//! the propagation hot path (the blocked kernels of
+//! [`infer::kernel`](crate::infer::kernel) write into retained
+//! buffers). On top of it:
 //!
 //! * [`SharedEngine`] — the concurrent analog of
 //!   [`infer::Engine`](crate::infer::Engine): exact compiled model or

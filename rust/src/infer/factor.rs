@@ -7,12 +7,19 @@
 //! `marginalize_to` loops over this type, so the two exact engines
 //! cannot disagree about table layout.
 //!
-//! The product and marginalization kernels walk the larger table once
-//! with an incremental mixed-radix odometer: each digit carries a
-//! precomputed stride into the other table(s), so advancing one
-//! assignment is a handful of adds — no per-cell decode.
+//! The arithmetic itself lives in [`kernel`](crate::infer::kernel):
+//! blocked walks that split every mixed-radix odometer into an outer
+//! walk over non-contiguous digits and a stride-1 inner run, plus
+//! `_into` variants that write into caller-owned buffers. The methods
+//! here are the convenience layer — they build scopes and stride
+//! vectors (linear merges over the already-sorted scopes, no quadratic
+//! `contains` scans) and allocate the result; hot paths that must not
+//! allocate (the serving engine) call the kernels directly with
+//! precompiled plans. Results are bit-for-bit identical to the
+//! retained scalar reference (`kernel::reference`) either way.
 
 use crate::bn::DiscreteBn;
+use crate::infer::kernel::{self, Split};
 
 /// A nonnegative function over a set of discrete variables.
 #[derive(Clone, Debug)]
@@ -85,126 +92,104 @@ impl Factor {
         Factor { vars, cards, table }
     }
 
-    /// Stride, in the table described by `(target_vars, target_cards)`,
-    /// of each variable of `walk_vars` (0 when the target does not
-    /// mention it). Every target variable must appear in `walk_vars`.
-    fn strides_into(walk_vars: &[usize], target_vars: &[usize], target_cards: &[usize]) -> Vec<usize> {
-        let mut out = vec![0usize; walk_vars.len()];
-        let mut stride = 1usize;
-        for (v, c) in target_vars.iter().zip(target_cards) {
-            let i = walk_vars.iter().position(|x| x == v).expect("target var missing from walk set");
-            out[i] = stride;
-            stride *= c;
-        }
+    /// Pointwise product `a · b` over the union of their scopes.
+    pub fn product(a: &Factor, b: &Factor) -> Factor {
+        let mut out = Factor { vars: Vec::new(), cards: Vec::new(), table: Vec::new() };
+        Factor::product_into(a, b, &mut out);
         out
     }
 
-    /// Pointwise product `a · b` over the union of their scopes.
-    pub fn product(a: &Factor, b: &Factor) -> Factor {
-        let mut vars: Vec<usize> = a.vars.clone();
-        for &v in &b.vars {
-            if !vars.contains(&v) {
+    /// Pointwise product written into a caller-owned factor: `out`'s
+    /// scope and table are rebuilt reusing their capacity, so a caller
+    /// that keeps `out` across calls of the same shape pays no *table*
+    /// allocation (two small per-call stride vectors are still built —
+    /// the serving engine avoids even those via its precompiled
+    /// plans). `out` must be a distinct object from both inputs.
+    pub fn product_into(a: &Factor, b: &Factor, out: &mut Factor) {
+        kernel::merge_union_into(
+            &a.vars,
+            &a.cards,
+            &b.vars,
+            &b.cards,
+            &mut out.vars,
+            &mut out.cards,
+        );
+        let size: usize = out.cards.iter().product();
+        // Shape only — the kernel writes every cell, so no zero pass.
+        if out.table.len() != size {
+            out.table.resize(size, 0.0);
+        }
+        let mut sa = Vec::new();
+        let mut sb = Vec::new();
+        kernel::subset_strides_into(&out.vars, &out.cards, &a.vars, &mut sa);
+        kernel::subset_strides_into(&out.vars, &out.cards, &b.vars, &mut sb);
+        kernel::product_into(&mut out.table, &a.table, &b.table, &out.cards, &sa, &sb);
+    }
+
+    /// In-place absorb: `self ×= m`, requiring `m.vars ⊆ self.vars`
+    /// (the clique-absorbs-message shape — no table allocation at all).
+    pub fn absorb(&mut self, m: &Factor) {
+        let mut sm = Vec::new();
+        kernel::subset_strides_into(&self.vars, &self.cards, &m.vars, &mut sm);
+        let split = Split::of(&self.cards, &sm);
+        kernel::mul_assign(&mut self.table, &m.table, &self.cards, &sm, split);
+    }
+
+    /// Scope and strides of the sub-factor keeping `keep ∩ self.vars`
+    /// (shared by the three marginalization entry points).
+    fn kept_layout(&self, keep: &[usize]) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+        // Sorted lookup table over `keep` (which need not be sorted),
+        // then one linear pass over the scope — no O(n·m) `contains`.
+        let mut keep_sorted: Vec<usize> = keep.to_vec();
+        keep_sorted.sort_unstable();
+        let mut vars = Vec::new();
+        let mut cards = Vec::new();
+        for (&v, &c) in self.vars.iter().zip(&self.cards) {
+            if keep_sorted.binary_search(&v).is_ok() {
                 vars.push(v);
+                cards.push(c);
             }
         }
-        vars.sort_unstable();
-        let cards: Vec<usize> = vars
-            .iter()
-            .map(|&v| {
-                a.vars
-                    .iter()
-                    .position(|&x| x == v)
-                    .map(|i| a.cards[i])
-                    .or_else(|| b.vars.iter().position(|&x| x == v).map(|i| b.cards[i]))
-                    .expect("union var must come from an input")
-            })
-            .collect();
-        let size: usize = cards.iter().product();
-        let sa = Self::strides_into(&vars, &a.vars, &a.cards);
-        let sb = Self::strides_into(&vars, &b.vars, &b.cards);
-        let mut table = vec![0.0; size];
-        let mut digits = vec![0usize; vars.len()];
-        let mut ia = 0usize;
-        let mut ib = 0usize;
-        for cell in table.iter_mut() {
-            *cell = a.table[ia] * b.table[ib];
-            for i in 0..digits.len() {
-                digits[i] += 1;
-                ia += sa[i];
-                ib += sb[i];
-                if digits[i] < cards[i] {
-                    break;
-                }
-                digits[i] = 0;
-                ia -= sa[i] * cards[i];
-                ib -= sb[i] * cards[i];
-            }
-        }
-        Factor { vars, cards, table }
+        let mut so = Vec::new();
+        kernel::subset_strides_into(&self.vars, &self.cards, &vars, &mut so);
+        (vars, cards, so)
     }
 
     /// Sum out every variable not in `keep` (`keep` need not be sorted;
     /// only its intersection with the scope matters).
     pub fn marginalize_to(&self, keep: &[usize]) -> Factor {
-        let vars: Vec<usize> = self.vars.iter().copied().filter(|v| keep.contains(v)).collect();
-        let cards: Vec<usize> = vars
-            .iter()
-            .map(|&v| {
-                let i = self.vars.iter().position(|&x| x == v).expect("kept var is in scope");
-                self.cards[i]
-            })
-            .collect();
+        let mut out = Factor { vars: Vec::new(), cards: Vec::new(), table: Vec::new() };
+        self.marginalize_into(keep, &mut out);
+        out
+    }
+
+    /// Sum-marginalization written into a caller-owned factor: `out`'s
+    /// table is rebuilt reusing its capacity, so repeated same-shape
+    /// calls pay no table allocation (the kept-scope and stride
+    /// vectors are still built per call; the serving engine avoids
+    /// those via its precompiled plans).
+    pub fn marginalize_into(&self, keep: &[usize], out: &mut Factor) {
+        let (vars, cards, so) = self.kept_layout(keep);
         let size: usize = cards.iter().product();
-        let so = Self::strides_into(&self.vars, &vars, &cards);
-        let mut table = vec![0.0; size];
-        let mut digits = vec![0usize; self.vars.len()];
-        let mut io = 0usize;
-        for &val in &self.table {
-            table[io] += val;
-            for i in 0..digits.len() {
-                digits[i] += 1;
-                io += so[i];
-                if digits[i] < self.cards[i] {
-                    break;
-                }
-                digits[i] = 0;
-                io -= so[i] * self.cards[i];
-            }
+        out.vars = vars;
+        out.cards = cards;
+        // Shape only — the kernel zero-fills before accumulating.
+        if out.table.len() != size {
+            out.table.resize(size, 0.0);
         }
-        Factor { vars, cards, table }
+        let split = Split::of(&self.cards, &so);
+        kernel::marginalize_into(&mut out.table, &self.table, &self.cards, &so, split, false);
     }
 
     /// Max out every variable not in `keep` — the max-product analog
     /// of [`marginalize_to`](Factor::marginalize_to), used by the joint
     /// MAP pass. Tables are nonnegative, so 0 is the fold identity.
     pub fn max_marginalize_to(&self, keep: &[usize]) -> Factor {
-        let vars: Vec<usize> = self.vars.iter().copied().filter(|v| keep.contains(v)).collect();
-        let cards: Vec<usize> = vars
-            .iter()
-            .map(|&v| {
-                let i = self.vars.iter().position(|&x| x == v).expect("kept var is in scope");
-                self.cards[i]
-            })
-            .collect();
+        let (vars, cards, so) = self.kept_layout(keep);
         let size: usize = cards.iter().product();
-        let so = Self::strides_into(&self.vars, &vars, &cards);
         let mut table = vec![0.0; size];
-        let mut digits = vec![0usize; self.vars.len()];
-        let mut io = 0usize;
-        for &val in &self.table {
-            if val > table[io] {
-                table[io] = val;
-            }
-            for i in 0..digits.len() {
-                digits[i] += 1;
-                io += so[i];
-                if digits[i] < self.cards[i] {
-                    break;
-                }
-                digits[i] = 0;
-                io -= so[i] * self.cards[i];
-            }
-        }
+        let split = Split::of(&self.cards, &so);
+        kernel::marginalize_into(&mut table, &self.table, &self.cards, &so, split, true);
         Factor { vars, cards, table }
     }
 
@@ -214,34 +199,13 @@ impl Factor {
     /// equal maxima the lowest mixed-radix index wins — since the
     /// first variable is the least-significant digit, that is the
     /// assignment whose *highest*-indexed variables sit at their
-    /// lowest tied states.
+    /// lowest tied states. Walks only the free digits (constrained
+    /// strides are folded into the base index).
     pub fn argmax_consistent(&self, fixed: &[Option<usize>]) -> (Vec<usize>, f64) {
-        let constrained: Vec<Option<usize>> = self
-            .vars
-            .iter()
-            .map(|&v| fixed.get(v).copied().flatten())
-            .collect();
-        let mut best_digits = vec![0usize; self.vars.len()];
-        let mut best = f64::NEG_INFINITY;
         let mut digits = vec![0usize; self.vars.len()];
-        for &val in &self.table {
-            let ok = digits.iter().zip(&constrained).all(|(&d, &c)| match c {
-                Some(s) => s == d,
-                None => true,
-            });
-            if ok && val > best {
-                best = val;
-                best_digits.copy_from_slice(&digits);
-            }
-            for (d, &c) in digits.iter_mut().zip(&self.cards) {
-                *d += 1;
-                if *d < c {
-                    break;
-                }
-                *d = 0;
-            }
-        }
-        (best_digits, best)
+        let best =
+            kernel::argmax_consistent(&self.vars, &self.cards, &self.table, fixed, &mut digits);
+        (digits, best)
     }
 
     /// Sum of all cells.
@@ -263,9 +227,15 @@ impl Factor {
     /// Normalized single-variable marginal (the variable must be in
     /// scope).
     pub fn marginal_of(&self, var: usize) -> Vec<f64> {
-        let mut m = self.marginalize_to(&[var]);
-        m.normalize();
-        m.table
+        let pos = self.vars.binary_search(&var).expect("marginal variable must be in scope");
+        let mut m = vec![0.0; self.cards[pos]];
+        kernel::single_marginal_into(&mut m, &self.table, &self.cards, pos);
+        let z: f64 = m.iter().sum();
+        if z > 0.0 {
+            let inv = 1.0 / z;
+            m.iter_mut().for_each(|x| *x *= inv);
+        }
+        m
     }
 }
 
@@ -328,6 +298,33 @@ mod tests {
         }
         let with_unit = Factor::product(&ab, &Factor::unit());
         assert_eq!(with_unit.table, ab.table);
+    }
+
+    #[test]
+    fn in_place_variants_match_allocating_ones() {
+        let bn = tiny_bn();
+        let fa = Factor::from_cpt(&bn, 0);
+        let fb = Factor::from_cpt(&bn, 1);
+        let want = Factor::product(&fa, &fb);
+
+        let mut out = Factor::unit();
+        Factor::product_into(&fa, &fb, &mut out);
+        assert_eq!(out.vars, want.vars);
+        assert_eq!(out.table, want.table);
+
+        // absorb over a subset scope equals a full product.
+        let mut acc = want.clone();
+        let e = Factor::indicator(1, 2, 1);
+        acc.absorb(&e);
+        let via_product = Factor::product(&want, &e);
+        assert_eq!(acc.table, via_product.table);
+
+        // marginalize_into reuses the buffer and matches marginalize_to.
+        let mut m = Factor::unit();
+        want.marginalize_into(&[0], &mut m);
+        let m2 = want.marginalize_to(&[0]);
+        assert_eq!(m.vars, m2.vars);
+        assert_eq!(m.table, m2.table);
     }
 
     #[test]

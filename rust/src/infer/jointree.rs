@@ -13,8 +13,10 @@
 //!
 //! Callers that answer many queries or serve traffic should use the
 //! model directly: [`JoinTree::model`] exposes it, and
-//! `CompiledModel::new_scratch` amortizes both the buffer allocations
-//! and the collect-message cache across queries.
+//! `CompiledModel::new_scratch` amortizes both the buffer arena
+//! (steady-state queries allocate no tables at all) and the
+//! collect-message cache across queries; a per-call scratch as used
+//! here pays the arena allocation on every query.
 
 use anyhow::Result;
 

@@ -1,0 +1,756 @@
+//! Blocked, allocation-free factor kernels.
+//!
+//! Every exact-inference operation in this crate — clique products,
+//! separator marginalization, evidence absorption, MAP maxima — is a
+//! mixed-radix walk over one or more aligned tables. The original
+//! kernels ([`reference`]) advance a scalar odometer per cell: correct,
+//! but each step is a chain of data-dependent adds and branches that
+//! defeats autovectorization, and each call allocates a fresh output
+//! table.
+//!
+//! The kernels here split every walk in two:
+//!
+//! * an **inner stride-1 block** over the longest run of
+//!   least-significant walk digits on which each operand is *uniform* —
+//!   either it contains every variable of the run (so its index
+//!   advances by exactly 1 per cell, because a sorted subset scope's
+//!   leading variables are the walk's leading variables with the same
+//!   radices) or it contains none of them (so its index is constant
+//!   over the block). Inside the block every loop is a plain slice
+//!   traversal LLVM can unroll and vectorize;
+//! * an **outer mixed-radix odometer** over the remaining digits,
+//!   advancing per *block* instead of per cell.
+//!
+//! All kernels write into caller-owned buffers, so a caller that keeps
+//! its buffers (see `engine::Scratch`) performs zero heap allocations
+//! in steady state. And all of them are **bit-for-bit identical** to
+//! [`reference`]: per-cell multiplications are the same operations, and
+//! every accumulator (sum or max) receives its contributions in the
+//! same order the scalar walk would deliver them — blocking changes
+//! the loop structure, never the float arithmetic. The property tests
+//! in `tests/properties.rs` pin this down to `to_bits` equality.
+
+/// Hard cap on walk digits. A table over more than 64 variables of
+/// cardinality ≥ 2 could not be materialized in memory, so this is a
+/// structural bound, not a tuning knob.
+pub const MAX_DIGITS: usize = 64;
+
+/// Blocked split of one strided view against a walk: how many leading
+/// digits form the contiguous inner block, how many cells that is, and
+/// whether the view advances through the block or stands still.
+///
+/// Precompute once per (walk, target) pair — `engine::CompiledModel`
+/// stores one per schedule edge — and reuse on every query.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Split {
+    /// Number of leading walk digits inside the block.
+    pub digits: usize,
+    /// Block length in cells (product of those digits' cards).
+    pub len: usize,
+    /// Whether the view contains the block variables (stride-1 inner
+    /// run) or none of them (constant index over the block).
+    pub contiguous: bool,
+}
+
+impl Split {
+    /// The split of one view (per-digit `strides`, 0 = absent) against
+    /// a walk with the given `cards`.
+    pub fn of(cards: &[usize], strides: &[usize]) -> Split {
+        if cards.is_empty() {
+            return Split { digits: 0, len: 1, contiguous: false };
+        }
+        let contiguous = strides[0] != 0;
+        let mut digits = 0usize;
+        let mut len = 1usize;
+        while digits < cards.len() && (strides[digits] != 0) == contiguous {
+            len *= cards[digits];
+            digits += 1;
+        }
+        Split { digits, len, contiguous }
+    }
+}
+
+/// Merge two strictly ascending scopes (with their cards) into their
+/// sorted union, written into `vars`/`cards` (cleared first, capacity
+/// reused). Linear two-pointer merge — no `contains` scans. When both
+/// scopes carry a variable, `a`'s card wins (they agree on any valid
+/// input).
+pub fn merge_union_into(
+    a_vars: &[usize],
+    a_cards: &[usize],
+    b_vars: &[usize],
+    b_cards: &[usize],
+    vars: &mut Vec<usize>,
+    cards: &mut Vec<usize>,
+) {
+    vars.clear();
+    cards.clear();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a_vars.len() || j < b_vars.len() {
+        let take_a = j == b_vars.len() || (i < a_vars.len() && a_vars[i] <= b_vars[j]);
+        if take_a {
+            if j < b_vars.len() && b_vars[j] == a_vars[i] {
+                j += 1;
+            }
+            vars.push(a_vars[i]);
+            cards.push(a_cards[i]);
+            i += 1;
+        } else {
+            vars.push(b_vars[j]);
+            cards.push(b_cards[j]);
+            j += 1;
+        }
+    }
+}
+
+/// Per-walk-digit strides of a target table along a walk scope, written
+/// into `out` (cleared first, capacity reused): `out[i]` is the stride
+/// of walk digit `i` in the target, 0 when the target does not mention
+/// it. Both scopes must be strictly ascending and the target must be a
+/// subset of the walk; linear two-pointer, no `position` scans.
+pub fn subset_strides_into(
+    walk_vars: &[usize],
+    walk_cards: &[usize],
+    target_vars: &[usize],
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    out.resize(walk_vars.len(), 0);
+    let mut stride = 1usize;
+    let mut j = 0usize;
+    for (i, &v) in walk_vars.iter().enumerate() {
+        if j < target_vars.len() && target_vars[j] == v {
+            out[i] = stride;
+            stride *= walk_cards[i];
+            j += 1;
+        }
+    }
+    assert!(j == target_vars.len(), "target scope must be a subset of the walk scope");
+}
+
+/// Pointwise product over a walk scope: `out[i] = a[ia(i)] · b[ib(i)]`,
+/// with `out` contiguous over the walk (its scope *is* the walk) and
+/// `sa`/`sb` the per-digit strides of each operand (0 = absent). `out`
+/// must not alias either operand. Bit-identical to the scalar walk:
+/// one multiplication per cell, same operands.
+pub fn product_into(
+    out: &mut [f64],
+    a: &[f64],
+    b: &[f64],
+    cards: &[usize],
+    sa: &[usize],
+    sb: &[usize],
+) {
+    let n = cards.len();
+    assert!(n <= MAX_DIGITS, "factor scope exceeds {MAX_DIGITS} digits");
+    debug_assert_eq!(out.len(), cards.iter().product::<usize>());
+    let (a_in, b_in) = if n == 0 { (false, false) } else { (sa[0] != 0, sb[0] != 0) };
+    let mut nd = 0usize;
+    let mut len = 1usize;
+    while nd < n && (sa[nd] != 0) == a_in && (sb[nd] != 0) == b_in {
+        len *= cards[nd];
+        nd += 1;
+    }
+    let oc = &cards[nd..];
+    let osa = &sa[nd..];
+    let osb = &sb[nd..];
+    let mut digits = [0usize; MAX_DIGITS];
+    let (mut ia, mut ib, mut off) = (0usize, 0usize, 0usize);
+    loop {
+        let ob = &mut out[off..off + len];
+        match (a_in, b_in) {
+            (true, true) => {
+                let av = &a[ia..ia + len];
+                let bv = &b[ib..ib + len];
+                for ((o, &x), &y) in ob.iter_mut().zip(av).zip(bv) {
+                    *o = x * y;
+                }
+            }
+            (true, false) => {
+                let av = &a[ia..ia + len];
+                let y = b[ib];
+                for (o, &x) in ob.iter_mut().zip(av) {
+                    *o = x * y;
+                }
+            }
+            (false, true) => {
+                let x = a[ia];
+                let bv = &b[ib..ib + len];
+                for (o, &y) in ob.iter_mut().zip(bv) {
+                    *o = x * y;
+                }
+            }
+            (false, false) => ob.fill(a[ia] * b[ib]),
+        }
+        off += len;
+        let mut i = 0usize;
+        loop {
+            if i == oc.len() {
+                return;
+            }
+            digits[i] += 1;
+            ia += osa[i];
+            ib += osb[i];
+            if digits[i] < oc[i] {
+                break;
+            }
+            digits[i] = 0;
+            ia -= osa[i] * oc[i];
+            ib -= osb[i] * oc[i];
+            i += 1;
+        }
+    }
+}
+
+/// In-place absorb: `acc[i] *= m[im(i)]` over the walk that is `acc`'s
+/// own scope, `sm` the strides of `m` (scope ⊆ walk) and `split` its
+/// precomputed blocked split (`Split::of(cards, sm)`).
+pub fn mul_assign(acc: &mut [f64], m: &[f64], cards: &[usize], sm: &[usize], split: Split) {
+    let n = cards.len();
+    assert!(n <= MAX_DIGITS, "factor scope exceeds {MAX_DIGITS} digits");
+    debug_assert_eq!(acc.len(), cards.iter().product::<usize>());
+    let (nd, len, m_in) = (split.digits, split.len, split.contiguous);
+    let oc = &cards[nd..];
+    let osm = &sm[nd..];
+    let mut digits = [0usize; MAX_DIGITS];
+    let (mut im, mut off) = (0usize, 0usize);
+    loop {
+        let ab = &mut acc[off..off + len];
+        if m_in {
+            let mv = &m[im..im + len];
+            for (x, &y) in ab.iter_mut().zip(mv) {
+                *x *= y;
+            }
+        } else {
+            let y = m[im];
+            for x in ab.iter_mut() {
+                *x *= y;
+            }
+        }
+        off += len;
+        let mut i = 0usize;
+        loop {
+            if i == oc.len() {
+                return;
+            }
+            digits[i] += 1;
+            im += osm[i];
+            if digits[i] < oc[i] {
+                break;
+            }
+            digits[i] = 0;
+            im -= osm[i] * oc[i];
+            i += 1;
+        }
+    }
+}
+
+/// Multiply an evidence indicator into `acc` in place: keep the cells
+/// whose `digit`-th coordinate equals `state`, zero the rest. Exactly
+/// `acc ×= indicator(state)` for the nonnegative finite tables this
+/// crate builds (`x · 1 = x` and `x · 0 = +0` bit-for-bit).
+pub fn mask_assign(acc: &mut [f64], cards: &[usize], digit: usize, state: usize) {
+    let below: usize = cards[..digit].iter().product();
+    let card = cards[digit];
+    debug_assert!(state < card);
+    let keep_lo = below * state;
+    let keep_hi = below * (state + 1);
+    for chunk in acc.chunks_mut(below * card) {
+        chunk[..keep_lo].fill(0.0);
+        chunk[keep_hi..].fill(0.0);
+    }
+}
+
+/// Marginalize a walk-scoped table into a subset-scoped output:
+/// `out[io(i)] ⊕= src[i]` with ⊕ = `+` (`max = false`) or `max`
+/// (`max = true`; tables are nonnegative so 0 is the fold identity).
+/// `so` gives the output strides (0 = summed/maxed out), `split` their
+/// precomputed blocked split. `out` is overwritten (zero-filled
+/// first). Accumulation order per output cell is the ascending-source
+/// order of the scalar walk, so results are bit-identical to
+/// [`reference::marginalize_to`].
+pub fn marginalize_into(
+    out: &mut [f64],
+    src: &[f64],
+    cards: &[usize],
+    so: &[usize],
+    split: Split,
+    max: bool,
+) {
+    let n = cards.len();
+    assert!(n <= MAX_DIGITS, "factor scope exceeds {MAX_DIGITS} digits");
+    debug_assert_eq!(src.len(), cards.iter().product::<usize>());
+    out.fill(0.0);
+    let (nd, len, o_in) = (split.digits, split.len, split.contiguous);
+    let oc = &cards[nd..];
+    let oso = &so[nd..];
+    let mut digits = [0usize; MAX_DIGITS];
+    let (mut io, mut off) = (0usize, 0usize);
+    loop {
+        let sv = &src[off..off + len];
+        match (o_in, max) {
+            (true, false) => {
+                let ov = &mut out[io..io + len];
+                for (o, &x) in ov.iter_mut().zip(sv) {
+                    *o += x;
+                }
+            }
+            (true, true) => {
+                let ov = &mut out[io..io + len];
+                for (o, &x) in ov.iter_mut().zip(sv) {
+                    if x > *o {
+                        *o = x;
+                    }
+                }
+            }
+            (false, false) => {
+                let mut acc = out[io];
+                for &x in sv {
+                    acc += x;
+                }
+                out[io] = acc;
+            }
+            (false, true) => {
+                let mut acc = out[io];
+                for &x in sv {
+                    if x > acc {
+                        acc = x;
+                    }
+                }
+                out[io] = acc;
+            }
+        }
+        off += len;
+        let mut i = 0usize;
+        loop {
+            if i == oc.len() {
+                return;
+            }
+            digits[i] += 1;
+            io += oso[i];
+            if digits[i] < oc[i] {
+                break;
+            }
+            digits[i] = 0;
+            io -= oso[i] * oc[i];
+            i += 1;
+        }
+    }
+}
+
+/// Fused absorb-and-marginalize: `out[io(i)] ⊕= src[i] · m[im(i)]`
+/// over the walk, without materializing the product table. This is the
+/// separator-message kernel: when the separator (and the message
+/// scope) is a prefix or suffix of the clique scope, every inner loop
+/// is a pure slice operation. `out` is overwritten. Bit-identical to
+/// `reference::product` followed by `reference::marginalize_to` /
+/// `reference::max_marginalize_to`: same per-cell multiply, same
+/// accumulation order.
+pub fn absorb_marginalize_into(
+    out: &mut [f64],
+    src: &[f64],
+    m: &[f64],
+    cards: &[usize],
+    sm: &[usize],
+    so: &[usize],
+    max: bool,
+) {
+    let n = cards.len();
+    assert!(n <= MAX_DIGITS, "factor scope exceeds {MAX_DIGITS} digits");
+    debug_assert_eq!(src.len(), cards.iter().product::<usize>());
+    out.fill(0.0);
+    let (m_in, o_in) = if n == 0 { (false, false) } else { (sm[0] != 0, so[0] != 0) };
+    let mut nd = 0usize;
+    let mut len = 1usize;
+    while nd < n && (sm[nd] != 0) == m_in && (so[nd] != 0) == o_in {
+        len *= cards[nd];
+        nd += 1;
+    }
+    let oc = &cards[nd..];
+    let osm = &sm[nd..];
+    let oso = &so[nd..];
+    let mut digits = [0usize; MAX_DIGITS];
+    let (mut im, mut io, mut off) = (0usize, 0usize, 0usize);
+    loop {
+        let sv = &src[off..off + len];
+        match (m_in, o_in) {
+            (true, true) => {
+                let mv = &m[im..im + len];
+                let ov = &mut out[io..io + len];
+                if max {
+                    for ((o, &x), &y) in ov.iter_mut().zip(sv).zip(mv) {
+                        let v = x * y;
+                        if v > *o {
+                            *o = v;
+                        }
+                    }
+                } else {
+                    for ((o, &x), &y) in ov.iter_mut().zip(sv).zip(mv) {
+                        *o += x * y;
+                    }
+                }
+            }
+            (true, false) => {
+                let mv = &m[im..im + len];
+                let mut acc = out[io];
+                if max {
+                    for (&x, &y) in sv.iter().zip(mv) {
+                        let v = x * y;
+                        if v > acc {
+                            acc = v;
+                        }
+                    }
+                } else {
+                    for (&x, &y) in sv.iter().zip(mv) {
+                        acc += x * y;
+                    }
+                }
+                out[io] = acc;
+            }
+            (false, true) => {
+                let y = m[im];
+                let ov = &mut out[io..io + len];
+                if max {
+                    for (o, &x) in ov.iter_mut().zip(sv) {
+                        let v = x * y;
+                        if v > *o {
+                            *o = v;
+                        }
+                    }
+                } else {
+                    for (o, &x) in ov.iter_mut().zip(sv) {
+                        *o += x * y;
+                    }
+                }
+            }
+            (false, false) => {
+                let y = m[im];
+                let mut acc = out[io];
+                if max {
+                    for &x in sv {
+                        let v = x * y;
+                        if v > acc {
+                            acc = v;
+                        }
+                    }
+                } else {
+                    for &x in sv {
+                        acc += x * y;
+                    }
+                }
+                out[io] = acc;
+            }
+        }
+        off += len;
+        let mut i = 0usize;
+        loop {
+            if i == oc.len() {
+                return;
+            }
+            digits[i] += 1;
+            im += osm[i];
+            io += oso[i];
+            if digits[i] < oc[i] {
+                break;
+            }
+            digits[i] = 0;
+            im -= osm[i] * oc[i];
+            io -= oso[i] * oc[i];
+            i += 1;
+        }
+    }
+}
+
+/// Unnormalized single-variable marginal: `out[s] += Σ src` over all
+/// cells whose `digit`-th coordinate is `s`. The belief → posterior
+/// extraction kernel; contributions arrive in ascending-source order
+/// (bit-identical to `reference::marginalize_to(&[var])`).
+pub fn single_marginal_into(out: &mut [f64], src: &[f64], cards: &[usize], digit: usize) {
+    let below: usize = cards[..digit].iter().product();
+    let card = cards[digit];
+    debug_assert_eq!(out.len(), card);
+    out.fill(0.0);
+    for chunk in src.chunks(below * card) {
+        for (s, o) in out.iter_mut().enumerate() {
+            let run = &chunk[s * below..(s + 1) * below];
+            let mut acc = *o;
+            for &x in run {
+                acc += x;
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// Largest cell of a `(vars, cards, table)` factor among those
+/// consistent with `fixed` (per *global* variable id; `None` = free),
+/// walking only the free digits — O(free cells), not O(all cells ×
+/// scope). Writes the winning per-digit assignment into `digits_out`
+/// (length `vars.len()`) and returns the value; ties break toward the
+/// lowest mixed-radix table index, exactly like the scalar reference.
+/// Returns `f64::NEG_INFINITY` (with `digits_out` unspecified) when no
+/// cell is consistent.
+pub fn argmax_consistent(
+    vars: &[usize],
+    cards: &[usize],
+    table: &[f64],
+    fixed: &[Option<usize>],
+    digits_out: &mut [usize],
+) -> f64 {
+    let n = vars.len();
+    assert!(n <= MAX_DIGITS, "factor scope exceeds {MAX_DIGITS} digits");
+    debug_assert_eq!(digits_out.len(), n);
+    let mut base = 0usize;
+    let mut free = 0usize;
+    let mut fpos = [0usize; MAX_DIGITS];
+    let mut fcard = [0usize; MAX_DIGITS];
+    let mut fstride = [0usize; MAX_DIGITS];
+    let mut stride = 1usize;
+    for i in 0..n {
+        let c = cards[i];
+        match fixed.get(vars[i]).copied().flatten() {
+            Some(s) => {
+                if s >= c {
+                    return f64::NEG_INFINITY;
+                }
+                digits_out[i] = s;
+                base += s * stride;
+            }
+            None => {
+                digits_out[i] = 0;
+                fpos[free] = i;
+                fcard[free] = c;
+                fstride[free] = stride;
+                free += 1;
+            }
+        }
+        stride *= c;
+    }
+    let mut best = f64::NEG_INFINITY;
+    let mut idx = base;
+    let mut fd = [0usize; MAX_DIGITS];
+    loop {
+        let val = table[idx];
+        if val > best {
+            best = val;
+            for j in 0..free {
+                digits_out[fpos[j]] = fd[j];
+            }
+        }
+        let mut j = 0usize;
+        loop {
+            if j == free {
+                return best;
+            }
+            fd[j] += 1;
+            idx += fstride[j];
+            if fd[j] < fcard[j] {
+                break;
+            }
+            fd[j] = 0;
+            idx -= fstride[j] * fcard[j];
+            j += 1;
+        }
+    }
+}
+
+pub mod reference {
+    //! The original scalar kernels, retained verbatim as the pinning
+    //! oracle: per-cell mixed-radix odometers, a fresh table per call.
+    //! `tests/properties.rs` asserts the blocked kernels above are
+    //! bit-identical to these on randomized scopes; `benches/kernels.rs`
+    //! measures the throughput gap. Not for production paths.
+
+    use crate::infer::factor::Factor;
+
+    /// Stride, in the table described by `(target_vars, target_cards)`,
+    /// of each variable of `walk_vars` (0 when the target does not
+    /// mention it). Every target variable must appear in `walk_vars`.
+    fn strides_into(
+        walk_vars: &[usize],
+        target_vars: &[usize],
+        target_cards: &[usize],
+    ) -> Vec<usize> {
+        let mut out = vec![0usize; walk_vars.len()];
+        let mut stride = 1usize;
+        for (v, c) in target_vars.iter().zip(target_cards) {
+            let i = walk_vars.iter().position(|x| x == v).expect("target var missing from walk");
+            out[i] = stride;
+            stride *= c;
+        }
+        out
+    }
+
+    /// Scalar pointwise product `a · b` over the union of their scopes.
+    pub fn product(a: &Factor, b: &Factor) -> Factor {
+        let mut vars: Vec<usize> = a.vars.clone();
+        for &v in &b.vars {
+            if !vars.contains(&v) {
+                vars.push(v);
+            }
+        }
+        vars.sort_unstable();
+        let cards: Vec<usize> = vars
+            .iter()
+            .map(|&v| {
+                a.vars
+                    .iter()
+                    .position(|&x| x == v)
+                    .map(|i| a.cards[i])
+                    .or_else(|| b.vars.iter().position(|&x| x == v).map(|i| b.cards[i]))
+                    .expect("union var must come from an input")
+            })
+            .collect();
+        let size: usize = cards.iter().product();
+        let sa = strides_into(&vars, &a.vars, &a.cards);
+        let sb = strides_into(&vars, &b.vars, &b.cards);
+        let mut table = vec![0.0; size];
+        let mut digits = vec![0usize; vars.len()];
+        let mut ia = 0usize;
+        let mut ib = 0usize;
+        for cell in table.iter_mut() {
+            *cell = a.table[ia] * b.table[ib];
+            for i in 0..digits.len() {
+                digits[i] += 1;
+                ia += sa[i];
+                ib += sb[i];
+                if digits[i] < cards[i] {
+                    break;
+                }
+                digits[i] = 0;
+                ia -= sa[i] * cards[i];
+                ib -= sb[i] * cards[i];
+            }
+        }
+        Factor { vars, cards, table }
+    }
+
+    /// Shared scalar walk behind the two marginalizations.
+    fn fold_to(f: &Factor, keep: &[usize], max: bool) -> Factor {
+        let vars: Vec<usize> = f.vars.iter().copied().filter(|v| keep.contains(v)).collect();
+        let cards: Vec<usize> = vars
+            .iter()
+            .map(|&v| {
+                let i = f.vars.iter().position(|&x| x == v).expect("kept var is in scope");
+                f.cards[i]
+            })
+            .collect();
+        let size: usize = cards.iter().product();
+        let so = strides_into(&f.vars, &vars, &cards);
+        let mut table = vec![0.0; size];
+        let mut digits = vec![0usize; f.vars.len()];
+        let mut io = 0usize;
+        for &val in &f.table {
+            if max {
+                if val > table[io] {
+                    table[io] = val;
+                }
+            } else {
+                table[io] += val;
+            }
+            for i in 0..digits.len() {
+                digits[i] += 1;
+                io += so[i];
+                if digits[i] < f.cards[i] {
+                    break;
+                }
+                digits[i] = 0;
+                io -= so[i] * f.cards[i];
+            }
+        }
+        Factor { vars, cards, table }
+    }
+
+    /// Scalar sum-marginalization onto `keep`.
+    pub fn marginalize_to(f: &Factor, keep: &[usize]) -> Factor {
+        fold_to(f, keep, false)
+    }
+
+    /// Scalar max-marginalization onto `keep`.
+    pub fn max_marginalize_to(f: &Factor, keep: &[usize]) -> Factor {
+        fold_to(f, keep, true)
+    }
+
+    /// Scalar constrained argmax: walks *every* cell and tests the
+    /// constraint per cell.
+    pub fn argmax_consistent(f: &Factor, fixed: &[Option<usize>]) -> (Vec<usize>, f64) {
+        let constrained: Vec<Option<usize>> =
+            f.vars.iter().map(|&v| fixed.get(v).copied().flatten()).collect();
+        let mut best_digits = vec![0usize; f.vars.len()];
+        let mut best = f64::NEG_INFINITY;
+        let mut digits = vec![0usize; f.vars.len()];
+        for &val in &f.table {
+            let ok = digits.iter().zip(&constrained).all(|(&d, &c)| match c {
+                Some(s) => s == d,
+                None => true,
+            });
+            if ok && val > best {
+                best = val;
+                best_digits.copy_from_slice(&digits);
+            }
+            for (d, &c) in digits.iter_mut().zip(&f.cards) {
+                *d += 1;
+                if *d < c {
+                    break;
+                }
+                *d = 0;
+            }
+        }
+        (best_digits, best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_of_prefix_suffix_and_mixed() {
+        // Target holds the two leading digits: contiguous block of 6.
+        let s = Split::of(&[2, 3, 4], &[1, 2, 0]);
+        assert!(s.contiguous && s.digits == 2 && s.len == 6);
+        // Target holds only the trailing digit: skip block of 6.
+        let s = Split::of(&[2, 3, 4], &[0, 0, 1]);
+        assert!(!s.contiguous && s.digits == 2 && s.len == 6);
+        // Empty walk: one scalar block.
+        let s = Split::of(&[], &[]);
+        assert!(s.digits == 0 && s.len == 1);
+    }
+
+    #[test]
+    fn merge_union_is_sorted_merge() {
+        let mut vars = Vec::new();
+        let mut cards = Vec::new();
+        merge_union_into(&[1, 4, 7], &[2, 3, 4], &[0, 4, 9], &[5, 3, 2], &mut vars, &mut cards);
+        assert_eq!(vars, vec![0, 1, 4, 7, 9]);
+        assert_eq!(cards, vec![5, 2, 3, 4, 2]);
+    }
+
+    #[test]
+    fn subset_strides_match_reference_layout() {
+        let mut out = Vec::new();
+        subset_strides_into(&[0, 2, 5], &[2, 3, 4], &[0, 5], &mut out);
+        assert_eq!(out, vec![1, 0, 2]);
+        subset_strides_into(&[0, 2, 5], &[2, 3, 4], &[], &mut out);
+        assert_eq!(out, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn mask_assign_is_indicator_product() {
+        // Scope {a: 2, b: 3}; keep b = 1 → cells with index in [2, 4).
+        let mut t: Vec<f64> = (1..=6).map(|x| x as f64).collect();
+        mask_assign(&mut t, &[2, 3], 1, 1);
+        assert_eq!(t, vec![0.0, 0.0, 3.0, 4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn single_marginal_sums_slices() {
+        // Scope {a: 2, b: 2}, table [1, 2, 3, 4]; marginal of b = [3, 7].
+        let mut out = vec![0.0; 2];
+        single_marginal_into(&mut out, &[1.0, 2.0, 3.0, 4.0], &[2, 2], 1);
+        assert_eq!(out, vec![3.0, 7.0]);
+        // Marginal of a = [4, 6].
+        single_marginal_into(&mut out, &[1.0, 2.0, 3.0, 4.0], &[2, 2], 0);
+        assert_eq!(out, vec![4.0, 6.0]);
+    }
+}

@@ -23,11 +23,16 @@
 //! jointree, per-thread scratch buffers, joint MAP, batching and the
 //! multi-client server — lives in [`engine`](crate::engine);
 //! [`JoinTree`], [`Engine`] and [`QueryServer`] are the
-//! single-threaded compatibility surface over it.
+//! single-threaded compatibility surface over it. The table
+//! arithmetic every path shares — blocked products, fused
+//! absorb-and-marginalize, in-place evidence masks — lives in
+//! [`kernel`], with the original scalar odometers retained as
+//! [`kernel::reference`], the bit-for-bit pinning oracle.
 
 pub mod factor;
 pub mod jointree;
 pub mod json;
+pub mod kernel;
 pub mod lw;
 pub mod serve;
 pub mod triangulate;

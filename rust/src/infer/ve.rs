@@ -7,7 +7,10 @@
 //! minimum product-scope weight (the state-space analog of min-fill).
 //! The serve path prefers the jointree; the CLI `query --method ve`
 //! and the correctness tests (jointree and VE must agree to 1e-9) use
-//! this as the independent second implementation.
+//! this as the independent second implementation. The factor products
+//! and marginalizations run on the same blocked kernels
+//! ([`infer::kernel`](crate::infer::kernel)) as the serving engine,
+//! so VE speeds up with them for free.
 
 use anyhow::{bail, ensure, Result};
 
@@ -47,12 +50,14 @@ pub fn ve_marginal(
         // scope has the smallest joint state space.
         let mut best: Option<(u64, usize, usize)> = None; // (weight, var, position)
         for (pos, &v) in to_elim.iter().enumerate() {
+            // Factor scopes are sorted, so membership is a binary
+            // search and the merged scope a sorted insert.
             let mut scope: Vec<usize> = Vec::new();
             for f in &factors {
-                if f.vars.contains(&v) {
+                if f.vars.binary_search(&v).is_ok() {
                     for &x in &f.vars {
-                        if !scope.contains(&x) {
-                            scope.push(x);
+                        if let Err(i) = scope.binary_search(&x) {
+                            scope.insert(i, x);
                         }
                     }
                 }
@@ -81,7 +86,7 @@ pub fn ve_marginal(
         let mut merged = Factor::unit();
         let mut rest: Vec<Factor> = Vec::with_capacity(factors.len());
         for f in factors {
-            if f.vars.contains(&v) {
+            if f.vars.binary_search(&v).is_ok() {
                 merged = Factor::product(&merged, &f);
             } else {
                 rest.push(f);

@@ -1,0 +1,123 @@
+//! Steady-state allocation regression for the serving kernel path.
+//!
+//! The blocked-kernel rework promises that once a `Scratch` is warm,
+//! `marginals` performs **zero table allocations** per query: every
+//! potential, message, belief and work table lives in the scratch
+//! arena, and the only fresh memory is the returned `Posterior`
+//! (one vector of per-variable marginals, i.e. n + 1 allocations).
+//! This test wraps the global allocator in a counter and pins that
+//! bound, so any reintroduced per-query table allocation fails loudly.
+//!
+//! This lives in its own integration-test binary because a global
+//! allocator is process-wide; the single test keeps the counter
+//! readable.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use cges::bn::{generate, NetGenConfig};
+use cges::engine::CompiledModel;
+
+/// System allocator with an allocation counter (dealloc is free).
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_marginals_allocate_only_the_posterior() {
+    let cfg = NetGenConfig {
+        nodes: 12,
+        edges: 16,
+        max_parents: 3,
+        card_range: (2, 3),
+        locality: 0,
+        alpha: 0.8,
+    };
+    let bn = generate(&cfg, 17);
+    let n = bn.n();
+    let model = CompiledModel::compile(&bn).unwrap();
+    let mut scratch = model.new_scratch();
+
+    // Deterministic evidence cycle (grow, shrink, repeat) built before
+    // measurement so the loop itself constructs nothing.
+    let mut sequences: Vec<Vec<(usize, usize)>> = Vec::new();
+    for seed in 0..4usize {
+        for n_obs in [0usize, 1, 2, 3, 1, 0] {
+            let ev: Vec<(usize, usize)> = (0..n_obs)
+                .map(|i| {
+                    let v = (seed * 3 + i * 5) % n;
+                    (v, (seed + i) % bn.cards[v] as usize)
+                })
+                .collect();
+            sequences.push(ev);
+        }
+    }
+
+    // Warm-up: visit every evidence set once (marginals and joint
+    // MAP, so the lazy max-product arena is sized too) and all
+    // scratch buffers reach their final capacity, then measure.
+    for ev in &sequences {
+        model.marginals(&mut scratch, ev).unwrap();
+        model.joint_map(&mut scratch, ev).unwrap();
+    }
+    const ROUNDS: usize = 20;
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..ROUNDS {
+        for ev in &sequences {
+            model.marginals(&mut scratch, ev).unwrap();
+        }
+    }
+    let total = ALLOCS.load(Ordering::Relaxed) - before;
+    let queries = ROUNDS * sequences.len();
+    // Budget: the returned Posterior owns one marginal vector per
+    // variable plus the outer vector; allow a little slack for the
+    // allocator's own bookkeeping. Any per-query *table* allocation
+    // (clique-sized, message-sized) would blow straight past this.
+    let budget = queries * (n + 4);
+    assert!(
+        total <= budget,
+        "steady-state marginals allocated {total} times over {queries} queries \
+         (budget {budget}: the kernel path must not allocate tables)"
+    );
+
+    // Same bound for joint MAP: its max-product tables live in the
+    // scratch arena, so a warm query allocates only the returned
+    // assignment (plus the decode's Option buffer).
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..ROUNDS {
+        for ev in &sequences {
+            model.joint_map(&mut scratch, ev).unwrap();
+        }
+    }
+    let total = ALLOCS.load(Ordering::Relaxed) - before;
+    let budget = queries * 6;
+    assert!(
+        total <= budget,
+        "steady-state joint_map allocated {total} times over {queries} queries \
+         (budget {budget}: the max-product arena must not allocate tables)"
+    );
+}

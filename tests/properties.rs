@@ -10,6 +10,8 @@ use cges::graph::{
     complete_pdag, d_separated, dag_from_bytes, dag_to_bytes, dag_to_cpdag, markov_equivalent,
     pdag_to_dag, Dag,
 };
+use cges::infer::factor::Factor;
+use cges::infer::kernel::{self, reference};
 use cges::learn::{ges, GesConfig};
 use cges::metrics::smhd;
 use cges::partition::{assign_edges, cluster_variables, partition_stats};
@@ -157,6 +159,166 @@ fn prop_bif_roundtrip_preserves_network() {
             }
         }
         back.validate().unwrap_or_else(|e| panic!("seed {seed}: invalid round-trip: {e}"));
+    }
+}
+
+/// Random cardinalities (2..=4) for a universe of `n` variables.
+fn random_cards(n: usize, rng: &mut Rng) -> Vec<usize> {
+    (0..n).map(|_| 2 + rng.gen_range(3)).collect()
+}
+
+/// Random sorted scope over the universe (possibly empty when
+/// `nonempty` is false).
+fn random_scope(n: usize, nonempty: bool, rng: &mut Rng) -> Vec<usize> {
+    loop {
+        let v: Vec<usize> = (0..n).filter(|_| rng.bool(0.5)).collect();
+        if !nonempty || !v.is_empty() {
+            return v;
+        }
+    }
+}
+
+/// Random factor over `vars` with the universe's cards.
+fn random_factor(vars: Vec<usize>, cards_of: &[usize], rng: &mut Rng) -> Factor {
+    let cards: Vec<usize> = vars.iter().map(|&v| cards_of[v]).collect();
+    let size: usize = cards.iter().product();
+    let table: Vec<f64> = (0..size).map(|_| rng.f64()).collect();
+    Factor { vars, cards, table }
+}
+
+/// Bit-level table equality with a 1e-12 pre-check for a readable
+/// failure message (the blocked kernels promise bit-identity, which
+/// subsumes the documented 1e-12 pin).
+fn assert_tables_bit_equal(seed: u64, what: &str, got: &Factor, want: &Factor) {
+    assert_eq!(got.vars, want.vars, "seed {seed}: {what} scope changed");
+    assert_eq!(got.cards, want.cards, "seed {seed}: {what} cards changed");
+    assert_eq!(got.table.len(), want.table.len(), "seed {seed}: {what} size changed");
+    for (i, (a, b)) in got.table.iter().zip(&want.table).enumerate() {
+        assert!((a - b).abs() < 1e-12, "seed {seed}: {what} cell {i}: {a} vs {b}");
+        assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}: {what} cell {i} bits: {a} vs {b}");
+    }
+}
+
+#[test]
+fn prop_blocked_product_bitwise_matches_scalar_reference() {
+    // The blocked product (and its in-place `_into` variant on a
+    // reused buffer) must reproduce the scalar reference odometer
+    // bit-for-bit on randomized scopes and cardinalities.
+    let mut out = Factor::unit();
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xB10C);
+        let n = 3 + rng.gen_range(5);
+        let cards = random_cards(n, &mut rng);
+        let a = random_factor(random_scope(n, false, &mut rng), &cards, &mut rng);
+        let b = random_factor(random_scope(n, false, &mut rng), &cards, &mut rng);
+        let want = reference::product(&a, &b);
+        let got = Factor::product(&a, &b);
+        assert_tables_bit_equal(seed, "product", &got, &want);
+        Factor::product_into(&a, &b, &mut out);
+        assert_tables_bit_equal(seed, "product_into", &out, &want);
+        // In-place absorb of a subset-scope factor equals the product.
+        let sub = random_factor(
+            a.vars.iter().copied().filter(|_| rng.bool(0.6)).collect(),
+            &cards,
+            &mut rng,
+        );
+        let mut acc = a.clone();
+        acc.absorb(&sub);
+        let via = reference::product(&a, &sub);
+        assert_tables_bit_equal(seed, "absorb", &acc, &via);
+    }
+}
+
+#[test]
+fn prop_blocked_marginalize_and_fused_match_scalar_reference() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xFADE);
+        let n = 3 + rng.gen_range(5);
+        let cards = random_cards(n, &mut rng);
+        let f = random_factor(random_scope(n, true, &mut rng), &cards, &mut rng);
+        let keep: Vec<usize> = f.vars.iter().copied().filter(|_| rng.bool(0.5)).collect();
+
+        let want = reference::marginalize_to(&f, &keep);
+        assert_tables_bit_equal(seed, "marginalize", &f.marginalize_to(&keep), &want);
+        let mut into = Factor::unit();
+        f.marginalize_into(&keep, &mut into);
+        assert_tables_bit_equal(seed, "marginalize_into", &into, &want);
+        let want_max = reference::max_marginalize_to(&f, &keep);
+        assert_tables_bit_equal(seed, "max_marginalize", &f.max_marginalize_to(&keep), &want_max);
+
+        // Fused absorb-and-marginalize vs materialize-then-fold, both
+        // semirings, writing into a caller-owned buffer.
+        let msg = random_factor(
+            f.vars.iter().copied().filter(|_| rng.bool(0.5)).collect(),
+            &cards,
+            &mut rng,
+        );
+        let mut sm = Vec::new();
+        let mut so = Vec::new();
+        kernel::subset_strides_into(&f.vars, &f.cards, &msg.vars, &mut sm);
+        kernel::subset_strides_into(&f.vars, &f.cards, &want.vars, &mut so);
+        let prod = reference::product(&f, &msg);
+        for max in [false, true] {
+            let want_fused = if max {
+                reference::max_marginalize_to(&prod, &keep)
+            } else {
+                reference::marginalize_to(&prod, &keep)
+            };
+            let mut out = vec![1.0; want_fused.table.len()];
+            kernel::absorb_marginalize_into(
+                &mut out, &f.table, &msg.table, &f.cards, &sm, &so, max,
+            );
+            for (i, (a, b)) in out.iter().zip(&want_fused.table).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "seed {seed}: fused(max={max}) cell {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_argmax_matches_scalar_reference() {
+    // The strided argmax must agree with the walk-every-cell scalar
+    // reference on value, winning digits and tie-breaking, under
+    // random constraint sets.
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xA7A);
+        let n = 3 + rng.gen_range(5);
+        let cards = random_cards(n, &mut rng);
+        let f = random_factor(random_scope(n, true, &mut rng), &cards, &mut rng);
+        let fixed: Vec<Option<usize>> = (0..n)
+            .map(|v| {
+                if f.vars.contains(&v) && rng.bool(0.4) {
+                    Some(rng.gen_range(cards[v]))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let (want_digits, want_val) = reference::argmax_consistent(&f, &fixed);
+        let (got_digits, got_val) = f.argmax_consistent(&fixed);
+        assert_eq!(got_val.to_bits(), want_val.to_bits(), "seed {seed}: argmax value");
+        assert_eq!(got_digits, want_digits, "seed {seed}: argmax digits");
+    }
+}
+
+#[test]
+fn prop_evidence_mask_matches_indicator_product() {
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x3A5C);
+        let n = 3 + rng.gen_range(4);
+        let cards = random_cards(n, &mut rng);
+        let f = random_factor(random_scope(n, true, &mut rng), &cards, &mut rng);
+        let pos = rng.gen_range(f.vars.len());
+        let v = f.vars[pos];
+        let state = rng.gen_range(cards[v]);
+        let want = reference::product(&f, &Factor::indicator(v, cards[v], state));
+        let mut got = f.clone();
+        kernel::mask_assign(&mut got.table, &got.cards, pos, state);
+        assert_tables_bit_equal(seed, "mask_assign", &got, &want);
     }
 }
 

@@ -162,6 +162,78 @@ fn scratch_cache_never_leaks_evidence_between_queries() {
 }
 
 #[test]
+fn responses_unchanged_by_blocked_kernels() {
+    // Before/after regression for the blocked-kernel rework: the
+    // planned, fused, allocation-free path must reproduce the retained
+    // scalar reference engine (`marginals_reference` /
+    // `joint_map_reference`, the verbatim pre-rework implementation)
+    // bit-for-bit. Responses are formatted from exactly these f64s by
+    // deterministic code, so bit-equality here is byte-equality of the
+    // served JSON.
+    for seed in [3u64, 8, 21] {
+        let bn = generate(&small_cfg(10, 14), seed);
+        let model = CompiledModel::compile(&bn).unwrap();
+        let mut warm = model.new_scratch();
+        for n_obs in [0usize, 1, 2, 3, 0, 2] {
+            let evidence = evidence_for(seed, &bn, n_obs);
+            let got = model.marginals(&mut warm, &evidence).unwrap();
+            let want = model.marginals_reference(&evidence).unwrap();
+            assert_eq!(
+                got.log_evidence.to_bits(),
+                want.log_evidence.to_bits(),
+                "seed {seed} obs {n_obs}: log evidence {} vs {}",
+                got.log_evidence,
+                want.log_evidence
+            );
+            for v in 0..bn.n() {
+                for (i, (a, b)) in got.marginal(v).iter().zip(want.marginal(v)).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "seed {seed} obs {n_obs} var {v} state {i}: {a} vs {b}"
+                    );
+                }
+            }
+            let (ga, gl) = model.joint_map(&mut warm, &evidence).unwrap();
+            let (wa, wl) = model.joint_map_reference(&evidence).unwrap();
+            assert_eq!(ga, wa, "seed {seed} obs {n_obs}: joint MAP assignment");
+            assert_eq!(gl.to_bits(), wl.to_bits(), "seed {seed} obs {n_obs}: log MAP");
+        }
+    }
+}
+
+#[test]
+fn warm_scratch_survives_zero_probability_bails() {
+    // The arena rework moves message buffers out of the scratch with
+    // mem::take during propagation; every zero-probability bail must
+    // put them back, or the next query on the same scratch would hit
+    // a zero-length buffer. Drive contradictory evidence (probability
+    // zero on a multi-clique model) between normal queries and pin
+    // the answers to a fresh-scratch reference.
+    let bn = generate(&small_cfg(10, 14), 6);
+    let model = CompiledModel::compile(&bn).unwrap();
+    let mut warm = model.new_scratch();
+    let contradiction = vec![(0usize, 0usize), (0, 1)];
+    for n_obs in [0usize, 2, 3, 1] {
+        assert!(model.marginals(&mut warm, &contradiction).is_err());
+        assert!(model.joint_map(&mut warm, &contradiction).is_err());
+        let evidence = evidence_for(5, &bn, n_obs);
+        let got = model.marginals(&mut warm, &evidence).unwrap();
+        let want = model.marginals_reference(&evidence).unwrap();
+        assert_eq!(got.log_evidence.to_bits(), want.log_evidence.to_bits(), "obs {n_obs}");
+        for v in 0..bn.n() {
+            for (a, b) in got.marginal(v).iter().zip(want.marginal(v)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "obs {n_obs} var {v}: {a} vs {b}");
+            }
+        }
+        let (ga, gl) = model.joint_map(&mut warm, &evidence).unwrap();
+        let (wa, wl) = model.joint_map_reference(&evidence).unwrap();
+        assert_eq!(ga, wa, "obs {n_obs}: joint MAP after bail");
+        assert_eq!(gl.to_bits(), wl.to_bits(), "obs {n_obs}: log MAP after bail");
+    }
+}
+
+#[test]
 fn joint_map_matches_brute_force_argmax() {
     for seed in 0..6u64 {
         let bn = generate(&small_cfg(8, 11), seed ^ 0x3A);
