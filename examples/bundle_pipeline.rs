@@ -1,0 +1,149 @@
+//! The bundle lifecycle, end to end: **learn → fuse → fit → calibrate
+//! → serve**, with one `.bnb` artifact carrying the model across every
+//! stage boundary.
+//!
+//! Run:  cargo run --release --example bundle_pipeline
+//!
+//! Steps: (1) generate a ground truth and sample a dataset; (2)
+//! ring-learn with bundle emission on — `cges` fits + calibrates the
+//! converged structure into the final artifact; (3) write the bundle
+//! to disk and read it back
+//! (binary codec round-trip), printing its JSON debug form; (4)
+//! warm-start a compiled model from the decoded bundle and verify,
+//! bit for bit, that it answers exactly like a cold compile while
+//! recomputing zero collect messages; (5) serve the bundle over TCP
+//! and drain with the shutdown sentinel. Exits non-zero on any
+//! divergence — CI runs this as the bundle acceptance demo.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use cges::bn::{forward_sample, generate, NetGenConfig};
+use cges::coordinator::{cges, RingConfig};
+use cges::engine::{CompiledModel, ServeConfig, Server};
+use cges::infer::json::Json;
+use cges::infer::EngineConfig;
+use cges::model::{read_bundle, write_bundle};
+use cges::util::Timer;
+
+fn send_frame(writer: &mut impl Write, payload: &str) {
+    let bytes = payload.as_bytes();
+    writer.write_all(&(bytes.len() as u32).to_le_bytes()).unwrap();
+    writer.write_all(bytes).unwrap();
+    writer.flush().unwrap();
+}
+
+fn recv_frame(reader: &mut impl Read) -> String {
+    let mut len_bytes = [0u8; 4];
+    reader.read_exact(&mut len_bytes).unwrap();
+    let mut payload = vec![0u8; u32::from_le_bytes(len_bytes) as usize];
+    reader.read_exact(&mut payload).unwrap();
+    String::from_utf8(payload).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    // (1) Ground truth + data (small: this demo runs in CI).
+    let cfg = NetGenConfig {
+        nodes: 24,
+        edges: 32,
+        max_parents: 2,
+        card_range: (2, 3),
+        ..Default::default()
+    };
+    let truth = generate(&cfg, 7);
+    let data = Arc::new(forward_sample(&truth, 1500, 8));
+    println!("domain: {} nodes, {} edges | 1500 rows", truth.n(), truth.dag.edge_count());
+
+    // (2) Ring-learn with bundle emission: one fit + calibrate over
+    // the converged structure becomes the final artifact.
+    let t = Timer::start();
+    let learned = cges(
+        data.clone(),
+        &RingConfig { k: 2, threads: 4, emit_bundle: true, ..Default::default() },
+    )?;
+    let bundle = learned.bundle.expect("emit_bundle produces an artifact");
+    println!(
+        "learned: BDeu {:.1}, {} rounds in {:.2}s -> bundle [{}], potentials {}",
+        learned.score,
+        learned.rounds,
+        t.secs(),
+        bundle.meta.producer,
+        if bundle.has_potentials() { "calibrated" } else { "none" }
+    );
+
+    // (3) Persist and reload: the artifact is the interchange format.
+    let path = std::env::temp_dir().join("bundle_pipeline_demo.bnb");
+    write_bundle(&bundle, &path)?;
+    let decoded = read_bundle(&path)?;
+    let file_len = std::fs::metadata(&path)?.len();
+    std::fs::remove_file(&path).ok();
+    println!("codec: wrote + reloaded {} ({file_len} bytes)", path.display());
+    println!("inspect: {}", decoded.to_debug_json());
+
+    // (4) Warm-start from the decoded artifact; prove the contract.
+    let warm = CompiledModel::from_bundle(&decoded)?;
+    anyhow::ensure!(warm.is_warm_started(), "fingerprint should match its own compile");
+    let cold = CompiledModel::compile(&decoded.bn)?;
+    let mut ws = warm.new_scratch();
+    let mut cs = cold.new_scratch();
+    let evidence = vec![(0usize, 0usize), (5, 1)];
+    let mut first_recomputes = 0;
+    for (i, ev) in [&[][..], &evidence[..]].into_iter().enumerate() {
+        let a = warm.marginals(&mut ws, ev)?;
+        let b = cold.marginals(&mut cs, ev)?;
+        if i == 0 {
+            first_recomputes = ws.collect_recomputes();
+            anyhow::ensure!(first_recomputes == 0, "warm start must skip the collect sweep");
+        }
+        anyhow::ensure!(
+            a.log_evidence.to_bits() == b.log_evidence.to_bits(),
+            "warm/cold log-evidence diverged"
+        );
+        for v in 0..decoded.bn.n() {
+            for (x, y) in a.marginal(v).iter().zip(b.marginal(v)) {
+                anyhow::ensure!(x.to_bits() == y.to_bits(), "warm/cold marginal diverged");
+            }
+        }
+    }
+    println!(
+        "warm start: bit-identical to cold compile; collect messages recomputed on first \
+         query: {first_recomputes} (cold side: {}; evidence queries later recomputed {})",
+        cs.collect_recomputes(),
+        ws.collect_recomputes()
+    );
+
+    // (5) Serve the bundle: one framed client, then the sentinel.
+    let server = Server::from_bundle(
+        &decoded,
+        &EngineConfig::default(),
+        ServeConfig { threads: 2, ..Default::default() },
+    )?;
+    anyhow::ensure!(server.warm_started(), "serving should adopt the potentials");
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let server = &server;
+        s.spawn(move || server.serve_tcp(&listener, None).expect("serve"));
+        let stream = TcpStream::connect(addr)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        send_frame(
+            &mut writer,
+            &format!(
+                r#"{{"id": 1, "type": "marginal", "targets": ["{}"], "evidence": {{"{}": 0}}}}"#,
+                decoded.bn.names[23], decoded.bn.names[0]
+            ),
+        );
+        let resp = recv_frame(&mut reader);
+        let v = Json::parse(&resp).unwrap();
+        anyhow::ensure!(v.get("ok").and_then(Json::as_bool) == Some(true), "query failed");
+        println!("served  < {}", &resp[..resp.len().min(90)]);
+        send_frame(&mut writer, r#"{"type": "shutdown"}"#);
+        let ack = recv_frame(&mut reader);
+        println!("shutdown < {ack}");
+        Ok(())
+    })?;
+    println!("bundle pipeline complete: learn -> bundle -> warm serve, one artifact throughout");
+    Ok(())
+}

@@ -19,7 +19,7 @@
 use std::sync::Arc;
 
 use cges::bn::{forward_sample, generate, NetGenConfig};
-use cges::coordinator::{run_ring, RingMode, RingRunOptions};
+use cges::coordinator::{run_ring, BundleEmit, RingMode, RingRunOptions};
 use cges::data::Dataset;
 use cges::fusion::fuse;
 use cges::graph::Dag;
@@ -59,13 +59,32 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .map(|sc| RingWorker::new(sc.clone(), GesConfig { threads: 2, ..Default::default() }))
         .collect();
-    let outcome =
-        run_ring(workers, &RingRunOptions { max_rounds: 8, mode: RingMode::Channel })?;
+    // Bundle emission on: each site fits CPTs on its *own shard* and
+    // ships a self-contained model artifact with its structure — the
+    // FedGES model-as-message framing (raw rows still never leave a
+    // site). `ship_bundles` also rides them on the ring links.
+    let outcome = run_ring(
+        workers,
+        &RingRunOptions {
+            max_rounds: 8,
+            mode: RingMode::Channel,
+            emit: Some(BundleEmit::default()),
+            ship_bundles: true,
+        },
+    )?;
     println!(
         "ring converged in {} rounds over the channel transport ({} model handoffs recorded)",
         outcome.rounds,
         outcome.records.len()
     );
+    if let Some(b) = &outcome.best_bundle {
+        println!(
+            "best site shipped a bundle: {} vars, {} parameters, potentials: {}",
+            b.n_vars(),
+            b.bn.parameter_count(),
+            if b.has_potentials() { "calibrated" } else { "none" }
+        );
+    }
     for round in 0..outcome.rounds {
         let hops: Vec<_> =
             outcome.records.iter().filter(|r| r.round == round).collect();

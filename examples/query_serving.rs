@@ -1,26 +1,29 @@
-//! End-to-end serving demo: ring-learn a structure, fit its CPTs,
-//! compile it once, and serve it to concurrent clients — the full
-//! data → learn → **serve traffic** loop.
+//! End-to-end serving demo on the bundle API: ring-learn straight into
+//! a model bundle, warm-start the compiled engine from its shipped
+//! potentials, and serve it to concurrent clients — the full
+//! data → learn → **bundle** → **warm serve** loop.
 //!
 //! Run:  cargo run --release --example query_serving -- \
 //!           [--nodes 60] [--edges 80] [--rows 3000] [--queries 200] \
 //!           [--threads 4] [--seed 1]
 //!
 //! Steps: (1) generate a ground-truth network and sample a dataset;
-//! (2) learn a structure with the k=2 ring; (3) fit Dirichlet-smoothed
-//! CPTs onto the learned DAG; (4) compile one shared `CompiledModel`
-//! and cross-check a query against variable elimination; (5) measure
+//! (2) ring-learn with bundle emission on — `cges` fits + calibrates
+//! the converged structure into a self-contained artifact; (3)
+//! warm-start a `CompiledModel` from the bundle (zero
+//! collect-message recomputation, verified against a cold compile
+//! bit-for-bit and against variable elimination); (4) measure
 //! full-posterior queries/sec single-threaded vs `--threads` workers
-//! sharing the model with per-thread scratch; (6) start the
-//! multi-client TCP server, hit it from parallel framed clients with
-//! marginal, joint-MAP and batch requests, then stop it with the
-//! shutdown sentinel.
+//! sharing the warm model with per-thread scratch; (5) start the
+//! multi-client TCP server from the same bundle, hit it from parallel
+//! framed clients with marginal, joint-MAP and batch requests, then
+//! stop it with the shutdown sentinel.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use cges::bn::{fit, forward_sample, generate, NetGenConfig};
+use cges::bn::{forward_sample, generate, NetGenConfig};
 use cges::coordinator::{cges, RingConfig};
 use cges::engine::{CompiledModel, ServeConfig, Server};
 use cges::infer::json::Json;
@@ -70,36 +73,53 @@ fn main() -> anyhow::Result<()> {
         rows
     );
 
-    // (2) Ring-learn the structure.
+    // (2) Ring-learn straight into a model bundle: `cges` fits and
+    // calibrates the converged structure into one self-contained
+    // artifact (per-hop shipping is the federated `run_ring` path).
     let t = Timer::start();
-    let learned = cges(data.clone(), &RingConfig { k: 2, threads: 4, ..Default::default() })?;
+    let learned = cges(
+        data.clone(),
+        &RingConfig { k: 2, threads: 4, emit_bundle: true, ..Default::default() },
+    )?;
+    let bundle = learned.bundle.expect("emit_bundle produces an artifact");
     println!(
-        "learned: BDeu {:.1}, {} edges, {} rounds in {:.2}s",
+        "learned: BDeu {:.1}, {} edges, {} rounds in {:.2}s -> bundle [{}] with {} parameters, potentials {}",
         learned.score,
         learned.dag.edge_count(),
         learned.rounds,
-        t.secs()
+        t.secs(),
+        bundle.meta.producer,
+        bundle.bn.parameter_count(),
+        if bundle.has_potentials() { "calibrated" } else { "none" }
     );
+    let bn = bundle.bn.clone();
 
-    // (3) Parameterize the learned structure.
+    // (3) Warm-start the compiled model from the bundle; the model is
+    // Send + Sync and every query below shares this single allocation.
     let t = Timer::start();
-    let bn = fit(&learned.dag, &data, 1.0)?;
-    println!("fitted: {} parameters in {:.3}s", bn.parameter_count(), t.secs());
-
-    // (4) Compile once; the model is Send + Sync and every query below
-    // shares this single allocation.
-    let t = Timer::start();
-    let model = CompiledModel::compile(&bn)?;
+    let model = CompiledModel::from_bundle(&bundle)?;
     println!(
-        "compiled: {} cliques, max clique state space {}, built in {:.3}s",
+        "compiled: {} cliques, max clique state space {}, built in {:.3}s ({})",
         model.n_cliques(),
         model.max_clique_states(),
-        t.secs()
+        t.secs(),
+        if model.is_warm_started() { "warm-started from shipped potentials" } else { "cold" }
     );
     let target = nodes - 1;
     let evidence = vec![(0usize, 0usize)];
     let mut scratch = model.new_scratch();
     let post = model.marginals(&mut scratch, &evidence)?;
+    if model.is_warm_started() {
+        // Cross-check the warm path against a cold compile, bit for bit.
+        let cold = CompiledModel::compile(&bn)?;
+        let mut cold_scratch = cold.new_scratch();
+        let cold_post = cold.marginals(&mut cold_scratch, &evidence)?;
+        anyhow::ensure!(
+            post.log_evidence.to_bits() == cold_post.log_evidence.to_bits(),
+            "warm and cold answers diverged"
+        );
+        println!("warm start verified: answers bit-identical to a cold compile");
+    }
     let ve = ve_marginal(&bn, target, &evidence)?;
     let max_gap = ve
         .iter()
@@ -118,7 +138,7 @@ fn main() -> anyhow::Result<()> {
         &map_states[..map_states.len().min(8)]
     );
 
-    // (5) Serving throughput, single-threaded vs shared-model pool.
+    // (4) Serving throughput, single-threaded vs shared-model pool.
     let mut rng = Rng::new(seed + 99);
     let mut evidence_sets: Vec<Vec<(usize, usize)>> = Vec::with_capacity(queries);
     for _ in 0..queries {
@@ -153,16 +173,20 @@ fn main() -> anyhow::Result<()> {
         pool_qps / single_qps.max(1e-9)
     );
 
-    // (6) The multi-client TCP server, in-process: parallel framed
+    // (5) The multi-client TCP server, built from the same bundle so
+    // every handler thread's scratch starts warm: parallel framed
     // clients, a batch request, then the shutdown sentinel.
-    let server = Server::new(
-        &bn,
+    let server = Server::from_bundle(
+        &bundle,
         &EngineConfig::default(),
         ServeConfig { threads, ..Default::default() },
     )?;
     let listener = TcpListener::bind(("127.0.0.1", 0))?;
     let addr = listener.local_addr()?;
-    println!("serving on {addr} with {threads} handler threads");
+    println!(
+        "serving on {addr} with {threads} handler threads{}",
+        if server.warm_started() { " (warm-started)" } else { "" }
+    );
     std::thread::scope(|s| {
         let server = &server;
         s.spawn(move || server.serve_tcp(&listener, None).expect("serve"));

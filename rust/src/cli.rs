@@ -63,10 +63,14 @@ impl Args {
         self.get(key).ok_or_else(|| anyhow!("missing required option --{key}"))
     }
 
-    /// Typed option with default.
+    /// Typed option with default. An empty value (`--threads ""`) is
+    /// reported as such, naming the flag — `"".parse::<String>()`
+    /// would otherwise succeed silently and numeric types would emit
+    /// the unhelpful `cannot parse ''`.
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
         match self.get(key) {
             None => Ok(default),
+            Some("") => Err(anyhow!("option --{key} has an empty value")),
             Some(v) => v.parse().map_err(|_| anyhow!("--{key}: cannot parse '{v}'")),
         }
     }
@@ -120,6 +124,18 @@ mod tests {
         let a = Args::parse(&argv(&[]), &[]).unwrap();
         assert_eq!(a.get_parse::<f64>("ess", 10.0).unwrap(), 10.0);
         assert!(a.require("data").is_err());
+    }
+
+    #[test]
+    fn empty_option_value_names_the_flag() {
+        let a = Args::parse(&argv(&["--threads", ""]), &[]).unwrap();
+        let e = a.get_parse::<usize>("threads", 4).unwrap_err();
+        assert_eq!(format!("{e}"), "option --threads has an empty value");
+        // Same wording for types where "" would otherwise parse.
+        let e = a.get_parse::<String>("threads", "x".into()).unwrap_err();
+        assert_eq!(format!("{e}"), "option --threads has an empty value");
+        // Absent keys still fall back to the default.
+        assert_eq!(a.get_parse::<usize>("batch", 7).unwrap(), 7);
     }
 
     #[test]

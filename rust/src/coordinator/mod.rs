@@ -8,8 +8,8 @@ pub mod telemetry;
 pub mod transport;
 
 pub use ring::{
-    cges, insert_limit, run_ring, PartitionSource, RingConfig, RingMode, RingOutcome,
-    RingResult, RingRunOptions,
+    cges, insert_limit, run_ring, BundleEmit, PartitionSource, RingConfig, RingMode,
+    RingOutcome, RingResult, RingRunOptions,
 };
 pub use telemetry::{RoundRecord, Telemetry, WorkerTimeline};
 pub use transport::{

@@ -38,6 +38,20 @@
 //! Stage 3 (fine tuning): one unrestricted GES from the ring's best
 //! model — this run is what transfers GES's theoretical guarantees to
 //! cGES.
+//!
+//! Bundle emission ([`RingRunOptions`]`::emit`): ring workers can
+//! additionally fit CPTs on their own data each round and ship the
+//! result as a self-contained [`Bundle`] — structure, parameters and
+//! calibrated jointree potentials — alongside the structure (gated by
+//! the `ship_bundles` wire capability flag so potential-less peers
+//! keep receiving byte-identical legacy frames), with the coordinator
+//! keeping the winning round's bundle ([`RingOutcome::best_bundle`]).
+//! That path is for rings whose coordinator holds no data — the
+//! federated example's per-shard sites are the canonical user.
+//! [`cges`], whose workers all score one shared dataset, instead fits
+//! and calibrates the final model once ([`RingConfig::emit_bundle`] →
+//! [`RingResult::bundle`]) — identical bytes, none of the in-loop
+//! fitting cost.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -53,6 +67,7 @@ use crate::coordinator::transport::{
 use crate::data::Dataset;
 use crate::graph::Dag;
 use crate::learn::{EdgeMask, GesConfig, RingWorker};
+use crate::model::{Bundle, BundleMeta};
 use crate::partition::partition_edges;
 use crate::score::{BdeuScorer, PairwiseScores, ScoreCache};
 use crate::util::Timer;
@@ -127,6 +142,14 @@ pub struct RingConfig {
     pub max_parents: Option<usize>,
     /// Stage-2 execution mode / transport.
     pub mode: RingMode,
+    /// Emit a self-contained model [`Bundle`] for the final structure
+    /// (fitted CPTs + calibrated jointree potentials): one fit +
+    /// compile + calibrate at the end of the run. Opt in for runs
+    /// that end in serving.
+    pub emit_bundle: bool,
+    /// Equivalent sample size for the bundle's CPT fit (the CLI's
+    /// `fit --ess` default).
+    pub bundle_ess: f64,
 }
 
 impl Default for RingConfig {
@@ -141,6 +164,8 @@ impl Default for RingConfig {
             fine_tune: true,
             max_parents: None,
             mode: RingMode::default(),
+            emit_bundle: false,
+            bundle_ess: 1.0,
         }
     }
 }
@@ -156,6 +181,11 @@ pub struct RingResult {
     /// Telemetry (per-hop records, worker timelines, stage times,
     /// cache stats).
     pub telemetry: Telemetry,
+    /// The final model as a self-contained artifact, when
+    /// [`RingConfig::emit_bundle`] is on: `dag` + CPTs fitted at
+    /// [`RingConfig::bundle_ess`] + calibrated potentials (when the
+    /// jointree fits the budget).
+    pub bundle: Option<Bundle>,
 }
 
 /// The cGES-L insert limit l = (10/k)·√n.
@@ -191,6 +221,24 @@ fn stage1_similarity(data: &Arc<Dataset>, cfg: &RingConfig) -> (PairwiseScores, 
 // The generic ring runtime
 // =====================================================================
 
+/// Per-round bundle emission parameters for [`run_ring`].
+#[derive(Clone, Copy, Debug)]
+pub struct BundleEmit {
+    /// Equivalent sample size for the per-round CPT fit (each worker
+    /// fits against its own scorer's data, so federated rings
+    /// parameterize on their private shards).
+    pub ess: f64,
+    /// Max clique state space to calibrate within; past it bundles
+    /// ship without potentials (consumers cold-start).
+    pub budget: u64,
+}
+
+impl Default for BundleEmit {
+    fn default() -> Self {
+        BundleEmit { ess: 1.0, budget: crate::infer::EngineConfig::default().budget }
+    }
+}
+
 /// Options for [`run_ring`] (what the runtime needs beyond the workers
 /// themselves — each [`RingWorker`] already owns its scorer, mask and
 /// cGES-L insert cap through its `GesConfig`).
@@ -200,6 +248,30 @@ pub struct RingRunOptions {
     pub max_rounds: usize,
     /// Scheduler / transport.
     pub mode: RingMode,
+    /// Fit + calibrate a [`Bundle`] for every round that improves a
+    /// worker's own best score (other rounds can never be adopted as
+    /// [`RingOutcome::best_bundle`], so they skip the fitting cost)
+    /// and report it with the event stream. `None` (the default) is
+    /// the pre-bundle behavior.
+    pub emit: Option<BundleEmit>,
+    /// Bundle wire capability: also attach the emitted bundles to the
+    /// [`ModelMsg`]s crossing the ring, so successors (and remote
+    /// peers) receive self-contained models. Requires every peer to
+    /// understand the bundle frame tag — leave off when older peers
+    /// share the ring; frames are then byte-identical to the legacy
+    /// format. No-op unless `emit` is set.
+    pub ship_bundles: bool,
+}
+
+impl Default for RingRunOptions {
+    fn default() -> Self {
+        RingRunOptions {
+            max_rounds: 50,
+            mode: RingMode::default(),
+            emit: None,
+            ship_bundles: false,
+        }
+    }
 }
 
 /// What a ring run produced.
@@ -216,6 +288,32 @@ pub struct RingOutcome {
     /// Every hop record, including speculative ones, sorted by
     /// (round, worker).
     pub records: Vec<RoundRecord>,
+    /// The bundle shipped with the best counted model, when
+    /// [`RingRunOptions::emit`] was set (absent if that worker's fit
+    /// failed or emission was off).
+    pub best_bundle: Option<Bundle>,
+}
+
+/// Fit + calibrate one worker's current model into a shippable bundle
+/// (the per-hop emission behind [`RingRunOptions::emit`]). Fit
+/// failures (e.g. a family past the CPT cell cap) skip emission
+/// rather than failing the round; calibration degrades to a
+/// potential-less bundle past the budget.
+fn emit_worker_bundle(
+    worker: &RingWorker,
+    dag: &Dag,
+    score: f64,
+    round: usize,
+    emit: &BundleEmit,
+) -> Option<Bundle> {
+    let bn = crate::bn::fit(dag, worker.scorer().data(), emit.ess).ok()?;
+    let meta = BundleMeta {
+        producer: "ring-worker".into(),
+        rounds: (round + 1) as u32,
+        score,
+        ess: emit.ess,
+    };
+    Some(Bundle::calibrated_within(bn, meta, emit.budget))
 }
 
 /// Run a ring of pre-built workers to convergence. This is the
@@ -243,16 +341,23 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
     let mut models: Vec<Dag> = vec![Dag::new(n); k];
     let mut best_score = f64::NEG_INFINITY;
     let mut best_dag = Dag::new(n);
+    let mut best_bundle: Option<Bundle> = None;
     let mut rounds = 0usize;
+    let emit = opts.emit;
+    // Per-worker running best, for the same emission gate as the
+    // pipelined worker loop (a self-non-improving round's bundle can
+    // never be adopted).
+    let mut own_best = vec![f64::NEG_INFINITY; k];
 
     'rounds: for round in 0..opts.max_rounds {
         rounds = round + 1;
         let prev = models.clone();
-        let results: Vec<(Dag, RoundRecord)> = std::thread::scope(|s| {
+        let results: Vec<(Dag, RoundRecord, Option<Bundle>)> = std::thread::scope(|s| {
             let handles: Vec<_> = workers
                 .iter_mut()
+                .zip(own_best.iter_mut())
                 .enumerate()
-                .map(|(i, worker)| {
+                .map(|(i, (worker, own_best))| {
                     let pred = &prev[(i + k - 1) % k];
                     s.spawn(move || {
                         let ft = Timer::start();
@@ -265,6 +370,17 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
                         let (inserts, deletes) = worker.step();
                         let ges_secs = gt.secs();
                         let dag = worker.dag();
+                        let score = worker.score_of(&dag);
+                        let improved_own = *own_best < score;
+                        if improved_own {
+                            *own_best = score;
+                        }
+                        let bundle = if improved_own {
+                            emit.as_ref()
+                                .and_then(|e| emit_worker_bundle(worker, &dag, score, round, e))
+                        } else {
+                            None
+                        };
                         let rec = RoundRecord {
                             round,
                             worker: i,
@@ -272,12 +388,12 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
                             ges_secs,
                             wait_secs: 0.0,
                             codec_secs: 0.0,
-                            score: worker.score_of(&dag),
+                            score,
                             edges: dag.edge_count(),
                             inserts,
                             deletes,
                         };
-                        (dag, rec)
+                        (dag, rec, bundle)
                     })
                 })
                 .collect();
@@ -286,10 +402,11 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
 
         // Convergence check (Algorithm 1, lines 11-16).
         let mut improved = false;
-        for (i, (dag, rec)) in results.into_iter().enumerate() {
+        for (i, (dag, rec, bundle)) in results.into_iter().enumerate() {
             if rec.score > best_score {
                 best_score = rec.score;
                 best_dag = dag.clone();
+                best_bundle = bundle;
                 improved = true;
             }
             records.push(rec);
@@ -299,7 +416,7 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
             break 'rounds;
         }
     }
-    Ok(RingOutcome { best_dag, best_score, rounds, models, records })
+    Ok(RingOutcome { best_dag, best_score, rounds, models, records, best_bundle })
 }
 
 /// Actor runtime: one long-lived thread per worker, connected through
@@ -313,17 +430,17 @@ fn run_pipelined(
     let n = workers[0].n();
     let links = transport.connect(k)?;
     let stop = AtomicBool::new(false);
-    let (events_tx, events_rx) = mpsc::channel::<(RoundRecord, Dag)>();
-    let max_rounds = opts.max_rounds;
+    let (events_tx, events_rx) = mpsc::channel::<(RoundRecord, Dag, Option<Bundle>)>();
+    let opts = *opts;
 
     std::thread::scope(|s| {
         for (i, (worker, link)) in workers.into_iter().zip(links).enumerate() {
             let events = events_tx.clone();
             let stop = &stop;
-            s.spawn(move || worker_loop(i, k, worker, link, events, stop, max_rounds));
+            s.spawn(move || worker_loop(i, k, worker, link, events, stop, &opts));
         }
         drop(events_tx);
-        collect(k, n, max_rounds, &stop, events_rx)
+        collect(k, n, opts.max_rounds, &stop, events_rx)
     })
 }
 
@@ -349,10 +466,11 @@ fn worker_loop(
     k: usize,
     mut worker: RingWorker,
     link: RingLink,
-    events: mpsc::Sender<(RoundRecord, Dag)>,
+    events: mpsc::Sender<(RoundRecord, Dag, Option<Bundle>)>,
     stop: &AtomicBool,
-    max_rounds: usize,
+    opts: &RingRunOptions,
 ) {
+    let max_rounds = opts.max_rounds;
     let RingLink { mut tx, mut rx } = link;
     // My score per round (what token probes fold in).
     let mut history: Vec<f64> = Vec::new();
@@ -420,7 +538,20 @@ fn worker_loop(
         let ges_secs = gt.secs();
         let dag = worker.dag();
         let score = worker.score_of(&dag);
+        // Fit + calibrate this round's model into a shippable bundle
+        // when emission is on (each worker against its own data) —
+        // but only on rounds that improve this worker's own best: the
+        // coordinator adopts a bundle only when its score beats the
+        // global running best, which a self-non-improving round never
+        // can, so fitting one would be pure waste.
+        let improved_own =
+            history.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b)) < score;
         history.push(score);
+        let bundle = if improved_own {
+            opts.emit.as_ref().and_then(|e| emit_worker_bundle(&worker, &dag, score, round, e))
+        } else {
+            None
+        };
 
         let mut probes = std::mem::take(&mut pending);
         let mut self_converged = false;
@@ -449,6 +580,9 @@ fn worker_loop(
                 score,
                 dag: dag.clone(),
                 token: RingToken { probes },
+                // The wire capability: bundles ride the ring only when
+                // every peer negotiated the bundle-frame tag.
+                bundle: if opts.ship_bundles { bundle.clone() } else { None },
             });
             match tx.send(msg) {
                 Ok(secs) => codec_secs += secs,
@@ -470,7 +604,7 @@ fn worker_loop(
             inserts,
             deletes,
         };
-        let _ = events.send((rec, dag));
+        let _ = events.send((rec, dag, bundle));
 
         if self_converged {
             stop_and_drain(tx.as_mut(), rx.as_mut());
@@ -491,24 +625,26 @@ fn collect(
     n: usize,
     max_rounds: usize,
     stop: &AtomicBool,
-    events: mpsc::Receiver<(RoundRecord, Dag)>,
+    events: mpsc::Receiver<(RoundRecord, Dag, Option<Bundle>)>,
 ) -> Result<RingOutcome> {
     use std::collections::BTreeMap;
 
-    let mut buffer: BTreeMap<usize, Vec<Option<(RoundRecord, Dag)>>> = BTreeMap::new();
+    let mut buffer: BTreeMap<usize, Vec<Option<(RoundRecord, Dag, Option<Bundle>)>>> =
+        BTreeMap::new();
     let mut records: Vec<RoundRecord> = Vec::new();
     let mut next_round = 0usize;
     let mut best_score = f64::NEG_INFINITY;
     let mut best_dag = Dag::new(n);
+    let mut best_bundle: Option<Bundle> = None;
     let mut models: Vec<Dag> = vec![Dag::new(n); k];
     let mut rounds = 0usize;
     let mut decided = false;
 
-    while let Ok((rec, dag)) = events.recv() {
+    while let Ok((rec, dag, bundle)) = events.recv() {
         records.push(rec.clone());
         let slots =
             buffer.entry(rec.round).or_insert_with(|| (0..k).map(|_| None).collect());
-        slots[rec.worker] = Some((rec, dag));
+        slots[rec.worker] = Some((rec, dag, bundle));
 
         while !decided {
             let complete = buffer
@@ -523,10 +659,11 @@ fn collect(
             let mut improved = false;
             let mut new_models = Vec::with_capacity(k);
             for entry in slots {
-                let (rec, dag) = entry.expect("complete round");
+                let (rec, dag, bundle) = entry.expect("complete round");
                 if rec.score > best_score {
                     best_score = rec.score;
                     best_dag = dag.clone();
+                    best_bundle = bundle;
                     improved = true;
                 }
                 new_models.push(dag);
@@ -540,7 +677,7 @@ fn collect(
         }
     }
     records.sort_by_key(|r| (r.round, r.worker));
-    Ok(RingOutcome { best_dag, best_score, rounds, models, records })
+    Ok(RingOutcome { best_dag, best_score, rounds, models, records, best_bundle })
 }
 
 /// Run cGES on a dataset.
@@ -585,8 +722,16 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
             RingWorker::new(scorer.clone(), ges_cfg)
         })
         .collect();
-    let outcome =
-        run_ring(workers, &RingRunOptions { max_rounds: cfg.max_rounds, mode: cfg.mode })?;
+    // Per-round bundle emission stays off here: every cges worker
+    // scores the same full dataset, so the coordinator can fit and
+    // calibrate the final model once at the end for identical bytes —
+    // k × rounds of in-loop fits would buy nothing. `run_ring` callers
+    // whose coordinator holds no data (the federated example's
+    // per-shard sites) are the ones that set `emit`/`ship_bundles`.
+    let outcome = run_ring(
+        workers,
+        &RingRunOptions { max_rounds: cfg.max_rounds, mode: cfg.mode, ..Default::default() },
+    )?;
     telemetry.learning_secs = t.secs();
     telemetry.records = outcome.records;
     telemetry.transport = cfg.mode.name().into();
@@ -611,11 +756,34 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     };
     telemetry.fine_tune_secs = t.secs();
 
+    // ---- Bundle emission -------------------------------------------
+    // One fit + calibrate over the final structure: the artifact that
+    // serving warm-starts from. A fit failure (e.g. a family past the
+    // CPT cell cap) degrades to no bundle with a warning — it must
+    // never discard the completed learning run.
+    let bundle = if cfg.emit_bundle {
+        let meta = BundleMeta {
+            producer: format!("cges k={} [{}]", cfg.k, cfg.mode.name()),
+            rounds: outcome.rounds as u32,
+            score,
+            ess: cfg.bundle_ess,
+        };
+        match Bundle::fit_calibrated(&dag, &data, BundleEmit::default().budget, meta) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                eprintln!("warning: bundle emission failed ({e:#}); returning the structure only");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
     let (hits, misses) = cache.stats();
     telemetry.cache_hits = hits;
     telemetry.cache_misses = misses;
 
-    Ok(RingResult { dag, score, rounds: outcome.rounds, telemetry })
+    Ok(RingResult { dag, score, rounds: outcome.rounds, telemetry, bundle })
 }
 
 #[cfg(test)]
@@ -715,6 +883,91 @@ mod tests {
         // bounded by the token circuit length.
         let max_round = r.telemetry.records.iter().map(|rec| rec.round).max().unwrap();
         assert!(max_round < r.rounds + 2 * k, "unbounded speculation: {max_round} vs {}", r.rounds);
+    }
+
+    #[test]
+    fn bundle_emission_preserves_results_and_warm_serves() {
+        let (_bn, data) = workload(16, 22, 13);
+        let base = RingConfig { k: 2, threads: 4, ..Default::default() };
+        let plain = cges(data.clone(), &base).unwrap();
+        assert!(plain.bundle.is_none(), "emission is opt-in");
+
+        let bundled = cges(data.clone(), &RingConfig { emit_bundle: true, ..base }).unwrap();
+        assert_eq!(plain.dag.edges(), bundled.dag.edges());
+        assert!((plain.score - bundled.score).abs() < 1e-9);
+        assert_eq!(plain.rounds, bundled.rounds);
+
+        let bundle = bundled.bundle.expect("emit_bundle produces an artifact");
+        assert_eq!(bundle.bn.dag.edges(), bundled.dag.edges());
+        assert!(bundle.has_potentials(), "small jointree must calibrate");
+        assert_eq!(bundle.meta.rounds as usize, bundled.rounds);
+
+        // The artifact warm-serves bit-identically to a cold compile
+        // of the same network, with zero collect-message
+        // recomputation on the first evidence-free query.
+        let warm = crate::engine::CompiledModel::from_bundle(&bundle).unwrap();
+        assert!(warm.is_warm_started());
+        let cold = crate::engine::CompiledModel::compile(&bundle.bn).unwrap();
+        let (mut ws, mut cs) = (warm.new_scratch(), cold.new_scratch());
+        let a = warm.marginals(&mut ws, &[]).unwrap();
+        let b = cold.marginals(&mut cs, &[]).unwrap();
+        assert_eq!(ws.collect_recomputes(), 0, "warm start must skip the collect sweep");
+        assert_eq!(a.log_evidence.to_bits(), b.log_evidence.to_bits());
+        for v in 0..16 {
+            for (x, y) in a.marginal(v).iter().zip(b.marginal(v)) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn ring_bundle_shipping_interops_with_capability_off() {
+        // The wire capability, end to end over both transports: with
+        // `ship_bundles` on, every hop carries a bundle frame (tag 2);
+        // with it off (or emission off entirely — the legacy peers
+        // case) frames are byte-identical to the pre-bundle format.
+        // All variants must converge to the same structures.
+        let (_bn, data) = workload(14, 18, 21);
+        let run = |mode: RingMode, emit: Option<BundleEmit>, ship: bool| {
+            let scorer = BdeuScorer::new(data.clone(), 10.0);
+            let workers: Vec<RingWorker> = (0..2)
+                .map(|_| {
+                    RingWorker::new(
+                        scorer.clone(),
+                        GesConfig { threads: 2, ..Default::default() },
+                    )
+                })
+                .collect();
+            run_ring(
+                workers,
+                &RingRunOptions { max_rounds: 8, mode, emit, ship_bundles: ship },
+            )
+            .unwrap()
+        };
+        let legacy = run(RingMode::Channel, None, false);
+        let variants = [
+            (None, false),
+            (Some(BundleEmit::default()), false),
+            (Some(BundleEmit::default()), true),
+        ];
+        for mode in [RingMode::Channel, RingMode::Tcp] {
+            for (emit, ship) in variants {
+                let got = run(mode, emit, ship);
+                assert_eq!(
+                    got.best_dag.edges(),
+                    legacy.best_dag.edges(),
+                    "{} emit={} ship={ship}",
+                    mode.name(),
+                    emit.is_some()
+                );
+                assert!((got.best_score - legacy.best_score).abs() < 1e-9);
+                assert_eq!(got.rounds, legacy.rounds);
+                assert_eq!(got.best_bundle.is_some(), emit.is_some());
+                if let Some(b) = &got.best_bundle {
+                    assert_eq!(b.bn.dag.edges(), got.best_dag.edges());
+                }
+            }
+        }
     }
 
     // Cross-mode result equality (deterministic vs channel vs tcp) is

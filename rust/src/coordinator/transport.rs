@@ -57,6 +57,7 @@ use crate::graph::codec::{
     decode_dag, encode_dag, put_f64, put_u32, take_f64, take_u32, take_u8,
 };
 use crate::graph::Dag;
+use crate::model::{decode_bundle, encode_bundle, Bundle};
 use crate::util::{ensure_frame_len, Timer};
 
 /// One probe of the convergence token: the best BDeu score seen for
@@ -91,6 +92,15 @@ pub struct ModelMsg {
     pub dag: Dag,
     /// Convergence-token probes riding along.
     pub token: RingToken,
+    /// Optional self-contained model bundle (fitted CPTs + calibrated
+    /// jointree potentials) riding alongside the structure. Gated by
+    /// the ring's bundle capability
+    /// ([`RingRunOptions::ship_bundles`](crate::coordinator::RingRunOptions)):
+    /// with the capability off a message encodes to exactly the legacy
+    /// `TAG_MODEL` frame, so potential-less peers interop unchanged;
+    /// with it on the frame uses a new tag an old peer would cleanly
+    /// refuse — which is why the flag must only be enabled ring-wide.
+    pub bundle: Option<Bundle>,
 }
 
 /// What flows on a ring link.
@@ -209,13 +219,19 @@ const MAX_FRAME_BYTES: u32 = 64 << 20;
 
 const TAG_MODEL: u8 = 0;
 const TAG_STOP: u8 = 1;
+/// A model frame that additionally carries a bundle payload. Emitted
+/// only when the ring's bundle capability is on; peers without the
+/// capability never see (and would refuse) this tag.
+const TAG_MODEL_BUNDLE: u8 = 2;
 
 /// Encode a [`RingMessage`] to its wire form (appended to `buf`).
+/// Bundle-less model messages encode byte-identically to the
+/// pre-bundle format.
 pub fn encode_message(msg: &RingMessage, buf: &mut Vec<u8>) {
     match msg {
         RingMessage::Stop => buf.push(TAG_STOP),
         RingMessage::Model(m) => {
-            buf.push(TAG_MODEL);
+            buf.push(if m.bundle.is_some() { TAG_MODEL_BUNDLE } else { TAG_MODEL });
             put_u32(buf, m.from as u32);
             put_u32(buf, m.round as u32);
             put_f64(buf, m.score);
@@ -226,6 +242,9 @@ pub fn encode_message(msg: &RingMessage, buf: &mut Vec<u8>) {
                 put_f64(buf, p.best);
             }
             encode_dag(&m.dag, buf);
+            if let Some(b) = &m.bundle {
+                encode_bundle(b, buf);
+            }
         }
     }
 }
@@ -236,7 +255,7 @@ pub fn decode_message(bytes: &[u8]) -> Result<RingMessage> {
     let tag = take_u8(&mut cursor)?;
     let msg = match tag {
         TAG_STOP => RingMessage::Stop,
-        TAG_MODEL => {
+        TAG_MODEL | TAG_MODEL_BUNDLE => {
             let from = take_u32(&mut cursor)? as usize;
             let round = take_u32(&mut cursor)? as usize;
             let score = take_f64(&mut cursor)?;
@@ -255,7 +274,19 @@ pub fn decode_message(bytes: &[u8]) -> Result<RingMessage> {
                 probes.push(RoundProbe { round, best, hops });
             }
             let dag = decode_dag(&mut cursor)?;
-            RingMessage::Model(ModelMsg { from, round, score, dag, token: RingToken { probes } })
+            let bundle = if tag == TAG_MODEL_BUNDLE {
+                Some(decode_bundle(&mut cursor)?)
+            } else {
+                None
+            };
+            RingMessage::Model(ModelMsg {
+                from,
+                round,
+                score,
+                dag,
+                token: RingToken { probes },
+                bundle,
+            })
         }
         other => bail!("unknown message tag {other}"),
     };
@@ -272,6 +303,8 @@ pub struct WireTransport;
 struct WireTx {
     stream: BufWriter<TcpStream>,
     scratch: Vec<u8>,
+    /// Oversized-bundle degrade already reported on this link.
+    warned_oversize: bool,
 }
 
 struct WireRx {
@@ -286,7 +319,41 @@ impl RingTx for WireTx {
         let t = Timer::start();
         self.scratch.clear();
         encode_message(&msg, &mut self.scratch);
-        let codec_secs = t.secs();
+        let mut codec_secs = t.secs();
+
+        // A bundle payload is advisory: when it alone pushes the frame
+        // past the cap, ship the structure without it instead of
+        // erroring — the worker loop reads a send error as "peer gone"
+        // and would silently tear the ring down mid-run. The re-encode
+        // never copies the oversized bundle itself (the borrowed
+        // message is encoded with its bundle slot emptied).
+        if self.scratch.len() > MAX_FRAME_BYTES as usize {
+            if let RingMessage::Model(m) = &msg {
+                if m.bundle.is_some() {
+                    if !self.warned_oversize {
+                        self.warned_oversize = true;
+                        eprintln!(
+                            "warning: ring bundle payload inflates the frame to {} bytes \
+                             (cap {MAX_FRAME_BYTES}); shipping structures without bundles \
+                             on this link",
+                            self.scratch.len()
+                        );
+                    }
+                    let t = Timer::start();
+                    let slim = ModelMsg {
+                        from: m.from,
+                        round: m.round,
+                        score: m.score,
+                        dag: m.dag.clone(),
+                        token: m.token.clone(),
+                        bundle: None,
+                    };
+                    self.scratch.clear();
+                    encode_message(&RingMessage::Model(slim), &mut self.scratch);
+                    codec_secs += t.secs();
+                }
+            }
+        }
 
         let len = u32::try_from(self.scratch.len()).context("frame too large for u32 prefix")?;
         ensure_frame_len("outgoing", len, MAX_FRAME_BYTES)?;
@@ -342,6 +409,7 @@ impl RingTransport for WireTransport {
                 tx: Box::new(WireTx {
                     stream: BufWriter::new(out_streams[i].take().expect("out taken once")),
                     scratch: Vec::new(),
+                    warned_oversize: false,
                 }),
                 rx: Box::new(WireRx {
                     stream: BufReader::new(
@@ -369,6 +437,22 @@ mod tests {
                     RoundProbe { round: 7, best: -1234.5678, hops: 1 },
                 ],
             },
+            bundle: None,
+        })
+    }
+
+    fn bundled_msg() -> RingMessage {
+        use crate::model::BundleMeta;
+        let bn = crate::bn::network::tiny_bn();
+        let meta = BundleMeta { producer: "ring".into(), rounds: 7, score: -12.0, ess: 1.0 };
+        let bundle = Bundle::calibrated_within(bn.clone(), meta, u64::MAX);
+        RingMessage::Model(ModelMsg {
+            from: 1,
+            round: 7,
+            score: -12.0,
+            dag: bn.dag,
+            token: RingToken { probes: vec![RoundProbe { round: 7, best: -12.0, hops: 1 }] },
+            bundle: Some(bundle),
         })
     }
 
@@ -381,6 +465,20 @@ mod tests {
                 assert_eq!(x.score, y.score);
                 assert_eq!(x.dag.edges(), y.dag.edges());
                 assert_eq!(x.token.probes, y.token.probes);
+                assert_eq!(x.bundle.is_some(), y.bundle.is_some());
+                if let (Some(p), Some(q)) = (&x.bundle, &y.bundle) {
+                    assert_eq!(p.bn.names, q.bn.names);
+                    assert_eq!(p.bn.dag.edges(), q.bn.dag.edges());
+                    assert_eq!(p.has_potentials(), q.has_potentials());
+                    if let (Some(pp), Some(qp)) = (&p.potentials, &q.potentials) {
+                        assert_eq!(pp.fingerprint, qp.fingerprint);
+                        for (m1, m2) in pp.messages.iter().zip(&qp.messages) {
+                            for (u, v) in m1.iter().zip(m2) {
+                                assert_eq!(u.to_bits(), v.to_bits());
+                            }
+                        }
+                    }
+                }
             }
             _ => panic!("message variants differ"),
         }
@@ -388,12 +486,31 @@ mod tests {
 
     #[test]
     fn message_codec_roundtrip() {
-        for msg in [model_msg(), RingMessage::Stop] {
+        for msg in [model_msg(), bundled_msg(), RingMessage::Stop] {
             let mut buf = Vec::new();
             encode_message(&msg, &mut buf);
             let back = decode_message(&buf).unwrap();
             assert_msgs_equal(&msg, &back);
         }
+    }
+
+    #[test]
+    fn bundle_less_frames_stay_byte_identical_to_legacy() {
+        // Capability off = the sender attaches no bundle, and the
+        // resulting frame must be exactly the legacy TAG_MODEL layout
+        // (old peers keep interoperating byte-for-byte).
+        let mut buf = Vec::new();
+        encode_message(&model_msg(), &mut buf);
+        assert_eq!(buf[0], TAG_MODEL);
+        let mut bundled = Vec::new();
+        encode_message(&bundled_msg(), &mut bundled);
+        assert_eq!(bundled[0], TAG_MODEL_BUNDLE);
+        // Stripping the bundle restores the legacy tag.
+        let RingMessage::Model(mut m) = bundled_msg() else { unreachable!() };
+        m.bundle = None;
+        let mut stripped = Vec::new();
+        encode_message(&RingMessage::Model(m), &mut stripped);
+        assert_eq!(stripped[0], TAG_MODEL);
     }
 
     #[test]

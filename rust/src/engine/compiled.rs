@@ -59,6 +59,7 @@ use crate::infer::factor::Factor;
 use crate::infer::kernel::{self, reference, Split};
 use crate::infer::triangulate::{triangulate, Triangulation};
 use crate::infer::Posterior;
+use crate::model::{Bundle, CalibratedPotentials};
 use crate::util::BitSet;
 
 /// Precompiled kernel layout for one clique of the frozen schedule:
@@ -116,6 +117,19 @@ pub struct CompiledModel {
     /// Largest clique table size (work-buffer length).
     max_table: usize,
     max_clique_states: u64,
+    /// Shipped evidence-free collect messages (bundle warm start):
+    /// every fresh scratch is seeded with these instead of an
+    /// all-dirty cache, so the first queries skip the cold collect
+    /// sweep entirely. `None` = cold compile.
+    warm: Option<WarmStart>,
+}
+
+/// The warm-start payload after validation against this model's
+/// schedule: per-clique collect messages and normalizers at exactly
+/// the compiled shapes.
+struct WarmStart {
+    up: Vec<Vec<f64>>,
+    up_logz: Vec<f64>,
 }
 
 /// Per-thread propagation state: current potentials, message buffers,
@@ -156,6 +170,10 @@ pub struct Scratch {
     /// the first `joint_map` on this scratch.
     max_up: Vec<Vec<f64>>,
     max_prod: Vec<Vec<f64>>,
+    /// Collect messages recomputed on this scratch so far (the
+    /// warm-start probe: a bundle-seeded scratch answers its first
+    /// evidence-free query at exactly zero).
+    collect_recomputes: u64,
 }
 
 impl Scratch {
@@ -178,7 +196,17 @@ impl Scratch {
             cev_tmp: Vec::new(),
             max_up: Vec::new(),
             max_prod: Vec::new(),
+            collect_recomputes: 0,
         }
+    }
+
+    /// How many collect messages this scratch has recomputed since
+    /// creation. A warm-started scratch
+    /// ([`CompiledModel::from_bundle`]) serves its first evidence-free
+    /// query without recomputing any — the probe
+    /// `tests/serving.rs` pins.
+    pub fn collect_recomputes(&self) -> u64 {
+        self.collect_recomputes
     }
 }
 
@@ -354,6 +382,113 @@ impl CompiledModel {
             plans,
             max_table,
             max_clique_states: tri.max_clique_states,
+            warm: None,
+        })
+    }
+
+    /// Compile `bundle.bn` and warm-start from its shipped calibrated
+    /// potentials when the schedule fingerprint matches this build's
+    /// compile (same triangulation, schedule and parameters) — every
+    /// fresh scratch then starts with a valid evidence-free collect
+    /// cache and the first queries skip the cold sweep. On a
+    /// fingerprint or shape mismatch the model silently falls back to
+    /// a cold compile; answers are bit-identical either way, because
+    /// shipped messages are the exact bits a local collect produces.
+    pub fn from_bundle(bundle: &Bundle) -> Result<CompiledModel> {
+        let tri = triangulate(&moral_graph(&bundle.bn.dag), &bundle.bn.cards);
+        Self::from_bundle_from(bundle, tri)
+    }
+
+    /// [`from_bundle`](CompiledModel::from_bundle) with a precomputed
+    /// triangulation (budget probes reuse theirs).
+    pub fn from_bundle_from(bundle: &Bundle, tri: Triangulation) -> Result<CompiledModel> {
+        let mut model = Self::compile_from(&bundle.bn, tri)?;
+        if let Some(p) = &bundle.potentials {
+            let nc = model.cliques.len();
+            let shapes_ok = p.messages.len() == nc
+                && p.logz.len() == nc
+                && model.plans.iter().zip(&p.messages).all(|(plan, m)| m.len() == plan.sep_size);
+            if shapes_ok && p.fingerprint == model.schedule_fingerprint() {
+                model.warm =
+                    Some(WarmStart { up: p.messages.clone(), up_logz: p.logz.clone() });
+            }
+        }
+        Ok(model)
+    }
+
+    /// Did this model warm-start from shipped potentials?
+    pub fn is_warm_started(&self) -> bool {
+        self.warm.is_some()
+    }
+
+    /// Fingerprint of everything a shipped collect message depends on:
+    /// the domain cardinalities, the clique scopes, the frozen message
+    /// schedule (parents, separators, BFS order, roots) and the bit
+    /// patterns of the CPT-assigned base potentials. Two compiles with
+    /// equal fingerprints produce bit-identical collect messages, so a
+    /// consumer can adopt shipped ones; any drift (different
+    /// triangulation heuristic, edited parameters) changes the
+    /// fingerprint and the consumer cold-starts instead.
+    pub fn schedule_fingerprint(&self) -> u64 {
+        // FNV-1a over a canonical byte walk.
+        fn eat(h: &mut u64, bytes: &[u8]) {
+            for &b in bytes {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        fn eat_usize(h: &mut u64, x: usize) {
+            eat(h, &(x as u64).to_le_bytes());
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        eat_usize(&mut h, self.cards.len());
+        for &c in &self.cards {
+            eat_usize(&mut h, c);
+        }
+        eat_usize(&mut h, self.cliques.len());
+        for clique in &self.cliques {
+            eat_usize(&mut h, clique.len());
+            for &v in clique {
+                eat_usize(&mut h, v);
+            }
+        }
+        for p in &self.parent {
+            eat_usize(&mut h, p.map_or(0, |x| x + 1));
+        }
+        for s in &self.sep {
+            eat_usize(&mut h, s.len());
+            for &v in s {
+                eat_usize(&mut h, v);
+            }
+        }
+        for &c in &self.order {
+            eat_usize(&mut h, c);
+        }
+        for &r in &self.roots {
+            eat_usize(&mut h, r);
+        }
+        for f in &self.base {
+            eat_usize(&mut h, f.table.len());
+            for &x in &f.table {
+                eat(&mut h, &x.to_bits().to_le_bytes());
+            }
+        }
+        h
+    }
+
+    /// Run the evidence-free collect pass once and export the
+    /// resulting messages as a shippable warm-start payload, stamped
+    /// with this model's [schedule
+    /// fingerprint](CompiledModel::schedule_fingerprint). A consumer
+    /// whose compile reproduces the fingerprint adopts the messages
+    /// verbatim ([`from_bundle`](CompiledModel::from_bundle)).
+    pub fn calibrate(&self) -> Result<CalibratedPotentials> {
+        let mut s = self.new_scratch();
+        self.collect(&mut s)?;
+        Ok(CalibratedPotentials {
+            fingerprint: self.schedule_fingerprint(),
+            messages: s.up,
+            logz: s.up_logz,
         })
     }
 
@@ -384,15 +519,27 @@ impl CompiledModel {
 
     /// Fresh propagation buffers for this model (one per serving
     /// thread; queries then need only `&self`). Every table is
-    /// allocated here at its final shape — queries only overwrite.
+    /// allocated here at its final shape — queries only overwrite. On
+    /// a warm-started model the collect-message cache is seeded from
+    /// the bundle's shipped potentials — exactly the state a cold
+    /// scratch reaches after one evidence-free query — so the first
+    /// queries recompute no collect messages.
     pub fn new_scratch(&self) -> Scratch {
         let nc = self.cliques.len();
+        let (up, up_logz, dirty) = match &self.warm {
+            Some(w) => (w.up.clone(), w.up_logz.clone(), vec![false; nc]),
+            None => (
+                self.plans.iter().map(|p| vec![0.0; p.sep_size]).collect(),
+                vec![0.0; nc],
+                vec![true; nc],
+            ),
+        };
         Scratch {
             pots: self.base.iter().map(|f| f.table.clone()).collect(),
             clique_ev: vec![Vec::new(); nc],
-            up: self.plans.iter().map(|p| vec![0.0; p.sep_size]).collect(),
-            up_logz: vec![0.0; nc],
-            dirty: vec![true; nc],
+            up,
+            up_logz,
+            dirty,
             down: self.plans.iter().map(|p| vec![0.0; p.sep_size]).collect(),
             bel: self.base.iter().map(|f| vec![0.0; f.table.len()]).collect(),
             bel_ok: vec![false; nc],
@@ -403,6 +550,7 @@ impl CompiledModel {
             cev_tmp: Vec::new(),
             max_up: Vec::new(),
             max_prod: Vec::new(),
+            collect_recomputes: 0,
         }
     }
 
@@ -493,6 +641,7 @@ impl CompiledModel {
             if !s.dirty[c] {
                 continue;
             }
+            s.collect_recomputes += 1;
             let plan = &self.plans[c];
             let kids = &self.children[c];
             let cards = &self.base[c].cards;
@@ -1092,6 +1241,85 @@ mod tests {
         let (x, lp) = m.joint_map(&mut s, &[(1, 1)]).unwrap();
         assert_eq!(x, vec![1, 1]);
         assert!((lp - 0.24f64.ln()).abs() < 1e-12);
+    }
+
+    /// Three-node chain `a -> b -> c`: moralizes to two cliques, so
+    /// the collect pass actually sends a message (tiny_bn compiles to
+    /// a single clique and never would).
+    fn chain_bn() -> crate::bn::DiscreteBn {
+        use crate::bn::Cpt;
+        crate::bn::DiscreteBn {
+            dag: crate::graph::Dag::from_edges(3, &[(0, 1), (1, 2)]),
+            names: vec!["a".into(), "b".into(), "c".into()],
+            cards: vec![2, 2, 2],
+            cpts: vec![
+                Cpt { parents: vec![], table: vec![0.6, 0.4], r: 2 },
+                Cpt { parents: vec![0], table: vec![0.7, 0.3, 0.2, 0.8], r: 2 },
+                Cpt { parents: vec![1], table: vec![0.9, 0.1, 0.4, 0.6], r: 2 },
+            ],
+        }
+    }
+
+    #[test]
+    fn warm_start_adopts_matching_potentials_and_refuses_foreign_ones() {
+        use crate::model::{Bundle, BundleMeta};
+
+        let bn = chain_bn();
+        bn.validate().unwrap();
+        let cold = CompiledModel::compile(&bn).unwrap();
+        let meta = BundleMeta { producer: "t".into(), rounds: 0, score: 0.0, ess: 1.0 };
+        let bundle = Bundle::calibrated_within(bn.clone(), meta, u64::MAX);
+        assert!(bundle.has_potentials());
+
+        let warm = CompiledModel::from_bundle(&bundle).unwrap();
+        assert!(warm.is_warm_started());
+        assert_eq!(warm.schedule_fingerprint(), cold.schedule_fingerprint());
+
+        // First evidence-free query: zero collect recomputation, yet
+        // bit-identical to the cold model.
+        let mut ws = warm.new_scratch();
+        let mut cs = cold.new_scratch();
+        let got = warm.marginals(&mut ws, &[]).unwrap();
+        assert_eq!(ws.collect_recomputes(), 0);
+        let want = cold.marginals(&mut cs, &[]).unwrap();
+        assert!(cs.collect_recomputes() > 0);
+        assert_eq!(got.log_evidence.to_bits(), want.log_evidence.to_bits());
+        for v in 0..3 {
+            for (a, b) in got.marginal(v).iter().zip(want.marginal(v)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+
+        // Evidence queries on the warm scratch recompute only the
+        // invalidated paths and stay bit-identical. Evidence lands in
+        // both cliques, so at least the non-root one resends.
+        let got = warm.marginals(&mut ws, &[(0, 1), (2, 1)]).unwrap();
+        let want = cold.marginals(&mut cs, &[(0, 1), (2, 1)]).unwrap();
+        assert!(ws.collect_recomputes() > 0);
+        assert_eq!(got.log_evidence.to_bits(), want.log_evidence.to_bits());
+
+        // A tampered fingerprint falls back to a cold compile.
+        let mut foreign = bundle.clone();
+        foreign.potentials.as_mut().unwrap().fingerprint ^= 1;
+        let fallback = CompiledModel::from_bundle(&foreign).unwrap();
+        assert!(!fallback.is_warm_started());
+        let mut fs = fallback.new_scratch();
+        let p = fallback.marginals(&mut fs, &[]).unwrap();
+        let want = cold.marginals(&mut cold.new_scratch(), &[]).unwrap();
+        assert_eq!(p.log_evidence.to_bits(), want.log_evidence.to_bits());
+        assert!(fs.collect_recomputes() > 0);
+    }
+
+    #[test]
+    fn fingerprint_tracks_parameters_and_structure() {
+        let bn = tiny_bn();
+        let a = CompiledModel::compile(&bn).unwrap();
+        let mut edited = bn.clone();
+        edited.cpts[0].table = vec![0.6, 0.4];
+        let b = CompiledModel::compile(&edited).unwrap();
+        assert_ne!(a.schedule_fingerprint(), b.schedule_fingerprint());
+        let c = CompiledModel::compile(&bn).unwrap();
+        assert_eq!(a.schedule_fingerprint(), c.schedule_fingerprint());
     }
 
     #[test]

@@ -37,8 +37,9 @@ use anyhow::{bail, Result};
 
 use crate::bn::DiscreteBn;
 use crate::graph::moral_graph;
-use crate::infer::triangulate::triangulate;
+use crate::infer::triangulate::{triangulate, Triangulation};
 use crate::infer::{likelihood_weighting, EngineConfig, Method, Posterior};
+use crate::model::Bundle;
 
 /// A compiled inference engine whose queries take `&self`: safe to
 /// share across serving threads.
@@ -67,6 +68,34 @@ impl SharedEngine {
     /// Build an engine per `cfg` — same selection rules as
     /// [`infer::Engine::build`](crate::infer::Engine::build).
     pub fn build(bn: &DiscreteBn, cfg: &EngineConfig) -> Result<SharedEngine> {
+        Self::select(bn, cfg, |tri| match tri {
+            Some(tri) => CompiledModel::compile_from(bn, tri),
+            None => CompiledModel::compile(bn),
+        })
+    }
+
+    /// Build an engine from a model bundle — the same selection rules
+    /// as [`build`](SharedEngine::build), except the exact path goes
+    /// through [`CompiledModel::from_bundle`] so shipped calibrated
+    /// potentials warm-start every scratch when the schedule
+    /// fingerprint matches (and cold-start, bit-identically,
+    /// otherwise).
+    pub fn from_bundle(bundle: &Bundle, cfg: &EngineConfig) -> Result<SharedEngine> {
+        Self::select(&bundle.bn, cfg, |tri| match tri {
+            Some(tri) => CompiledModel::from_bundle_from(bundle, tri),
+            None => CompiledModel::from_bundle(bundle),
+        })
+    }
+
+    /// The one method-selection rule behind both constructors: `Auto`
+    /// probes the treewidth and hands the triangulation to `exact` on
+    /// success, `JoinTree` forces the exact path (no probe), `Lw`
+    /// retains the network for sampling.
+    fn select(
+        bn: &DiscreteBn,
+        cfg: &EngineConfig,
+        exact: impl FnOnce(Option<Triangulation>) -> Result<CompiledModel>,
+    ) -> Result<SharedEngine> {
         let sampled = |cfg: &EngineConfig| SharedEngine::Sampled {
             bn: Box::new(bn.clone()),
             samples: cfg.samples,
@@ -74,12 +103,12 @@ impl SharedEngine {
             counter: AtomicU64::new(0),
         };
         match cfg.method {
-            Method::JoinTree => Ok(SharedEngine::Exact(CompiledModel::compile(bn)?)),
+            Method::JoinTree => Ok(SharedEngine::Exact(exact(None)?)),
             Method::Lw => Ok(sampled(cfg)),
             Method::Auto => {
                 let tri = triangulate(&moral_graph(&bn.dag), &bn.cards);
                 if tri.max_clique_states <= cfg.budget {
-                    Ok(SharedEngine::Exact(CompiledModel::compile_from(bn, tri)?))
+                    Ok(SharedEngine::Exact(exact(Some(tri))?))
                 } else {
                     Ok(sampled(cfg))
                 }
@@ -95,6 +124,14 @@ impl SharedEngine {
         match self {
             SharedEngine::Exact(_) => "jointree",
             SharedEngine::Sampled { .. } => "lw",
+        }
+    }
+
+    /// Did the exact engine warm-start from shipped potentials?
+    pub fn warm_started(&self) -> bool {
+        match self {
+            SharedEngine::Exact(m) => m.is_warm_started(),
+            SharedEngine::Sampled { .. } => false,
         }
     }
 

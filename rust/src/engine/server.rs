@@ -98,6 +98,27 @@ impl Server {
         })
     }
 
+    /// Serve a model bundle: the exact engine warm-starts from the
+    /// bundle's shipped potentials when its schedule fingerprint
+    /// matches ([`SharedEngine::from_bundle`]), so the first query on
+    /// every handler thread skips the cold collect sweep.
+    pub fn from_bundle(
+        bundle: &crate::model::Bundle,
+        engine_cfg: &EngineConfig,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        Ok(Server {
+            engine: SharedEngine::from_bundle(bundle, engine_cfg)?,
+            cfg,
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// Did the engine warm-start from shipped potentials?
+    pub fn warm_started(&self) -> bool {
+        self.engine.warm_started()
+    }
+
     /// The shared engine (for in-process querying next to serving).
     pub fn engine(&self) -> &SharedEngine {
         &self.engine

@@ -33,6 +33,12 @@ pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
+/// Append a `u64` in little-endian order.
+#[inline]
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
 /// Append an `f64` as its little-endian IEEE-754 bits.
 #[inline]
 pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
@@ -58,6 +64,17 @@ pub fn take_u32(input: &mut &[u8]) -> Result<u32> {
     let (head, rest) = input.split_at(4);
     *input = rest;
     Ok(u32::from_le_bytes(head.try_into().expect("4-byte slice")))
+}
+
+/// Read a little-endian `u64`, advancing the cursor.
+#[inline]
+pub fn take_u64(input: &mut &[u8]) -> Result<u64> {
+    if input.len() < 8 {
+        bail!("truncated frame: expected u64, {} bytes left", input.len());
+    }
+    let (head, rest) = input.split_at(8);
+    *input = rest;
+    Ok(u64::from_le_bytes(head.try_into().expect("8-byte slice")))
 }
 
 /// Read a little-endian `f64`, advancing the cursor.

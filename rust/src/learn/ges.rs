@@ -562,6 +562,13 @@ impl RingWorker {
     pub fn evaluations(&self) -> u64 {
         self.search.evaluations
     }
+
+    /// The scorer (and through it the dataset) this worker learns
+    /// against — what the ring's bundle-emitting path fits CPTs with,
+    /// so a federated worker parameterizes on its own shard.
+    pub fn scorer(&self) -> &BdeuScorer {
+        &self.search.scorer
+    }
 }
 
 /// Run GES from an initial DAG.

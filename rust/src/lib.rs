@@ -26,23 +26,33 @@ pub mod graph;
 pub mod infer;
 pub mod learn;
 pub mod metrics;
+pub mod model;
 pub mod partition;
 pub mod rng;
 pub mod runtime;
 pub mod score;
 pub mod util;
 
-/// Convenience re-exports for examples and downstream users.
+/// Convenience re-exports for examples and downstream users, curated
+/// around the [`crate::model::Bundle`] pipeline: learn
+/// ([`crate::coordinator::cges`]) → bundle → warm serve
+/// ([`crate::engine::CompiledModel::from_bundle`],
+/// [`crate::engine::Server`]). The PR 2 single-threaded shims
+/// (`infer::QueryServer`, `infer::JoinTree`) stay available under
+/// [`crate::infer`] but are no longer part of the prelude — new code
+/// should speak bundles and the compiled engine.
 pub mod prelude {
     pub use crate::bn::{fit, forward_sample, load_domain, DiscreteBn, Domain, NetGenConfig};
+    pub use crate::coordinator::{cges, run_ring, RingConfig, RingMode, RingResult};
     pub use crate::data::Dataset;
-    pub use crate::graph::{Dag, Pdag};
     pub use crate::engine::{CompiledModel, Scratch, ServeConfig, Server, SharedEngine};
+    pub use crate::graph::{Dag, Pdag};
     pub use crate::infer::{
-        likelihood_weighting, ve_marginal, Engine, EngineConfig, JoinTree, Method, Posterior,
-        QueryServer,
+        likelihood_weighting, ve_marginal, Engine, EngineConfig, Method, Posterior,
+    };
+    pub use crate::model::{
+        read_bundle, write_bundle, Bundle, BundleMeta, CalibratedPotentials,
     };
     pub use crate::rng::Rng;
-    pub use crate::coordinator::{cges, run_ring, RingConfig, RingMode, RingResult};
     pub use crate::score::BdeuScorer;
 }

@@ -4,11 +4,17 @@
 //!   gen-net    generate a ground-truth network (paper analogs or random)
 //!   sample     forward-sample a dataset from a .bif network
 //!   partition  show the stage-1 edge partition for a dataset
-//!   learn      run cges / cges-l / ges / fges on a dataset
+//!   learn      run cges / cges-l / ges / fges on a dataset (optionally
+//!              emitting a .bnb model bundle)
 //!   eval       score a learned structure against truth + data
-//!   fit        estimate CPTs for a learned structure (Dirichlet-smoothed ML)
-//!   query      answer marginal queries against a fitted .bif network
-//!   serve      answer JSON queries over stdin or a loopback TCP listener
+//!   fit        fit CPTs for a learned structure into a .bnb bundle
+//!              (calibrated for warm serving) or a legacy .bif
+//!   query      answer marginal queries against a .bnb bundle (or .bif)
+//!   serve      answer JSON queries over stdin or a loopback TCP
+//!              listener, warm-starting from bundle potentials
+//!   inspect    print a bundle's JSON debug form
+//!   import-bif convert a .bif network into a .bnb bundle
+//!   export-bif convert a .bnb bundle back to .bif
 
 use std::net::TcpListener;
 use std::path::{Path, PathBuf};
@@ -25,11 +31,12 @@ use cges::coordinator::{cges as run_cges, PartitionSource, RingConfig, RingMode}
 use cges::data::{read_csv, write_csv, Dataset};
 use cges::engine::protocol::DEFAULT_MAX_BATCH;
 use cges::engine::server::DEFAULT_MAX_FRAME_BYTES;
-use cges::engine::{ServeConfig, Server};
+use cges::engine::{ServeConfig, Server, SharedEngine};
 use cges::graph::Dag;
-use cges::infer::{ve_marginal, Engine, EngineConfig, Method};
+use cges::infer::{ve_marginal, EngineConfig, Method};
 use cges::learn::{fges, ges, FgesConfig, GesConfig};
 use cges::metrics::evaluate;
+use cges::model::{read_bundle, write_bundle, Bundle, BundleMeta};
 use cges::partition::{partition_edges, partition_stats};
 use cges::score::BdeuScorer;
 use cges::util::Timer;
@@ -54,6 +61,9 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "fit" => cmd_fit(rest),
         "query" => cmd_query(rest),
         "serve" => cmd_serve(rest),
+        "inspect" => cmd_inspect(rest),
+        "import-bif" => cmd_import_bif(rest),
+        "export-bif" => cmd_export_bif(rest),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -73,21 +83,29 @@ SUBCOMMANDS
   sample     --net net.bif --out data.csv [--rows 5000] [--seed S]
   partition  --data data.csv --k 4 [--ess 10] [--artifacts DIR]
   learn      --algo cges|cges-l|ges|fges --data data.csv [--out learned.dag]
-             [--k 4] [--ess 10] [--threads N] [--artifacts DIR]
-             [--trace trace.tsv] [--max-rounds 50]
+             [--bundle model.bnb] [--bundle-ess 1] [--k 4] [--ess 10]
+             [--threads N] [--artifacts DIR] [--trace trace.tsv]
+             [--max-rounds 50]
              [--transport channel|tcp|sync]   ring execution mode:
              channel = pipelined in-process actors (default),
              tcp     = pipelined over loopback TCP (wire codec),
              sync    = deterministic barrier scheduler
-  eval       --learned learned.dag|.bif --truth net.bif --data data.csv [--ess 10]
-  fit        --structure learned.dag|.bif --data data.csv --out fitted.bif [--ess 1]
+             --bundle writes the final model as a self-contained .bnb
+             artifact (structure + fitted CPTs + calibrated potentials)
+  eval       --learned learned.dag|.bif|.bnb --truth net.bif --data data.csv [--ess 10]
+  fit        --structure learned.dag|.bif|.bnb --data data.csv --out fitted.bnb
+             [--ess 1] [--budget 4194304]
              Dirichlet-smoothed ML CPTs: P = (N_jk + e/qr) / (N_j + e/q)
-  query      --net fitted.bif --target A[,B...] [--evidence \"X1=0,X2=s1\"]
+             .bnb output is calibrated for warm serving (within --budget);
+             a .bif output path keeps the legacy interchange format
+  query      --model fitted.bnb|.bif --target A[,B...] [--evidence \"X1=0,X2=s1\"]
              [--method auto|jointree|ve|lw] [--samples 20000] [--seed 1]
              [--budget 4194304]   (budget = max clique state space for exact)
-  serve      --net fitted.bif [--listen 127.0.0.1:7878] [--threads N]
+  serve      --model fitted.bnb|.bif [--listen 127.0.0.1:7878] [--threads N]
              [--method auto|jointree|lw] [--samples 20000] [--seed 1] [--budget N]
              [--batch 256] [--max-frame-bytes 1048576]
+             a .bnb bundle with calibrated potentials warm-starts every
+             handler thread (zero cold collect sweeps)
              stdin mode (default): one JSON query per line, one JSON answer per line
              TCP mode (--listen): u32-LE length-prefixed JSON frames, N handler
              threads over one shared compiled model; {\"type\":\"shutdown\"} stops
@@ -95,6 +113,10 @@ SUBCOMMANDS
                            \"targets\":[\"X3\"],\"evidence\":{\"X0\":0}}
              batch shape: {\"id\":2,\"type\":\"batch\",\"queries\":[...]} (answers
              match singletons; shared-evidence prefixes amortize propagation)
+  inspect    --bundle model.bnb          print the bundle's JSON debug form
+  import-bif --bif net.bif --out net.bnb [--budget 4194304]
+             [--no-calibrate]            convert + calibrate for warm serving
+  export-bif --bundle model.bnb --out net.bif
 ";
 
 fn cmd_gen_net(argv: &[String]) -> Result<()> {
@@ -190,6 +212,8 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
             "algo",
             "data",
             "out",
+            "bundle",
+            "bundle-ess",
             "k",
             "ess",
             "threads",
@@ -207,9 +231,11 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
     let threads: usize = a.get_parse("threads", cges::util::num_threads())?;
     let k: usize = a.get_parse("k", 4)?;
     let n = data.n_vars();
+    let bundle_out = a.get("bundle").map(str::to_string);
+    let bundle_ess: f64 = a.get_parse("bundle-ess", 1.0)?;
 
     let t = Timer::start();
-    let (dag, score) = match algo {
+    let (dag, score, mut bundle) = match algo {
         "cges" | "cges-l" => {
             let mode = match a.get("transport") {
                 None => RingMode::default(),
@@ -226,6 +252,8 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
                 fine_tune: true,
                 max_parents: a.get("max-parents").map(|v| v.parse()).transpose()?,
                 mode,
+                emit_bundle: bundle_out.is_some(),
+                bundle_ess,
             };
             let r = run_cges(data.clone(), &cfg)?;
             println!(
@@ -243,17 +271,17 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
                 r.telemetry.write_tsv(Path::new(path))?;
                 println!("trace written to {path}");
             }
-            (r.dag, r.score)
+            (r.dag, r.score, r.bundle)
         }
         "ges" => {
             let sc = BdeuScorer::new(data.clone(), ess);
             let r = ges(&sc, &Dag::new(n), &GesConfig { threads, ..Default::default() });
-            (r.dag, r.score)
+            (r.dag, r.score, None)
         }
         "fges" => {
             let sc = BdeuScorer::new(data.clone(), ess);
             let r = fges(&sc, &Dag::new(n), &FgesConfig { threads, ..Default::default() });
-            (r.dag, r.score)
+            (r.dag, r.score, None)
         }
         other => bail!("unknown algo '{other}' (cges|cges-l|ges|fges)"),
     };
@@ -267,6 +295,36 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
     if let Some(out) = a.get("out") {
         write_structure(&dag, data.names(), Path::new(out))?;
         println!("structure written to {out}");
+    }
+    if let Some(bpath) = bundle_out {
+        // The ring emits one for cges runs; ges/fges build it here. A
+        // fit failure degrades to a warning — the completed learning
+        // run (and any --out structure, already written above) must
+        // never be discarded over the artifact.
+        if bundle.is_none() {
+            let meta = BundleMeta {
+                producer: format!("cges learn --algo {algo}"),
+                rounds: 0,
+                score,
+                ess: bundle_ess,
+            };
+            match Bundle::fit_calibrated(&dag, &data, EngineConfig::default().budget, meta) {
+                Ok(b) => bundle = Some(b),
+                Err(e) => eprintln!(
+                    "warning: cannot build the bundle ({e:#}); no {bpath} written — \
+                     consider --max-parents to bound the largest family"
+                ),
+            }
+        }
+        if let Some(b) = bundle {
+            write_bundle(&b, Path::new(&bpath))?;
+            println!(
+                "bundle written to {bpath}: {} vars, {} parameters, potentials {}",
+                b.n_vars(),
+                b.bn.parameter_count(),
+                if b.has_potentials() { "calibrated" } else { "none (over budget)" }
+            );
+        }
     }
     Ok(())
 }
@@ -321,30 +379,60 @@ fn align_bif_dag(bn: &DiscreteBn, data: &Dataset) -> Result<Dag> {
     Ok(dag)
 }
 
+/// Does a path name a `.bnb` bundle?
+fn is_bnb(path: &Path) -> bool {
+    path.extension().map(|e| e == "bnb").unwrap_or(false)
+}
+
+/// Load a learned structure for fitting/eval: `.bnb` bundle, `.bif`
+/// network or `.dag` edge list, name-aligned to the dataset columns.
+fn read_any_structure(spath: &Path, data: &Dataset) -> Result<Dag> {
+    if is_bnb(spath) {
+        align_bif_dag(&read_bundle(spath)?.bn, data)
+    } else if spath.extension().map(|e| e == "bif").unwrap_or(false) {
+        align_bif_dag(&read_bif(spath)?, data)
+    } else {
+        read_structure(spath, data)
+    }
+}
+
 fn cmd_fit(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &[])?;
-    a.check_known(&["structure", "data", "out", "ess"], &[])?;
+    a.check_known(&["structure", "data", "out", "ess", "budget"], &[])?;
     let data = read_csv(Path::new(a.require("data")?))?;
     let spath = Path::new(a.require("structure")?);
-    let dag = if spath.extension().map(|e| e == "bif").unwrap_or(false) {
-        align_bif_dag(&read_bif(spath)?, &data)?
-    } else {
-        read_structure(spath, &data)?
-    };
+    let dag = read_any_structure(spath, &data)?;
     let ess: f64 = a.get_parse("ess", 1.0)?;
-    let t = Timer::start();
-    let bn = fit(&dag, &data, ess)?;
-    let secs = t.secs();
     let out = PathBuf::from(a.require("out")?);
-    write_bif(&bn, &out)?;
-    println!(
-        "fitted {} variables ({} edges, {} parameters, ess {ess}) from {} rows in {secs:.2}s -> {}",
-        bn.n(),
-        bn.dag.edge_count(),
-        bn.parameter_count(),
-        data.n_rows(),
-        out.display()
-    );
+    let t = Timer::start();
+    if is_bnb(&out) {
+        let meta = BundleMeta { producer: "cges fit".into(), rounds: 0, score: f64::NAN, ess };
+        let budget: u64 = a.get_parse("budget", EngineConfig::default().budget)?;
+        let bundle = Bundle::fit_calibrated(&dag, &data, budget, meta)?;
+        let secs = t.secs();
+        write_bundle(&bundle, &out)?;
+        println!(
+            "fitted {} variables ({} edges, {} parameters, ess {ess}) from {} rows in {secs:.2}s -> {} (potentials {})",
+            bundle.n_vars(),
+            bundle.bn.dag.edge_count(),
+            bundle.bn.parameter_count(),
+            data.n_rows(),
+            out.display(),
+            if bundle.has_potentials() { "calibrated" } else { "none (over budget)" }
+        );
+    } else {
+        let bn = fit(&dag, &data, ess)?;
+        let secs = t.secs();
+        write_bif(&bn, &out)?;
+        println!(
+            "fitted {} variables ({} edges, {} parameters, ess {ess}) from {} rows in {secs:.2}s -> {}",
+            bn.n(),
+            bn.dag.edge_count(),
+            bn.parameter_count(),
+            data.n_rows(),
+            out.display()
+        );
+    }
     Ok(())
 }
 
@@ -371,14 +459,36 @@ fn print_marginal(name: &str, dist: &[f64]) {
     println!("P({name} | e): {}", cells.join("  "));
 }
 
+/// Load the model argument (`--model`, or the legacy `--net` alias) as
+/// a bundle: `.bnb` files decode directly (and may carry a warm-start
+/// payload); `.bif` files import as a potential-less bundle. Returns
+/// the path alongside for status lines.
+fn load_model_bundle(a: &Args) -> Result<(Bundle, &str)> {
+    let path = a
+        .get("model")
+        .or_else(|| a.get("net"))
+        .ok_or_else(|| anyhow!("missing required option --model (a .bnb bundle or .bif)"))?;
+    let p = Path::new(path);
+    let bundle = if is_bnb(p) {
+        read_bundle(p)?
+    } else {
+        Bundle::from_bn(read_bif(p)?, BundleMeta::imported(&format!("bif:{path}")))
+    };
+    Ok((bundle, path))
+}
+
 fn cmd_query(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &[])?;
-    a.check_known(&["net", "target", "evidence", "method", "samples", "seed", "budget"], &[])?;
-    let bn = read_bif(Path::new(a.require("net")?))?;
+    a.check_known(
+        &["model", "net", "target", "evidence", "method", "samples", "seed", "budget"],
+        &[],
+    )?;
+    let (bundle, _) = load_model_bundle(&a)?;
+    let bn = &bundle.bn;
     let method_name = a.get("method").unwrap_or("auto");
     let method = Method::parse(method_name)
         .ok_or_else(|| anyhow!("--method: unknown '{method_name}' (auto|jointree|ve|lw)"))?;
-    let evidence = parse_evidence(a.get("evidence").unwrap_or(""), &bn)?;
+    let evidence = parse_evidence(a.get("evidence").unwrap_or(""), bn)?;
     let targets: Vec<usize> = a
         .require("target")?
         .split(',')
@@ -391,7 +501,7 @@ fn cmd_query(argv: &[String]) -> Result<()> {
     let t = Timer::start();
     if method == Method::Ve {
         for &v in &targets {
-            let dist = ve_marginal(&bn, v, &evidence)?;
+            let dist = ve_marginal(bn, v, &evidence)?;
             print_marginal(&bn.names[v], &dist);
         }
         println!("engine ve | {} target(s) in {:.3}s", targets.len(), t.secs());
@@ -402,14 +512,16 @@ fn cmd_query(argv: &[String]) -> Result<()> {
             samples: a.get_parse("samples", EngineConfig::default().samples)?,
             seed: a.get_parse("seed", 1)?,
         };
-        let mut engine = Engine::build(&bn, &cfg)?;
-        let post = engine.posterior(&evidence)?;
+        let engine = SharedEngine::from_bundle(&bundle, &cfg)?;
+        let mut scratch = engine.new_scratch();
+        let post = engine.posterior(&mut scratch, &evidence)?;
         for &v in &targets {
             print_marginal(&bn.names[v], post.marginal(v));
         }
         println!(
-            "engine {} | log P(evidence) = {:.6} | {:.3}s",
+            "engine {}{} | log P(evidence) = {:.6} | {:.3}s",
             engine.name(),
+            if engine.warm_started() { " (warm-started)" } else { "" },
             post.log_evidence,
             t.secs()
         );
@@ -421,6 +533,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &[])?;
     a.check_known(
         &[
+            "model",
             "net",
             "listen",
             "method",
@@ -433,8 +546,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         ],
         &[],
     )?;
-    let net = a.require("net")?;
-    let bn = read_bif(Path::new(net))?;
+    let (bundle, net) = load_model_bundle(&a)?;
     let method_name = a.get("method").unwrap_or("auto");
     let method = Method::parse(method_name)
         .ok_or_else(|| anyhow!("--method: unknown '{method_name}' (auto|jointree|lw)"))?;
@@ -453,14 +565,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     ensure!(serve_cfg.threads >= 1, "--threads must be at least 1");
     ensure!(serve_cfg.max_frame_bytes >= 64, "--max-frame-bytes must be at least 64");
     ensure!(serve_cfg.max_batch >= 1, "--batch must be at least 1");
-    let server = Server::new(&bn, &cfg, serve_cfg.clone())?;
+    let server = Server::from_bundle(&bundle, &cfg, serve_cfg.clone())?;
+    let warm = if server.warm_started() { " warm-started from bundle potentials" } else { "" };
     match a.get("listen") {
         Some(addr) => {
             let listener =
                 TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
             eprintln!(
-                "serving {net} on {} (engine {}; {} handler thread(s); frames: u32 LE length + \
-                 JSON, cap {} bytes; batch cap {}; send {{\"type\":\"shutdown\"}} to stop)",
+                "serving {net} on {} (engine {}{warm}; {} handler thread(s); frames: u32 LE \
+                 length + JSON, cap {} bytes; batch cap {}; send {{\"type\":\"shutdown\"}} to stop)",
                 listener.local_addr().context("listener addr")?,
                 server.engine_name(),
                 serve_cfg.threads,
@@ -471,7 +584,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         }
         None => {
             eprintln!(
-                "serving {net} on stdin/stdout (engine {}; one JSON query per line)",
+                "serving {net} on stdin/stdout (engine {}{warm}; one JSON query per line)",
                 server.engine_name()
             );
             let stdin = std::io::stdin();
@@ -482,18 +595,61 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
 }
 
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(&["bundle"], &[])?;
+    let bundle = read_bundle(Path::new(a.require("bundle")?))?;
+    println!("{}", bundle.to_debug_json());
+    Ok(())
+}
+
+fn cmd_import_bif(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &["no-calibrate"])?;
+    a.check_known(&["bif", "out", "budget"], &["no-calibrate"])?;
+    let bif = a.require("bif")?;
+    let bn = read_bif(Path::new(bif))?;
+    let meta = BundleMeta::imported(&format!("import-bif {bif}"));
+    let bundle = if a.flag("no-calibrate") {
+        Bundle::from_bn(bn, meta)
+    } else {
+        let budget: u64 = a.get_parse("budget", EngineConfig::default().budget)?;
+        Bundle::calibrated_within(bn, meta, budget)
+    };
+    let out = PathBuf::from(a.require("out")?);
+    write_bundle(&bundle, &out)?;
+    println!(
+        "imported {bif} -> {}: {} vars, {} parameters, potentials {}",
+        out.display(),
+        bundle.n_vars(),
+        bundle.bn.parameter_count(),
+        if bundle.has_potentials() { "calibrated" } else { "none" }
+    );
+    Ok(())
+}
+
+fn cmd_export_bif(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(&["bundle", "out"], &[])?;
+    let bpath = a.require("bundle")?;
+    let bundle = read_bundle(Path::new(bpath))?;
+    let out = PathBuf::from(a.require("out")?);
+    write_bif(&bundle.bn, &out)?;
+    println!(
+        "exported {bpath} -> {}: {} vars, {} edges (potentials dropped; BIF carries none)",
+        out.display(),
+        bundle.n_vars(),
+        bundle.bn.dag.edge_count()
+    );
+    Ok(())
+}
+
 fn cmd_eval(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &[])?;
     a.check_known(&["learned", "truth", "data", "ess"], &[])?;
     let data = Arc::new(read_csv(Path::new(a.require("data")?))?);
     let ess: f64 = a.get_parse("ess", 10.0)?;
     let truth = read_bif(Path::new(a.require("truth")?))?;
-    let learned_path = Path::new(a.require("learned")?);
-    let learned = if learned_path.extension().map(|e| e == "bif").unwrap_or(false) {
-        align_bif_dag(&read_bif(learned_path)?, &data)?
-    } else {
-        read_structure(learned_path, &data)?
-    };
+    let learned = read_any_structure(Path::new(a.require("learned")?), &data)?;
     let sc = BdeuScorer::new(data.clone(), ess);
     let r = evaluate(&learned, &truth.dag, &sc);
     println!(

@@ -1,0 +1,366 @@
+//! Binary wire/file codec for model bundles (`.bnb`).
+//!
+//! Extends the [`graph::codec`](crate::graph::codec) idiom — little
+//! endian, fixed width, length prefixed, fully validating — to the
+//! whole model artifact. The format is deliberately dumb so a
+//! non-Rust consumer can reimplement it in an afternoon:
+//!
+//! ```text
+//! 4 ×  u8              magic "cBNB"
+//! u8   version         (currently 1; unknown versions are refused)
+//! u32  producer_len    + that many UTF-8 bytes   (provenance header)
+//! u32  rounds
+//! f64  score
+//! f64  ess
+//! u32  n               variable count
+//! n ×  (u32 len + bytes, u32 card)               domain
+//! dag  sub-frame       (graph::codec, self-validating)
+//! n ×  (u32 table_len, table_len × f64)          CPTs, dag-parent order
+//! u8   has_potentials  (0 or 1)
+//! u64  fingerprint     ┐
+//! u32  n_cliques       │ present only when
+//! c ×  (u32 msg_len,   │ has_potentials = 1
+//!       msg_len × f64, │
+//!       f64 logz)      ┘
+//! ```
+//!
+//! CPT parent sets are *not* encoded: they are exactly the DAG parents
+//! in ascending order (the invariant [`DiscreteBn::validate`] pins),
+//! so the decoder reconstructs them from the structure sub-frame and a
+//! mismatched `table_len` is a hard error. Every declared length is
+//! checked against the remaining payload before any buffer is
+//! allocated for it, the total frame is capped through the same
+//! [`util::ensure_frame_len`](crate::util::ensure_frame_len) guard
+//! (and wording) as the ring transport and the query server, and
+//! `f64` cells round-trip bit-exactly — which is what lets a consumer
+//! warm-start from shipped potentials and still answer bit-identically
+//! to a cold compile.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bn::{Cpt, DiscreteBn};
+use crate::graph::codec::{
+    decode_dag, encode_dag, put_f64, put_u32, put_u64, take_f64, take_u32, take_u64, take_u8,
+};
+use crate::model::{Bundle, BundleMeta, CalibratedPotentials};
+use crate::util::ensure_frame_len;
+
+/// Magic bytes opening every bundle frame.
+pub const BUNDLE_MAGIC: [u8; 4] = *b"cBNB";
+
+/// Current bundle-format version byte. Decoding refuses any other
+/// value (forward-refusing: a newer producer's frame errors cleanly
+/// instead of being half-read).
+pub const BUNDLE_CODEC_VERSION: u8 = 1;
+
+/// Hard cap on one encoded bundle (file or wire sub-frame). Generous —
+/// a million-parameter network with calibrated potentials is still an
+/// order of magnitude below it — but bounds what a corrupt length
+/// field can make the decoder allocate.
+pub const MAX_BUNDLE_BYTES: u32 = 256 << 20;
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn take_str(input: &mut &[u8]) -> Result<String> {
+    let len = take_u32(input)? as usize;
+    if len > input.len() {
+        bail!("truncated frame: string of {len} bytes, {} left", input.len());
+    }
+    let (head, rest) = input.split_at(len);
+    let s = std::str::from_utf8(head).context("string field is not UTF-8")?;
+    *input = rest;
+    Ok(s.to_string())
+}
+
+/// Guard a declared `f64` count against the remaining payload before
+/// allocating for it (the codec never trusts a length field).
+fn ensure_f64s(input: &[u8], count: usize, what: &str) -> Result<()> {
+    if count > input.len() / 8 {
+        bail!("{what} declares {count} cells but only {} bytes remain", input.len());
+    }
+    Ok(())
+}
+
+fn take_f64s(input: &mut &[u8], count: usize, what: &str) -> Result<Vec<f64>> {
+    ensure_f64s(*input, count, what)?;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(take_f64(input)?);
+    }
+    Ok(out)
+}
+
+/// Append the wire encoding of a bundle to `buf`.
+pub fn encode_bundle(bundle: &Bundle, buf: &mut Vec<u8>) {
+    buf.extend_from_slice(&BUNDLE_MAGIC);
+    buf.push(BUNDLE_CODEC_VERSION);
+    put_str(buf, &bundle.meta.producer);
+    put_u32(buf, bundle.meta.rounds);
+    put_f64(buf, bundle.meta.score);
+    put_f64(buf, bundle.meta.ess);
+
+    let bn = &bundle.bn;
+    put_u32(buf, bn.n() as u32);
+    for v in 0..bn.n() {
+        put_str(buf, &bn.names[v]);
+        put_u32(buf, bn.cards[v]);
+    }
+    encode_dag(&bn.dag, buf);
+    for cpt in &bn.cpts {
+        put_u32(buf, cpt.table.len() as u32);
+        for &x in &cpt.table {
+            put_f64(buf, x);
+        }
+    }
+
+    match &bundle.potentials {
+        None => buf.push(0),
+        Some(p) => {
+            buf.push(1);
+            put_u64(buf, p.fingerprint);
+            put_u32(buf, p.messages.len() as u32);
+            for (msg, &lz) in p.messages.iter().zip(&p.logz) {
+                put_u32(buf, msg.len() as u32);
+                for &x in msg {
+                    put_f64(buf, x);
+                }
+                put_f64(buf, lz);
+            }
+        }
+    }
+}
+
+/// Wire encoding of a bundle as an owned buffer.
+pub fn bundle_to_bytes(bundle: &Bundle) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_bundle(bundle, &mut buf);
+    buf
+}
+
+/// Decode a bundle from the front of `input`, advancing the cursor
+/// past it (bundles can ride inside larger frames, e.g. ring model
+/// messages). Fully validating: magic, version, every length field,
+/// CPT shapes against the decoded structure, and the network
+/// invariants via [`DiscreteBn::validate`].
+pub fn decode_bundle(input: &mut &[u8]) -> Result<Bundle> {
+    if input.len() < 4 || input[..4] != BUNDLE_MAGIC {
+        bail!("not a bundle frame (bad magic; expected \"cBNB\")");
+    }
+    *input = &input[4..];
+    let version = take_u8(input)?;
+    if version != BUNDLE_CODEC_VERSION {
+        bail!("unsupported bundle codec version {version} (expected {BUNDLE_CODEC_VERSION})");
+    }
+    let producer = take_str(input)?;
+    let rounds = take_u32(input)?;
+    let score = take_f64(input)?;
+    let ess = take_f64(input)?;
+
+    let n = take_u32(input)? as usize;
+    let mut names = Vec::with_capacity(n.min(input.len()));
+    let mut cards = Vec::with_capacity(n.min(input.len()));
+    for i in 0..n {
+        let name = take_str(input)?;
+        if name.is_empty() {
+            bail!("variable {i} has an empty name");
+        }
+        names.push(name);
+        let card = take_u32(input)?;
+        if card == 0 {
+            bail!("variable {i} has cardinality 0");
+        }
+        cards.push(card);
+    }
+    let dag = decode_dag(input)?;
+    if dag.n() != n {
+        bail!("structure has {} nodes but the domain declares {n}", dag.n());
+    }
+
+    let mut cpts = Vec::with_capacity(n);
+    for v in 0..n {
+        let mut parents: Vec<usize> = dag.parents(v).iter().collect();
+        parents.sort_unstable();
+        // Saturating width math: adversarial cardinalities must fail
+        // the shape check, not overflow it into a false match.
+        let cells = parents
+            .iter()
+            .map(|&p| cards[p] as u64)
+            .fold(cards[v] as u64, u64::saturating_mul);
+        let table_len = take_u32(input)? as usize;
+        if table_len as u64 != cells {
+            bail!("variable {v}: CPT declares {table_len} cells but the structure implies {cells}");
+        }
+        let table = take_f64s(input, table_len, "CPT")?;
+        cpts.push(Cpt { parents, table, r: cards[v] as usize });
+    }
+    let bn = DiscreteBn { dag, names, cards, cpts };
+    bn.validate().map_err(|e| anyhow::anyhow!("decoded network failed validation: {e}"))?;
+
+    let potentials = match take_u8(input)? {
+        0 => None,
+        1 => {
+            let fingerprint = take_u64(input)?;
+            let nc = take_u32(input)? as usize;
+            let mut messages = Vec::with_capacity(nc.min(input.len()));
+            let mut logz = Vec::with_capacity(nc.min(input.len()));
+            for c in 0..nc {
+                let len = take_u32(input)? as usize;
+                let msg = take_f64s(input, len, "calibrated message")?;
+                if msg.iter().any(|x| !x.is_finite() || *x < 0.0) {
+                    bail!("calibrated message {c} has a non-finite or negative cell");
+                }
+                messages.push(msg);
+                let lz = take_f64(input)?;
+                if !lz.is_finite() {
+                    bail!("calibrated message {c} has a non-finite normalizer");
+                }
+                logz.push(lz);
+            }
+            Some(CalibratedPotentials { fingerprint, messages, logz })
+        }
+        other => bail!("bad potentials flag {other} (expected 0 or 1)"),
+    };
+
+    Ok(Bundle { meta: BundleMeta { producer, rounds, score, ess }, bn, potentials })
+}
+
+/// Decode a bundle from an exact buffer (trailing bytes are an error).
+pub fn bundle_from_bytes(bytes: &[u8]) -> Result<Bundle> {
+    let mut cursor = bytes;
+    let bundle = decode_bundle(&mut cursor)?;
+    if !cursor.is_empty() {
+        bail!("{} trailing bytes after bundle frame", cursor.len());
+    }
+    Ok(bundle)
+}
+
+/// Write a bundle to a `.bnb` file.
+pub fn write_bundle(bundle: &Bundle, path: &Path) -> Result<()> {
+    let bytes = bundle_to_bytes(bundle);
+    let len = u32::try_from(bytes.len()).context("bundle too large for u32 length")?;
+    ensure_frame_len("outgoing", len, MAX_BUNDLE_BYTES)?;
+    std::fs::write(path, bytes).with_context(|| format!("write bundle {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a bundle from a `.bnb` file. The size cap is enforced on the
+/// file's metadata *before* anything is read, so a mistyped path to a
+/// multi-gigabyte file is rejected without buffering it.
+pub fn read_bundle(path: &Path) -> Result<Bundle> {
+    let meta =
+        std::fs::metadata(path).with_context(|| format!("stat bundle {}", path.display()))?;
+    let len = u32::try_from(meta.len())
+        .map_err(|_| anyhow::anyhow!("bundle file exceeds the u32 frame space"))?;
+    ensure_frame_len("incoming", len, MAX_BUNDLE_BYTES)?;
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read bundle {}", path.display()))?;
+    bundle_from_bytes(&bytes)
+        .with_context(|| format!("decode bundle {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+
+    fn tiny_bundle(potentials: bool) -> Bundle {
+        let bn = tiny_bn();
+        let meta = BundleMeta {
+            producer: "unit-test".into(),
+            rounds: 3,
+            score: -12.5,
+            ess: 1.0,
+        };
+        if potentials {
+            Bundle::calibrated_within(bn, meta, u64::MAX)
+        } else {
+            Bundle::from_bn(bn, meta)
+        }
+    }
+
+    #[test]
+    fn roundtrip_with_and_without_potentials() {
+        for pots in [false, true] {
+            let b = tiny_bundle(pots);
+            let bytes = bundle_to_bytes(&b);
+            let back = bundle_from_bytes(&bytes).unwrap();
+            assert_eq!(back.meta.producer, "unit-test");
+            assert_eq!(back.meta.rounds, 3);
+            assert_eq!(back.meta.score.to_bits(), (-12.5f64).to_bits());
+            assert_eq!(back.bn.names, b.bn.names);
+            assert_eq!(back.bn.cards, b.bn.cards);
+            assert_eq!(back.bn.dag.edges(), b.bn.dag.edges());
+            for (a, c) in back.bn.cpts.iter().zip(&b.bn.cpts) {
+                assert_eq!(a.parents, c.parents);
+                for (x, y) in a.table.iter().zip(&c.table) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            assert_eq!(back.potentials.is_some(), pots);
+            if let (Some(bp), Some(cp)) = (&back.potentials, &b.potentials) {
+                assert_eq!(bp.fingerprint, cp.fingerprint);
+                assert_eq!(bp.messages.len(), cp.messages.len());
+                for (m1, m2) in bp.messages.iter().zip(&cp.messages) {
+                    for (x, y) in m1.iter().zip(m2) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+                for (x, y) in bp.logz.iter().zip(&cp.logz) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frames_concatenate_inside_a_larger_buffer() {
+        let a = tiny_bundle(true);
+        let b = tiny_bundle(false);
+        let mut buf = Vec::new();
+        encode_bundle(&a, &mut buf);
+        encode_bundle(&b, &mut buf);
+        let mut cursor = buf.as_slice();
+        let a2 = decode_bundle(&mut cursor).unwrap();
+        let b2 = decode_bundle(&mut cursor).unwrap();
+        assert!(cursor.is_empty());
+        assert!(a2.potentials.is_some());
+        assert!(b2.potentials.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_and_trailing() {
+        let bytes = bundle_to_bytes(&tiny_bundle(true));
+
+        let mut magic = bytes.clone();
+        magic[0] = b'X';
+        assert!(bundle_from_bytes(&magic).unwrap_err().to_string().contains("magic"));
+
+        let mut ver = bytes.clone();
+        ver[4] = 99;
+        assert!(bundle_from_bytes(&ver).unwrap_err().to_string().contains("version 99"));
+
+        for cut in [0, 4, 5, bytes.len() / 3, bytes.len() - 1] {
+            assert!(bundle_from_bytes(&bytes[..cut]).is_err(), "cut at {cut} decoded");
+        }
+
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(bundle_from_bytes(&trailing).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_length_fields_without_huge_allocs() {
+        // Blow up the producer length field: the declared size exceeds
+        // the remaining payload, so the decoder must refuse before
+        // allocating.
+        let bytes = bundle_to_bytes(&tiny_bundle(false));
+        let mut bad = bytes.clone();
+        bad[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(bundle_from_bytes(&bad).is_err());
+    }
+}

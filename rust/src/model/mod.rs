@@ -1,0 +1,241 @@
+//! The model bundle — one versioned artifact from ring-learn to
+//! warm-started serving.
+//!
+//! The ring circulates *models* between processors, yet until this
+//! subsystem the crate's public API moved loose pieces: `cges`
+//! returned a bare [`Dag`](crate::graph::Dag), `fit` re-read data to
+//! attach CPTs, and every [`CompiledModel`] cold-started a two-pass
+//! calibration. A [`Bundle`] is the self-contained artifact that
+//! closes the loop — the one currency every subsystem speaks:
+//!
+//! * **domain + structure + parameters** — a full
+//!   [`DiscreteBn`] (names, cardinalities, DAG, fitted CPTs);
+//! * **calibrated potentials** (optional) — the evidence-free
+//!   collect-pass messages of the compiled jointree plus the
+//!   [schedule fingerprint](crate::engine::CompiledModel::schedule_fingerprint)
+//!   they calibrate, so a consumer whose compile reproduces the same
+//!   schedule warm-starts with **zero** collect-message recomputation
+//!   ([`CompiledModel::from_bundle`]) and still answers bit-identically
+//!   to a cold compile (messages ship as exact IEEE-754 bits and are
+//!   the same bits a local collect would produce);
+//! * **provenance header** ([`BundleMeta`]) — producer string, ring
+//!   rounds, BDeu score and the fit `ess`, so an artifact found on
+//!   disk or received over the wire explains itself.
+//!
+//! Lifecycle: **learn** (ring) → **fuse** → **fit** → **calibrate** →
+//! **serve**. The ring ships bundles between workers when the
+//! capability flag is on ([`ModelMsg`](crate::coordinator::ModelMsg)
+//! grows an optional bundle payload), [`cges`](crate::coordinator::cges)
+//! emits one for the final model, the CLI persists them as `.bnb`
+//! files ([`codec`]: magic + version byte, length-prefixed, refusing
+//! unknown versions), and [`Server::from_bundle`](crate::engine::Server::from_bundle)
+//! serves them warm. BIF remains supported as an import/export
+//! conversion format.
+
+pub mod codec;
+
+pub use codec::{
+    bundle_from_bytes, bundle_to_bytes, decode_bundle, encode_bundle, read_bundle, write_bundle,
+    BUNDLE_CODEC_VERSION, BUNDLE_MAGIC, MAX_BUNDLE_BYTES,
+};
+
+use anyhow::Result;
+
+use crate::bn::DiscreteBn;
+use crate::data::Dataset;
+use crate::engine::CompiledModel;
+use crate::graph::{moral_graph, Dag};
+use crate::infer::json::Json;
+use crate::infer::triangulate::triangulate;
+
+/// Provenance and telemetry header of a bundle.
+#[derive(Clone, Debug)]
+pub struct BundleMeta {
+    /// Free-form producer tag (e.g. `"cges k=4"` or `"import-bif"`).
+    pub producer: String,
+    /// Ring rounds behind the structure (0 when not ring-learned).
+    pub rounds: u32,
+    /// BDeu score of the structure (NaN when unknown).
+    pub score: f64,
+    /// Equivalent sample size the CPTs were fitted with.
+    pub ess: f64,
+}
+
+impl BundleMeta {
+    /// Header for an artifact converted from another format.
+    pub fn imported(producer: &str) -> BundleMeta {
+        BundleMeta { producer: producer.to_string(), rounds: 0, score: f64::NAN, ess: f64::NAN }
+    }
+}
+
+/// Evidence-free calibration of a compiled jointree: one normalized
+/// collect message (and its log-normalizer) per clique of the frozen
+/// schedule, in clique order. Root cliques, which send no message,
+/// carry their untouched length-1 buffer so the vectors stay aligned
+/// with the schedule.
+#[derive(Clone, Debug)]
+pub struct CalibratedPotentials {
+    /// Fingerprint of the compiled schedule (and parameters) these
+    /// messages calibrate — see
+    /// [`CompiledModel::schedule_fingerprint`].
+    pub fingerprint: u64,
+    /// Collect messages clique → schedule parent.
+    pub messages: Vec<Vec<f64>>,
+    /// Log-normalizer of each message.
+    pub logz: Vec<f64>,
+}
+
+/// A self-contained, versioned model artifact: domain, structure,
+/// fitted CPTs, optional calibrated jointree potentials and a
+/// provenance header. See the [module docs](self) for the lifecycle.
+#[derive(Clone)]
+pub struct Bundle {
+    /// Provenance / telemetry header.
+    pub meta: BundleMeta,
+    /// The fitted network.
+    pub bn: DiscreteBn,
+    /// Warm-start payload, when the producer calibrated one.
+    pub potentials: Option<CalibratedPotentials>,
+}
+
+/// Summary form (tables elided — the binary codec owns the full
+/// contents), so message types carrying a bundle keep their `Debug`.
+impl std::fmt::Debug for Bundle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Bundle")
+            .field("producer", &self.meta.producer)
+            .field("rounds", &self.meta.rounds)
+            .field("n_vars", &self.bn.n())
+            .field("edges", &self.bn.dag.edge_count())
+            .field("potentials", &self.potentials.is_some())
+            .finish()
+    }
+}
+
+impl Bundle {
+    /// Wrap a fitted network without potentials (cold-start artifact).
+    pub fn from_bn(bn: DiscreteBn, meta: BundleMeta) -> Bundle {
+        Bundle { meta, bn, potentials: None }
+    }
+
+    /// Wrap a fitted network and attach calibrated potentials when the
+    /// jointree fits the clique-state-space `budget` (the same budget
+    /// notion as [`EngineConfig::budget`](crate::infer::EngineConfig)).
+    /// Never fails: past the budget — or on any compile/calibrate
+    /// error — the bundle simply ships without potentials and
+    /// consumers cold-start.
+    pub fn calibrated_within(bn: DiscreteBn, meta: BundleMeta, budget: u64) -> Bundle {
+        let tri = triangulate(&moral_graph(&bn.dag), &bn.cards);
+        let potentials = if tri.max_clique_states <= budget {
+            CompiledModel::compile_from(&bn, tri).ok().and_then(|m| m.calibrate().ok())
+        } else {
+            None
+        };
+        Bundle { meta, bn, potentials }
+    }
+
+    /// Fit CPTs for `dag` from `data` (with `meta.ess`) and calibrate
+    /// within `budget` — the one-call path from a learned structure to
+    /// a servable artifact.
+    pub fn fit_calibrated(
+        dag: &Dag,
+        data: &Dataset,
+        budget: u64,
+        meta: BundleMeta,
+    ) -> Result<Bundle> {
+        let bn = crate::bn::fit(dag, data, meta.ess)?;
+        Ok(Bundle::calibrated_within(bn, meta, budget))
+    }
+
+    /// Number of variables.
+    pub fn n_vars(&self) -> usize {
+        self.bn.n()
+    }
+
+    /// Variable names, in network order.
+    pub fn names(&self) -> &[String] {
+        &self.bn.names
+    }
+
+    /// Does this bundle carry a warm-start payload?
+    pub fn has_potentials(&self) -> bool {
+        self.potentials.is_some()
+    }
+
+    /// JSON debug form: the header, the domain shape and the
+    /// potentials summary — everything but the raw tables, which the
+    /// binary codec owns. For humans and log lines, not for
+    /// round-tripping.
+    pub fn to_debug_json(&self) -> Json {
+        let meta = Json::Obj(vec![
+            ("producer".into(), Json::Str(self.meta.producer.clone())),
+            ("rounds".into(), Json::Num(self.meta.rounds as f64)),
+            ("score".into(), Json::Num(self.meta.score)),
+            ("ess".into(), Json::Num(self.meta.ess)),
+        ]);
+        let vars: Vec<Json> = (0..self.bn.n())
+            .map(|v| {
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(self.bn.names[v].clone())),
+                    ("card".into(), Json::Num(self.bn.cards[v] as f64)),
+                    ("parents".into(), Json::Num(self.bn.cpts[v].parents.len() as f64)),
+                ])
+            })
+            .collect();
+        let potentials = match &self.potentials {
+            None => Json::Null,
+            Some(p) => Json::Obj(vec![
+                ("fingerprint".into(), Json::Str(format!("{:016x}", p.fingerprint))),
+                ("cliques".into(), Json::Num(p.messages.len() as f64)),
+                (
+                    "message_cells".into(),
+                    Json::Num(p.messages.iter().map(|m| m.len()).sum::<usize>() as f64),
+                ),
+            ]),
+        };
+        Json::Obj(vec![
+            ("format".into(), Json::Str("bnb".into())),
+            ("version".into(), Json::Num(BUNDLE_CODEC_VERSION as f64)),
+            ("meta".into(), meta),
+            ("n_vars".into(), Json::Num(self.bn.n() as f64)),
+            ("edges".into(), Json::Num(self.bn.dag.edge_count() as f64)),
+            ("parameters".into(), Json::Num(self.bn.parameter_count() as f64)),
+            ("variables".into(), Json::Arr(vars)),
+            ("potentials".into(), potentials),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+
+    #[test]
+    fn calibrated_within_attaches_or_degrades_by_budget() {
+        let meta = BundleMeta { producer: "t".into(), rounds: 0, score: 0.0, ess: 1.0 };
+        let warm = Bundle::calibrated_within(tiny_bn(), meta.clone(), u64::MAX);
+        assert!(warm.has_potentials());
+        let p = warm.potentials.as_ref().unwrap();
+        assert_eq!(p.messages.len(), p.logz.len());
+
+        // Budget 0 excludes every clique: the bundle degrades to a
+        // cold-start artifact instead of failing.
+        let cold = Bundle::calibrated_within(tiny_bn(), meta, 0);
+        assert!(!cold.has_potentials());
+    }
+
+    #[test]
+    fn debug_json_is_parseable_and_summarizes() {
+        let meta = BundleMeta { producer: "dbg".into(), rounds: 2, score: -5.0, ess: 1.0 };
+        let b = Bundle::calibrated_within(tiny_bn(), meta, u64::MAX);
+        let text = b.to_debug_json().to_string();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("n_vars").and_then(Json::as_usize), Some(2));
+        assert_eq!(
+            v.get("meta").and_then(|m| m.get("producer")).and_then(Json::as_str),
+            Some("dbg")
+        );
+        assert!(v.get("potentials").and_then(|p| p.get("cliques")).is_some());
+    }
+}

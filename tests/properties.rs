@@ -14,6 +14,7 @@ use cges::infer::factor::Factor;
 use cges::infer::kernel::{self, reference};
 use cges::learn::{ges, GesConfig};
 use cges::metrics::smhd;
+use cges::model::{bundle_from_bytes, bundle_to_bytes, Bundle, BundleMeta};
 use cges::partition::{assign_edges, cluster_variables, partition_stats};
 use cges::rng::Rng;
 use cges::score::{pairwise_similarity, BdeuScorer};
@@ -319,6 +320,122 @@ fn prop_evidence_mask_matches_indicator_product() {
         let mut got = f.clone();
         kernel::mask_assign(&mut got.table, &got.cards, pos, state);
         assert_tables_bit_equal(seed, "mask_assign", &got, &want);
+    }
+}
+
+/// Random bundle over a netgen network: random domain and CPTs, real
+/// calibrated potentials on even seeds (the warm-start payload must
+/// survive the codec bit-exactly), potential-less on odd ones.
+fn random_bundle(seed: u64) -> Bundle {
+    let mut rng = Rng::new(seed ^ 0xB0B5);
+    let cfg = random_cfg(&mut rng);
+    let bn = generate(&cfg, seed);
+    let meta = BundleMeta {
+        producer: format!("prop-{seed}"),
+        rounds: seed as u32,
+        score: -1.5 * seed as f64,
+        ess: 1.0 + seed as f64 / 7.0,
+    };
+    if seed % 2 == 0 {
+        Bundle::calibrated_within(bn, meta, u64::MAX)
+    } else {
+        Bundle::from_bn(bn, meta)
+    }
+}
+
+#[test]
+fn prop_bundle_codec_roundtrips_bit_exactly() {
+    // encode -> decode must be the identity on every field that feeds
+    // inference: names, cards, edges, CPT cells (bit-for-bit) and the
+    // calibrated potentials (bit-for-bit — warm starts only stay
+    // bit-identical to cold compiles because of this).
+    for seed in 0..TRIALS / 2 {
+        let bundle = random_bundle(seed);
+        let bytes = bundle_to_bytes(&bundle);
+        let back = bundle_from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("seed {seed}: decode failed: {e}"));
+
+        assert_eq!(back.meta.producer, bundle.meta.producer, "seed {seed}");
+        assert_eq!(back.meta.rounds, bundle.meta.rounds, "seed {seed}");
+        assert_eq!(back.meta.score.to_bits(), bundle.meta.score.to_bits(), "seed {seed}");
+        assert_eq!(back.meta.ess.to_bits(), bundle.meta.ess.to_bits(), "seed {seed}");
+        assert_eq!(back.bn.names, bundle.bn.names, "seed {seed}: names changed");
+        assert_eq!(back.bn.cards, bundle.bn.cards, "seed {seed}: cards changed");
+        assert_eq!(back.bn.dag.edges(), bundle.bn.dag.edges(), "seed {seed}: edges changed");
+        for v in 0..bundle.bn.n() {
+            assert_eq!(back.bn.cpts[v].parents, bundle.bn.cpts[v].parents, "seed {seed} var {v}");
+            for (i, (a, b)) in
+                back.bn.cpts[v].table.iter().zip(&bundle.bn.cpts[v].table).enumerate()
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} var {v} cell {i}");
+            }
+        }
+        assert_eq!(back.has_potentials(), bundle.has_potentials(), "seed {seed}");
+        if let (Some(bp), Some(op)) = (&back.potentials, &bundle.potentials) {
+            assert_eq!(bp.fingerprint, op.fingerprint, "seed {seed}: fingerprint changed");
+            assert_eq!(bp.messages.len(), op.messages.len(), "seed {seed}");
+            for (c, (m1, m2)) in bp.messages.iter().zip(&op.messages).enumerate() {
+                assert_eq!(m1.len(), m2.len(), "seed {seed} clique {c}");
+                for (a, b) in m1.iter().zip(m2) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} clique {c}");
+                }
+            }
+            for (a, b) in bp.logz.iter().zip(&op.logz) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}: logz changed");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bundle_codec_rejects_truncation_and_foreign_versions() {
+    // Any strict prefix must error (a torn read can never yield a
+    // wrong model), and magic/version corruption must be refused with
+    // a clear message — all without panicking.
+    for seed in 0..TRIALS / 2 {
+        let bytes = bundle_to_bytes(&random_bundle(seed));
+        for cut in [0usize, 1, 4, 5, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                bundle_from_bytes(&bytes[..cut]).is_err(),
+                "seed {seed}: truncation to {cut}/{} bytes decoded",
+                bytes.len()
+            );
+        }
+
+        let mut magic = bytes.clone();
+        magic[0] ^= 0x20;
+        let e = bundle_from_bytes(&magic).unwrap_err();
+        assert!(format!("{e}").contains("magic"), "seed {seed}: {e}");
+
+        let mut ver = bytes.clone();
+        ver[4] = ver[4].wrapping_add(7);
+        let e = bundle_from_bytes(&ver).unwrap_err();
+        assert!(format!("{e}").contains("version"), "seed {seed}: {e}");
+
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(bundle_from_bytes(&trailing).is_err(), "seed {seed}: trailing byte accepted");
+    }
+}
+
+#[test]
+fn prop_bundle_decoder_survives_random_corruption() {
+    // Flip random bytes anywhere in the frame: the decoder must return
+    // (Ok or Err), never panic, and anything it does accept must still
+    // be a valid network (decode re-validates).
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xDEAD);
+        let bytes = bundle_to_bytes(&random_bundle(seed % 6));
+        let mut bad = bytes.clone();
+        for _ in 0..3 {
+            let pos = rng.gen_range(bad.len());
+            bad[pos] ^= 1u8 << rng.gen_range(8);
+        }
+        if let Ok(b) = bundle_from_bytes(&bad) {
+            b.bn.validate().unwrap_or_else(|e| {
+                panic!("seed {seed}: decoder accepted an invalid network: {e}")
+            });
+        }
     }
 }
 

@@ -16,6 +16,7 @@ use cges::bn::{generate, DiscreteBn, NetGenConfig};
 use cges::engine::{CompiledModel, ServeConfig, Server, SharedEngine};
 use cges::infer::json::Json;
 use cges::infer::EngineConfig;
+use cges::model::{bundle_from_bytes, bundle_to_bytes, Bundle, BundleMeta};
 
 fn small_cfg(nodes: usize, edges: usize) -> NetGenConfig {
     NetGenConfig { nodes, edges, max_parents: 3, card_range: (2, 3), locality: 0, alpha: 0.8 }
@@ -230,6 +231,92 @@ fn warm_scratch_survives_zero_probability_bails() {
         let (wa, wl) = model.joint_map_reference(&evidence).unwrap();
         assert_eq!(ga, wa, "obs {n_obs}: joint MAP after bail");
         assert_eq!(gl.to_bits(), wl.to_bits(), "obs {n_obs}: log MAP after bail");
+    }
+}
+
+#[test]
+fn warm_start_is_bit_identical_to_cold_compile_and_skips_collect() {
+    // The bundle warm-start contract: a model built from a shipped
+    // artifact (through the binary codec, as serving would consume it)
+    // answers byte-for-byte like a cold compile of the same network —
+    // across an evidence walk, for marginals and joint MAP — while its
+    // first evidence-free query recomputes zero collect messages.
+    for seed in [4u64, 19, 33] {
+        let bn = generate(&small_cfg(10, 14), seed);
+        let meta =
+            BundleMeta { producer: "pin".into(), rounds: 1, score: -1.0, ess: 1.0 };
+        let bundle = Bundle::calibrated_within(bn.clone(), meta, u64::MAX);
+        assert!(bundle.has_potentials(), "seed {seed}: small jointree must calibrate");
+        let decoded = bundle_from_bytes(&bundle_to_bytes(&bundle)).unwrap();
+
+        let warm = CompiledModel::from_bundle(&decoded).unwrap();
+        assert!(warm.is_warm_started(), "seed {seed}");
+        let cold = CompiledModel::compile(&bn).unwrap();
+        let mut ws = warm.new_scratch();
+        let mut cs = cold.new_scratch();
+
+        let a = warm.marginals(&mut ws, &[]).unwrap();
+        let b = cold.marginals(&mut cs, &[]).unwrap();
+        assert_eq!(
+            ws.collect_recomputes(),
+            0,
+            "seed {seed}: warm start recomputed collect messages"
+        );
+        assert!(cs.collect_recomputes() > 0, "seed {seed}: probe is live");
+        assert_eq!(a.log_evidence.to_bits(), b.log_evidence.to_bits(), "seed {seed}");
+        for v in 0..bn.n() {
+            for (x, y) in a.marginal(v).iter().zip(b.marginal(v)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "seed {seed} var {v}");
+            }
+        }
+
+        for n_obs in [1usize, 2, 3, 0, 2] {
+            let evidence = evidence_for(seed, &bn, n_obs);
+            let a = warm.marginals(&mut ws, &evidence).unwrap();
+            let b = cold.marginals(&mut cs, &evidence).unwrap();
+            assert_eq!(a.log_evidence.to_bits(), b.log_evidence.to_bits(), "seed {seed}");
+            for v in 0..bn.n() {
+                for (x, y) in a.marginal(v).iter().zip(b.marginal(v)) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "seed {seed} obs {n_obs} var {v}");
+                }
+            }
+            let (xa, xl) = warm.joint_map(&mut ws, &evidence).unwrap();
+            let (ya, yl) = cold.joint_map(&mut cs, &evidence).unwrap();
+            assert_eq!(xa, ya, "seed {seed} obs {n_obs}: joint MAP");
+            assert_eq!(xl.to_bits(), yl.to_bits(), "seed {seed} obs {n_obs}: log MAP");
+        }
+
+        // Whole served responses (the f64s formatted by deterministic
+        // code) are therefore byte-identical too.
+        let cfg = EngineConfig::default();
+        let warm_srv = Server::from_bundle(&decoded, &cfg, ServeConfig::default()).unwrap();
+        assert!(warm_srv.warm_started(), "seed {seed}");
+        let cold_srv = Server::new(&bn, &cfg, ServeConfig::default()).unwrap();
+        let mut wss = warm_srv.new_scratch();
+        let mut css = cold_srv.new_scratch();
+        let e2 = evidence_json(&bn, &evidence_for(seed, &bn, 2));
+        for req in [
+            r#"{"id": 1, "type": "marginal"}"#.to_string(),
+            format!(r#"{{"id": 2, "type": "marginal", "evidence": {e2}}}"#),
+            format!(r#"{{"id": 3, "type": "joint_map", "evidence": {e2}}}"#),
+            format!(r#"{{"id": 4, "type": "map", "evidence": {e2}}}"#),
+        ] {
+            assert_eq!(
+                warm_srv.handle(&mut wss, &req),
+                cold_srv.handle(&mut css, &req),
+                "seed {seed}: served bytes diverged on {req}"
+            );
+        }
+
+        // A foreign fingerprint must fall back to a cold compile and
+        // still serve identical bytes.
+        let mut foreign = decoded.clone();
+        foreign.potentials.as_mut().unwrap().fingerprint ^= 0xF00D;
+        let fallback = CompiledModel::from_bundle(&foreign).unwrap();
+        assert!(!fallback.is_warm_started(), "seed {seed}");
+        let mut fs = fallback.new_scratch();
+        let a = fallback.marginals(&mut fs, &[]).unwrap();
+        assert_eq!(a.log_evidence.to_bits(), b.log_evidence.to_bits(), "seed {seed}");
     }
 }
 
