@@ -84,5 +84,5 @@ fn main() {
     });
 
     let (hits, misses) = scorer.cache().stats();
-    println!("\ncache: {hits} hits / {misses} computed");
+    println!("\ncache: {hits} hits / {misses} misses");
 }

@@ -1,0 +1,326 @@
+//! Scoring-core bench: the word-parallel counting engine vs the
+//! retained scalar reference, per parent-set size × cardinality × row
+//! count, plus the fused `local_pair` probe and an end-to-end GES run.
+//!
+//!   cargo bench --bench scoring                  # default sizes
+//!   cargo bench --bench scoring -- --rows 50000 --nodes 80
+//!
+//! Three sections:
+//!
+//! * **families** — ns/family of `Counter::family_counts` (packed
+//!   popcount / tiled / decode paths) against `CountMode::Reference`
+//!   over 64 distinct random families per (card, rows, parents) cell.
+//!   Every packed table is checked equal to the reference table before
+//!   timing.
+//! * **pair** — the fused `local_pair` (one superset count + one
+//!   marginalization) against two independent uncached `local` calls
+//!   on fresh scorers, per parent-set size.
+//! * **ges** — end-to-end `ges()` wall time, packed vs reference
+//!   engine, with the FES/BES evaluation split and cache/count-path
+//!   statistics — the attribution view of the speedup.
+//!
+//! Writes `BENCH_score.json` (hand-rolled JSON, repo convention) for
+//! the perf-records CI job.
+
+use std::hint::black_box;
+use std::sync::Arc;
+
+use cges::bn::{forward_sample, generate, NetGenConfig};
+use cges::data::Dataset;
+use cges::graph::Dag;
+use cges::learn::{ges, GesConfig};
+use cges::rng::Rng;
+use cges::score::{BdeuScorer, CountConfig, CountMode, Counter, CountsTable};
+use cges::util::Timer;
+
+/// Distinct families timed per grid cell (each counted once per rep —
+/// distinct parent sets so the score cache can't short-circuit).
+const FAMILIES: usize = 64;
+
+struct FamilyCase {
+    card: u32,
+    rows: usize,
+    parents: usize,
+    reference_ns: f64,
+    packed_ns: f64,
+}
+
+struct PairCase {
+    parents: usize,
+    two_pass_ns: f64,
+    fused_ns: f64,
+}
+
+fn random_data(n_vars: usize, card: u32, rows: usize, seed: u64) -> Arc<Dataset> {
+    let mut rng = Rng::new(seed);
+    let cols = (0..n_vars)
+        .map(|_| (0..rows).map(|_| rng.gen_range(card as usize) as u8).collect())
+        .collect();
+    Arc::new(Dataset::unnamed(vec![card; n_vars], cols))
+}
+
+/// `FAMILIES` distinct (child, parents) draws over `n_vars` columns.
+fn draw_families(n_vars: usize, parents: usize, seed: u64) -> Vec<(usize, Vec<usize>)> {
+    let mut rng = Rng::new(seed);
+    (0..FAMILIES)
+        .map(|_| {
+            let mut picks = rng.sample_indices(n_vars, parents + 1);
+            let child = picks.remove(0);
+            (child, picks)
+        })
+        .collect()
+}
+
+fn table_of(c: &CountsTable) -> &[u32] {
+    match c {
+        CountsTable::Dense(v) => v,
+        _ => panic!("bench families must be dense"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let wall = Timer::start();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str, dflt: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(dflt)
+    };
+    let n_vars = get("--vars", 24);
+    let rows_small = get("--rows", 2000);
+    let rows_large = get("--rows-large", 20000);
+    let nodes = get("--nodes", 60);
+    let seed = get("--seed", 1) as u64;
+
+    println!("# scoring bench: vars={n_vars} rows={rows_small}/{rows_large} ges-nodes={nodes}");
+
+    // ---- Section 1: per-family counting, packed vs reference --------
+    let mut family_cases: Vec<FamilyCase> = Vec::new();
+    for card in [2u32, 4] {
+        for rows in [rows_small, rows_large] {
+            let data = random_data(n_vars, card, rows, seed ^ (card as u64) << 8 ^ rows as u64);
+            let reference = Counter::new(data.clone(), CountConfig::reference());
+            let packed = Counter::new(data.clone(), CountConfig::default());
+            for parents in [0usize, 1, 2, 3] {
+                let fams = draw_families(n_vars, parents, seed + parents as u64);
+                // Pin every packed table to the reference before timing.
+                for (child, ps) in &fams {
+                    let a = reference.family_counts(*child, ps);
+                    let b = packed.family_counts(*child, ps);
+                    assert_eq!(
+                        table_of(&a.table),
+                        table_of(&b.table),
+                        "packed diverged: child {child} parents {ps:?}"
+                    );
+                }
+                let reps = (2_000_000 / rows).max(2);
+                let t = Timer::start();
+                for _ in 0..reps {
+                    for (child, ps) in &fams {
+                        black_box(reference.family_counts(*child, ps).total());
+                    }
+                }
+                let ref_secs = t.secs();
+                let t = Timer::start();
+                for _ in 0..reps {
+                    for (child, ps) in &fams {
+                        black_box(packed.family_counts(*child, ps).total());
+                    }
+                }
+                let packed_secs = t.secs();
+                let per = |s: f64| s * 1e9 / (reps * FAMILIES) as f64;
+                family_cases.push(FamilyCase {
+                    card,
+                    rows,
+                    parents,
+                    reference_ns: per(ref_secs),
+                    packed_ns: per(packed_secs),
+                });
+            }
+        }
+    }
+    for c in &family_cases {
+        println!(
+            "count card={} rows={:>6} parents={}: reference {:>10.0} ns/family, \
+             packed {:>10.0} ns/family, {:.2}x",
+            c.card,
+            c.rows,
+            c.parents,
+            c.reference_ns,
+            c.packed_ns,
+            c.reference_ns / c.packed_ns.max(1e-12)
+        );
+    }
+
+    // ---- Section 2: fused local_pair vs two independent locals ------
+    let mut pair_cases: Vec<PairCase> = Vec::new();
+    let data = random_data(n_vars, 3, rows_small, seed ^ 0xFA11);
+    for parents in [0usize, 1, 2] {
+        let fams = draw_families(n_vars - 1, parents, seed * 7 + parents as u64);
+        let x = n_vars - 1; // never drawn above: always a fresh insert
+        let reps = 8usize;
+        let t = Timer::start();
+        for _ in 0..reps {
+            // Fresh scorer per rep: every probe is cold.
+            let sc = BdeuScorer::new(data.clone(), 10.0);
+            for (child, ps) in &fams {
+                let mut sup = ps.clone();
+                sup.push(x);
+                black_box(sc.local_uncached(*child, &sup));
+                black_box(sc.local_uncached(*child, ps));
+            }
+        }
+        let two_pass = t.secs();
+        let t = Timer::start();
+        for _ in 0..reps {
+            let sc = BdeuScorer::new(data.clone(), 10.0);
+            for (child, ps) in &fams {
+                black_box(sc.local_pair(*child, ps, x));
+            }
+        }
+        let fused = t.secs();
+        let per = |s: f64| s * 1e9 / (reps * FAMILIES) as f64;
+        pair_cases.push(PairCase {
+            parents,
+            two_pass_ns: per(two_pass),
+            fused_ns: per(fused),
+        });
+    }
+    for c in &pair_cases {
+        println!(
+            "pair parents={}: two-pass {:>10.0} ns/delta, fused {:>10.0} ns/delta, {:.2}x",
+            c.parents,
+            c.two_pass_ns,
+            c.fused_ns,
+            c.two_pass_ns / c.fused_ns.max(1e-12)
+        );
+    }
+
+    // ---- Section 3: end-to-end GES, packed vs reference engine ------
+    let truth = generate(
+        &NetGenConfig { nodes, edges: nodes + nodes / 3, ..Default::default() },
+        seed,
+    );
+    let ges_data = Arc::new(forward_sample(&truth, rows_small, seed ^ 0xDA7A));
+    let run = |mode: CountMode| {
+        let cfg = CountConfig { mode, ..Default::default() };
+        let sc = BdeuScorer::with_count_config(ges_data.clone(), 10.0, cfg);
+        let t = Timer::start();
+        let r = ges(&sc, &Dag::new(nodes), &GesConfig::default());
+        (t.secs(), r, sc)
+    };
+    let (ref_secs, ref_r, _) = run(CountMode::Reference);
+    let (packed_secs, packed_r, packed_sc) = run(CountMode::Packed);
+    assert_eq!(
+        ref_r.score.to_bits(),
+        packed_r.score.to_bits(),
+        "packed GES diverged from reference"
+    );
+    let (hits, misses) = packed_sc.cache().stats();
+    let cs = packed_sc.count_stats();
+    println!(
+        "ges n={nodes}: reference {ref_secs:.2}s, packed {packed_secs:.2}s ({:.2}x); \
+         evals fes={} bes={}; cache {hits}h/{misses}m; \
+         counts popcount={} blocked={} dense={} sparse={} derived={} tables {}h/{}m",
+        ref_secs / packed_secs.max(1e-12),
+        packed_r.fes_evaluations,
+        packed_r.bes_evaluations,
+        cs.popcount,
+        cs.blocked,
+        cs.dense,
+        cs.sparse,
+        cs.derived,
+        cs.table_hits,
+        cs.table_misses
+    );
+
+    let wall_secs = wall.secs();
+    let json = perf_record_json(
+        n_vars,
+        nodes,
+        &family_cases,
+        &pair_cases,
+        (ref_secs, packed_secs),
+        (packed_r.fes_evaluations, packed_r.bes_evaluations),
+        (hits, misses),
+        (cs.popcount, cs.blocked, cs.dense, cs.sparse, cs.derived, cs.table_hits, cs.table_misses),
+        wall_secs,
+    );
+    let out = "BENCH_score.json";
+    std::fs::write(out, &json)?;
+    println!("\nperf record written to {out} (wall {wall_secs:.1}s)");
+    Ok(())
+}
+
+/// Hand-rolled JSON (no serde offline) — same convention as the other
+/// perf records.
+#[allow(clippy::too_many_arguments)]
+fn perf_record_json(
+    vars: usize,
+    ges_nodes: usize,
+    family_cases: &[FamilyCase],
+    pair_cases: &[PairCase],
+    ges_secs: (f64, f64),
+    ges_evals: (u64, u64),
+    cache: (u64, u64),
+    counts: (u64, u64, u64, u64, u64, u64, u64),
+    wall_secs: f64,
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"bench\": \"scoring\",");
+    let _ = writeln!(s, "  \"vars\": {vars},");
+    let _ = writeln!(s, "  \"families_per_cell\": {FAMILIES},");
+    let _ = writeln!(s, "  \"count_cases\": [");
+    for (i, c) in family_cases.iter().enumerate() {
+        let comma = if i + 1 == family_cases.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    {{\"card\": {}, \"rows\": {}, \"parents\": {}, \
+             \"reference_ns_per_family\": {:.1}, \"packed_ns_per_family\": {:.1}, \
+             \"speedup\": {:.3}}}{comma}",
+            c.card,
+            c.rows,
+            c.parents,
+            c.reference_ns,
+            c.packed_ns,
+            c.reference_ns / c.packed_ns.max(1e-12)
+        );
+    }
+    let _ = writeln!(s, "  ],");
+    let _ = writeln!(s, "  \"pair_cases\": [");
+    for (i, c) in pair_cases.iter().enumerate() {
+        let comma = if i + 1 == pair_cases.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    {{\"parents\": {}, \"two_pass_ns_per_delta\": {:.1}, \
+             \"fused_ns_per_delta\": {:.1}, \"speedup\": {:.3}}}{comma}",
+            c.parents,
+            c.two_pass_ns,
+            c.fused_ns,
+            c.two_pass_ns / c.fused_ns.max(1e-12)
+        );
+    }
+    let _ = writeln!(s, "  ],");
+    let _ = writeln!(s, "  \"ges_nodes\": {ges_nodes},");
+    let _ = writeln!(s, "  \"ges_reference_secs\": {:.3},", ges_secs.0);
+    let _ = writeln!(s, "  \"ges_packed_secs\": {:.3},", ges_secs.1);
+    let _ = writeln!(s, "  \"ges_speedup\": {:.3},", ges_secs.0 / ges_secs.1.max(1e-12));
+    let _ = writeln!(s, "  \"ges_fes_evaluations\": {},", ges_evals.0);
+    let _ = writeln!(s, "  \"ges_bes_evaluations\": {},", ges_evals.1);
+    let _ = writeln!(s, "  \"score_cache_hits\": {},", cache.0);
+    let _ = writeln!(s, "  \"score_cache_misses\": {},", cache.1);
+    let _ = writeln!(s, "  \"count_popcount\": {},", counts.0);
+    let _ = writeln!(s, "  \"count_blocked\": {},", counts.1);
+    let _ = writeln!(s, "  \"count_dense\": {},", counts.2);
+    let _ = writeln!(s, "  \"count_sparse\": {},", counts.3);
+    let _ = writeln!(s, "  \"count_derived\": {},", counts.4);
+    let _ = writeln!(s, "  \"table_cache_hits\": {},", counts.5);
+    let _ = writeln!(s, "  \"table_cache_misses\": {},", counts.6);
+    let _ = writeln!(s, "  \"wall_secs\": {wall_secs:.2}");
+    s.push_str("}\n");
+    s
+}

@@ -54,8 +54,9 @@ pub fn fit(dag: &Dag, data: &Dataset, ess: f64) -> Result<DiscreteBn> {
         let counts = family_counts(data, v, &parents);
         let dense = match &counts.table {
             CountsTable::Dense(c) => c,
-            CountsTable::Sparse(_) => {
-                // Unreachable: MAX_CPT_CELLS is below the dense limit.
+            _ => {
+                // Unreachable: MAX_CPT_CELLS is below the dense limit,
+                // so neither sparse form can be produced here.
                 bail!("internal error: sparse counts for a {cells}-cell family")
             }
         };

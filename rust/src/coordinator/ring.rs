@@ -69,7 +69,7 @@ use crate::graph::Dag;
 use crate::learn::{EdgeMask, GesConfig, RingWorker};
 use crate::model::{Bundle, BundleMeta};
 use crate::partition::partition_edges;
-use crate::score::{BdeuScorer, PairwiseScores, ScoreCache};
+use crate::score::{BdeuScorer, CountConfig, CountMode, PairwiseScores, ScoreCache};
 use crate::util::Timer;
 
 /// Where stage 1 gets its pairwise similarities.
@@ -150,6 +150,10 @@ pub struct RingConfig {
     /// Equivalent sample size for the bundle's CPT fit (the CLI's
     /// `fit --ess` default).
     pub bundle_ess: f64,
+    /// Counting engine for the shared scorer: `Packed` (word-parallel
+    /// fast paths) or `Reference` (scalar oracle — bit-identical
+    /// scores, for pinning and perf baselines).
+    pub count_mode: CountMode,
 }
 
 impl Default for RingConfig {
@@ -166,6 +170,7 @@ impl Default for RingConfig {
             mode: RingMode::default(),
             emit_bundle: false,
             bundle_ess: 1.0,
+            count_mode: CountMode::Packed,
         }
     }
 }
@@ -695,9 +700,15 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     telemetry.partition_secs = t.secs();
     telemetry.partition_source = source;
 
-    // Shared score cache across every worker and stage.
+    // Shared score cache and counting engine across every worker and
+    // stage (the packed columns are built once here).
     let cache = Arc::new(ScoreCache::new());
-    let scorer = BdeuScorer::with_cache(data.clone(), cfg.ess, cache.clone());
+    let scorer = BdeuScorer::with_parts(
+        data.clone(),
+        cfg.ess,
+        cache.clone(),
+        CountConfig { mode: cfg.count_mode, ..Default::default() },
+    );
 
     let limit = cfg.limit_inserts.then(|| insert_limit(cfg.k, n));
     let worker_threads = (cfg.threads / cfg.k).max(1);
@@ -782,6 +793,14 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     let (hits, misses) = cache.stats();
     telemetry.cache_hits = hits;
     telemetry.cache_misses = misses;
+    let cs = scorer.count_stats();
+    telemetry.count_popcount = cs.popcount;
+    telemetry.count_blocked = cs.blocked;
+    telemetry.count_dense = cs.dense;
+    telemetry.count_sparse = cs.sparse;
+    telemetry.count_derived = cs.derived;
+    telemetry.table_hits = cs.table_hits;
+    telemetry.table_misses = cs.table_misses;
 
     Ok(RingResult { dag, score, rounds: outcome.rounds, telemetry, bundle })
 }

@@ -64,6 +64,18 @@ pub struct Telemetry {
     /// past the stop round (also emitted in the TSV `#summary` line so
     /// trace readers can split counted from speculative hops).
     pub converged_rounds: usize,
+    /// Counting-core path counters (from the scorer's `Counter`):
+    /// families counted via popcount planes / row-block tiling /
+    /// scalar dense / hashed sparse, plus histograms derived by
+    /// marginalizing a cached superset table and the contingency-table
+    /// cache hit/miss split.
+    pub count_popcount: u64,
+    pub count_blocked: u64,
+    pub count_dense: u64,
+    pub count_sparse: u64,
+    pub count_derived: u64,
+    pub table_hits: u64,
+    pub table_misses: u64,
 }
 
 impl Telemetry {
@@ -150,7 +162,7 @@ impl Telemetry {
         }
         writeln!(
             f,
-            "#summary\ttransport={}\tcounted_rounds={}\tpartition={:.3}s ({})\tlearning={:.3}s\tfine_tune={:.3}s\tcache_hits={}\tcache_misses={}",
+            "#summary\ttransport={}\tcounted_rounds={}\tpartition={:.3}s ({})\tlearning={:.3}s\tfine_tune={:.3}s\tcache_hits={}\tcache_misses={}\tcounts=popcount:{}/blocked:{}/dense:{}/sparse:{}/derived:{}\ttables={}h/{}m",
             if self.transport.is_empty() { "-" } else { &self.transport },
             self.converged_rounds,
             self.partition_secs,
@@ -158,7 +170,14 @@ impl Telemetry {
             self.learning_secs,
             self.fine_tune_secs,
             self.cache_hits,
-            self.cache_misses
+            self.cache_misses,
+            self.count_popcount,
+            self.count_blocked,
+            self.count_dense,
+            self.count_sparse,
+            self.count_derived,
+            self.table_hits,
+            self.table_misses
         )?;
         Ok(())
     }
@@ -228,6 +247,7 @@ mod tests {
         assert!(text.contains("#worker 1"));
         assert!(text.contains("#summary"));
         assert!(text.contains("transport=channel"));
+        assert!(text.contains("counts=popcount:"));
         // header + 2 records + 2 worker lines + summary
         assert_eq!(text.lines().count(), 6);
         std::fs::remove_file(&tmp).ok();

@@ -2,6 +2,8 @@
 
 pub mod csv;
 pub mod dataset;
+pub mod packed;
 
 pub use csv::{read_csv, write_csv};
 pub use dataset::Dataset;
+pub use packed::{PackedCol, PackedData, PLANE_MAX_CARD};

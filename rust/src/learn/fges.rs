@@ -75,6 +75,37 @@ mod tests {
     }
 
     #[test]
+    fn frontier_recompute_is_incident_bounded() {
+        // fGES's scaling claim rests on re-scoring only candidates
+        // incident to version-bumped endpoints after each apply. A
+        // full-rescan strategy would evaluate ~C(n,2) pairs per applied
+        // operator; the incident frontier touches at most the changed
+        // nodes' rows of the pair matrix. Bound the total accordingly.
+        let n = 20usize;
+        let bn = generate(&NetGenConfig { nodes: n, edges: 28, ..Default::default() }, 11);
+        let data = Arc::new(forward_sample(&bn, 1500, 9));
+        let sc = BdeuScorer::new(data, 10.0);
+        let r = fges(&sc, &Dag::new(n), &FgesConfig::default());
+        let all_pairs = (n * (n - 1) / 2) as u64;
+        assert!(r.inserts > 0, "test needs applied operators to be meaningful");
+        // Per-phase split must reconcile and both phases must have run.
+        assert_eq!(r.evaluations, r.fes_evaluations + r.bes_evaluations);
+        assert!(r.fes_evaluations >= all_pairs, "initial FES sweep scans all pairs");
+        // A full-rescan strategy costs at least one all-pairs sweep per
+        // applied operator on top of the initial one; the incident
+        // frontier must land strictly inside that floor.
+        let applies = (r.inserts + r.deletes) as u64;
+        let full_rescan_floor = (applies + 1) * all_pairs;
+        assert!(
+            r.evaluations < full_rescan_floor,
+            "evaluations {} ≥ full-rescan floor {} ({} applies): frontier is not incident-bounded",
+            r.evaluations,
+            full_rescan_floor,
+            applies
+        );
+    }
+
+    #[test]
     fn fges_seed_path_consistent() {
         let bn = generate(&NetGenConfig { nodes: 10, edges: 12, ..Default::default() }, 5);
         let data = Arc::new(forward_sample(&bn, 1500, 2));

@@ -87,6 +87,11 @@ pub struct GesResult {
     pub deletes: usize,
     /// Candidate evaluations performed (telemetry).
     pub evaluations: u64,
+    /// Evaluations split by phase (`evaluations` = FES + BES), so
+    /// counting-core speedups are attributable to the phase that
+    /// spends them.
+    pub fes_evaluations: u64,
+    pub bes_evaluations: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -126,6 +131,9 @@ struct Search {
     cpdag: Pdag,
     version: Vec<u64>,
     evaluations: u64,
+    /// Per-phase split of `evaluations` (FES / BES attribution).
+    fes_evaluations: u64,
+    bes_evaluations: u64,
     /// Persistent candidate heaps (insert / delete). Stale entries are
     /// version-checked on pop; entries for untouched pairs stay valid
     /// across rounds — the incremental-ring optimization (§Perf).
@@ -150,6 +158,15 @@ enum Phase {
 impl Search {
     fn n(&self) -> usize {
         self.cpdag.n()
+    }
+
+    /// Record `n` candidate evaluations against `phase`.
+    fn note_eval(&mut self, phase: Phase, n: u64) {
+        self.evaluations += n;
+        match phase {
+            Phase::Forward => self.fes_evaluations += n,
+            Phase::Backward => self.bes_evaluations += n,
+        }
     }
 
     fn allowed(&self, x: usize, y: usize) -> bool {
@@ -213,7 +230,7 @@ impl Search {
             // Estimates only: path validity deferred to pop time.
             self.best_for_pair(x, y, phase, false).map(|op| (op.delta, op.x, op.y))
         });
-        self.evaluations += pairs.len() as u64;
+        self.note_eval(phase, pairs.len() as u64);
         let version = &self.version;
         let cands = results.into_iter().flatten().filter(|(d, _, _)| *d > EPS).map(
             |(delta, x, y)| Cand { delta, x, y, vx: version[x], vy: version[y], exact: true },
@@ -395,7 +412,7 @@ impl Search {
                 // Stale or seeded estimate: recompute and re-push.
                 if self.applicable(cand.x, cand.y, phase) {
                     if let Some(op) = self.best_for_pair(cand.x, cand.y, phase, false) {
-                        self.evaluations += 1;
+                        self.note_eval(phase, 1);
                         if op.delta > EPS {
                             let c = Cand {
                                 delta: op.delta,
@@ -419,7 +436,7 @@ impl Search {
             let Some(op) = self.best_for_pair(cand.x, cand.y, phase, true) else {
                 continue;
             };
-            self.evaluations += 1;
+            self.note_eval(phase, 1);
             if op.delta <= EPS {
                 continue;
             }
@@ -504,6 +521,8 @@ impl RingWorker {
                 cpdag: Pdag::new(n),
                 version: vec![0; n],
                 evaluations: 0,
+                fes_evaluations: 0,
+                bes_evaluations: 0,
                 fwd: BinaryHeap::new(),
                 bwd: BinaryHeap::new(),
                 fwd_seeded: false,
@@ -584,6 +603,8 @@ pub fn ges(scorer: &BdeuScorer, init: &Dag, cfg: &GesConfig) -> GesResult {
         cpdag,
         version: vec![0; init.n()],
         evaluations: 0,
+        fes_evaluations: 0,
+        bes_evaluations: 0,
         fwd: BinaryHeap::new(),
         bwd: BinaryHeap::new(),
         fwd_seeded: false,
@@ -606,7 +627,16 @@ pub fn ges(scorer: &BdeuScorer, init: &Dag, cfg: &GesConfig) -> GesResult {
 
     let dag = pdag_to_dag(&search.cpdag).expect("final CPDAG must be extendable");
     let score = scorer.score_dag(&dag);
-    GesResult { dag, cpdag: search.cpdag, score, inserts, deletes, evaluations: search.evaluations }
+    GesResult {
+        dag,
+        cpdag: search.cpdag,
+        score,
+        inserts,
+        deletes,
+        evaluations: search.evaluations,
+        fes_evaluations: search.fes_evaluations,
+        bes_evaluations: search.bes_evaluations,
+    }
 }
 
 #[cfg(test)]
@@ -691,6 +721,60 @@ mod tests {
             &GesConfig { seed: Some(Arc::new(pw.s.clone())), ..Default::default() },
         );
         assert!((plain.score - seeded.score).abs() < 1e-6, "{} vs {}", plain.score, seeded.score);
+    }
+
+    #[test]
+    fn incident_pairs_touch_only_changed_nodes() {
+        // The frontier recomputation after an applied operator must be
+        // bounded by pairs incident to version-bumped endpoints — not
+        // the full O(n²) sweep.
+        let data = Arc::new(forward_sample(
+            &generate(&NetGenConfig { nodes: 8, edges: 10, ..Default::default() }, 2),
+            300,
+            4,
+        ));
+        let n = 8;
+        let search = Search {
+            scorer: BdeuScorer::new(data, 10.0),
+            cfg: GesConfig::default(),
+            cpdag: Pdag::new(n),
+            version: vec![0; n],
+            evaluations: 0,
+            fes_evaluations: 0,
+            bes_evaluations: 0,
+            fwd: BinaryHeap::new(),
+            bwd: BinaryHeap::new(),
+            fwd_seeded: false,
+            bwd_seeded: false,
+            dirty_fwd: Vec::new(),
+            dirty_bwd: Vec::new(),
+        };
+        let changed = [2usize, 5];
+        let pairs = search.incident_pairs(&changed, Phase::Forward);
+        // Every pair touches a changed node; no duplicates.
+        for &(x, y) in &pairs {
+            assert!(x < y);
+            assert!(
+                changed.contains(&x) || changed.contains(&y),
+                "pair ({x},{y}) touches no changed node"
+            );
+        }
+        let mut uniq = pairs.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), pairs.len(), "duplicate incident pairs");
+        // On an empty graph every incident pair is applicable:
+        // (n-1) pairs touching node 2 plus (n-2) more touching node 5.
+        assert_eq!(pairs.len(), (n - 1) + (n - 2));
+    }
+
+    #[test]
+    fn evaluations_split_by_phase() {
+        let bn = generate(&NetGenConfig { nodes: 10, edges: 14, ..Default::default() }, 5);
+        let data = Arc::new(forward_sample(&bn, 1200, 7));
+        let (r, _) = learn(data, &GesConfig::default());
+        assert_eq!(r.evaluations, r.fes_evaluations + r.bes_evaluations);
+        assert!(r.fes_evaluations > 0);
     }
 
     #[test]

@@ -43,25 +43,25 @@ pub struct Operator {
     pub delta: f64,
 }
 
-/// Score delta of Insert(x, y, t_set) on `g`.
+/// Score delta of Insert(x, y, t_set) on `g`. Both family scores come
+/// from one [`BdeuScorer::local_pair`] probe, so the cold case counts
+/// the superset table once and marginalizes the base out of it.
 pub fn insert_delta(scorer: &BdeuScorer, g: &Pdag, x: usize, y: usize, t: &BitSet) -> f64 {
-    let mut base: Vec<usize> = g.na(y, x).union(t).union(&g.parents(y).clone()).to_vec();
+    let mut base: Vec<usize> = g.na(y, x).union(t).union(g.parents(y)).to_vec();
     base.retain(|&v| v != x);
-    let mut with_x = base.clone();
-    with_x.push(x);
-    scorer.local(y, &with_x) - scorer.local(y, &base)
+    let (with_x, without_x) = scorer.local_pair(y, &base, x);
+    with_x - without_x
 }
 
-/// Score delta of Delete(x, y, h_set) on `g`.
+/// Score delta of Delete(x, y, h_set) on `g` — the same fused probe as
+/// [`insert_delta`], with the sign flipped.
 pub fn delete_delta(scorer: &BdeuScorer, g: &Pdag, x: usize, y: usize, h: &BitSet) -> f64 {
     let mut na_minus_h = g.na(y, x);
     na_minus_h.difference_with(h);
-    let mut with_x: Vec<usize> = na_minus_h.union(g.parents(y)).to_vec();
-    if !with_x.contains(&x) {
-        with_x.push(x);
-    }
-    let without_x: Vec<usize> = with_x.iter().copied().filter(|&v| v != x).collect();
-    scorer.local(y, &without_x) - scorer.local(y, &with_x)
+    let mut base: Vec<usize> = na_minus_h.union(g.parents(y)).to_vec();
+    base.retain(|&v| v != x);
+    let (with_x, without_x) = scorer.local_pair(y, &base, x);
+    without_x - with_x
 }
 
 /// Insert validity (Chickering Thm 15).

@@ -4,32 +4,67 @@
 //!
 //! Decomposable: the network score is the sum of per-family local
 //! scores; all learners only ever ask for local scores and deltas.
+//!
+//! Counting runs through the word-parallel [`Counter`] engine
+//! (`score::counts`); [`BdeuScorer::local_pair`] adds the count-reuse
+//! layer on top — an Insert/Delete delta scores `child` under both
+//! `base ∪ {x}` and `base`, and the `base` histogram is a marginal of
+//! the `base ∪ {x}` contingency table, so one data pass (plus one
+//! in-cache marginalization) serves both scores. All fast paths
+//! produce bit-identical scores to the scalar reference because the
+//! integer count tables are identical and the float operations run in
+//! the same order (see [`bdeu_family_score`]).
 
 use std::sync::Arc;
 
 use crate::data::Dataset;
 use crate::graph::Dag;
 use crate::score::cache::ScoreCache;
-use crate::score::counts::family_counts;
+use crate::score::counts::{CountConfig, CountMode, CountSnapshot, Counter, CountsTable, FamilyCounts};
 use crate::score::lgamma::ln_gamma;
 
-/// BDeu scorer bound to one dataset. Cheap to clone (shares the cache).
+/// Probe-path inline capacity: parent sets up to this size are sorted
+/// and deduplicated in stack buffers, so [`BdeuScorer::local`] and
+/// [`BdeuScorer::local_pair`] reach the cache without touching the
+/// heap. Wider sets (never seen under realistic `max_parents`) fall
+/// back to `Vec`s.
+const PROBE_INLINE: usize = 16;
+
+/// BDeu scorer bound to one dataset. Cheap to clone (shares the cache
+/// and the counting engine).
 #[derive(Clone)]
 pub struct BdeuScorer {
     data: Arc<Dataset>,
     ess: f64,
     cache: Arc<ScoreCache>,
+    counter: Arc<Counter>,
 }
 
 impl BdeuScorer {
     /// Scorer with equivalent sample size `ess` (the paper's η).
     pub fn new(data: Arc<Dataset>, ess: f64) -> Self {
-        BdeuScorer { data, ess, cache: Arc::new(ScoreCache::new()) }
+        Self::with_parts(data, ess, Arc::new(ScoreCache::new()), CountConfig::default())
     }
 
     /// Scorer sharing an existing cache (ring workers share one).
     pub fn with_cache(data: Arc<Dataset>, ess: f64, cache: Arc<ScoreCache>) -> Self {
-        BdeuScorer { data, ess, cache }
+        Self::with_parts(data, ess, cache, CountConfig::default())
+    }
+
+    /// Scorer with an explicit counting configuration (fresh cache).
+    pub fn with_count_config(data: Arc<Dataset>, ess: f64, cfg: CountConfig) -> Self {
+        Self::with_parts(data, ess, Arc::new(ScoreCache::new()), cfg)
+    }
+
+    /// Fully explicit constructor: shared cache + counting config.
+    pub fn with_parts(
+        data: Arc<Dataset>,
+        ess: f64,
+        cache: Arc<ScoreCache>,
+        count_cfg: CountConfig,
+    ) -> Self {
+        let counter = Arc::new(Counter::new(data.clone(), count_cfg));
+        BdeuScorer { data, ess, cache, counter }
     }
 
     /// The dataset this scorer is bound to.
@@ -47,47 +82,143 @@ impl BdeuScorer {
         &self.cache
     }
 
+    /// The counting engine (shared across clones).
+    pub fn counter(&self) -> &Arc<Counter> {
+        &self.counter
+    }
+
+    /// Counting-path statistics snapshot (telemetry / benches).
+    pub fn count_stats(&self) -> CountSnapshot {
+        self.counter.stats()
+    }
+
     /// Local BDeu score of `child` with parent set `parents`
-    /// (any order; deduplicated by sorting). Cached.
+    /// (any order; deduplicated by sorting). Cached. Allocation-free
+    /// up to the cache probe for ≤ [`PROBE_INLINE`] parents.
     pub fn local(&self, child: usize, parents: &[usize]) -> f64 {
-        let mut ps: Vec<u32> = parents.iter().map(|&p| p as u32).collect();
-        ps.sort_unstable();
-        ps.dedup();
+        if parents.len() <= PROBE_INLINE {
+            let mut buf = [0u32; PROBE_INLINE];
+            for (slot, &p) in buf.iter_mut().zip(parents) {
+                *slot = p as u32;
+            }
+            let len = sort_dedup(&mut buf[..parents.len()]);
+            self.local_sorted(child, &buf[..len])
+        } else {
+            let mut ps: Vec<u32> = parents.iter().map(|&p| p as u32).collect();
+            ps.sort_unstable();
+            ps.dedup();
+            self.local_sorted(child, &ps)
+        }
+    }
+
+    /// Both halves of an operator delta in one probe: the local scores
+    /// of `child` under `others ∪ {x}` and under `others` (order-free;
+    /// `x` must not be in `others`). Returns `(with_x, without_x)`.
+    ///
+    /// When both families miss the cache and the superset family is
+    /// dense, the engine counts the superset table **once** and derives
+    /// the base histogram by marginalizing `x` out — bit-identical to
+    /// two independent counts (the marginal of an exact contingency
+    /// table *is* the exact reduced table) at roughly half the cost.
+    pub fn local_pair(&self, child: usize, others: &[usize], x: usize) -> (f64, f64) {
+        debug_assert!(!others.contains(&x));
+        if others.len() + 1 > PROBE_INLINE {
+            // Families this wide never pass the dense gate anyway.
+            let mut with_x: Vec<usize> = others.to_vec();
+            with_x.push(x);
+            return (self.local(child, &with_x), self.local(child, others));
+        }
+        let mut base_buf = [0u32; PROBE_INLINE];
+        for (slot, &p) in base_buf.iter_mut().zip(others) {
+            *slot = p as u32;
+        }
+        let blen = sort_dedup(&mut base_buf[..others.len()]);
+        let base = &base_buf[..blen];
+        // Superset key: `base` with `x` spliced in at its sorted slot.
+        let xv = x as u32;
+        let pos = base.partition_point(|&p| p < xv);
+        let mut sup_buf = [0u32; PROBE_INLINE];
+        sup_buf[..pos].copy_from_slice(&base[..pos]);
+        sup_buf[pos] = xv;
+        sup_buf[pos + 1..=blen].copy_from_slice(&base[pos..]);
+        let sup = &sup_buf[..blen + 1];
+
+        let cached_sup = self.cache.get(child as u32, sup);
+        let cached_base = self.cache.get(child as u32, base);
+        if let (Some(s), Some(b)) = (cached_sup, cached_base) {
+            return (s, b);
+        }
+        self.pair_uncached(child, base, sup, pos, cached_sup, cached_base)
+    }
+
+    /// Cold half of [`BdeuScorer::local_pair`]: count once, score both.
+    fn pair_uncached(
+        &self,
+        child: usize,
+        base: &[u32],
+        sup: &[u32],
+        pos: usize,
+        cached_sup: Option<f64>,
+        cached_base: Option<f64>,
+    ) -> (f64, f64) {
+        let sup_usize: Vec<usize> = sup.iter().map(|&p| p as usize).collect();
+        let fused = self.counter.config().mode == CountMode::Packed
+            && self.counter.dense_cells(child, &sup_usize).is_some();
+        if !fused {
+            let s = cached_sup.unwrap_or_else(|| self.compute_and_put(child, sup));
+            let b = cached_base.unwrap_or_else(|| self.compute_and_put(child, base));
+            return (s, b);
+        }
+        let r = self.data.card(child) as usize;
+        let table = self.counter.dense_table(child, &sup_usize);
+        let s = match cached_sup {
+            Some(s) => s,
+            None => {
+                // Same table, same q product order (sorted), same score
+                // function as a direct `local` — hence the same bits.
+                let q: f64 = sup_usize.iter().map(|&p| self.data.card(p) as f64).product();
+                let s = bdeu_dense_score(&table, r, q, self.ess);
+                self.cache.put(child as u32, sup, s);
+                s
+            }
+        };
+        let b = match cached_base {
+            Some(b) => b,
+            None => {
+                let sup_cards: Vec<usize> =
+                    sup_usize.iter().map(|&p| self.data.card(p) as usize).collect();
+                let base_table = self.counter.derive_marginal(&table, r, &sup_cards, pos);
+                let q: f64 = base.iter().map(|&p| self.data.card(p as usize) as f64).product();
+                let b = bdeu_dense_score(&base_table, r, q, self.ess);
+                self.cache.put(child as u32, base, b);
+                b
+            }
+        };
+        (s, b)
+    }
+
+    /// Probe/compute with an already sorted, deduplicated parent set.
+    fn local_sorted(&self, child: usize, ps: &[u32]) -> f64 {
         debug_assert!(!ps.contains(&(child as u32)));
-        if let Some(s) = self.cache.get(child as u32, &ps) {
+        if let Some(s) = self.cache.get(child as u32, ps) {
             return s;
         }
+        self.compute_and_put(child, ps)
+    }
+
+    fn compute_and_put(&self, child: usize, ps: &[u32]) -> f64 {
         let parents_usize: Vec<usize> = ps.iter().map(|&p| p as usize).collect();
         let s = self.local_uncached(child, &parents_usize);
-        self.cache.put(child as u32, &ps, s);
+        self.cache.put(child as u32, ps, s);
         s
     }
 
     /// Score without touching the cache (used by benches to measure the
     /// raw counting path).
     pub fn local_uncached(&self, child: usize, parents: &[usize]) -> f64 {
-        let r = self.data.card(child) as usize;
+        let counts = self.counter.family_counts(child, parents);
         let q: f64 = parents.iter().map(|&p| self.data.card(p) as f64).product();
-        let a_cfg = self.ess / q;
-        let a_cell = self.ess / (q * r as f64);
-
-        let counts = family_counts(&self.data, child, parents);
-        let lg_cfg = ln_gamma(a_cfg);
-        let lg_cell = ln_gamma(a_cell);
-        let mut score = 0.0;
-        counts.for_each_config(|hist| {
-            let nj: u64 = hist.iter().map(|&x| x as u64).sum();
-            if nj == 0 {
-                return; // empty config contributes exactly 0
-            }
-            score += lg_cfg - ln_gamma(nj as f64 + a_cfg);
-            for &njk in hist {
-                if njk > 0 {
-                    score += ln_gamma(njk as f64 + a_cell) - lg_cell;
-                }
-            }
-        });
-        score
+        bdeu_family_score(&counts, q, self.ess)
     }
 
     /// Delta of swapping `child`'s parent set `from` -> `to`.
@@ -108,6 +239,81 @@ impl BdeuScorer {
     /// Paper's table normalization: global score / n_rows.
     pub fn normalized_score(&self, g: &Dag) -> f64 {
         self.score_dag(g) / self.data.n_rows() as f64
+    }
+}
+
+/// Sort + dedup `buf` in place, returning the deduplicated length.
+#[inline]
+fn sort_dedup(buf: &mut [u32]) -> usize {
+    buf.sort_unstable();
+    let mut w = 0;
+    for i in 0..buf.len() {
+        if w == 0 || buf[i] != buf[w - 1] {
+            buf[w] = buf[i];
+            w += 1;
+        }
+    }
+    w
+}
+
+/// BDeu family score from a count table (Eq. 3 with the `q` parent-
+/// configuration count passed in as an `f64` product — callers must
+/// compute it over the same parent order for bit-equal results).
+///
+/// Dense and sparse tables produce `to_bits`-equal scores: sparse
+/// tables iterate the same non-empty histograms in the same (ascending
+/// config) order as a dense sweep, empty configs contribute exactly 0,
+/// and both run the identical float sequence in [`accumulate_config`].
+pub fn bdeu_family_score(counts: &FamilyCounts, q: f64, ess: f64) -> f64 {
+    if let CountsTable::Dense(table) = &counts.table {
+        return bdeu_dense_score(table, counts.r, q, ess);
+    }
+    let a_cfg = ess / q;
+    let a_cell = ess / (q * counts.r as f64);
+    let lg_cfg = ln_gamma(a_cfg);
+    let lg_cell = ln_gamma(a_cell);
+    let mut score = 0.0;
+    counts.for_each_config(|hist| {
+        accumulate_config(&mut score, hist, a_cfg, a_cell, lg_cfg, lg_cell);
+    });
+    score
+}
+
+/// [`bdeu_family_score`] for a raw dense table (`q·r` cells, child
+/// stride `r`) — the count-reuse layer scores cached/derived tables
+/// through this without wrapping them in [`FamilyCounts`].
+pub fn bdeu_dense_score(table: &[u32], r: usize, q: f64, ess: f64) -> f64 {
+    let a_cfg = ess / q;
+    let a_cell = ess / (q * r as f64);
+    let lg_cfg = ln_gamma(a_cfg);
+    let lg_cell = ln_gamma(a_cell);
+    let mut score = 0.0;
+    for hist in table.chunks_exact(r) {
+        accumulate_config(&mut score, hist, a_cfg, a_cell, lg_cfg, lg_cell);
+    }
+    score
+}
+
+/// One parent configuration's contribution, accumulated directly into
+/// `score` — the single float sequence every scoring path shares.
+#[inline]
+fn accumulate_config(
+    score: &mut f64,
+    hist: &[u32],
+    a_cfg: f64,
+    a_cell: f64,
+    lg_cfg: f64,
+    lg_cell: f64,
+) {
+    let nj: u64 = hist.iter().map(|&x| x as u64).sum();
+    if nj == 0 {
+        return; // empty config contributes exactly 0
+    }
+    *score += lg_cfg - ln_gamma(nj as f64 + a_cfg);
+    for &njk in hist {
+        if njk > 0 {
+            *score += ln_gamma(njk as f64 + a_cell) - lg_cell;
+        }
     }
 }
 
@@ -193,6 +399,63 @@ mod tests {
         ));
         let sc2 = BdeuScorer::new(d2, 2.0);
         assert_eq!(sc2.local(0, &[1, 2]), sc2.local(0, &[2, 1]));
+    }
+
+    #[test]
+    fn local_pair_matches_independent_locals_bitwise() {
+        let d2 = Arc::new(Dataset::unnamed(
+            vec![2, 3, 2, 2],
+            vec![
+                vec![0, 1, 0, 1, 1, 0, 0, 1],
+                vec![1, 2, 0, 1, 2, 0, 1, 1],
+                vec![0, 0, 1, 1, 0, 1, 1, 0],
+                vec![1, 0, 1, 0, 0, 1, 0, 1],
+            ],
+        ));
+        for (others, x) in [(vec![], 1usize), (vec![1], 2), (vec![3, 1], 2)] {
+            // Fresh fused scorer vs fresh plain scorer: both cold.
+            let fused = BdeuScorer::new(d2.clone(), 5.0);
+            let plain = BdeuScorer::new(d2.clone(), 5.0);
+            let (with_x, without_x) = fused.local_pair(0, &others, x);
+            let mut sup = others.clone();
+            sup.push(x);
+            assert_eq!(
+                with_x.to_bits(),
+                plain.local(0, &sup).to_bits(),
+                "with_x, others {others:?} x {x}"
+            );
+            assert_eq!(
+                without_x.to_bits(),
+                plain.local(0, &others).to_bits(),
+                "without_x, others {others:?} x {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn local_pair_reuses_the_superset_table() {
+        let d = toy();
+        let sc = BdeuScorer::new(d, 2.0);
+        let _ = sc.local_pair(0, &[], 1);
+        let s = sc.count_stats();
+        assert_eq!(s.derived, 1, "base score must come from a marginal, not a recount");
+        // Second probe: both families cached, nothing recounted.
+        let _ = sc.local_pair(0, &[], 1);
+        assert_eq!(sc.count_stats().derived, 1);
+    }
+
+    #[test]
+    fn reference_mode_matches_packed_bitwise() {
+        let d = toy();
+        let packed = BdeuScorer::new(d.clone(), 3.0);
+        let reference = BdeuScorer::with_count_config(d, 3.0, CountConfig::reference());
+        for (child, parents) in [(0usize, vec![]), (0, vec![1]), (1, vec![0])] {
+            assert_eq!(
+                packed.local(child, &parents).to_bits(),
+                reference.local(child, &parents).to_bits(),
+                "child {child} parents {parents:?}"
+            );
+        }
     }
 
     #[test]

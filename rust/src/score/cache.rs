@@ -76,7 +76,9 @@ impl ScoreCache {
         (h >> 56) as usize & (SHARDS - 1)
     }
 
-    /// Lookup; `parents` must be sorted ascending.
+    /// Lookup; `parents` must be sorted ascending. Counts a hit or a
+    /// miss — probes that never lead to an insert still show up in the
+    /// hit-rate.
     pub fn get(&self, child: u32, parents: &[u32]) -> Option<f64> {
         debug_assert!(parents.windows(2).all(|w| w[0] < w[1]));
         let shard = &self.shards[self.shard(child, parents)];
@@ -86,20 +88,23 @@ impl ScoreCache {
         drop(guard);
         if r.is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
         }
         r
     }
 
-    /// Insert (last write wins; scores are deterministic so races are
-    /// benign).
+    /// Insert, plain (last write wins; scores are deterministic so
+    /// races are benign). No counter side effects — the preceding
+    /// `get` already recorded the miss.
     pub fn put(&self, child: u32, parents: &[u32], score: f64) {
         debug_assert!(parents.windows(2).all(|w| w[0] < w[1]));
-        self.misses.fetch_add(1, Ordering::Relaxed);
         let shard = &self.shards[self.shard(child, parents)];
         shard.write().expect("cache poisoned").insert(Key::new(child, parents), score);
     }
 
-    /// (hits, computed) counters for telemetry.
+    /// (hits, misses) probe counters for telemetry: every `get` ticks
+    /// exactly one of the two.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
@@ -147,7 +152,15 @@ mod tests {
                 });
             }
         });
+        // Every get above follows its put: 8000 hits, zero misses —
+        // `put` must not tick a counter.
         let (h, m) = c.stats();
-        assert!(h >= 8000 && m >= 1000);
+        assert_eq!((h, m), (8000, 0));
+        // Probing absent families counts misses in `get` itself.
+        for i in 0..10u32 {
+            assert_eq!(c.get(1000 + i, &[]), None);
+        }
+        let (h, m) = c.stats();
+        assert_eq!((h, m), (8000, 10));
     }
 }

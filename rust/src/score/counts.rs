@@ -1,21 +1,62 @@
 //! Contingency-table counting: the measured hot path of every learner.
 //!
-//! `family_counts` computes the `N_ijk` frequencies for a (child,
-//! parent-set) family. Two strategies, picked by the dense table size
-//! `q·r`:
-//!   * dense radix accumulation into a `Vec<u32>` when `q·r` fits a
-//!     sane budget — one multiply-add per parent per row, fully
-//!     branchless, streaming column-major data;
-//!   * hashed sparse accumulation otherwise (large parent sets only
-//!     materialize the configurations that occur, ≤ n_rows of them).
+//! Two layers:
+//!
+//! * [`family_counts`] / [`family_counts_with_limit`] — the **retained
+//!   scalar reference**: per-row radix accumulation straight off the
+//!   raw `u8` columns. Every fast path below is pinned bit-identical
+//!   to it (counts are exact integers, so "bit-identical" is simply
+//!   "equal tables" — and equal tables make the downstream BDeu sums
+//!   `to_bits`-equal).
+//! * [`Counter`] — the word-parallel engine every [`BdeuScorer`]
+//!   (see `score::bdeu`) counts through. It picks per family between
+//!   a **popcount path** (AND of precomputed state bit-planes from
+//!   [`PackedData`], 64 rows per instruction — the zero/one/two-parent
+//!   shapes that dominate GES pairwise deltas), a **row-block tiled
+//!   path** (per-thread partial tables over `util::par`, reduced by
+//!   integer addition — order-independent, hence deterministic),
+//!   a scalar **packed-decode path**, and the reference's hashed
+//!   sparse/wide fallbacks for huge parent sets.
+//!
+//! Table-size arithmetic is fully checked: a parent set whose mixed-
+//! radix `q` overflows `u64` goes to the [`CountsTable::Wide`] counter
+//! (tuple keys — `q` itself is meaningless there), and a `q` that fits
+//! but whose `q·r` cell count overflows or exceeds the dense limit goes
+//! to [`CountsTable::Sparse`]. Both sparse forms iterate their configs
+//! in sorted order so sparse scores are `to_bits`-equal to dense ones.
+//!
+//! [`BdeuScorer`]: crate::score::BdeuScorer
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
-use crate::data::Dataset;
+use crate::data::{Dataset, PackedData};
+use crate::util::par::par_map_index;
 
 /// Max dense table cells before switching to the sparse counter
 /// (8M cells = 32 MB of u32; reached only by pathological parent sets).
 const DENSE_LIMIT: u64 = 8 << 20;
+
+/// The popcount path touches `cells · words` plane words where the
+/// scalar path touches `m` rows (plus decode). Engage it while
+/// `cells · words ≤ POPCOUNT_ADVANTAGE · m`, i.e. while each of the
+/// up-to-64-way word-parallel AND+popcounts replaces at least
+/// `64 / POPCOUNT_ADVANTAGE` scalar scatter-increments.
+const POPCOUNT_ADVANTAGE: u64 = 4;
+
+/// Widest dense table the row-block tiled path will replicate per
+/// thread (64K u32 = 256 KB of partials per worker).
+const BLOCKED_MAX_CELLS: u64 = 1 << 16;
+
+/// Widest dense table kept in the [`Counter`]'s contingency-table
+/// cache (the count-reuse layer marginalizes these instead of
+/// re-streaming data).
+const TABLE_CACHE_MAX_CELLS: usize = 4096;
+
+/// Table-cache entry cap; the cache is cleared wholesale when full
+/// (families are re-countable, so eviction needs no bookkeeping).
+const TABLE_CACHE_MAX_ENTRIES: usize = 8192;
 
 /// Counts for one family: per observed parent configuration `j`, the
 /// child-state histogram `n[j*r..(j+1)*r]`.
@@ -32,72 +73,156 @@ pub struct FamilyCounts {
 pub enum CountsTable {
     /// `counts[j * r + k]`, `q * r` cells.
     Dense(Vec<u32>),
-    /// config-index -> child histogram of length `r`.
-    Sparse(HashMap<u64, Vec<u32>>),
+    /// `(config index, child histogram)`, sorted ascending by config —
+    /// the same iteration order as the dense table's non-empty configs,
+    /// which is what makes sparse BDeu sums `to_bits`-equal to dense.
+    Sparse(Vec<(u64, Vec<u32>)>),
+    /// `(parent state tuple, child histogram)` for parent sets whose
+    /// mixed-radix `q` overflows `u64`; tuples are in `parents` order
+    /// and sorted lexicographically (deterministic iteration).
+    Wide(Vec<(Box<[u8]>, Vec<u32>)>),
 }
 
-/// Compute family counts of `child` given `parents` over `data`.
+/// Compute family counts of `child` given `parents` over `data` — the
+/// scalar reference counter (see module docs).
 ///
 /// `parents` must not contain `child`; order does not matter for the
 /// score but determines the (internal) configuration encoding.
 pub fn family_counts(data: &Dataset, child: usize, parents: &[usize]) -> FamilyCounts {
+    family_counts_with_limit(data, child, parents, DENSE_LIMIT)
+}
+
+/// [`family_counts`] with an injectable dense-table cell limit, so
+/// tests can force the sparse path on small families and pin it
+/// against the dense one.
+pub fn family_counts_with_limit(
+    data: &Dataset,
+    child: usize,
+    parents: &[usize],
+    dense_limit: u64,
+) -> FamilyCounts {
     let r = data.card(child) as usize;
-    let m = data.n_rows();
     // Configuration strides: mixed-radix encoding over parent states.
+    // All products are checked — saturation must route to a hashed
+    // counter, never alias distinct configs in a wrapped-size table.
     let mut q: u64 = 1;
     let mut strides = Vec::with_capacity(parents.len());
     for &p in parents {
         strides.push(q);
-        q = q.saturating_mul(data.card(p) as u64);
+        match q.checked_mul(data.card(p) as u64) {
+            Some(next) => q = next,
+            None => return wide_counts(data, child, parents),
+        }
     }
+    match q.checked_mul(r as u64) {
+        Some(cells) if cells <= dense_limit => {
+            let counts = dense_scalar(data, child, parents, &strides, (q as usize) * r);
+            FamilyCounts { r, table: CountsTable::Dense(counts) }
+        }
+        _ => sparse_counts(data, child, parents, &strides),
+    }
+}
 
+/// Dense per-row radix accumulation off the raw byte columns.
+fn dense_scalar(
+    data: &Dataset,
+    child: usize,
+    parents: &[usize],
+    strides: &[u64],
+    cells: usize,
+) -> Vec<u32> {
+    let m = data.n_rows();
+    let r = data.card(child) as usize;
     let child_col = data.col(child);
-    if q * r as u64 <= DENSE_LIMIT {
-        let mut counts = vec![0u32; (q as usize) * r];
-        match parents.len() {
-            0 => {
-                for t in 0..m {
-                    counts[child_col[t] as usize] += 1;
-                }
-            }
-            1 => {
-                // Specialized single-parent loop: the dominant call
-                // shape in GES (pairwise deltas) — keep it branch-free.
-                let p0 = data.col(parents[0]);
-                for t in 0..m {
-                    counts[p0[t] as usize * r + child_col[t] as usize] += 1;
-                }
-            }
-            _ => {
-                let pcols: Vec<&[u8]> = parents.iter().map(|&p| data.col(p)).collect();
-                for t in 0..m {
-                    let mut cfg = 0u64;
-                    for (s, col) in strides.iter().zip(&pcols) {
-                        cfg += s * col[t] as u64;
-                    }
-                    counts[cfg as usize * r + child_col[t] as usize] += 1;
-                }
+    let mut counts = vec![0u32; cells];
+    match parents.len() {
+        0 => {
+            for t in 0..m {
+                counts[child_col[t] as usize] += 1;
             }
         }
-        FamilyCounts { r, table: CountsTable::Dense(counts) }
-    } else {
-        let pcols: Vec<&[u8]> = parents.iter().map(|&p| data.col(p)).collect();
-        let mut map: HashMap<u64, Vec<u32>> = HashMap::new();
-        for t in 0..m {
-            let mut cfg = 0u64;
-            for (s, col) in strides.iter().zip(&pcols) {
-                cfg += s * col[t] as u64;
+        1 => {
+            // Specialized single-parent loop: the dominant call
+            // shape in GES (pairwise deltas) — keep it branch-free.
+            let p0 = data.col(parents[0]);
+            for t in 0..m {
+                counts[p0[t] as usize * r + child_col[t] as usize] += 1;
             }
-            map.entry(cfg).or_insert_with(|| vec![0u32; r])[child_col[t] as usize] += 1;
         }
-        FamilyCounts { r, table: CountsTable::Sparse(map) }
+        _ => {
+            let pcols: Vec<&[u8]> = parents.iter().map(|&p| data.col(p)).collect();
+            for t in 0..m {
+                let mut cfg = 0u64;
+                for (s, col) in strides.iter().zip(&pcols) {
+                    cfg += s * col[t] as u64;
+                }
+                counts[cfg as usize * r + child_col[t] as usize] += 1;
+            }
+        }
     }
+    counts
+}
+
+/// Hashed sparse counter (config fits `u64`, table would not): only
+/// observed configurations materialize, sorted ascending afterwards.
+fn sparse_counts(
+    data: &Dataset,
+    child: usize,
+    parents: &[usize],
+    strides: &[u64],
+) -> FamilyCounts {
+    let m = data.n_rows();
+    let r = data.card(child) as usize;
+    let child_col = data.col(child);
+    let pcols: Vec<&[u8]> = parents.iter().map(|&p| data.col(p)).collect();
+    let mut map: HashMap<u64, Vec<u32>> = HashMap::new();
+    for t in 0..m {
+        let mut cfg = 0u64;
+        for (s, col) in strides.iter().zip(&pcols) {
+            cfg += s * col[t] as u64;
+        }
+        map.entry(cfg).or_insert_with(|| vec![0u32; r])[child_col[t] as usize] += 1;
+    }
+    let mut entries: Vec<(u64, Vec<u32>)> = map.into_iter().collect();
+    entries.sort_unstable_by_key(|&(cfg, _)| cfg);
+    FamilyCounts { r, table: CountsTable::Sparse(entries) }
+}
+
+/// Tuple-keyed counter for parent sets whose `q` overflows `u64`: the
+/// key is the raw parent-state tuple (one byte per parent, in
+/// `parents` order), sorted lexicographically afterwards.
+fn wide_counts(data: &Dataset, child: usize, parents: &[usize]) -> FamilyCounts {
+    let m = data.n_rows();
+    let r = data.card(child) as usize;
+    let child_col = data.col(child);
+    let pcols: Vec<&[u8]> = parents.iter().map(|&p| data.col(p)).collect();
+    let mut map: HashMap<Box<[u8]>, Vec<u32>> = HashMap::new();
+    let mut key = vec![0u8; parents.len()];
+    for t in 0..m {
+        for (slot, col) in key.iter_mut().zip(&pcols) {
+            *slot = col[t];
+        }
+        // Probe by slice (Box<[u8]>: Borrow<[u8]>) so only the first
+        // occurrence of a tuple allocates a key.
+        match map.get_mut(key.as_slice()) {
+            Some(hist) => hist[child_col[t] as usize] += 1,
+            None => {
+                let mut hist = vec![0u32; r];
+                hist[child_col[t] as usize] += 1;
+                map.insert(key.clone().into_boxed_slice(), hist);
+            }
+        }
+    }
+    let mut entries: Vec<(Box<[u8]>, Vec<u32>)> = map.into_iter().collect();
+    entries.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+    FamilyCounts { r, table: CountsTable::Wide(entries) }
 }
 
 impl FamilyCounts {
     /// Iterate parent-configuration histograms (observed configs only
     /// for sparse tables; dense tables include empty configs, which
-    /// score 0 under BDeu).
+    /// score 0 under BDeu). Sparse/wide iteration is in sorted config
+    /// order — the same order as the dense table's non-empty configs.
     pub fn for_each_config<F: FnMut(&[u32])>(&self, mut f: F) {
         match &self.table {
             CountsTable::Dense(v) => {
@@ -105,8 +230,13 @@ impl FamilyCounts {
                     f(chunk);
                 }
             }
-            CountsTable::Sparse(m) => {
-                for hist in m.values() {
+            CountsTable::Sparse(entries) => {
+                for (_, hist) in entries {
+                    f(hist);
+                }
+            }
+            CountsTable::Wide(entries) => {
+                for (_, hist) in entries {
                     f(hist);
                 }
             }
@@ -121,9 +251,370 @@ impl FamilyCounts {
     }
 }
 
+// =====================================================================
+// The word-parallel counting engine.
+// =====================================================================
+
+/// Which counting implementation a [`Counter`] uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CountMode {
+    /// Packed fast paths (popcount / row-block tiled / packed-decode);
+    /// results are identical to `Reference` by construction.
+    Packed,
+    /// Delegate every family to the scalar reference counter — the
+    /// pinning oracle and perf baseline.
+    Reference,
+}
+
+/// [`Counter`] configuration. Thresholds are injectable so tests can
+/// force each path on small data.
+#[derive(Clone, Debug)]
+pub struct CountConfig {
+    pub mode: CountMode,
+    /// Max dense-table cells before the sparse counter takes over.
+    pub dense_limit: u64,
+    /// Popcount-path gate: max dense cells (the triple loop over
+    /// plane pairs is quadratic in cells) — combined with the
+    /// [`POPCOUNT_ADVANTAGE`] work-ratio test.
+    pub popcount_max_cells: u64,
+    /// Minimum rows before the row-block tiled parallel path engages
+    /// (below it, thread spawn costs more than the count).
+    pub par_rows: usize,
+    /// Workers for the row-block tiled path.
+    pub par_threads: usize,
+}
+
+impl Default for CountConfig {
+    fn default() -> Self {
+        CountConfig {
+            mode: CountMode::Packed,
+            dense_limit: DENSE_LIMIT,
+            popcount_max_cells: 256,
+            par_rows: 1 << 16,
+            par_threads: crate::util::num_threads().min(8),
+        }
+    }
+}
+
+impl CountConfig {
+    /// Reference-mode config (scalar counter for every family).
+    pub fn reference() -> Self {
+        CountConfig { mode: CountMode::Reference, ..Default::default() }
+    }
+}
+
+/// Families counted per strategy plus count-reuse stats — atomics so
+/// concurrent scoring threads tick them lock-free.
+#[derive(Default)]
+pub struct CountStats {
+    popcount: AtomicU64,
+    blocked: AtomicU64,
+    dense: AtomicU64,
+    sparse: AtomicU64,
+    derived: AtomicU64,
+    table_hits: AtomicU64,
+    table_misses: AtomicU64,
+}
+
+/// Plain-integer snapshot of [`CountStats`] (telemetry / benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CountSnapshot {
+    /// Families counted via bit-plane popcounts.
+    pub popcount: u64,
+    /// Families counted via row-block tiled partial tables.
+    pub blocked: u64,
+    /// Families counted via the scalar dense path (packed decode in
+    /// `Packed` mode, raw bytes in `Reference` mode).
+    pub dense: u64,
+    /// Families counted via a hashed (sparse or wide) counter.
+    pub sparse: u64,
+    /// Subset-family histograms derived by marginalizing a cached
+    /// superset table instead of re-streaming data.
+    pub derived: u64,
+    /// Contingency-table cache hits / misses (count-reuse layer).
+    pub table_hits: u64,
+    pub table_misses: u64,
+}
+
+/// Table-cache key: `(child, sorted parents)`.
+type TableKey = (u32, Vec<u32>);
+
+/// The counting engine one scorer (and all its clones) shares: the
+/// packed view of the dataset, the path-selection config, stats, and
+/// the small dense contingency-table cache behind the count-reuse
+/// layer.
+pub struct Counter {
+    data: Arc<Dataset>,
+    packed: PackedData,
+    cfg: CountConfig,
+    stats: CountStats,
+    tables: Mutex<HashMap<TableKey, Arc<Vec<u32>>>>,
+}
+
+impl Counter {
+    /// Pack `data` and build an engine with `cfg`.
+    pub fn new(data: Arc<Dataset>, cfg: CountConfig) -> Counter {
+        let packed = PackedData::pack(&data);
+        Counter { data, packed, cfg, stats: CountStats::default(), tables: Mutex::new(HashMap::new()) }
+    }
+
+    /// The engine's configuration.
+    pub fn config(&self) -> &CountConfig {
+        &self.cfg
+    }
+
+    /// The dataset this engine counts over.
+    pub fn data(&self) -> &Arc<Dataset> {
+        &self.data
+    }
+
+    /// Current path/reuse counters.
+    pub fn stats(&self) -> CountSnapshot {
+        CountSnapshot {
+            popcount: self.stats.popcount.load(Ordering::Relaxed),
+            blocked: self.stats.blocked.load(Ordering::Relaxed),
+            dense: self.stats.dense.load(Ordering::Relaxed),
+            sparse: self.stats.sparse.load(Ordering::Relaxed),
+            derived: self.stats.derived.load(Ordering::Relaxed),
+            table_hits: self.stats.table_hits.load(Ordering::Relaxed),
+            table_misses: self.stats.table_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Dense-table cell count of the family, `None` when the family is
+    /// not dense under this config (product overflow or past the
+    /// limit). The single density predicate shared by the engine and
+    /// the count-reuse layer, so they can never disagree.
+    pub fn dense_cells(&self, child: usize, parents: &[usize]) -> Option<u64> {
+        let mut q: u64 = 1;
+        for &p in parents {
+            q = q.checked_mul(self.data.card(p) as u64)?;
+        }
+        let cells = q.checked_mul(self.data.card(child) as u64)?;
+        (cells <= self.cfg.dense_limit).then_some(cells)
+    }
+
+    /// Count the family through the engine's fast paths (or the
+    /// reference, per [`CountConfig::mode`]). Identical tables to
+    /// [`family_counts_with_limit`] on every input.
+    pub fn family_counts(&self, child: usize, parents: &[usize]) -> FamilyCounts {
+        if self.cfg.mode == CountMode::Reference {
+            let fc = family_counts_with_limit(&self.data, child, parents, self.cfg.dense_limit);
+            match fc.table {
+                CountsTable::Dense(_) => self.stats.dense.fetch_add(1, Ordering::Relaxed),
+                _ => self.stats.sparse.fetch_add(1, Ordering::Relaxed),
+            };
+            return fc;
+        }
+        let Some(cells) = self.dense_cells(child, parents) else {
+            self.stats.sparse.fetch_add(1, Ordering::Relaxed);
+            return family_counts_with_limit(&self.data, child, parents, self.cfg.dense_limit);
+        };
+        let r = self.data.card(child) as usize;
+        let m = self.packed.n_rows();
+        let counts = if self.popcount_eligible(child, parents, cells, m) {
+            self.stats.popcount.fetch_add(1, Ordering::Relaxed);
+            self.popcount_table(child, parents, cells as usize)
+        } else if m >= self.cfg.par_rows && self.cfg.par_threads > 1 && cells <= BLOCKED_MAX_CELLS
+        {
+            self.stats.blocked.fetch_add(1, Ordering::Relaxed);
+            self.blocked_table(child, parents, cells as usize)
+        } else {
+            self.stats.dense.fetch_add(1, Ordering::Relaxed);
+            self.decode_range(child, parents, cells as usize, 0, m)
+        };
+        FamilyCounts { r, table: CountsTable::Dense(counts) }
+    }
+
+    /// Dense table of the family through the bounded contingency-table
+    /// cache. Caller must have checked [`Counter::dense_cells`].
+    pub fn dense_table(&self, child: usize, parents: &[usize]) -> Arc<Vec<u32>> {
+        let key: TableKey = (child as u32, parents.iter().map(|&p| p as u32).collect());
+        debug_assert!(key.1.windows(2).all(|w| w[0] < w[1]));
+        if let Some(t) = self.tables.lock().expect("table cache poisoned").get(&key) {
+            self.stats.table_hits.fetch_add(1, Ordering::Relaxed);
+            return t.clone();
+        }
+        self.stats.table_misses.fetch_add(1, Ordering::Relaxed);
+        let fc = self.family_counts(child, parents);
+        let counts = match fc.table {
+            CountsTable::Dense(v) => Arc::new(v),
+            _ => unreachable!("dense_table caller must check dense_cells first"),
+        };
+        if counts.len() <= TABLE_CACHE_MAX_CELLS {
+            let mut guard = self.tables.lock().expect("table cache poisoned");
+            if guard.len() >= TABLE_CACHE_MAX_ENTRIES {
+                guard.clear();
+            }
+            guard.insert(key, counts.clone());
+        }
+        counts
+    }
+
+    /// Marginalize parent `sup_cards[pos]` out of a dense superset
+    /// table: the count-reuse layer's subset derivation. `sup` is laid
+    /// out `cfg * r + k` with mixed-radix `cfg` over `sup_cards`
+    /// (ascending strides); the result is the identical integer table a
+    /// direct count of the reduced family would produce.
+    pub fn derive_marginal(
+        &self,
+        sup: &[u32],
+        r: usize,
+        sup_cards: &[usize],
+        pos: usize,
+    ) -> Vec<u32> {
+        self.stats.derived.fetch_add(1, Ordering::Relaxed);
+        let cx = sup_cards[pos];
+        // Configs below / above the removed digit.
+        let low: usize = sup_cards[..pos].iter().product();
+        let q_sup = sup.len() / r;
+        let high = q_sup / (low * cx);
+        let mut base = vec![0u32; (q_sup / cx) * r];
+        // sup cfg = hi·(low·cx) + xs·low + lo  →  base cfg = hi·low + lo;
+        // (lo, k) cells are contiguous, so each transfer is one slice add.
+        let block = low * r;
+        for hi in 0..high {
+            let dst = &mut base[hi * block..(hi + 1) * block];
+            for xs in 0..cx {
+                let off = (hi * cx + xs) * block;
+                for (d, s) in dst.iter_mut().zip(&sup[off..off + block]) {
+                    *d += s;
+                }
+            }
+        }
+        base
+    }
+
+    /// Popcount-path gate: planes for every involved column, small
+    /// table, and the word-work bounded by the scalar row-work.
+    fn popcount_eligible(&self, child: usize, parents: &[usize], cells: u64, m: usize) -> bool {
+        if parents.len() > 2 || cells > self.cfg.popcount_max_cells {
+            return false;
+        }
+        if self.packed.col(child).planes().is_none()
+            || parents.iter().any(|&p| self.packed.col(p).planes().is_none())
+        {
+            return false;
+        }
+        cells.saturating_mul(self.packed.words() as u64) <= POPCOUNT_ADVANTAGE * m as u64
+    }
+
+    /// Count via AND + popcount over state bit-planes (≤ 2 parents).
+    fn popcount_table(&self, child: usize, parents: &[usize], cells: usize) -> Vec<u32> {
+        let child_planes = self.packed.col(child).planes().expect("gate checked planes");
+        let r = child_planes.len();
+        let mut counts = vec![0u32; cells];
+        match parents {
+            [] => {
+                for (k, ck) in child_planes.iter().enumerate() {
+                    counts[k] = ck.iter().map(|w| w.count_ones()).sum();
+                }
+            }
+            [p] => {
+                let pp = self.packed.col(*p).planes().expect("gate checked planes");
+                for (j, pj) in pp.iter().enumerate() {
+                    for (k, ck) in child_planes.iter().enumerate() {
+                        counts[j * r + k] =
+                            pj.iter().zip(ck).map(|(a, b)| (a & b).count_ones()).sum();
+                    }
+                }
+            }
+            [p0, p1] => {
+                let pl0 = self.packed.col(*p0).planes().expect("gate checked planes");
+                let pl1 = self.packed.col(*p1).planes().expect("gate checked planes");
+                let c0 = pl0.len();
+                let mut and01 = vec![0u64; self.packed.words()];
+                for (j1, pj1) in pl1.iter().enumerate() {
+                    for (j0, pj0) in pl0.iter().enumerate() {
+                        for ((w, a), b) in and01.iter_mut().zip(pj0).zip(pj1) {
+                            *w = a & b;
+                        }
+                        let row = (j1 * c0 + j0) * r;
+                        for (k, ck) in child_planes.iter().enumerate() {
+                            counts[row + k] =
+                                and01.iter().zip(ck).map(|(a, b)| (a & b).count_ones()).sum();
+                        }
+                    }
+                }
+            }
+            _ => unreachable!("popcount gate admits at most 2 parents"),
+        }
+        counts
+    }
+
+    /// Row-block tiled counting: static row chunks, one partial table
+    /// per worker, reduced by integer addition (order-independent, so
+    /// the result is deterministic regardless of thread scheduling).
+    fn blocked_table(&self, child: usize, parents: &[usize], cells: usize) -> Vec<u32> {
+        let m = self.packed.n_rows();
+        let threads = self.cfg.par_threads;
+        let chunk = m.div_ceil(threads).max(1);
+        let n_chunks = m.div_ceil(chunk);
+        let partials = par_map_index(n_chunks, threads, |i| {
+            let lo = i * chunk;
+            let hi = (lo + chunk).min(m);
+            self.decode_range(child, parents, cells, lo, hi)
+        });
+        let mut counts = vec![0u32; cells];
+        for partial in partials {
+            for (c, p) in counts.iter_mut().zip(&partial) {
+                *c += p;
+            }
+        }
+        counts
+    }
+
+    /// Scalar dense counting over rows `lo..hi`, decoding states from
+    /// the packed codes (shift + mask instead of byte loads).
+    fn decode_range(
+        &self,
+        child: usize,
+        parents: &[usize],
+        cells: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Vec<u32> {
+        let cc = self.packed.col(child);
+        let r = self.data.card(child) as usize;
+        let mut counts = vec![0u32; cells];
+        match parents.len() {
+            0 => {
+                for t in lo..hi {
+                    counts[cc.code(t)] += 1;
+                }
+            }
+            1 => {
+                let p0 = self.packed.col(parents[0]);
+                for t in lo..hi {
+                    counts[p0.code(t) * r + cc.code(t)] += 1;
+                }
+            }
+            _ => {
+                let pcols: Vec<&crate::data::PackedCol> =
+                    parents.iter().map(|&p| self.packed.col(p)).collect();
+                let mut strides = Vec::with_capacity(parents.len());
+                let mut s = 1usize;
+                for pc in &pcols {
+                    strides.push(s);
+                    s *= pc.card() as usize;
+                }
+                for t in lo..hi {
+                    let mut cfg = 0usize;
+                    for (s, pc) in strides.iter().zip(&pcols) {
+                        cfg += s * pc.code(t);
+                    }
+                    counts[cfg * r + cc.code(t)] += 1;
+                }
+            }
+        }
+        counts
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
 
     fn toy() -> Dataset {
         // X0 (card 2), X1 (card 3), X2 (card 2)
@@ -135,6 +626,17 @@ mod tests {
                 vec![0, 0, 1, 1, 1, 0],
             ],
         )
+    }
+
+    /// Dataset of `cols` columns with the given cardinality whose
+    /// states only use `used` values — lets a family's *declared* q
+    /// blow up while the data stays tiny.
+    fn wide_decl(cols: usize, card: u32, used: u32, rows: usize) -> Dataset {
+        let mut rng = Rng::new(7);
+        let data = (0..cols)
+            .map(|_| (0..rows).map(|_| rng.gen_range(used as usize) as u8).collect())
+            .collect();
+        Dataset::unnamed(vec![card; cols], data)
     }
 
     #[test]
@@ -171,16 +673,108 @@ mod tests {
     }
 
     #[test]
-    fn sparse_matches_dense_totals() {
-        // Force sparse by a synthetic huge-q family: craft via many
-        // parents over the toy data is impossible (q small), so check
-        // the sparse path directly through a low DENSE_LIMIT simulation:
-        // emulate by calling with enough parents to overflow is not
-        // feasible here; instead assert the encoding invariants on the
-        // dense path (sparse path is exercised in integration tests on
-        // wide networks).
+    fn injectable_limit_forces_sorted_sparse() {
         let d = toy();
-        let fc = family_counts(&d, 2, &[0, 1]);
-        assert_eq!(fc.total(), d.n_rows() as u64);
+        let dense = family_counts(&d, 0, &[1, 2]);
+        let sparse = family_counts_with_limit(&d, 0, &[1, 2], 1);
+        let CountsTable::Sparse(entries) = &sparse.table else {
+            panic!("limit 1 must force sparse");
+        };
+        assert!(entries.windows(2).all(|w| w[0].0 < w[1].0), "sparse configs must be sorted");
+        assert_eq!(sparse.total(), dense.total());
+        // Sparse histograms = the dense table's non-empty configs, in order.
+        let CountsTable::Dense(dv) = &dense.table else { unreachable!() };
+        let dense_nonempty: Vec<&[u32]> = dv
+            .chunks_exact(dense.r)
+            .filter(|h| h.iter().any(|&x| x > 0))
+            .collect();
+        let sparse_hists: Vec<&[u32]> = entries.iter().map(|(_, h)| h.as_slice()).collect();
+        assert_eq!(dense_nonempty, sparse_hists);
+    }
+
+    #[test]
+    fn overflowing_cells_route_to_sparse() {
+        // q = 64^10 = 2^60 fits u64, but q·r = 2^60 · 64 = 2^66
+        // overflows — must go sparse, not alias in a wrapped table.
+        let d = wide_decl(11, 64, 2, 40);
+        let parents: Vec<usize> = (1..11).collect();
+        let fc = family_counts(&d, 0, &parents);
+        assert!(matches!(fc.table, CountsTable::Sparse(_)), "2^64-cell family must be sparse");
+        assert_eq!(fc.total(), 40);
+    }
+
+    #[test]
+    fn overflowing_q_routes_to_wide() {
+        // q = 64^11 = 2^66 overflows u64 itself — tuple-keyed counter.
+        let d = wide_decl(12, 64, 2, 40);
+        let parents: Vec<usize> = (1..12).collect();
+        let fc = family_counts(&d, 0, &parents);
+        let CountsTable::Wide(entries) = &fc.table else {
+            panic!("q-overflow family must use the wide counter");
+        };
+        assert!(entries.windows(2).all(|w| w[0].0 < w[1].0), "wide tuples must be sorted");
+        assert_eq!(fc.total(), 40);
+        let mut nconfigs = 0;
+        fc.for_each_config(|_| nconfigs += 1);
+        assert!(nconfigs <= 40, "at most one config per row");
+    }
+
+    #[test]
+    fn engine_paths_match_reference_on_toy() {
+        let d = Arc::new(toy());
+        // Defaults (popcount eligible: all cards ≤ 8, tiny tables) and
+        // a forced row-block tiled engine.
+        let popcnt = Counter::new(d.clone(), CountConfig::default());
+        let tiled = Counter::new(
+            d.clone(),
+            CountConfig { par_rows: 1, par_threads: 3, ..Default::default() },
+        );
+        for parents in [vec![], vec![1], vec![1, 2]] {
+            let reference = family_counts(&d, 0, &parents);
+            for eng in [&popcnt, &tiled] {
+                let fc = eng.family_counts(0, &parents);
+                let (CountsTable::Dense(a), CountsTable::Dense(b)) =
+                    (&fc.table, &reference.table)
+                else {
+                    panic!("toy families are dense");
+                };
+                assert_eq!(a, b, "parents {parents:?}");
+            }
+        }
+        assert!(popcnt.stats().popcount >= 2, "0/1-parent families must take the popcount path");
+        assert!(tiled.stats().blocked >= 1, "par_rows=1 must engage the tiled path");
+    }
+
+    #[test]
+    fn derive_marginal_matches_direct_count() {
+        let d = Arc::new(toy());
+        let eng = Counter::new(d.clone(), CountConfig::default());
+        // Superset family 0 | {1, 2}; marginalize out each parent.
+        let sup = match eng.family_counts(0, &[1, 2]).table {
+            CountsTable::Dense(v) => v,
+            _ => unreachable!(),
+        };
+        let sup_cards = [3usize, 2];
+        for (pos, remaining) in [(0usize, vec![2usize]), (1, vec![1])] {
+            let derived = eng.derive_marginal(&sup, 2, &sup_cards, pos);
+            let direct = match family_counts(&d, 0, &remaining).table {
+                CountsTable::Dense(v) => v,
+                _ => unreachable!(),
+            };
+            assert_eq!(derived, direct, "marginalizing out digit {pos}");
+        }
+        assert_eq!(eng.stats().derived, 2);
+    }
+
+    #[test]
+    fn dense_table_cache_hits_and_reuses() {
+        let d = Arc::new(toy());
+        let eng = Counter::new(d, CountConfig::default());
+        assert!(eng.dense_cells(0, &[1, 2]).is_some());
+        let a = eng.dense_table(0, &[1, 2]);
+        let b = eng.dense_table(0, &[1, 2]);
+        assert_eq!(a, b);
+        let s = eng.stats();
+        assert_eq!((s.table_hits, s.table_misses), (1, 1));
     }
 }

@@ -8,8 +8,11 @@ pub mod counts;
 pub mod lgamma;
 pub mod pairwise;
 
-pub use bdeu::BdeuScorer;
+pub use bdeu::{bdeu_dense_score, bdeu_family_score, BdeuScorer};
 pub use cache::ScoreCache;
-pub use counts::{family_counts, CountsTable, FamilyCounts};
+pub use counts::{
+    family_counts, family_counts_with_limit, CountConfig, CountMode, CountSnapshot, Counter,
+    CountsTable, FamilyCounts,
+};
 pub use lgamma::ln_gamma;
 pub use pairwise::{pairwise_similarity, PairwiseScores};

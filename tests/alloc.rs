@@ -8,15 +8,27 @@
 //! This test wraps the global allocator in a counter and pins that
 //! bound, so any reintroduced per-query table allocation fails loudly.
 //!
+//! The same harness pins the scorer probe path: cold zero- and
+//! one-parent family scoring must allocate a row-count-independent
+//! handful per family (the count table and cache bookkeeping — never
+//! anything per row), and warm probes must allocate nothing.
+//!
 //! This lives in its own integration-test binary because a global
-//! allocator is process-wide; the single test keeps the counter
-//! readable.
+//! allocator is process-wide; the tests serialize on [`LOCK`] so the
+//! shared counter reads cleanly.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use cges::bn::{generate, NetGenConfig};
+use cges::data::Dataset;
 use cges::engine::CompiledModel;
+use cges::score::BdeuScorer;
+
+/// Serializes the tests in this binary: the allocation counter is
+/// process-global, so concurrent tests would pollute each other.
+static LOCK: Mutex<()> = Mutex::new(());
 
 /// System allocator with an allocation counter (dealloc is free).
 struct CountingAlloc;
@@ -49,6 +61,7 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 #[test]
 fn steady_state_marginals_allocate_only_the_posterior() {
+    let _guard = LOCK.lock().unwrap();
     let cfg = NetGenConfig {
         nodes: 12,
         edges: 16,
@@ -120,4 +133,81 @@ fn steady_state_marginals_allocate_only_the_posterior() {
         "steady-state joint_map allocated {total} times over {queries} queries \
          (budget {budget}: the max-product arena must not allocate tables)"
     );
+}
+
+/// Deterministic synthetic dataset for the scorer probe test: `vars`
+/// columns of the given cardinalities, `rows` rows, values from a
+/// cheap mixing function so nothing degenerates to constant columns.
+fn probe_data(cards: &[u32], rows: usize) -> Dataset {
+    let cols: Vec<Vec<u8>> = cards
+        .iter()
+        .enumerate()
+        .map(|(v, &card)| {
+            (0..rows)
+                .map(|t| {
+                    let h = (t as u64)
+                        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                        .wrapping_add(v as u64 * 0x517c_c1b7_2722_0a95);
+                    ((h >> 33) % card as u64) as u8
+                })
+                .collect()
+        })
+        .collect();
+    Dataset::unnamed(cards.to_vec(), cols)
+}
+
+#[test]
+fn family_scoring_allocates_independent_of_row_count() {
+    let _guard = LOCK.lock().unwrap();
+    let cards: Vec<u32> = vec![2, 3, 2, 4, 2, 3, 2, 2, 3, 2];
+    let n = cards.len();
+
+    // The cold 0-/1-parent probe path must allocate a small, bounded
+    // amount per family — the counts table (at most r·card cells), the
+    // cache insert's bookkeeping, the parent-index vector — and never
+    // anything proportional to the number of rows. Measuring the same
+    // family sweep at 1k and 4k rows under one shared budget pins that:
+    // a reintroduced per-row allocation passes neither size.
+    let families = n + n * (n - 1); // all 0-parent + all 1-parent
+    let cold_budget = families * 16 + 64; // + slack for cache shard tables
+    for rows in [1000usize, 4000] {
+        let data = std::sync::Arc::new(probe_data(&cards, rows));
+        // Construction packs the dataset into bit-planes; that is
+        // allowed to allocate, so it happens outside the window.
+        let sc = BdeuScorer::new(data, 8.0);
+
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for child in 0..n {
+            sc.local(child, &[]);
+            for p in 0..n {
+                if p != child {
+                    sc.local(child, &[p]);
+                }
+            }
+        }
+        let cold = ALLOCS.load(Ordering::Relaxed) - before;
+        assert!(
+            cold <= cold_budget,
+            "cold scoring of {families} families at {rows} rows allocated {cold} times \
+             (budget {cold_budget}: the popcount counting path must not allocate per row)"
+        );
+
+        // Warm probes are pure cache hits through stack-inline keys:
+        // the whole sweep must not touch the heap at all.
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for child in 0..n {
+            sc.local(child, &[]);
+            for p in 0..n {
+                if p != child {
+                    sc.local(child, &[p]);
+                }
+            }
+        }
+        let warm = ALLOCS.load(Ordering::Relaxed) - before;
+        assert!(
+            warm <= 8,
+            "warm probes of {families} cached families allocated {warm} times \
+             (the inline-key cache hit path must be allocation-free)"
+        );
+    }
 }

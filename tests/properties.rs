@@ -5,6 +5,8 @@
 use std::sync::Arc;
 
 use cges::bn::{forward_sample, generate, netgen::random_dag, read_bif, write_bif, NetGenConfig};
+use cges::coordinator::{cges, RingConfig, RingMode};
+use cges::data::Dataset;
 use cges::fusion::{fuse, sigma_consistent_imap};
 use cges::graph::{
     complete_pdag, d_separated, dag_from_bytes, dag_to_bytes, dag_to_cpdag, markov_equivalent,
@@ -12,12 +14,15 @@ use cges::graph::{
 };
 use cges::infer::factor::Factor;
 use cges::infer::kernel::{self, reference};
-use cges::learn::{ges, GesConfig};
+use cges::learn::{fges, ges, FgesConfig, GesConfig};
 use cges::metrics::smhd;
 use cges::model::{bundle_from_bytes, bundle_to_bytes, Bundle, BundleMeta};
 use cges::partition::{assign_edges, cluster_variables, partition_stats};
 use cges::rng::Rng;
-use cges::score::{pairwise_similarity, BdeuScorer};
+use cges::score::{
+    bdeu_family_score, family_counts, family_counts_with_limit, pairwise_similarity, BdeuScorer,
+    CountConfig, CountMode, Counter, CountsTable, FamilyCounts,
+};
 use cges::util::BitSet;
 
 const TRIALS: u64 = 40;
@@ -541,5 +546,236 @@ fn prop_ges_result_is_valid_cpdag_and_local_optimum_wrt_deletes() {
                 "seed {seed}: deleting {u}->{v} improves score"
             );
         }
+    }
+}
+
+/// Random raw dataset for the counting-core tests: cardinalities
+/// mostly inside the bit-plane range (2..=5, so 1-/2-/4-bit packing
+/// and the popcount path all fire), occasionally past it (9..=12:
+/// packed but plane-less, exercising the decode fallback).
+fn random_count_data(n: usize, rows: usize, rng: &mut Rng) -> Arc<Dataset> {
+    let cards: Vec<u32> = (0..n)
+        .map(|_| {
+            if rng.gen_range(5) == 0 {
+                9 + rng.gen_range(4) as u32
+            } else {
+                2 + rng.gen_range(4) as u32
+            }
+        })
+        .collect();
+    let cols: Vec<Vec<u8>> = cards
+        .iter()
+        .map(|&c| (0..rows).map(|_| rng.gen_range(c as usize) as u8).collect())
+        .collect();
+    Arc::new(Dataset::unnamed(cards, cols))
+}
+
+/// Random family: a child plus up to `max_parents` distinct parents
+/// (excluding the child).
+fn random_family(n: usize, max_parents: usize, rng: &mut Rng) -> (usize, Vec<usize>) {
+    let child = rng.gen_range(n);
+    let k = rng.gen_range(max_parents + 1);
+    let mut parents = rng.sample_indices(n, (k + 1).min(n));
+    parents.retain(|&p| p != child);
+    parents.truncate(k);
+    (child, parents)
+}
+
+/// The non-empty parent-configuration histograms in iteration order —
+/// the comparable content of a [`FamilyCounts`] regardless of
+/// representation (dense sweeps also visit empty configs, which carry
+/// no counts, so drop them on both sides).
+fn histograms(c: &FamilyCounts) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    c.for_each_config(|h| {
+        if h.iter().any(|&x| x > 0) {
+            out.push(h.to_vec());
+        }
+    });
+    out
+}
+
+#[test]
+fn prop_count_engines_match_scalar_reference_tables() {
+    // Every engine path — popcount (≤2 parents, planed, small), blocked
+    // row-tiled (forced via par_rows: 1), packed decode (plane-less or
+    // 3-parent) — must reproduce the scalar reference count tables
+    // exactly on randomized cardinalities, row counts and families.
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xC027);
+        let n = 5 + rng.gen_range(4);
+        let rows = 60 + rng.gen_range(400);
+        let data = random_count_data(n, rows, &mut rng);
+        let packed = Counter::new(data.clone(), CountConfig::default());
+        let tiled = Counter::new(
+            data.clone(),
+            CountConfig { par_rows: 1, par_threads: 3, ..CountConfig::default() },
+        );
+        for _ in 0..12 {
+            let (child, parents) = random_family(n, 3, &mut rng);
+            let want = family_counts(&data, child, &parents);
+            for (name, engine) in [("packed", &packed), ("tiled", &tiled)] {
+                let got = engine.family_counts(child, &parents);
+                assert_eq!(
+                    got.r, want.r,
+                    "seed {seed}: {name} r changed, child {child} parents {parents:?}"
+                );
+                assert_eq!(
+                    histograms(&got),
+                    histograms(&want),
+                    "seed {seed}: {name} counts diverge, child {child} parents {parents:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_count_sparse_scores_match_dense_bitwise() {
+    // Forcing the sorted-sparse representation (dense_limit = 1) must
+    // leave every BDeu family score bit-identical to the dense sweep:
+    // sparse iterates the same non-empty histograms in the same order,
+    // so the float sequence is literally the same.
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x59A2);
+        let n = 5 + rng.gen_range(4);
+        let rows = 40 + rng.gen_range(300);
+        let data = random_count_data(n, rows, &mut rng);
+        let ess = 1.0 + (seed % 7) as f64;
+        for _ in 0..10 {
+            let (child, parents) = random_family(n, 3, &mut rng);
+            let dense = family_counts(&data, child, &parents);
+            let sparse = family_counts_with_limit(&data, child, &parents, 1);
+            assert!(
+                matches!(sparse.table, CountsTable::Sparse(_)),
+                "seed {seed}: limit 1 did not force the sparse representation"
+            );
+            let q: f64 = parents.iter().map(|&p| data.card(p) as f64).product();
+            assert_eq!(
+                bdeu_family_score(&dense, q, ess).to_bits(),
+                bdeu_family_score(&sparse, q, ess).to_bits(),
+                "seed {seed}: sparse score bits diverge, child {child} parents {parents:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_count_local_pair_matches_plain_locals_bitwise() {
+    // The fused count-reuse path (one superset table + one derived
+    // marginal) must equal two independent locals computed by the
+    // scalar reference engine, bit for bit.
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0xFA17);
+        let n = 5 + rng.gen_range(4);
+        let rows = 80 + rng.gen_range(300);
+        let data = random_count_data(n, rows, &mut rng);
+        let ess = 1.0 + (seed % 5) as f64;
+        for _ in 0..6 {
+            let (child, mut others) = random_family(n, 3, &mut rng);
+            let Some(x) = others.pop() else { continue };
+            let fused = BdeuScorer::new(data.clone(), ess);
+            let plain = BdeuScorer::with_count_config(data.clone(), ess, CountConfig::reference());
+            let (with_x, without_x) = fused.local_pair(child, &others, x);
+            let mut sup = others.clone();
+            sup.push(x);
+            assert_eq!(
+                with_x.to_bits(),
+                plain.local(child, &sup).to_bits(),
+                "seed {seed}: with_x bits diverge, child {child} others {others:?} x {x}"
+            );
+            assert_eq!(
+                without_x.to_bits(),
+                plain.local(child, &others).to_bits(),
+                "seed {seed}: without_x bits diverge, child {child} others {others:?} x {x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_count_learners_byte_identical_across_count_modes() {
+    // The whole point of bit-equal scores: GES, fGES and the ring
+    // coordinator must make *identical decisions* under the packed
+    // word-parallel engine and the scalar reference — same structure,
+    // same score bits, same `score_dag` bits — on the same seeds.
+    let modes = [CountMode::Reference, CountMode::Packed];
+    for seed in 0..5u64 {
+        let nodes = 12;
+        let bn = generate(
+            &NetGenConfig { nodes, edges: 16, locality: 0, ..Default::default() },
+            seed ^ 0x6E5,
+        );
+        let data = Arc::new(forward_sample(&bn, 700, seed + 11));
+
+        let mut ges_runs = Vec::new();
+        let mut fges_runs = Vec::new();
+        for &mode in &modes {
+            let cfg = CountConfig { mode, ..CountConfig::default() };
+            let sc = BdeuScorer::with_count_config(data.clone(), 10.0, cfg.clone());
+            let r = ges(&sc, &Dag::new(nodes), &GesConfig::default());
+            ges_runs.push((sc.score_dag(&r.dag), r));
+            let sc = BdeuScorer::with_count_config(data.clone(), 10.0, cfg);
+            let r = fges(&sc, &Dag::new(nodes), &FgesConfig::default());
+            fges_runs.push((sc.score_dag(&r.dag), r));
+        }
+        for (name, runs) in [("GES", &ges_runs), ("fGES", &fges_runs)] {
+            let (rescore_a, a) = &runs[0];
+            let (rescore_b, b) = &runs[1];
+            let mut ea = a.dag.edges();
+            let mut eb = b.dag.edges();
+            ea.sort_unstable();
+            eb.sort_unstable();
+            assert_eq!(ea, eb, "seed {seed}: {name} structures diverge across count modes");
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "seed {seed}: {name} score bits diverge across count modes"
+            );
+            assert_eq!(
+                rescore_a.to_bits(),
+                rescore_b.to_bits(),
+                "seed {seed}: {name} score_dag bits diverge across count modes"
+            );
+        }
+
+        let ring_runs: Vec<_> = modes
+            .iter()
+            .map(|&mode| {
+                let cfg = RingConfig {
+                    k: 2,
+                    threads: 2,
+                    mode: RingMode::Deterministic,
+                    count_mode: mode,
+                    ..RingConfig::default()
+                };
+                let r = cges(data.clone(), &cfg).unwrap_or_else(|e| {
+                    panic!("seed {seed}: ring run failed under {mode:?}: {e}")
+                });
+                let sc = BdeuScorer::with_count_config(
+                    data.clone(),
+                    cfg.ess,
+                    CountConfig::reference(),
+                );
+                (sc.score_dag(&r.dag), r)
+            })
+            .collect();
+        let (rescore_a, a) = &ring_runs[0];
+        let (rescore_b, b) = &ring_runs[1];
+        let mut ea = a.dag.edges();
+        let mut eb = b.dag.edges();
+        ea.sort_unstable();
+        eb.sort_unstable();
+        assert_eq!(ea, eb, "seed {seed}: ring structures diverge across count modes");
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "seed {seed}: ring score bits diverge across count modes"
+        );
+        assert_eq!(
+            rescore_a.to_bits(),
+            rescore_b.to_bits(),
+            "seed {seed}: ring score_dag bits diverge across count modes"
+        );
     }
 }
