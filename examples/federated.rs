@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
             mode: RingMode::Channel,
             emit: Some(BundleEmit::default()),
             ship_bundles: true,
+            ..Default::default()
         },
     )?;
     println!(

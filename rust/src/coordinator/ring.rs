@@ -68,6 +68,7 @@ use crate::data::Dataset;
 use crate::graph::Dag;
 use crate::learn::{EdgeMask, GesConfig, RingWorker};
 use crate::model::{Bundle, BundleMeta};
+use crate::obs;
 use crate::partition::partition_edges;
 use crate::score::{BdeuScorer, CountConfig, CountMode, PairwiseScores, ScoreCache};
 use crate::util::Timer;
@@ -154,6 +155,12 @@ pub struct RingConfig {
     /// fast paths) or `Reference` (scalar oracle — bit-identical
     /// scores, for pinning and perf baselines).
     pub count_mode: CountMode,
+    /// Metrics registry to bind the run's live counters and export
+    /// stage/hop metrics into (`None` skips all registration).
+    pub registry: Option<obs::Registry>,
+    /// Span tracer threaded through the coordinator and every ring
+    /// worker; disabled by default (one atomic probe per span site).
+    pub tracer: obs::Tracer,
 }
 
 impl Default for RingConfig {
@@ -171,6 +178,8 @@ impl Default for RingConfig {
             emit_bundle: false,
             bundle_ess: 1.0,
             count_mode: CountMode::Packed,
+            registry: None,
+            tracer: obs::Tracer::disabled(),
         }
     }
 }
@@ -247,7 +256,7 @@ impl Default for BundleEmit {
 /// Options for [`run_ring`] (what the runtime needs beyond the workers
 /// themselves — each [`RingWorker`] already owns its scorer, mask and
 /// cGES-L insert cap through its `GesConfig`).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct RingRunOptions {
     /// Hard cap on rounds.
     pub max_rounds: usize,
@@ -266,6 +275,10 @@ pub struct RingRunOptions {
     /// share the ring; frames are then byte-identical to the legacy
     /// format. No-op unless `emit` is set.
     pub ship_bundles: bool,
+    /// Span tracer: each worker emits wait/codec/fuse/ges/send spans
+    /// into its own lane when enabled. The default disabled tracer
+    /// costs one atomic probe per span site.
+    pub tracer: obs::Tracer,
 }
 
 impl Default for RingRunOptions {
@@ -275,6 +288,7 @@ impl Default for RingRunOptions {
             mode: RingMode::default(),
             emit: None,
             ship_bundles: false,
+            tracer: obs::Tracer::disabled(),
         }
     }
 }
@@ -349,6 +363,7 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
     let mut best_bundle: Option<Bundle> = None;
     let mut rounds = 0usize;
     let emit = opts.emit;
+    let tracer = &opts.tracer;
     // Per-worker running best, for the same emission gate as the
     // pipelined worker loop (a self-non-improving round's bundle can
     // never be adopted).
@@ -365,15 +380,29 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
                 .map(|(i, (worker, own_best))| {
                     let pred = &prev[(i + k - 1) % k];
                     s.spawn(move || {
+                        let mut th = tracer.handle(i as u32);
+                        let t_f = th.start();
                         let ft = Timer::start();
                         if round > 0 {
                             worker.absorb_fused(pred);
                         }
                         let fusion_secs = ft.secs();
+                        th.end_args(t_f, "fuse", "ring", &[("round", round as f64)]);
 
+                        let t_g = th.start();
                         let gt = Timer::start();
                         let (inserts, deletes) = worker.step();
                         let ges_secs = gt.secs();
+                        th.end_args(
+                            t_g,
+                            "ges",
+                            "ring",
+                            &[
+                                ("round", round as f64),
+                                ("inserts", inserts as f64),
+                                ("deletes", deletes as f64),
+                            ],
+                        );
                         let dag = worker.dag();
                         let score = worker.score_of(&dag);
                         let improved_own = *own_best < score;
@@ -436,13 +465,14 @@ fn run_pipelined(
     let links = transport.connect(k)?;
     let stop = AtomicBool::new(false);
     let (events_tx, events_rx) = mpsc::channel::<(RoundRecord, Dag, Option<Bundle>)>();
-    let opts = *opts;
+    let opts = opts.clone();
 
     std::thread::scope(|s| {
         for (i, (worker, link)) in workers.into_iter().zip(links).enumerate() {
             let events = events_tx.clone();
             let stop = &stop;
-            s.spawn(move || worker_loop(i, k, worker, link, events, stop, &opts));
+            let wopts = opts.clone();
+            s.spawn(move || worker_loop(i, k, worker, link, events, stop, &wopts));
         }
         drop(events_tx);
         collect(k, n, opts.max_rounds, &stop, events_rx)
@@ -477,6 +507,8 @@ fn worker_loop(
 ) {
     let max_rounds = opts.max_rounds;
     let RingLink { mut tx, mut rx } = link;
+    // This worker's trace lane; spans flush when the loop returns.
+    let mut th = opts.tracer.handle(i as u32);
     // My score per round (what token probes fold in).
     let mut history: Vec<f64> = Vec::new();
     // Probes received last hop, to forward with the next send.
@@ -494,12 +526,27 @@ fn worker_loop(
         let mut codec_secs = 0.0;
         let mut fusion_secs = 0.0;
         if round > 0 {
+            let t_recv = th.start();
             let (msg, timing) = match rx.recv() {
                 Ok(x) => x,
                 Err(_) => return, // predecessor gone: tear-down
             };
             wait_secs = timing.wait_secs;
             codec_secs += timing.codec_secs;
+            if let Some(t0) = t_recv {
+                // Split the recv interval into the transport's own
+                // blocked-wait and decode measurements.
+                let wait_ns = obs::secs_to_ns(timing.wait_secs);
+                let round_arg = [("round", round as f64)];
+                th.add("wait", "ring", t0, wait_ns, &round_arg);
+                th.add(
+                    "codec",
+                    "ring",
+                    t0 + wait_ns,
+                    obs::secs_to_ns(timing.codec_secs),
+                    &round_arg,
+                );
+            }
             match msg {
                 RingMessage::Stop => {
                     // Forward once so the circuit completes, then exit:
@@ -531,16 +578,25 @@ fn worker_loop(
                         }
                         pending = std::mem::take(&mut m.token.probes);
                     }
+                    let t_f = th.start();
                     let ft = Timer::start();
                     worker.absorb_fused(&m.dag);
                     fusion_secs = ft.secs();
+                    th.end_args(t_f, "fuse", "ring", &[("round", round as f64)]);
                 }
             }
         }
 
+        let t_g = th.start();
         let gt = Timer::start();
         let (inserts, deletes) = worker.step();
         let ges_secs = gt.secs();
+        th.end_args(
+            t_g,
+            "ges",
+            "ring",
+            &[("round", round as f64), ("inserts", inserts as f64), ("deletes", deletes as f64)],
+        );
         let dag = worker.dag();
         let score = worker.score_of(&dag);
         // Fit + calibrate this round's model into a shippable bundle
@@ -589,10 +645,12 @@ fn worker_loop(
                 // every peer negotiated the bundle-frame tag.
                 bundle: if opts.ship_bundles { bundle.clone() } else { None },
             });
+            let t_s = th.start();
             match tx.send(msg) {
                 Ok(secs) => codec_secs += secs,
                 Err(_) => peer_gone = true, // successor gone: tear-down
             }
+            th.end_args(t_s, "send", "ring", &[("round", round as f64)]);
         }
 
         // The coordinator needs the record (and model) even for the
@@ -690,8 +748,11 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     assert!(cfg.k >= 1, "ring needs at least one process");
     let n = data.n_vars();
     let mut telemetry = Telemetry::default();
+    // Coordinator-stage spans get their own lane above the workers'.
+    let mut th = cfg.tracer.handle(obs::COORDINATOR_TID);
 
     // ---- Stage 1: edge partitioning -------------------------------
+    let t_stage = th.start();
     let t = Timer::start();
     let (pairwise, source) = stage1_similarity(&data, cfg);
     let masks: Vec<Arc<EdgeMask>> =
@@ -699,6 +760,7 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     let seed = Arc::new(pairwise.s);
     telemetry.partition_secs = t.secs();
     telemetry.partition_source = source;
+    th.end(t_stage, "partition", "stage");
 
     // Shared score cache and counting engine across every worker and
     // stage (the packed columns are built once here).
@@ -709,6 +771,10 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
         cache.clone(),
         CountConfig { mode: cfg.count_mode, ..Default::default() },
     );
+    if let Some(reg) = &cfg.registry {
+        // Snapshots read the run's live cache / counting-path counters.
+        scorer.bind_obs(reg);
+    }
 
     let limit = cfg.limit_inserts.then(|| insert_limit(cfg.k, n));
     let worker_threads = (cfg.threads / cfg.k).max(1);
@@ -739,16 +805,24 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     // k × rounds of in-loop fits would buy nothing. `run_ring` callers
     // whose coordinator holds no data (the federated example's
     // per-shard sites) are the ones that set `emit`/`ship_bundles`.
+    let t_stage = th.start();
     let outcome = run_ring(
         workers,
-        &RingRunOptions { max_rounds: cfg.max_rounds, mode: cfg.mode, ..Default::default() },
+        &RingRunOptions {
+            max_rounds: cfg.max_rounds,
+            mode: cfg.mode,
+            tracer: cfg.tracer.clone(),
+            ..Default::default()
+        },
     )?;
     telemetry.learning_secs = t.secs();
+    th.end_args(t_stage, "learning", "stage", &[("rounds", outcome.rounds as f64)]);
     telemetry.records = outcome.records;
     telemetry.transport = cfg.mode.name().into();
     telemetry.converged_rounds = outcome.rounds;
 
     // ---- Stage 3: fine tuning --------------------------------------
+    let t_stage = th.start();
     let t = Timer::start();
     let (dag, score) = if cfg.fine_tune {
         let ges_cfg = GesConfig {
@@ -761,11 +835,14 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
             forward_empty_t: false,
         };
         let r = crate::learn::ges(&scorer, &outcome.best_dag, &ges_cfg);
+        telemetry.fes_evaluations = r.fes_evaluations;
+        telemetry.bes_evaluations = r.bes_evaluations;
         (r.dag, r.score)
     } else {
         (outcome.best_dag, outcome.best_score)
     };
     telemetry.fine_tune_secs = t.secs();
+    th.end(t_stage, "fine_tune", "stage");
 
     // ---- Bundle emission -------------------------------------------
     // One fit + calibrate over the final structure: the artifact that
@@ -773,19 +850,22 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     // CPT cell cap) degrades to no bundle with a warning — it must
     // never discard the completed learning run.
     let bundle = if cfg.emit_bundle {
+        let t_stage = th.start();
         let meta = BundleMeta {
             producer: format!("cges k={} [{}]", cfg.k, cfg.mode.name()),
             rounds: outcome.rounds as u32,
             score,
             ess: cfg.bundle_ess,
         };
-        match Bundle::fit_calibrated(&dag, &data, BundleEmit::default().budget, meta) {
+        let b = match Bundle::fit_calibrated(&dag, &data, BundleEmit::default().budget, meta) {
             Ok(b) => Some(b),
             Err(e) => {
                 eprintln!("warning: bundle emission failed ({e:#}); returning the structure only");
                 None
             }
-        }
+        };
+        th.end(t_stage, "bundle", "stage");
+        b
     } else {
         None
     };
@@ -801,6 +881,14 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     telemetry.count_derived = cs.derived;
     telemetry.table_hits = cs.table_hits;
     telemetry.table_misses = cs.table_misses;
+
+    if let Some(reg) = &cfg.registry {
+        // Ring-specific metrics (per-hop histograms, stage gauges);
+        // cache / counting counters are already live via `bind_obs`.
+        telemetry.export_metrics(reg);
+    }
+    // Make worker spans visible to `tracer.chrome_json()` callers.
+    th.flush();
 
     Ok(RingResult { dag, score, rounds: outcome.rounds, telemetry, bundle })
 }
@@ -959,7 +1047,7 @@ mod tests {
                 .collect();
             run_ring(
                 workers,
-                &RingRunOptions { max_rounds: 8, mode, emit, ship_bundles: ship },
+                &RingRunOptions { max_rounds: 8, mode, emit, ship_bundles: ship, ..Default::default() },
             )
             .unwrap()
         };

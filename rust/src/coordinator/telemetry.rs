@@ -12,6 +12,9 @@
 use std::io::Write;
 use std::path::Path;
 
+use crate::obs;
+use crate::obs::trace::{spans_to_chrome_json, SpanRec};
+
 /// One worker's activity in one ring hop (= one round of its loop).
 #[derive(Debug, Clone)]
 pub struct RoundRecord {
@@ -76,6 +79,10 @@ pub struct Telemetry {
     pub count_derived: u64,
     pub table_hits: u64,
     pub table_misses: u64,
+    /// Stage-3 (fine-tune) GES operator evaluations, forward and
+    /// backward (0 when fine tuning is off).
+    pub fes_evaluations: u64,
+    pub bes_evaluations: u64,
 }
 
 impl Telemetry {
@@ -124,6 +131,80 @@ impl Telemetry {
         out
     }
 
+    /// Export the run's metrics into a registry: per-hop activity
+    /// histograms (`ring.*_ns`), stage wall-time gauges, round/record
+    /// counters and the fine-tune evaluation counts. Cache and
+    /// counting-path counters are *not* exported here — they reach a
+    /// registry live, through `bind_obs` on the scorer — so calling
+    /// this never double-counts them.
+    pub fn export_metrics(&self, reg: &obs::Registry) {
+        let wait = reg.hist("ring.wait_ns");
+        let fuse = reg.hist("ring.fusion_ns");
+        let ges = reg.hist("ring.ges_ns");
+        let codec = reg.hist("ring.codec_ns");
+        for r in &self.records {
+            wait.record_secs(r.wait_secs);
+            fuse.record_secs(r.fusion_secs);
+            ges.record_secs(r.ges_secs);
+            codec.record_secs(r.codec_secs);
+        }
+        reg.counter("ring.hops").add(self.records.len() as u64);
+        reg.counter("ring.converged_rounds").add(self.converged_rounds as u64);
+        reg.gauge("ring.partition_secs").set(self.partition_secs);
+        reg.gauge("ring.learning_secs").set(self.learning_secs);
+        reg.gauge("ring.fine_tune_secs").set(self.fine_tune_secs);
+        reg.counter("ges.fes_evaluations").add(self.fes_evaluations);
+        reg.counter("ges.bes_evaluations").add(self.bes_evaluations);
+    }
+
+    /// The run as trace spans: one lane per worker, each hop rendered
+    /// as its wait → fuse → ges → codec activity in sequence. Spans are
+    /// placed on a per-lane relative clock (each lane starts at 0), so
+    /// lanes show each worker's own activity profile rather than
+    /// cross-worker alignment — for wall-clock-aligned spans, run with
+    /// a live [`obs::Tracer`] instead.
+    pub fn to_spans(&self) -> Vec<SpanRec> {
+        let mut spans = Vec::new();
+        for t in self.timelines() {
+            let mut cursor = 0u64;
+            for h in &t.hops {
+                for (name, secs) in [
+                    ("wait", h.wait_secs),
+                    ("fuse", h.fusion_secs),
+                    ("ges", h.ges_secs),
+                    ("codec", h.codec_secs),
+                ] {
+                    let dur = obs::secs_to_ns(secs);
+                    if dur == 0 {
+                        continue;
+                    }
+                    let mut args = vec![("round", h.round as f64)];
+                    if name == "ges" {
+                        args.push(("score", h.score));
+                        args.push(("inserts", h.inserts as f64));
+                        args.push(("deletes", h.deletes as f64));
+                    }
+                    spans.push(SpanRec {
+                        name: name.to_string(),
+                        cat: "ring",
+                        tid: t.worker as u32,
+                        start_ns: cursor,
+                        dur_ns: dur,
+                        args,
+                    });
+                    cursor += dur;
+                }
+            }
+        }
+        spans
+    }
+
+    /// Sibling of [`Telemetry::write_tsv`]: the same records as Chrome
+    /// trace-event JSON (Perfetto-loadable), via [`Telemetry::to_spans`].
+    pub fn write_trace(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, spans_to_chrome_json(&self.to_spans()))
+    }
+
     /// Dump as TSV (one row per record plus `#worker` timeline
     /// summaries and a `#summary` trailer).
     pub fn write_tsv(&self, path: &Path) -> std::io::Result<()> {
@@ -162,7 +243,7 @@ impl Telemetry {
         }
         writeln!(
             f,
-            "#summary\ttransport={}\tcounted_rounds={}\tpartition={:.3}s ({})\tlearning={:.3}s\tfine_tune={:.3}s\tcache_hits={}\tcache_misses={}\tcounts=popcount:{}/blocked:{}/dense:{}/sparse:{}/derived:{}\ttables={}h/{}m",
+            "#summary\ttransport={}\tcounted_rounds={}\tpartition={:.3}s ({})\tlearning={:.3}s\tfine_tune={:.3}s\tcache_hits={}\tcache_misses={}\tcounts=popcount:{}/blocked:{}/dense:{}/sparse:{}/derived:{}\ttables={}h/{}m\tevals=fes:{}/bes:{}",
             if self.transport.is_empty() { "-" } else { &self.transport },
             self.converged_rounds,
             self.partition_secs,
@@ -177,7 +258,9 @@ impl Telemetry {
             self.count_sparse,
             self.count_derived,
             self.table_hits,
-            self.table_misses
+            self.table_misses,
+            self.fes_evaluations,
+            self.bes_evaluations
         )?;
         Ok(())
     }
@@ -248,8 +331,59 @@ mod tests {
         assert!(text.contains("#summary"));
         assert!(text.contains("transport=channel"));
         assert!(text.contains("counts=popcount:"));
+        assert!(text.contains("evals=fes:"));
         // header + 2 records + 2 worker lines + summary
         assert_eq!(text.lines().count(), 6);
         std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn write_trace_emits_parseable_chrome_events() {
+        use crate::infer::json::Json;
+        let t = Telemetry {
+            records: vec![rec(0, 0, -1.0), rec(1, 0, -0.5), rec(0, 1, -2.0)],
+            ..Default::default()
+        };
+        let spans = t.to_spans();
+        // wait/fuse/ges/codec per hop, all non-zero in `rec`
+        assert_eq!(spans.len(), 3 * 4);
+        let tmp = std::env::temp_dir().join("cges_telemetry.trace.json");
+        t.write_trace(&tmp).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        let doc = Json::parse(&text).expect("trace must be valid JSON");
+        let events = doc.as_array().expect("event array");
+        // one B and one E per span
+        assert_eq!(events.len(), 2 * spans.len());
+        assert!(events.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("ges")));
+        // both workers get a lane
+        for tid in [0.0, 1.0] {
+            assert!(events.iter().any(|e| e.get("tid").and_then(Json::as_f64) == Some(tid)));
+        }
+    }
+
+    #[test]
+    fn export_metrics_fills_registry() {
+        let t = Telemetry {
+            records: vec![rec(0, 0, -1.0), rec(0, 1, -2.0)],
+            converged_rounds: 1,
+            partition_secs: 0.5,
+            fes_evaluations: 12,
+            bes_evaluations: 3,
+            ..Default::default()
+        };
+        let reg = crate::obs::Registry::new();
+        t.export_metrics(&reg);
+        assert_eq!(reg.counter_value("ring.hops"), Some(2));
+        assert_eq!(reg.counter_value("ring.converged_rounds"), Some(1));
+        assert_eq!(reg.counter_value("ges.fes_evaluations"), Some(12));
+        assert_eq!(reg.counter_value("ges.bes_evaluations"), Some(3));
+        assert_eq!(reg.gauge("ring.partition_secs").get(), 0.5);
+        // each record contributed one sample per activity histogram
+        assert_eq!(reg.hist("ring.ges_ns").inner().count(), 2);
+        assert_eq!(reg.hist("ring.wait_ns").inner().count(), 2);
+        // 0.1s ges in `rec` → 1e8 ns, bracketed by the p50 bounds
+        let (lo, hi) = reg.hist("ring.ges_ns").inner().quantile_bounds(0.5);
+        assert!(lo <= 100_000_000 && 100_000_000 <= hi);
     }
 }

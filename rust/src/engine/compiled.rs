@@ -174,6 +174,11 @@ pub struct Scratch {
     /// warm-start probe: a bundle-seeded scratch answers its first
     /// evidence-free query at exactly zero).
     collect_recomputes: u64,
+    /// Optional span recorder: propagations on this scratch emit
+    /// `collect` / `distribute` spans into it
+    /// ([`Scratch::attach_tracer`]). `None` (and a disabled handle)
+    /// cost one branch per query.
+    trace: Option<crate::obs::TraceHandle>,
 }
 
 impl Scratch {
@@ -197,6 +202,7 @@ impl Scratch {
             max_up: Vec::new(),
             max_prod: Vec::new(),
             collect_recomputes: 0,
+            trace: None,
         }
     }
 
@@ -207,6 +213,15 @@ impl Scratch {
     /// `tests/serving.rs` pins.
     pub fn collect_recomputes(&self) -> u64 {
         self.collect_recomputes
+    }
+
+    /// Attach a span recorder: subsequent propagations on this scratch
+    /// emit `collect` / `distribute` spans (category `jointree`) into
+    /// the handle's lane. The serving threads attach one per scratch;
+    /// when the handle's tracer is disabled every probe is a single
+    /// relaxed atomic load, so attaching a disabled handle is free.
+    pub fn attach_tracer(&mut self, th: crate::obs::TraceHandle) {
+        self.trace = Some(th);
     }
 }
 
@@ -551,6 +566,7 @@ impl CompiledModel {
             max_up: Vec::new(),
             max_prod: Vec::new(),
             collect_recomputes: 0,
+            trace: None,
         }
     }
 
@@ -753,7 +769,11 @@ impl CompiledModel {
     /// the returned [`Posterior`] owns fresh memory.
     pub fn marginals(&self, s: &mut Scratch, evidence: &[(usize, usize)]) -> Result<Posterior> {
         self.set_evidence(s, evidence)?;
+        let t_collect = s.trace.as_ref().and_then(crate::obs::TraceHandle::start);
         self.collect(s)?;
+        if let Some(th) = s.trace.as_mut() {
+            th.end(t_collect, "collect", "jointree");
+        }
 
         // Message normalizers plus the root belief masses telescope to
         // P(evidence), in log space. Root beliefs land in the arena —
@@ -780,6 +800,7 @@ impl CompiledModel {
         // any evidence change would invalidate it anyway. The fused
         // kernel computes each message without materializing the
         // clique product unless ≥ 2 absorbs precede the marginalize.
+        let t_dist = s.trace.as_ref().and_then(crate::obs::TraceHandle::start);
         for &c in &self.order {
             let kids = &self.children[c];
             if kids.is_empty() {
@@ -878,6 +899,9 @@ impl CompiledModel {
                 msg.iter_mut().for_each(|x| *x *= inv);
                 s.down[k] = msg;
             }
+        }
+        if let Some(th) = s.trace.as_mut() {
+            th.end(t_dist, "distribute", "jointree");
         }
 
         // Calibrated beliefs → all single-variable marginals, built

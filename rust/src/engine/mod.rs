@@ -19,7 +19,12 @@
 //!   `joint_map`, `batch`, shutdown sentinel), shared by every medium;
 //! * [`server`] — a multi-client TCP server (bounded thread pool,
 //!   per-connection framing, graceful shutdown) with the NDJSON line
-//!   mode as a thin adapter.
+//!   mode as a thin adapter. The server carries the crate's
+//!   observability surface ([`obs`](crate::obs)): request latency,
+//!   frame-size and batch-depth histograms plus connection counters,
+//!   snapshotted by the `{"type": "stats"}` endpoint, and per-thread
+//!   trace lanes with request / collect / distribute spans when a
+//!   tracer is attached.
 //!
 //! `infer::Engine`, `infer::JoinTree` and `infer::QueryServer` remain
 //! as compatibility shims over these types.

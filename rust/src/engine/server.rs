@@ -46,6 +46,7 @@ use crate::engine::protocol::{self, DEFAULT_MAX_BATCH};
 use crate::engine::{Scratch, SharedEngine};
 use crate::infer::json::Json;
 use crate::infer::EngineConfig;
+use crate::obs;
 use crate::util::ensure_frame_len;
 
 /// Default cap on one framed request/response (1 MiB; the ring
@@ -79,23 +80,66 @@ impl Default for ServeConfig {
     }
 }
 
+/// Pre-created handles for the serving metrics, so the hot path never
+/// takes the registry's name-map lock (handles are `Arc`s onto the
+/// same atomics a `{"type": "stats"}` snapshot reads).
+struct ServeMetrics {
+    requests: obs::Counter,
+    errors: obs::Counter,
+    conns_accepted: obs::Counter,
+    conns_failed: obs::Counter,
+    latency: obs::Hist,
+    frame_bytes: obs::Hist,
+    batch_depth: obs::Hist,
+}
+
+impl ServeMetrics {
+    fn bind(reg: &obs::Registry) -> ServeMetrics {
+        ServeMetrics {
+            requests: reg.counter("serve.requests"),
+            errors: reg.counter("serve.errors"),
+            conns_accepted: reg.counter("serve.conns_accepted"),
+            conns_failed: reg.counter("serve.conns_failed"),
+            latency: reg.hist("serve.latency_ns"),
+            frame_bytes: reg.hist("serve.frame_bytes"),
+            batch_depth: reg.hist("serve.batch_depth"),
+        }
+    }
+}
+
 /// A query server bound to one fitted network: a shared engine, the
-/// serve configuration and the shutdown latch.
+/// serve configuration, the shutdown latch and the observability
+/// surface (metrics registry + tracer). Every server carries its own
+/// registry — `{"type": "stats"}` always answers — and callers that
+/// aggregate metrics elsewhere swap in theirs with
+/// [`Server::bind_registry`].
 pub struct Server {
     engine: SharedEngine,
     cfg: ServeConfig,
     shutdown: AtomicBool,
+    registry: obs::Registry,
+    tracer: obs::Tracer,
+    metrics: ServeMetrics,
 }
 
 impl Server {
+    fn assemble(engine: SharedEngine, cfg: ServeConfig) -> Server {
+        let registry = obs::Registry::new();
+        let metrics = ServeMetrics::bind(&registry);
+        Server {
+            engine,
+            cfg,
+            shutdown: AtomicBool::new(false),
+            registry,
+            tracer: obs::Tracer::disabled(),
+            metrics,
+        }
+    }
+
     /// Compile an engine for `bn` per `engine_cfg` and wrap it for
     /// serving per `cfg`.
     pub fn new(bn: &DiscreteBn, engine_cfg: &EngineConfig, cfg: ServeConfig) -> Result<Server> {
-        Ok(Server {
-            engine: SharedEngine::build(bn, engine_cfg)?,
-            cfg,
-            shutdown: AtomicBool::new(false),
-        })
+        Ok(Self::assemble(SharedEngine::build(bn, engine_cfg)?, cfg))
     }
 
     /// Serve a model bundle: the exact engine warm-starts from the
@@ -107,11 +151,33 @@ impl Server {
         engine_cfg: &EngineConfig,
         cfg: ServeConfig,
     ) -> Result<Server> {
-        Ok(Server {
-            engine: SharedEngine::from_bundle(bundle, engine_cfg)?,
-            cfg,
-            shutdown: AtomicBool::new(false),
-        })
+        Ok(Self::assemble(SharedEngine::from_bundle(bundle, engine_cfg)?, cfg))
+    }
+
+    /// Swap in an externally owned registry (CLI `--metrics`): the
+    /// serving metrics re-register there and `{"type": "stats"}`
+    /// snapshots it, so serve counters land next to whatever else the
+    /// caller aggregates.
+    pub fn bind_registry(&mut self, registry: obs::Registry) {
+        self.metrics = ServeMetrics::bind(&registry);
+        self.registry = registry;
+    }
+
+    /// Enable span tracing (CLI `--trace`): request, collect and
+    /// distribute spans record into `tracer`'s lanes, one per handler
+    /// thread.
+    pub fn set_tracer(&mut self, tracer: obs::Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// The metrics registry `{"type": "stats"}` snapshots.
+    pub fn registry(&self) -> &obs::Registry {
+        &self.registry
+    }
+
+    /// The span tracer (disabled unless [`Server::set_tracer`] ran).
+    pub fn tracer(&self) -> &obs::Tracer {
+        &self.tracer
     }
 
     /// Did the engine warm-start from shipped potentials?
@@ -140,21 +206,102 @@ impl Server {
     }
 
     /// Answer one JSON request with one JSON response. The shutdown
-    /// sentinel is acknowledged and latches the shutdown flag.
+    /// sentinel is acknowledged and latches the shutdown flag; every
+    /// request lands in the serve metrics (`serve.requests`,
+    /// `serve.latency_ns`, `serve.errors`).
     pub fn handle(&self, scratch: &mut Scratch, request: &str) -> String {
+        let mut th = self.tracer.handle(0);
+        self.handle_traced(scratch, &mut th, request)
+    }
+
+    /// [`Server::handle`] recording its request span into a caller
+    /// thread's trace lane (the TCP pool keeps one handle per handler
+    /// thread so lanes stay per-worker).
+    pub fn handle_traced(
+        &self,
+        scratch: &mut Scratch,
+        th: &mut obs::TraceHandle,
+        request: &str,
+    ) -> String {
+        let t0 = th.start();
+        let sw = obs::Stopwatch::start();
+        let (label, response) = self.respond(scratch, request);
+        self.metrics.requests.inc();
+        self.metrics.latency.record(sw.elapsed_ns());
+        th.end(t0, label, "serve");
+        response
+    }
+
+    /// Dispatch one request and name it for the trace span. The
+    /// server-level types (`stats`, `stats_reset`, shutdown) answer
+    /// here; everything else goes through [`protocol::answer`]
+    /// unchanged, so query responses are byte-identical to a server
+    /// without observability attached.
+    fn respond(&self, scratch: &mut Scratch, request: &str) -> (&'static str, String) {
         let parsed = match Json::parse(request) {
             Ok(v) => v,
             Err(e) => {
-                return protocol::error_response(Json::Null, &format!("bad json: {e:#}"))
-                    .to_string()
+                self.metrics.errors.inc();
+                let resp = protocol::error_response(Json::Null, &format!("bad json: {e:#}"));
+                return ("bad_json", resp.to_string());
             }
         };
-        if protocol::is_shutdown(&parsed) {
-            self.shutdown.store(true, Ordering::SeqCst);
-            let id = parsed.get("id").cloned().unwrap_or(Json::Null);
-            return protocol::shutdown_response(id).to_string();
+        let id = parsed.get("id").cloned().unwrap_or(Json::Null);
+        match parsed.get("type").and_then(Json::as_str) {
+            Some("shutdown") => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                ("shutdown", protocol::shutdown_response(id).to_string())
+            }
+            Some("stats") => {
+                let resp = Json::Obj(vec![
+                    ("id".to_string(), id),
+                    ("ok".to_string(), Json::Bool(true)),
+                    ("engine".to_string(), Json::Str(self.engine.name().to_string())),
+                    ("stats".to_string(), self.registry.snapshot()),
+                ]);
+                ("stats", resp.to_string())
+            }
+            Some("stats_reset") => {
+                // Guarded: zeroing live metrics is destructive to
+                // anyone else scraping them, so demand an explicit
+                // confirm field.
+                if parsed.get("confirm").and_then(Json::as_bool) == Some(true) {
+                    self.registry.reset();
+                    let resp = Json::Obj(vec![
+                        ("id".to_string(), id),
+                        ("ok".to_string(), Json::Bool(true)),
+                        ("reset".to_string(), Json::Bool(true)),
+                    ]);
+                    ("stats_reset", resp.to_string())
+                } else {
+                    self.metrics.errors.inc();
+                    let resp = protocol::error_response(
+                        id,
+                        "stats_reset requires \"confirm\": true",
+                    );
+                    ("stats_reset", resp.to_string())
+                }
+            }
+            qtype => {
+                if qtype == Some("batch") {
+                    if let Some(qs) = parsed.get("queries").and_then(Json::as_array) {
+                        self.metrics.batch_depth.record(qs.len() as u64);
+                    }
+                }
+                let resp = protocol::answer(&self.engine, scratch, &parsed, self.cfg.max_batch);
+                if resp.get("ok").and_then(Json::as_bool) == Some(false) {
+                    self.metrics.errors.inc();
+                }
+                let label = match qtype {
+                    Some("map") => "map",
+                    Some("joint_map") => "joint_map",
+                    Some("batch") => "batch",
+                    None | Some("marginal") => "marginal",
+                    Some(_) => "other",
+                };
+                (label, resp.to_string())
+            }
         }
-        protocol::answer(&self.engine, scratch, &parsed, self.cfg.max_batch).to_string()
     }
 
     /// Serve newline-delimited JSON until the reader closes or the
@@ -162,13 +309,15 @@ impl Server {
     /// answered.
     pub fn serve_lines<R: BufRead, W: Write>(&self, reader: R, mut writer: W) -> Result<usize> {
         let mut scratch = self.engine.new_scratch();
+        scratch.attach_tracer(self.tracer.handle(0));
+        let mut th = self.tracer.handle(0);
         let mut served = 0usize;
         for line in reader.lines() {
             let line = line.context("read request line")?;
             if line.trim().is_empty() {
                 continue;
             }
-            let response = self.handle(&mut scratch, &line);
+            let response = self.handle_traced(&mut scratch, &mut th, &line);
             writeln!(writer, "{response}").context("write response")?;
             writer.flush().context("flush response")?;
             served += 1;
@@ -202,20 +351,28 @@ impl Server {
         let (tx, rx) = mpsc::sync_channel::<TcpStream>(2 * threads);
         let rx = Mutex::new(rx);
         std::thread::scope(|scope| -> Result<()> {
-            for _ in 0..threads {
+            for t in 0..threads {
                 let rx = &rx;
                 scope.spawn(move || {
                     let mut scratch = self.engine.new_scratch();
+                    // One trace lane per handler thread: request spans
+                    // and the propagation spans nested inside them
+                    // share the thread's tid.
+                    scratch.attach_tracer(self.tracer.handle(t as u32));
+                    let mut th = self.tracer.handle(t as u32);
                     loop {
                         // Hold the lock only for the dequeue, never
                         // while handling a connection.
                         let next = rx.lock().expect("connection queue poisoned").recv();
                         let Ok(stream) = next else { break };
                         let peer = stream.peer_addr().ok();
-                        if let Err(e) = self.serve_conn(stream, &mut scratch, wake) {
+                        if let Err(e) = self.serve_conn(stream, &mut scratch, &mut th, wake) {
+                            self.metrics.conns_failed.inc();
                             match peer {
-                                Some(p) => eprintln!("connection {p}: {e:#}"),
-                                None => eprintln!("connection: {e:#}"),
+                                Some(p) => {
+                                    obs::log::error(format_args!("connection {p}: {e:#}"))
+                                }
+                                None => obs::log::error(format_args!("connection: {e:#}")),
                             }
                         }
                     }
@@ -238,6 +395,7 @@ impl Server {
                     break;
                 }
                 conns += 1;
+                self.metrics.conns_accepted.inc();
                 tx.send(stream).expect("connection pool alive");
             }
             // Closing the queue lets idle handlers exit; the scope
@@ -252,6 +410,7 @@ impl Server {
         &self,
         stream: TcpStream,
         scratch: &mut Scratch,
+        th: &mut obs::TraceHandle,
         wake: SocketAddr,
     ) -> Result<()> {
         stream.set_nodelay(true).ok();
@@ -266,14 +425,16 @@ impl Server {
                 return Ok(());
             };
             ensure_frame_len("incoming", len, cap)?;
+            self.metrics.frame_bytes.record(len as u64);
             let mut payload = vec![0u8; len as usize];
             self.read_exact_patient(&mut reader, &mut payload, "frame payload")?;
             let text = String::from_utf8(payload).context("request frame is not UTF-8")?;
 
-            let response = self.handle(scratch, &text);
+            let response = self.handle_traced(scratch, th, &text);
             let out = response.as_bytes();
             let out_len = u32::try_from(out.len()).context("response too large for u32 prefix")?;
             ensure_frame_len("outgoing", out_len, cap)?;
+            self.metrics.frame_bytes.record(out_len as u64);
             writer.write_all(&out_len.to_le_bytes()).context("write response length")?;
             writer.write_all(out).context("write response payload")?;
             writer.flush().context("flush response")?;
@@ -376,6 +537,44 @@ mod tests {
         assert_eq!(lines.len(), 2);
         let ack = Json::parse(lines[1]).unwrap();
         assert_eq!(ack.get("shutdown").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn stats_endpoint_snapshots_and_guards_reset() {
+        let s = server(ServeConfig::default());
+        let mut scratch = s.new_scratch();
+        s.handle(&mut scratch, r#"{"id": 1}"#);
+
+        let v = Json::parse(&s.handle(&mut scratch, r#"{"id": 2, "type": "stats"}"#)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("id").and_then(Json::as_usize), Some(2));
+        let stats = v.get("stats").expect("stats body");
+        let counters = stats.get("counters").expect("counters map");
+        assert!(counters.get("serve.requests").and_then(Json::as_f64).unwrap() >= 1.0);
+        let hists = stats.get("histograms").expect("histograms map");
+        let latency = hists.get("serve.latency_ns").expect("latency histogram");
+        assert!(latency.get("count").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert!(latency.get("p50").and_then(Json::as_f64).unwrap() > 0.0);
+
+        // Unconfirmed reset is refused and counts as an error.
+        let v = Json::parse(&s.handle(&mut scratch, r#"{"type": "stats_reset"}"#)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+
+        // Confirmed reset zeroes the counters.
+        let v = Json::parse(&s.handle(&mut scratch, r#"{"type": "stats_reset", "confirm": true}"#))
+            .unwrap();
+        assert_eq!(v.get("reset").and_then(Json::as_bool), Some(true));
+        let v = Json::parse(&s.handle(&mut scratch, r#"{"type": "stats"}"#)).unwrap();
+        let reqs = v
+            .get("stats")
+            .and_then(|st| st.get("counters"))
+            .and_then(|c| c.get("serve.requests"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        // Since the reset only the reset acknowledgement itself was
+        // metered before this snapshot was taken.
+        assert!(reqs <= 1.0, "reset did not zero serve.requests: {reqs}");
+        assert!(!s.is_shutting_down());
     }
 
     #[test]

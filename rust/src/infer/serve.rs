@@ -56,6 +56,12 @@ impl QueryServer {
         self.inner.engine_name()
     }
 
+    /// The serving metrics registry — the same snapshot a
+    /// `{"type": "stats"}` request answers with.
+    pub fn registry(&self) -> &crate::obs::Registry {
+        self.inner.registry()
+    }
+
     /// Answer one JSON request line with one JSON response line.
     pub fn handle(&mut self, request: &str) -> String {
         self.inner.handle(&mut self.scratch, request)
@@ -131,6 +137,16 @@ mod tests {
         // The server still answers after errors.
         let v = Json::parse(&s.handle(r#"{"id": 2}"#)).unwrap();
         assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn stats_surface_reaches_through_the_shim() {
+        let mut s = server();
+        s.handle(r#"{"id": 1}"#);
+        assert!(s.registry().counter_value("serve.requests").unwrap_or(0) >= 1);
+        let v = Json::parse(&s.handle(r#"{"type": "stats"}"#)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(v.get("stats").is_some());
     }
 
     #[test]

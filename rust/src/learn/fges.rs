@@ -106,6 +106,31 @@ mod tests {
     }
 
     #[test]
+    fn fges_result_exports_obs_counters() {
+        // A local fges run should land in a metrics registry under the
+        // same `ges.*` names the ring coordinator exports, with the
+        // scorer's cache/count counters live alongside via bind_obs.
+        let bn = generate(&NetGenConfig { nodes: 12, edges: 16, ..Default::default() }, 13);
+        let data = Arc::new(forward_sample(&bn, 1200, 3));
+        let sc = BdeuScorer::new(data, 10.0);
+        let reg = crate::obs::Registry::new();
+        sc.bind_obs(&reg);
+        let r = fges(&sc, &Dag::new(12), &FgesConfig::default());
+        r.export_obs(&reg);
+        assert_eq!(reg.counter_value("ges.evaluations"), Some(r.evaluations));
+        assert_eq!(
+            reg.counter_value("ges.fes_evaluations").unwrap()
+                + reg.counter_value("ges.bes_evaluations").unwrap(),
+            r.evaluations
+        );
+        // The scorer counters were registered as live views: the run
+        // above must have produced cache traffic without any re-export.
+        let hits = reg.counter_value("score_cache.hits").unwrap_or(0);
+        let misses = reg.counter_value("score_cache.misses").unwrap_or(0);
+        assert!(hits + misses > 0, "bound scorer counters saw no traffic");
+    }
+
+    #[test]
     fn fges_seed_path_consistent() {
         let bn = generate(&NetGenConfig { nodes: 10, edges: 12, ..Default::default() }, 5);
         let data = Arc::new(forward_sample(&bn, 1500, 2));

@@ -94,6 +94,19 @@ pub struct GesResult {
     pub bes_evaluations: u64,
 }
 
+impl GesResult {
+    /// Export the search's evaluation counters into an observability
+    /// registry under `ges.*` (same names the ring coordinator uses in
+    /// [`crate::coordinator::Telemetry::export_metrics`]), so a
+    /// single-machine `ges`/`fges` run and a ring run produce
+    /// comparable metric snapshots.
+    pub fn export_obs(&self, reg: &crate::obs::Registry) {
+        reg.counter("ges.evaluations").add(self.evaluations);
+        reg.counter("ges.fes_evaluations").add(self.fes_evaluations);
+        reg.counter("ges.bes_evaluations").add(self.bes_evaluations);
+    }
+}
+
 #[derive(Clone, Debug)]
 struct Cand {
     delta: f64,

@@ -27,6 +27,7 @@ pub mod infer;
 pub mod learn;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod partition;
 pub mod rng;
 pub mod runtime;

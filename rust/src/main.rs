@@ -84,8 +84,13 @@ SUBCOMMANDS
   partition  --data data.csv --k 4 [--ess 10] [--artifacts DIR]
   learn      --algo cges|cges-l|ges|fges --data data.csv [--out learned.dag]
              [--bundle model.bnb] [--bundle-ess 1] [--k 4] [--ess 10]
-             [--threads N] [--artifacts DIR] [--trace trace.tsv]
-             [--max-rounds 50]
+             [--threads N] [--artifacts DIR] [--trace trace.tsv|trace.json]
+             [--metrics metrics.json] [--max-rounds 50]
+             --trace with a .json path writes a Chrome trace-event file
+             (per-worker wait/codec/fuse/ges span lanes; load in
+             Perfetto or chrome://tracing); any other extension keeps
+             the per-hop TSV. --metrics writes a registry snapshot
+             (counters/gauges/histograms) as JSON
              [--transport channel|tcp|sync]   ring execution mode:
              channel = pipelined in-process actors (default),
              tcp     = pipelined over loopback TCP (wire codec),
@@ -104,6 +109,12 @@ SUBCOMMANDS
   serve      --model fitted.bnb|.bif [--listen 127.0.0.1:7878] [--threads N]
              [--method auto|jointree|lw] [--samples 20000] [--seed 1] [--budget N]
              [--batch 256] [--max-frame-bytes 1048576]
+             [--trace trace.json] [--metrics metrics.json]
+             {\"type\":\"stats\"} answers a live metrics snapshot (request
+             latency/frame-size/batch-depth histograms + counters);
+             {\"type\":\"stats_reset\",\"confirm\":true} zeroes it. --trace /
+             --metrics write span + metrics files on shutdown.
+             CGES_LOG=error|info|debug filters server-side logging
              a .bnb bundle with calibrated potentials warm-starts every
              handler thread (zero cold collect sweeps)
              stdin mode (default): one JSON query per line, one JSON answer per line
@@ -219,6 +230,7 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
             "threads",
             "artifacts",
             "trace",
+            "metrics",
             "max-rounds",
             "max-parents",
             "transport",
@@ -233,6 +245,18 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
     let n = data.n_vars();
     let bundle_out = a.get("bundle").map(str::to_string);
     let bundle_ess: f64 = a.get_parse("bundle-ess", 1.0)?;
+
+    // Observability: --metrics collects the run's counters and
+    // histograms into a registry written as JSON at the end; --trace
+    // with a .json path records live spans and writes a Chrome
+    // trace-event file (Perfetto-loadable), any other extension keeps
+    // the legacy per-hop TSV.
+    let trace_path = a.get("trace").map(str::to_string);
+    let metrics_path = a.get("metrics").map(str::to_string);
+    let want_chrome =
+        trace_path.as_deref().map(|p| p.ends_with(".json")).unwrap_or(false);
+    let registry = cges::obs::Registry::new();
+    let tracer = cges::obs::Tracer::new(want_chrome);
 
     let t = Timer::start();
     let (dag, score, mut bundle) = match algo {
@@ -254,6 +278,9 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
                 mode,
                 emit_bundle: bundle_out.is_some(),
                 bundle_ess,
+                registry: metrics_path.is_some().then(|| registry.clone()),
+                tracer: tracer.clone(),
+                ..Default::default()
             };
             let r = run_cges(data.clone(), &cfg)?;
             println!(
@@ -267,20 +294,33 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
                 r.telemetry.cache_hits,
                 r.telemetry.cache_misses,
             );
-            if let Some(path) = a.get("trace") {
-                r.telemetry.write_tsv(Path::new(path))?;
-                println!("trace written to {path}");
+            if let Some(path) = &trace_path {
+                if want_chrome {
+                    tracer
+                        .write_chrome(Path::new(path))
+                        .with_context(|| format!("write chrome trace {path}"))?;
+                    println!(
+                        "chrome trace written to {path} (load in Perfetto or chrome://tracing)"
+                    );
+                } else {
+                    r.telemetry.write_tsv(Path::new(path))?;
+                    println!("trace written to {path}");
+                }
             }
             (r.dag, r.score, r.bundle)
         }
         "ges" => {
             let sc = BdeuScorer::new(data.clone(), ess);
+            sc.bind_obs(&registry);
             let r = ges(&sc, &Dag::new(n), &GesConfig { threads, ..Default::default() });
+            r.export_obs(&registry);
             (r.dag, r.score, None)
         }
         "fges" => {
             let sc = BdeuScorer::new(data.clone(), ess);
+            sc.bind_obs(&registry);
             let r = fges(&sc, &Dag::new(n), &FgesConfig { threads, ..Default::default() });
+            r.export_obs(&registry);
             (r.dag, r.score, None)
         }
         other => bail!("unknown algo '{other}' (cges|cges-l|ges|fges)"),
@@ -291,6 +331,13 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
         score / data.n_rows() as f64,
         dag.edge_count()
     );
+    if let Some(mpath) = &metrics_path {
+        registry.gauge("learn.total_secs").set(secs);
+        registry
+            .write_json(Path::new(mpath))
+            .with_context(|| format!("write metrics {mpath}"))?;
+        println!("metrics written to {mpath}");
+    }
 
     if let Some(out) = a.get("out") {
         write_structure(&dag, data.names(), Path::new(out))?;
@@ -543,6 +590,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "threads",
             "batch",
             "max-frame-bytes",
+            "trace",
+            "metrics",
         ],
         &[],
     )?;
@@ -565,7 +614,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     ensure!(serve_cfg.threads >= 1, "--threads must be at least 1");
     ensure!(serve_cfg.max_frame_bytes >= 64, "--max-frame-bytes must be at least 64");
     ensure!(serve_cfg.max_batch >= 1, "--batch must be at least 1");
-    let server = Server::from_bundle(&bundle, &cfg, serve_cfg.clone())?;
+    let trace_path = a.get("trace").map(str::to_string);
+    let metrics_path = a.get("metrics").map(str::to_string);
+    let mut server = Server::from_bundle(&bundle, &cfg, serve_cfg.clone())?;
+    if trace_path.is_some() {
+        server.set_tracer(cges::obs::Tracer::new(true));
+    }
     let warm = if server.warm_started() { " warm-started from bundle potentials" } else { "" };
     match a.get("listen") {
         Some(addr) => {
@@ -580,7 +634,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 serve_cfg.max_frame_bytes,
                 serve_cfg.max_batch,
             );
-            server.serve_tcp(&listener, None)
+            server.serve_tcp(&listener, None)?;
         }
         None => {
             eprintln!(
@@ -590,9 +644,23 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             let stdin = std::io::stdin();
             let served = server.serve_lines(stdin.lock(), std::io::stdout().lock())?;
             eprintln!("served {served} queries");
-            Ok(())
         }
     }
+    if let Some(p) = &trace_path {
+        server
+            .tracer()
+            .write_chrome(Path::new(p))
+            .with_context(|| format!("write chrome trace {p}"))?;
+        eprintln!("trace written to {p}");
+    }
+    if let Some(p) = &metrics_path {
+        server
+            .registry()
+            .write_json(Path::new(p))
+            .with_context(|| format!("write metrics {p}"))?;
+        eprintln!("metrics written to {p}");
+    }
+    Ok(())
 }
 
 fn cmd_inspect(argv: &[String]) -> Result<()> {

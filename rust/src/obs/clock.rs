@@ -1,0 +1,199 @@
+//! Monotonic time for the observability layer.
+//!
+//! [`Stopwatch`] is the one timing primitive: it reads either the real
+//! monotonic clock or a [`Clock::mock`] whose "now" is an atomic
+//! nanosecond counter tests advance by hand — so duration-dependent
+//! logic (histogram recording, span lengths) is testable without
+//! sleeping. [`Timer`] is the pre-obs `util::timer::Timer` API kept as
+//! a thin veneer over a real-clock stopwatch; `util::Timer` re-exports
+//! it so every existing call site keeps compiling unchanged.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A time source: the process monotonic clock, or a mock counter.
+#[derive(Clone, Debug, Default)]
+pub enum Clock {
+    /// `std::time::Instant` — the normal case.
+    #[default]
+    Real,
+    /// Shared nanosecond counter advanced explicitly by tests.
+    Mock(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// A mock clock starting at t=0 plus the handle that advances it.
+    pub fn mock() -> (Clock, MockTime) {
+        let t = Arc::new(AtomicU64::new(0));
+        (Clock::Mock(t.clone()), MockTime(t))
+    }
+}
+
+/// Test handle that moves a [`Clock::Mock`] forward.
+#[derive(Clone, Debug)]
+pub struct MockTime(Arc<AtomicU64>);
+
+impl MockTime {
+    /// Advance mock time by `ns` nanoseconds.
+    pub fn advance_ns(&self, ns: u64) {
+        self.0.fetch_add(ns, Ordering::SeqCst);
+    }
+
+    /// Advance mock time by (fractional) seconds.
+    pub fn advance_secs(&self, secs: f64) {
+        self.advance_ns((secs * 1e9) as u64);
+    }
+
+    /// Current mock time in nanoseconds since clock creation.
+    pub fn now_ns(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Origin {
+    Real(Instant),
+    Mock { time: Arc<AtomicU64>, start: u64 },
+}
+
+/// Monotonic elapsed-time measurement against either clock.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    origin: Origin,
+}
+
+impl Stopwatch {
+    /// Start against the real monotonic clock.
+    pub fn start() -> Stopwatch {
+        Stopwatch { origin: Origin::Real(Instant::now()) }
+    }
+
+    /// Start against an explicit clock (mockable).
+    pub fn with_clock(clock: &Clock) -> Stopwatch {
+        match clock {
+            Clock::Real => Stopwatch::start(),
+            Clock::Mock(t) => Stopwatch {
+                origin: Origin::Mock { time: t.clone(), start: t.load(Ordering::SeqCst) },
+            },
+        }
+    }
+
+    /// Elapsed nanoseconds since start (or last reset).
+    pub fn elapsed_ns(&self) -> u64 {
+        match &self.origin {
+            Origin::Real(at) => at.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+            Origin::Mock { time, start } => time.load(Ordering::SeqCst).saturating_sub(*start),
+        }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.elapsed_ns() as f64 * 1e-9
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn millis(&self) -> f64 {
+        self.elapsed_ns() as f64 * 1e-6
+    }
+
+    /// Reset the start point to "now" on the same clock.
+    pub fn reset(&mut self) {
+        match &mut self.origin {
+            Origin::Real(at) => *at = Instant::now(),
+            Origin::Mock { time, start } => *start = time.load(Ordering::SeqCst),
+        }
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Stopwatch::start()
+    }
+}
+
+/// Wall-clock timer — the historical `util::Timer` API, now a view
+/// over a real-clock [`Stopwatch`].
+pub struct Timer(Stopwatch);
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Timer(Stopwatch::start())
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.0.secs()
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn millis(&self) -> f64 {
+        self.0.millis()
+    }
+
+    /// Reset the start point.
+    pub fn reset(&mut self) {
+        self.0.reset();
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn real_stopwatch_monotone_and_resets() {
+        let mut sw = Stopwatch::start();
+        let a = sw.elapsed_ns();
+        let b = sw.elapsed_ns();
+        assert!(b >= a);
+        sw.reset();
+        assert!(sw.secs() < 1.0);
+    }
+
+    #[test]
+    fn mock_clock_advances_only_by_hand() {
+        let (clock, time) = Clock::mock();
+        let sw = Stopwatch::with_clock(&clock);
+        assert_eq!(sw.elapsed_ns(), 0);
+        time.advance_ns(1_500);
+        assert_eq!(sw.elapsed_ns(), 1_500);
+        time.advance_secs(0.25);
+        assert_eq!(sw.elapsed_ns(), 1_500 + 250_000_000);
+        assert!((sw.secs() - 0.2500015).abs() < 1e-9);
+
+        // A stopwatch started later measures from its own start point.
+        let late = Stopwatch::with_clock(&clock);
+        assert_eq!(late.elapsed_ns(), 0);
+        time.advance_ns(10);
+        assert_eq!(late.elapsed_ns(), 10);
+    }
+
+    #[test]
+    fn mock_stopwatch_reset_rebases() {
+        let (clock, time) = Clock::mock();
+        let mut sw = Stopwatch::with_clock(&clock);
+        time.advance_ns(100);
+        assert_eq!(sw.elapsed_ns(), 100);
+        sw.reset();
+        assert_eq!(sw.elapsed_ns(), 0);
+        time.advance_ns(7);
+        assert_eq!(sw.elapsed_ns(), 7);
+        assert_eq!(time.now_ns(), 107);
+    }
+}

@@ -1,0 +1,285 @@
+//! Lock-free log-bucketed histogram (HDR-style, power-of-two buckets).
+//!
+//! Values land in bucket `64 - v.leading_zeros()`: bucket 0 holds the
+//! value 0 exactly, bucket `i ≥ 1` holds `[2^(i-1), 2^i - 1]`. Every
+//! operation is a relaxed atomic, so one histogram can be hammered from
+//! many threads with no coordination. Quantiles are reported as the
+//! *bounds of the bucket containing the rank*, which by construction
+//! bracket the exact order statistic within one bucket width (a factor
+//! of 2) — precise enough for latency triage, cheap enough for the
+//! serving hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: value 0, plus one bucket per possible highest set bit.
+pub const BUCKETS: usize = 65;
+
+/// Concurrent log-bucketed histogram over `u64` samples.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time summary of a [`Histogram`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    /// Upper bucket bounds at the 50th/90th/99th percentile ranks,
+    /// clamped to the observed max (0 when empty).
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Inclusive `[lo, hi]` value range of bucket `idx`.
+    pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+        assert!(idx < BUCKETS, "bucket index {idx} out of range");
+        if idx == 0 {
+            (0, 0)
+        } else if idx == 64 {
+            (1u64 << 63, u64::MAX)
+        } else {
+            (1u64 << (idx - 1), (1u64 << idx) - 1)
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in seconds as integer nanoseconds.
+    pub fn record_secs(&self, secs: f64) {
+        self.record((secs.max(0.0) * 1e9) as u64);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples (wrapping on overflow).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Smallest sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX && self.count() == 0 {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Mean sample (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// `[lo, hi]` bounds of the bucket holding the `q`-quantile order
+    /// statistic (rank `max(1, ceil(q·n))`, 1-based). The exact order
+    /// statistic of the recorded multiset is guaranteed to lie within
+    /// the returned bounds. Returns `(0, 0)` when empty.
+    pub fn quantile_bounds(&self, q: f64) -> (u64, u64) {
+        let n = self.count();
+        if n == 0 {
+            return (0, 0);
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Self::bucket_bounds(idx);
+            }
+        }
+        // Racing recorders can make `count` momentarily ahead of the
+        // bucket totals; fall back to the top populated bucket.
+        let top = (0..BUCKETS)
+            .rev()
+            .find(|&i| self.buckets[i].load(Ordering::Relaxed) > 0)
+            .unwrap_or(0);
+        Self::bucket_bounds(top)
+    }
+
+    /// Upper quantile bound clamped to the observed max — the single
+    /// number reported as "p50"/"p99" in summaries.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let (lo, hi) = self.quantile_bounds(q);
+        // The exact order statistic is ≤ observed max, so clamping the
+        // bucket's upper bound tightens the bracket without breaking it.
+        hi.min(self.max()).max(lo)
+    }
+
+    /// Snapshot count/sum/min/max and p50/p90/p99.
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            sum: self.sum(),
+            min: self.min(),
+            max: self.max(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+        }
+    }
+
+    /// Non-empty buckets as `(lo, hi, count)` triples.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64, u64)> {
+        (0..BUCKETS)
+            .filter_map(|i| {
+                let n = self.buckets[i].load(Ordering::Relaxed);
+                if n == 0 {
+                    return None;
+                }
+                let (lo, hi) = Self::bucket_bounds(i);
+                Some((lo, hi, n))
+            })
+            .collect()
+    }
+
+    /// Zero every bucket and counter.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_partition_u64() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 64);
+        // bounds invert bucket_of at both edges of every bucket
+        for idx in 0..BUCKETS {
+            let (lo, hi) = Histogram::bucket_bounds(idx);
+            assert_eq!(Histogram::bucket_of(lo), idx);
+            assert_eq!(Histogram::bucket_of(hi), idx);
+        }
+    }
+
+    #[test]
+    fn records_track_count_sum_min_max() {
+        let h = Histogram::new();
+        assert_eq!((h.count(), h.min(), h.max()), (0, 0, 0));
+        for v in [5u64, 0, 100, 7] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 112);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 100);
+        assert!((h.mean() - 28.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_bounds_bracket_known_sample() {
+        let h = Histogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        // p50 rank = 50 → exact value 50, in bucket [32, 63]
+        let (lo, hi) = h.quantile_bounds(0.50);
+        assert!(lo <= 50 && 50 <= hi, "p50 bracket ({lo}, {hi})");
+        // p99 rank = 99 → exact value 99, in bucket [64, 127]
+        let (lo, hi) = h.quantile_bounds(0.99);
+        assert!(lo <= 99 && 99 <= hi, "p99 bracket ({lo}, {hi})");
+        // clamped single-number quantile never exceeds the observed max
+        assert!(h.quantile(0.99) <= 100);
+        assert_eq!(h.quantile(1.0), 100);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let h = Histogram::new();
+        h.record(9);
+        h.record(1 << 40);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.quantile_bounds(0.5), (0, 0));
+        assert!(h.nonzero_buckets().is_empty());
+    }
+
+    #[test]
+    fn concurrent_recording_from_eight_threads_loses_nothing() {
+        let h = Histogram::new();
+        const PER_THREAD: u64 = 10_000;
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        // spread across many buckets
+                        h.record((i + 1) << (t % 5));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 8 * PER_THREAD);
+        let bucket_total: u64 = h.nonzero_buckets().iter().map(|&(_, _, n)| n).sum();
+        assert_eq!(bucket_total, 8 * PER_THREAD);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), PER_THREAD << 4);
+    }
+}

@@ -1,0 +1,112 @@
+//! Leveled stderr logging with a `CGES_LOG` environment filter.
+//!
+//! Deliberately tiny: three levels, one env var, stderr only. The
+//! level is read from `CGES_LOG` (`error` | `info` | `debug`) once on
+//! first use and cached in an atomic; [`set_level`] overrides it at
+//! runtime (used by tests and by anything that wants a verbosity
+//! flag). Default level is `info`, so `error`-level messages — like
+//! the server's per-connection failures — are always visible unless
+//! explicitly silenced with `CGES_LOG=` ... nothing silences errors;
+//! `CGES_LOG=error` silences `info`/`debug`.
+
+use std::fmt::Arguments;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+/// Unset sentinel: the env var has not been consulted yet.
+const UNSET: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn parse(text: &str) -> Option<Level> {
+    match text.trim().to_ascii_lowercase().as_str() {
+        "error" | "err" | "0" => Some(Level::Error),
+        "info" | "1" => Some(Level::Info),
+        "debug" | "2" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
+/// Current log level (reads `CGES_LOG` on first call; default `info`).
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        UNSET => {
+            let l = std::env::var("CGES_LOG").ok().and_then(|v| parse(&v)).unwrap_or(Level::Info);
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+        0 => Level::Error,
+        1 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Override the level (wins over the environment from now on).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Would a message at `l` currently be printed?
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+fn emit(l: Level, tag: &str, msg: Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[cges:{tag}] {msg}");
+    }
+}
+
+/// Log at error level (`obs::log::error(format_args!(...))`).
+pub fn error(msg: Arguments<'_>) {
+    emit(Level::Error, "error", msg);
+}
+
+/// Log at info level.
+pub fn info(msg: Arguments<'_>) {
+    emit(Level::Info, "info", msg);
+}
+
+/// Log at debug level.
+pub fn debug(msg: Arguments<'_>) {
+    emit(Level::Debug, "debug", msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_names_and_digits() {
+        assert_eq!(parse("error"), Some(Level::Error));
+        assert_eq!(parse(" ERR "), Some(Level::Error));
+        assert_eq!(parse("info"), Some(Level::Info));
+        assert_eq!(parse("Debug"), Some(Level::Debug));
+        assert_eq!(parse("2"), Some(Level::Debug));
+        assert_eq!(parse("warn"), None);
+        assert_eq!(parse(""), None);
+    }
+
+    #[test]
+    fn levels_filter_monotonically() {
+        // Global state: exercise the ordering through set_level, then
+        // restore a permissive default for other tests in-process.
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(enabled(Level::Debug));
+        error(format_args!("test error line"));
+        set_level(Level::Info);
+    }
+}

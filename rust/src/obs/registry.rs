@@ -1,0 +1,337 @@
+//! Explicitly-passed metrics registry: counters, gauges, histograms.
+//!
+//! No process-global state — a [`Registry`] is created by whoever owns
+//! the run (CLI, server, test) and handed down. Handles ([`Counter`],
+//! [`Gauge`], [`Hist`]) are cheap `Arc` clones of the underlying
+//! atomics, so a subsystem can keep its own handle embedded in a hot
+//! struct (e.g. the score cache's hit counter) and *register* that same
+//! handle under a name: the registry snapshot then reads live values
+//! without the subsystem knowing about naming at all.
+//!
+//! Snapshots serialize through the crate's own [`Json`] value type
+//! (no serde offline); counters above 2^53 lose precision in JSON, an
+//! acceptable trade for a debug surface.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::hist::Histogram;
+use crate::infer::json::Json;
+
+/// Monotonic event counter (relaxed atomic `u64`).
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// New counter at zero.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Zero the counter.
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins `f64` gauge (bit-stored in an atomic `u64`).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// New gauge at 0.0.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Reset to 0.0.
+    pub fn reset(&self) {
+        self.set(0.0);
+    }
+}
+
+/// Shared handle to a log-bucketed [`Histogram`].
+#[derive(Clone, Debug, Default)]
+pub struct Hist(Arc<Histogram>);
+
+impl Hist {
+    /// New empty histogram handle.
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.0.record(v);
+    }
+
+    /// Record a duration in seconds as nanoseconds.
+    #[inline]
+    pub fn record_secs(&self, secs: f64) {
+        self.0.record_secs(secs);
+    }
+
+    /// The underlying histogram (for quantiles/summaries).
+    pub fn inner(&self) -> &Histogram {
+        &self.0
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: RwLock<BTreeMap<String, Counter>>,
+    gauges: RwLock<BTreeMap<String, Gauge>>,
+    hists: RwLock<BTreeMap<String, Hist>>,
+}
+
+/// Named collection of metrics; `Clone` shares the same store.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let c = self.inner.counters.read().expect("registry poisoned").len();
+        let g = self.inner.gauges.read().expect("registry poisoned").len();
+        let h = self.inner.hists.read().expect("registry poisoned").len();
+        write!(f, "Registry({c} counters, {g} gauges, {h} hists)")
+    }
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the counter named `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        if let Some(c) = self.inner.counters.read().expect("registry poisoned").get(name) {
+            return c.clone();
+        }
+        let mut w = self.inner.counters.write().expect("registry poisoned");
+        w.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        if let Some(g) = self.inner.gauges.read().expect("registry poisoned").get(name) {
+            return g.clone();
+        }
+        let mut w = self.inner.gauges.write().expect("registry poisoned");
+        w.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the histogram named `name`.
+    pub fn hist(&self, name: &str) -> Hist {
+        if let Some(h) = self.inner.hists.read().expect("registry poisoned").get(name) {
+            return h.clone();
+        }
+        let mut w = self.inner.hists.write().expect("registry poisoned");
+        w.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Adopt an existing counter handle under `name` (last wins): the
+    /// migration path for subsystems that own their counters.
+    pub fn register_counter(&self, name: &str, c: &Counter) {
+        self.inner
+            .counters
+            .write()
+            .expect("registry poisoned")
+            .insert(name.to_string(), c.clone());
+    }
+
+    /// Adopt an existing gauge handle under `name` (last wins).
+    pub fn register_gauge(&self, name: &str, g: &Gauge) {
+        self.inner
+            .gauges
+            .write()
+            .expect("registry poisoned")
+            .insert(name.to_string(), g.clone());
+    }
+
+    /// Adopt an existing histogram handle under `name` (last wins).
+    pub fn register_hist(&self, name: &str, h: &Hist) {
+        self.inner.hists.write().expect("registry poisoned").insert(name.to_string(), h.clone());
+    }
+
+    /// Value of a named counter, if registered.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.inner.counters.read().expect("registry poisoned").get(name).map(Counter::get)
+    }
+
+    /// Zero every registered metric (counters, gauges, histograms).
+    pub fn reset(&self) {
+        for c in self.inner.counters.read().expect("registry poisoned").values() {
+            c.reset();
+        }
+        for g in self.inner.gauges.read().expect("registry poisoned").values() {
+            g.reset();
+        }
+        for h in self.inner.hists.read().expect("registry poisoned").values() {
+            h.inner().reset();
+        }
+    }
+
+    /// Point-in-time snapshot:
+    /// `{"counters": {..}, "gauges": {..}, "histograms": {..}}` where
+    /// each histogram reports count/sum/mean/min/max/p50/p90/p99 and
+    /// its non-empty `[lo, hi, n]` buckets.
+    pub fn snapshot(&self) -> Json {
+        let counters: Vec<(String, Json)> = self
+            .inner
+            .counters
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, c)| (k.clone(), Json::Num(c.get() as f64)))
+            .collect();
+        let gauges: Vec<(String, Json)> = self
+            .inner
+            .gauges
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, g)| (k.clone(), Json::Num(g.get())))
+            .collect();
+        let hists: Vec<(String, Json)> = self
+            .inner
+            .hists
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, h)| {
+                let hh = h.inner();
+                let s = hh.summary();
+                let buckets = hh
+                    .nonzero_buckets()
+                    .into_iter()
+                    .map(|(lo, hi, n)| {
+                        Json::Arr(vec![
+                            Json::Num(lo as f64),
+                            Json::Num(hi as f64),
+                            Json::Num(n as f64),
+                        ])
+                    })
+                    .collect();
+                let obj = Json::Obj(vec![
+                    ("count".into(), Json::Num(s.count as f64)),
+                    ("sum".into(), Json::Num(s.sum as f64)),
+                    ("mean".into(), Json::Num(hh.mean())),
+                    ("min".into(), Json::Num(s.min as f64)),
+                    ("max".into(), Json::Num(s.max as f64)),
+                    ("p50".into(), Json::Num(s.p50 as f64)),
+                    ("p90".into(), Json::Num(s.p90 as f64)),
+                    ("p99".into(), Json::Num(s.p99 as f64)),
+                    ("buckets".into(), Json::Arr(buckets)),
+                ]);
+                (k.clone(), obj)
+            })
+            .collect();
+        Json::Obj(vec![
+            ("counters".into(), Json::Obj(counters)),
+            ("gauges".into(), Json::Obj(gauges)),
+            ("histograms".into(), Json::Obj(hists)),
+        ])
+    }
+
+    /// Snapshot serialized to a compact JSON string.
+    pub fn to_json_string(&self) -> String {
+        self.snapshot().to_string()
+    }
+
+    /// Write the snapshot JSON to `path`.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_create_returns_shared_handles() {
+        let reg = Registry::new();
+        let a = reg.counter("x");
+        let b = reg.counter("x");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.counter_value("x"), Some(3));
+        assert_eq!(a.get(), 3);
+
+        let g = reg.gauge("load");
+        g.set(0.75);
+        assert_eq!(reg.gauge("load").get(), 0.75);
+
+        let h = reg.hist("lat");
+        h.record(10);
+        assert_eq!(reg.hist("lat").inner().count(), 1);
+    }
+
+    #[test]
+    fn registered_external_handle_reads_live() {
+        let reg = Registry::new();
+        let mine = Counter::new();
+        mine.add(5);
+        reg.register_counter("ext.hits", &mine);
+        assert_eq!(reg.counter_value("ext.hits"), Some(5));
+        mine.inc();
+        assert_eq!(reg.counter_value("ext.hits"), Some(6));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json_and_reset_zeroes() {
+        let reg = Registry::new();
+        reg.counter("c").add(7);
+        reg.gauge("g").set(1.5);
+        let h = reg.hist("h");
+        for v in [1u64, 2, 3, 1000] {
+            h.record(v);
+        }
+        let text = reg.to_json_string();
+        let v = Json::parse(&text).expect("snapshot must be valid JSON");
+        assert_eq!(v.get("counters").and_then(|c| c.get("c")).and_then(Json::as_f64), Some(7.0));
+        assert_eq!(v.get("gauges").and_then(|g| g.get("g")).and_then(Json::as_f64), Some(1.5));
+        let hist = v.get("histograms").and_then(|h| h.get("h")).expect("hist present");
+        assert_eq!(hist.get("count").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(hist.get("max").and_then(Json::as_f64), Some(1000.0));
+        assert!(hist.get("buckets").and_then(Json::as_array).is_some_and(|b| !b.is_empty()));
+
+        reg.reset();
+        assert_eq!(reg.counter_value("c"), Some(0));
+        assert_eq!(reg.gauge("g").get(), 0.0);
+        assert_eq!(reg.hist("h").inner().count(), 0);
+    }
+}

@@ -1,0 +1,427 @@
+//! Lock-cheap span tracing with Chrome trace-event export.
+//!
+//! A [`Tracer`] is shared (cheap `Arc` clone) by every thread in a run;
+//! each thread takes a [`TraceHandle`] with its own lane id (`tid`) and
+//! buffers spans locally, flushing to the shared sink in batches and on
+//! drop — the hot path never takes the sink lock per span. The disabled
+//! path is one relaxed atomic load ([`TraceHandle::start`] returns
+//! `None` and every `end` is a no-op), pinned by a bench-style test in
+//! the obs module.
+//!
+//! [`spans_to_chrome_json`] renders spans as Chrome trace-event JSON
+//! (`ph:"B"`/`"E"` pairs) loadable in `chrome://tracing` and
+//! [Perfetto](https://ui.perfetto.dev): one lane per `tid`, with span
+//! `args` attached to the begin event. Spans within one lane must be
+//! sequential or properly nested — guaranteed when each thread writes
+//! through its own handle; the emitter additionally clamps timestamps
+//! monotonically per lane so a malformed stream still loads.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::infer::json::Json;
+
+/// Lane id used for coordinator-level stage spans (partition, ring,
+/// fine-tune), far above any worker index.
+pub const COORDINATOR_TID: u32 = 1_000;
+
+/// Handle-local buffer size before a batch flush to the shared sink.
+const FLUSH_EVERY: usize = 256;
+
+/// One completed span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRec {
+    pub name: String,
+    /// Category ("ring", "stage", "serve", "jointree", ...).
+    pub cat: &'static str,
+    /// Lane: worker index, server thread index, or [`COORDINATOR_TID`].
+    pub tid: u32,
+    /// Nanoseconds since the tracer's epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Numeric arguments shown in the trace viewer.
+    pub args: Vec<(&'static str, f64)>,
+}
+
+#[derive(Debug)]
+struct Shared {
+    enabled: AtomicBool,
+    epoch: Instant,
+    sink: Mutex<Vec<SpanRec>>,
+}
+
+/// Shared span recorder; clone freely, one per run.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    shared: Arc<Shared>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::disabled()
+    }
+}
+
+impl Tracer {
+    /// New tracer, recording iff `enabled`.
+    pub fn new(enabled: bool) -> Tracer {
+        Tracer {
+            shared: Arc::new(Shared {
+                enabled: AtomicBool::new(enabled),
+                epoch: Instant::now(),
+                sink: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Tracer that records nothing (the default).
+    pub fn disabled() -> Tracer {
+        Tracer::new(false)
+    }
+
+    /// Is recording on?
+    pub fn enabled(&self) -> bool {
+        self.shared.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording on or off (affects all handles immediately).
+    pub fn set_enabled(&self, on: bool) {
+        self.shared.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Nanoseconds since this tracer was created.
+    pub fn now_ns(&self) -> u64 {
+        self.shared.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// A per-thread recording handle for lane `tid`.
+    pub fn handle(&self, tid: u32) -> TraceHandle {
+        TraceHandle { shared: self.shared.clone(), tid, buf: Vec::new() }
+    }
+
+    /// Spans flushed to the sink so far (handles flush on drop).
+    pub fn span_count(&self) -> usize {
+        self.shared.sink.lock().expect("trace sink poisoned").len()
+    }
+
+    /// Copy of all flushed spans.
+    pub fn spans(&self) -> Vec<SpanRec> {
+        self.shared.sink.lock().expect("trace sink poisoned").clone()
+    }
+
+    /// Drain all flushed spans out of the sink.
+    pub fn take_spans(&self) -> Vec<SpanRec> {
+        std::mem::take(&mut *self.shared.sink.lock().expect("trace sink poisoned"))
+    }
+
+    /// Chrome trace-event JSON of all flushed spans; empty string when
+    /// no spans were recorded (a disabled tracer emits zero bytes).
+    pub fn chrome_json(&self) -> String {
+        spans_to_chrome_json(&self.spans())
+    }
+
+    /// Write [`Tracer::chrome_json`] to `path`.
+    pub fn write_chrome(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.chrome_json())
+    }
+}
+
+/// Per-thread span recorder; flushes its buffer on drop.
+#[derive(Debug)]
+pub struct TraceHandle {
+    shared: Arc<Shared>,
+    tid: u32,
+    buf: Vec<SpanRec>,
+}
+
+impl TraceHandle {
+    /// Begin a span: `Some(start_ns)` when tracing is on, else `None`.
+    /// The disabled path is exactly one relaxed atomic load.
+    #[inline]
+    pub fn start(&self) -> Option<u64> {
+        if self.shared.enabled.load(Ordering::Relaxed) {
+            Some(self.shared.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64)
+        } else {
+            None
+        }
+    }
+
+    /// Current time on the tracer clock (for hand-built spans).
+    pub fn now_ns(&self) -> u64 {
+        self.shared.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// End a span begun by [`TraceHandle::start`]; no-op when `started`
+    /// is `None`.
+    #[inline]
+    pub fn end(&mut self, started: Option<u64>, name: &str, cat: &'static str) {
+        self.end_args(started, name, cat, &[]);
+    }
+
+    /// [`TraceHandle::end`] with viewer-visible numeric arguments.
+    pub fn end_args(
+        &mut self,
+        started: Option<u64>,
+        name: &str,
+        cat: &'static str,
+        args: &[(&'static str, f64)],
+    ) {
+        let Some(start_ns) = started else { return };
+        let now = self.now_ns();
+        self.push(SpanRec {
+            name: name.to_string(),
+            cat,
+            tid: self.tid,
+            start_ns,
+            dur_ns: now.saturating_sub(start_ns),
+            args: args.to_vec(),
+        });
+    }
+
+    /// Record a span with explicit timing (e.g. reconstructed from a
+    /// transport's own wait/codec measurement). No-op when disabled.
+    pub fn add(
+        &mut self,
+        name: &str,
+        cat: &'static str,
+        start_ns: u64,
+        dur_ns: u64,
+        args: &[(&'static str, f64)],
+    ) {
+        if !self.shared.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        self.push(SpanRec {
+            name: name.to_string(),
+            cat,
+            tid: self.tid,
+            start_ns,
+            dur_ns,
+            args: args.to_vec(),
+        });
+    }
+
+    fn push(&mut self, span: SpanRec) {
+        self.buf.push(span);
+        if self.buf.len() >= FLUSH_EVERY {
+            self.flush();
+        }
+    }
+
+    /// Move buffered spans into the shared sink.
+    pub fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        self.shared.sink.lock().expect("trace sink poisoned").append(&mut self.buf);
+    }
+}
+
+impl Drop for TraceHandle {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// Convert seconds to the nanosecond span unit.
+pub fn secs_to_ns(secs: f64) -> u64 {
+    (secs.max(0.0) * 1e9) as u64
+}
+
+/// Render spans as a Chrome trace-event JSON array (`ph:"B"`/`"E"`
+/// pairs, timestamps in microseconds), one lane per `tid`. Returns an
+/// empty string for an empty span list.
+pub fn spans_to_chrome_json(spans: &[SpanRec]) -> String {
+    if spans.is_empty() {
+        return String::new();
+    }
+    let mut by_tid: BTreeMap<u32, Vec<&SpanRec>> = BTreeMap::new();
+    for s in spans {
+        by_tid.entry(s.tid).or_default().push(s);
+    }
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() * 2);
+    for (tid, mut lane) in by_tid {
+        // Same start: the longer span is the outer one and must begin
+        // first for stack pairing to nest correctly.
+        lane.sort_by(|a, b| a.start_ns.cmp(&b.start_ns).then(b.dur_ns.cmp(&a.dur_ns)));
+        let mut stack: Vec<&SpanRec> = Vec::new();
+        // Monotonic per-lane cursor: emitted timestamps never go
+        // backwards even if the input spans weren't perfectly nested.
+        let mut cursor_ns = 0u64;
+        let mut emit =
+            |events: &mut Vec<Json>, cursor_ns: &mut u64, ph: &str, s: &SpanRec, ts_ns: u64| {
+                let ts_ns = ts_ns.max(*cursor_ns);
+                *cursor_ns = ts_ns;
+                let mut obj = vec![
+                    ("name".to_string(), Json::Str(s.name.clone())),
+                    ("cat".to_string(), Json::Str(s.cat.to_string())),
+                    ("ph".to_string(), Json::Str(ph.to_string())),
+                    ("ts".to_string(), Json::Num(ts_ns as f64 / 1e3)),
+                    ("pid".to_string(), Json::Num(0.0)),
+                    ("tid".to_string(), Json::Num(tid as f64)),
+                ];
+                if ph == "B" && !s.args.is_empty() {
+                    let args = s
+                        .args
+                        .iter()
+                        .map(|&(k, v)| (k.to_string(), Json::Num(v)))
+                        .collect::<Vec<_>>();
+                    obj.push(("args".to_string(), Json::Obj(args)));
+                }
+                events.push(Json::Obj(obj));
+            };
+        for s in lane {
+            while let Some(&top) = stack.last() {
+                if top.start_ns.saturating_add(top.dur_ns) <= s.start_ns {
+                    emit(&mut events, &mut cursor_ns, "E", top, top.start_ns + top.dur_ns);
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            emit(&mut events, &mut cursor_ns, "B", s, s.start_ns);
+            stack.push(s);
+        }
+        while let Some(top) = stack.pop() {
+            emit(&mut events, &mut cursor_ns, "E", top, top.start_ns.saturating_add(top.dur_ns));
+        }
+    }
+    let mut out = String::from("[\n");
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(&e.to_string());
+        if i + 1 < events.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_and_emits_nothing() {
+        let tr = Tracer::disabled();
+        let mut th = tr.handle(3);
+        let t0 = th.start();
+        assert_eq!(t0, None);
+        th.end(t0, "x", "test");
+        th.add("y", "test", 0, 10, &[]);
+        th.flush();
+        assert_eq!(tr.span_count(), 0);
+        assert_eq!(tr.chrome_json(), "");
+    }
+
+    #[test]
+    fn enabled_tracer_captures_spans_with_args() {
+        let tr = Tracer::new(true);
+        {
+            let mut th = tr.handle(1);
+            let t0 = th.start();
+            assert!(t0.is_some());
+            th.end_args(t0, "work", "test", &[("round", 2.0)]);
+            // buffered until flush/drop
+        }
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "work");
+        assert_eq!(spans[0].tid, 1);
+        assert_eq!(spans[0].args, vec![("round", 2.0)]);
+    }
+
+    #[test]
+    fn set_enabled_flips_all_handles() {
+        let tr = Tracer::disabled();
+        let mut th = tr.handle(0);
+        assert!(th.start().is_none());
+        tr.set_enabled(true);
+        let t0 = th.start();
+        assert!(t0.is_some());
+        th.end(t0, "late", "test");
+        th.flush();
+        assert_eq!(tr.span_count(), 1);
+    }
+
+    #[test]
+    fn chrome_export_pairs_and_orders_events() {
+        // Two lanes: lane 0 has nested spans, lane 7 sequential ones.
+        let spans = vec![
+            SpanRec {
+                name: "outer".into(),
+                cat: "t",
+                tid: 0,
+                start_ns: 1_000,
+                dur_ns: 9_000,
+                args: vec![("round", 0.0)],
+            },
+            SpanRec {
+                name: "inner".into(),
+                cat: "t",
+                tid: 0,
+                start_ns: 2_000,
+                dur_ns: 3_000,
+                args: vec![],
+            },
+            SpanRec { name: "a".into(), cat: "t", tid: 7, start_ns: 0, dur_ns: 100, args: vec![] },
+            SpanRec {
+                name: "b".into(),
+                cat: "t",
+                tid: 7,
+                start_ns: 200,
+                dur_ns: 50,
+                args: vec![],
+            },
+        ];
+        let text = spans_to_chrome_json(&spans);
+        let doc = Json::parse(&text).expect("chrome export must parse");
+        let events = doc.as_array().expect("array of events");
+        assert_eq!(events.len(), 8);
+        // per-tid: B/E balance, monotonic ts, matched names via stack
+        for tid in [0.0, 7.0] {
+            let mut stack: Vec<&str> = Vec::new();
+            let mut last_ts = f64::NEG_INFINITY;
+            for e in events.iter().filter(|e| e.get("tid").and_then(Json::as_f64) == Some(tid)) {
+                let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+                assert!(ts >= last_ts, "timestamps regress in lane {tid}");
+                last_ts = ts;
+                let name = e.get("name").and_then(Json::as_str).unwrap();
+                match e.get("ph").and_then(Json::as_str).unwrap() {
+                    "B" => stack.push(name),
+                    "E" => assert_eq!(stack.pop(), Some(name), "mismatched end in lane {tid}"),
+                    other => panic!("unexpected phase {other}"),
+                }
+            }
+            assert!(stack.is_empty(), "unclosed spans in lane {tid}");
+        }
+        // args survive on the begin event
+        let outer_b = events
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(Json::as_str) == Some("outer")
+                    && e.get("ph").and_then(Json::as_str) == Some("B")
+            })
+            .unwrap();
+        assert_eq!(
+            outer_b.get("args").and_then(|a| a.get("round")).and_then(Json::as_f64),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn handle_batches_flush_to_sink() {
+        let tr = Tracer::new(true);
+        let mut th = tr.handle(0);
+        for i in 0..(FLUSH_EVERY + 10) {
+            th.add("s", "test", i as u64 * 10, 5, &[]);
+        }
+        // one batch auto-flushed, remainder still buffered
+        assert_eq!(tr.span_count(), FLUSH_EVERY);
+        drop(th);
+        assert_eq!(tr.span_count(), FLUSH_EVERY + 10);
+    }
+}

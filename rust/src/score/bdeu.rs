@@ -92,6 +92,13 @@ impl BdeuScorer {
         self.counter.stats()
     }
 
+    /// Register this scorer's live score-cache and counting-path
+    /// counters with a metrics registry.
+    pub fn bind_obs(&self, reg: &crate::obs::Registry) {
+        self.cache.bind_obs(reg);
+        self.counter.bind_obs(reg);
+    }
+
     /// Local BDeu score of `child` with parent set `parents`
     /// (any order; deduplicated by sorting). Cached. Allocation-free
     /// up to the cache probe for ≤ [`PROBE_INLINE`] parents.

@@ -12,8 +12,9 @@
 //! search) take a shared lock only.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
+
+use crate::obs;
 
 const SHARDS: usize = 64;
 
@@ -46,8 +47,8 @@ impl Key {
 /// Concurrent map from families to local scores.
 pub struct ScoreCache {
     shards: Vec<RwLock<HashMap<Key, f64>>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    hits: obs::Counter,
+    misses: obs::Counter,
 }
 
 impl Default for ScoreCache {
@@ -61,9 +62,16 @@ impl ScoreCache {
     pub fn new() -> Self {
         ScoreCache {
             shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            hits: obs::Counter::new(),
+            misses: obs::Counter::new(),
         }
+    }
+
+    /// Register the live hit/miss counters with a metrics registry:
+    /// snapshots then read this cache's probes without copying.
+    pub fn bind_obs(&self, reg: &obs::Registry) {
+        reg.register_counter("score_cache.hits", &self.hits);
+        reg.register_counter("score_cache.misses", &self.misses);
     }
 
     #[inline]
@@ -87,9 +95,9 @@ impl ScoreCache {
         let r = guard.get(&key).copied();
         drop(guard);
         if r.is_some() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.hits.inc();
         } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.misses.inc();
         }
         r
     }
@@ -104,9 +112,10 @@ impl ScoreCache {
     }
 
     /// (hits, misses) probe counters for telemetry: every `get` ticks
-    /// exactly one of the two.
+    /// exactly one of the two. A thin view over the same [`obs`]
+    /// counters that [`ScoreCache::bind_obs`] registers.
     pub fn stats(&self) -> (u64, u64) {
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+        (self.hits.get(), self.misses.get())
     }
 
     /// Total cached families.
@@ -133,6 +142,19 @@ mod tests {
         assert_eq!(c.get(3, &[1]), None);
         assert_eq!(c.get(2, &[1, 2]), None);
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn bound_registry_reads_live_counters() {
+        let c = ScoreCache::new();
+        let reg = crate::obs::Registry::new();
+        c.bind_obs(&reg);
+        c.put(1, &[0], -1.0);
+        assert_eq!(c.get(1, &[0]), Some(-1.0));
+        assert_eq!(c.get(2, &[]), None);
+        assert_eq!(reg.counter_value("score_cache.hits"), Some(1));
+        assert_eq!(reg.counter_value("score_cache.misses"), Some(1));
+        assert_eq!(c.stats(), (1, 1));
     }
 
     #[test]

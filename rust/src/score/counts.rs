@@ -28,10 +28,10 @@
 //! [`BdeuScorer`]: crate::score::BdeuScorer
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::{Dataset, PackedData};
+use crate::obs;
 use crate::util::par::par_map_index;
 
 /// Max dense table cells before switching to the sparse counter
@@ -303,17 +303,31 @@ impl CountConfig {
     }
 }
 
-/// Families counted per strategy plus count-reuse stats — atomics so
-/// concurrent scoring threads tick them lock-free.
+/// Families counted per strategy plus count-reuse stats — atomic
+/// [`obs::Counter`]s so concurrent scoring threads tick them lock-free
+/// and a metrics registry can adopt the live handles.
 #[derive(Default)]
 pub struct CountStats {
-    popcount: AtomicU64,
-    blocked: AtomicU64,
-    dense: AtomicU64,
-    sparse: AtomicU64,
-    derived: AtomicU64,
-    table_hits: AtomicU64,
-    table_misses: AtomicU64,
+    popcount: obs::Counter,
+    blocked: obs::Counter,
+    dense: obs::Counter,
+    sparse: obs::Counter,
+    derived: obs::Counter,
+    table_hits: obs::Counter,
+    table_misses: obs::Counter,
+}
+
+impl CountStats {
+    /// Register the live path counters under `counts.*`.
+    pub fn bind_obs(&self, reg: &obs::Registry) {
+        reg.register_counter("counts.popcount", &self.popcount);
+        reg.register_counter("counts.blocked", &self.blocked);
+        reg.register_counter("counts.dense", &self.dense);
+        reg.register_counter("counts.sparse", &self.sparse);
+        reg.register_counter("counts.derived", &self.derived);
+        reg.register_counter("counts.table_hits", &self.table_hits);
+        reg.register_counter("counts.table_misses", &self.table_misses);
+    }
 }
 
 /// Plain-integer snapshot of [`CountStats`] (telemetry / benches).
@@ -368,17 +382,23 @@ impl Counter {
         &self.data
     }
 
-    /// Current path/reuse counters.
+    /// Current path/reuse counters — a thin view over the same
+    /// [`obs`] counters that [`Counter::bind_obs`] registers.
     pub fn stats(&self) -> CountSnapshot {
         CountSnapshot {
-            popcount: self.stats.popcount.load(Ordering::Relaxed),
-            blocked: self.stats.blocked.load(Ordering::Relaxed),
-            dense: self.stats.dense.load(Ordering::Relaxed),
-            sparse: self.stats.sparse.load(Ordering::Relaxed),
-            derived: self.stats.derived.load(Ordering::Relaxed),
-            table_hits: self.stats.table_hits.load(Ordering::Relaxed),
-            table_misses: self.stats.table_misses.load(Ordering::Relaxed),
+            popcount: self.stats.popcount.get(),
+            blocked: self.stats.blocked.get(),
+            dense: self.stats.dense.get(),
+            sparse: self.stats.sparse.get(),
+            derived: self.stats.derived.get(),
+            table_hits: self.stats.table_hits.get(),
+            table_misses: self.stats.table_misses.get(),
         }
+    }
+
+    /// Register this engine's live path counters with a registry.
+    pub fn bind_obs(&self, reg: &obs::Registry) {
+        self.stats.bind_obs(reg);
     }
 
     /// Dense-table cell count of the family, `None` when the family is
@@ -401,26 +421,26 @@ impl Counter {
         if self.cfg.mode == CountMode::Reference {
             let fc = family_counts_with_limit(&self.data, child, parents, self.cfg.dense_limit);
             match fc.table {
-                CountsTable::Dense(_) => self.stats.dense.fetch_add(1, Ordering::Relaxed),
-                _ => self.stats.sparse.fetch_add(1, Ordering::Relaxed),
+                CountsTable::Dense(_) => self.stats.dense.inc(),
+                _ => self.stats.sparse.inc(),
             };
             return fc;
         }
         let Some(cells) = self.dense_cells(child, parents) else {
-            self.stats.sparse.fetch_add(1, Ordering::Relaxed);
+            self.stats.sparse.inc();
             return family_counts_with_limit(&self.data, child, parents, self.cfg.dense_limit);
         };
         let r = self.data.card(child) as usize;
         let m = self.packed.n_rows();
         let counts = if self.popcount_eligible(child, parents, cells, m) {
-            self.stats.popcount.fetch_add(1, Ordering::Relaxed);
+            self.stats.popcount.inc();
             self.popcount_table(child, parents, cells as usize)
         } else if m >= self.cfg.par_rows && self.cfg.par_threads > 1 && cells <= BLOCKED_MAX_CELLS
         {
-            self.stats.blocked.fetch_add(1, Ordering::Relaxed);
+            self.stats.blocked.inc();
             self.blocked_table(child, parents, cells as usize)
         } else {
-            self.stats.dense.fetch_add(1, Ordering::Relaxed);
+            self.stats.dense.inc();
             self.decode_range(child, parents, cells as usize, 0, m)
         };
         FamilyCounts { r, table: CountsTable::Dense(counts) }
@@ -432,10 +452,10 @@ impl Counter {
         let key: TableKey = (child as u32, parents.iter().map(|&p| p as u32).collect());
         debug_assert!(key.1.windows(2).all(|w| w[0] < w[1]));
         if let Some(t) = self.tables.lock().expect("table cache poisoned").get(&key) {
-            self.stats.table_hits.fetch_add(1, Ordering::Relaxed);
+            self.stats.table_hits.inc();
             return t.clone();
         }
-        self.stats.table_misses.fetch_add(1, Ordering::Relaxed);
+        self.stats.table_misses.inc();
         let fc = self.family_counts(child, parents);
         let counts = match fc.table {
             CountsTable::Dense(v) => Arc::new(v),
@@ -463,7 +483,7 @@ impl Counter {
         sup_cards: &[usize],
         pos: usize,
     ) -> Vec<u32> {
-        self.stats.derived.fetch_add(1, Ordering::Relaxed);
+        self.stats.derived.inc();
         let cx = sup_cards[pos];
         // Configs below / above the removed digit.
         let low: usize = sup_cards[..pos].iter().product();

@@ -1,4 +1,7 @@
 //! Small shared substrates: bitsets, parallel helpers, timers, stats.
+//!
+//! Timing moved to [`crate::obs::clock`]; `util::timer` / [`Timer`]
+//! remain as compatibility re-exports.
 
 pub mod bitset;
 pub mod par;

@@ -1,49 +1,7 @@
-//! Wall-clock timing helper used by telemetry and the bench harness.
+//! Wall-clock timing, now provided by [`crate::obs::clock`].
+//!
+//! The historical `util::Timer` API lives on unchanged as a view over
+//! [`crate::obs::clock::Stopwatch`]; this module re-exports both so
+//! every pre-obs call site keeps compiling.
 
-use std::time::Instant;
-
-/// Simple wall-clock timer.
-pub struct Timer {
-    start: Instant,
-}
-
-impl Timer {
-    /// Start a new timer.
-    pub fn start() -> Self {
-        Timer { start: Instant::now() }
-    }
-
-    /// Elapsed seconds since start.
-    pub fn secs(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-
-    /// Elapsed milliseconds since start.
-    pub fn millis(&self) -> f64 {
-        self.start.elapsed().as_secs_f64() * 1e3
-    }
-
-    /// Reset the start point.
-    pub fn reset(&mut self) {
-        self.start = Instant::now();
-    }
-}
-
-impl Default for Timer {
-    fn default() -> Self {
-        Self::start()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn timer_monotone() {
-        let t = Timer::start();
-        let a = t.secs();
-        let b = t.secs();
-        assert!(b >= a && a >= 0.0);
-    }
-}
+pub use crate::obs::clock::{Stopwatch, Timer};

@@ -148,6 +148,108 @@ fn ring_transports_and_deterministic_mode_agree() {
     assert!(det.telemetry.records.iter().all(|rec| rec.wait_secs == 0.0));
 }
 
+/// Observability round-trip over a real ring run (satellite of the
+/// obs PR): a live tracer's Chrome export must parse back as JSON
+/// with strictly matched B/E pairs per lane, monotone timestamps, and
+/// worker lanes drawn from the telemetry's own worker set; the
+/// metrics registry must have picked up the live counters. A disabled
+/// tracer on the same workload emits zero spans and zero bytes.
+#[test]
+fn ring_trace_roundtrip_chrome_events() {
+    use cges::infer::json::Json;
+    use cges::obs::{Registry, Tracer, COORDINATOR_TID};
+    use std::collections::{BTreeMap, BTreeSet};
+
+    let (_bn, data) = workload(14, 18, 900, 7);
+    let tracer = Tracer::new(true);
+    let registry = Registry::new();
+    let r = cges(
+        data.clone(),
+        &RingConfig {
+            k: 3,
+            threads: 3,
+            registry: Some(registry.clone()),
+            tracer: tracer.clone(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Live counters landed in the registry: hop metrics exported by
+    // the telemetry, score-cache counters bound by the scorer.
+    assert!(registry.counter_value("ring.hops").unwrap_or(0) >= 3, "hop counter missing");
+    let cache_traffic = registry.counter_value("score_cache.hits").unwrap_or(0)
+        + registry.counter_value("score_cache.misses").unwrap_or(0);
+    assert!(cache_traffic > 0, "bound score-cache counters saw no traffic");
+
+    // Ring-category span lanes are exactly telemetry workers (the
+    // coordinator records its stage spans in its own lane).
+    let spans = tracer.spans();
+    assert!(!spans.is_empty(), "enabled tracer recorded nothing");
+    let telemetry_workers: BTreeSet<u32> =
+        r.telemetry.timelines().iter().map(|t| t.worker as u32).collect();
+    for sp in &spans {
+        if sp.cat == "ring" {
+            assert!(
+                telemetry_workers.contains(&sp.tid),
+                "ring span '{}' on unknown worker lane {}",
+                sp.name,
+                sp.tid
+            );
+        } else if sp.cat == "stage" {
+            assert_eq!(sp.tid, COORDINATOR_TID, "stage span off the coordinator lane");
+        }
+    }
+    assert!(spans.iter().any(|s| s.cat == "ring" && s.name == "ges"), "no ges spans");
+    assert!(spans.iter().any(|s| s.cat == "ring" && s.name == "fuse"), "no fuse spans");
+    assert!(spans.iter().any(|s| s.cat == "stage" && s.name == "learning"), "no stage span");
+
+    // Chrome export: valid JSON, strict B/E pairing with monotone
+    // timestamps inside every lane.
+    let text = tracer.chrome_json();
+    let events = Json::parse(&text).expect("chrome trace must parse");
+    let events = events.as_array().expect("chrome trace is an event array");
+    assert!(!events.is_empty());
+    let mut stacks: BTreeMap<u64, Vec<(String, f64)>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    for ev in events {
+        let tid = ev.get("tid").and_then(Json::as_f64).expect("tid") as u64;
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("ts");
+        let name = ev.get("name").and_then(Json::as_str).expect("name").to_string();
+        let ph = ev.get("ph").and_then(Json::as_str).expect("ph");
+        let prev = last_ts.entry(tid).or_insert(f64::NEG_INFINITY);
+        assert!(ts >= *prev, "lane {tid}: timestamp went backwards ({ts} < {prev})");
+        *prev = ts;
+        match ph {
+            "B" => stacks.entry(tid).or_default().push((name, ts)),
+            "E" => {
+                let (open, begin_ts) = stacks
+                    .get_mut(&tid)
+                    .and_then(Vec::pop)
+                    .unwrap_or_else(|| panic!("lane {tid}: E '{name}' without matching B"));
+                assert_eq!(open, name, "lane {tid}: mismatched B/E nesting");
+                assert!(ts >= begin_ts, "lane {tid}: span '{name}' ends before it begins");
+            }
+            other => panic!("unexpected phase '{other}'"),
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "lane {tid}: {} unclosed spans", stack.len());
+    }
+
+    // The reconstructed telemetry trace covers the same worker lanes.
+    let tele_spans = r.telemetry.to_spans();
+    let tele_lanes: BTreeSet<u32> = tele_spans.iter().map(|s| s.tid).collect();
+    assert_eq!(tele_lanes, telemetry_workers);
+
+    // Disabled tracer: same run shape, zero spans, zero bytes.
+    let off = Tracer::disabled();
+    cges(data, &RingConfig { k: 3, threads: 3, tracer: off.clone(), ..Default::default() })
+        .unwrap();
+    assert_eq!(off.span_count(), 0, "disabled tracer recorded spans");
+    assert!(off.chrome_json().is_empty(), "disabled tracer emitted bytes");
+}
+
 #[test]
 fn telemetry_records_every_round_and_worker() {
     let (_bn, data) = workload(16, 22, 1200, 13);

@@ -17,6 +17,7 @@ use cges::infer::kernel::{self, reference};
 use cges::learn::{fges, ges, FgesConfig, GesConfig};
 use cges::metrics::smhd;
 use cges::model::{bundle_from_bytes, bundle_to_bytes, Bundle, BundleMeta};
+use cges::obs::Histogram;
 use cges::partition::{assign_edges, cluster_variables, partition_stats};
 use cges::rng::Rng;
 use cges::score::{
@@ -777,5 +778,68 @@ fn prop_count_learners_byte_identical_across_count_modes() {
             rescore_b.to_bits(),
             "seed {seed}: ring score_dag bits diverge across count modes"
         );
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_bracket_exact_order_statistics() {
+    // The log-bucketed histogram never stores samples, only bucket
+    // counts — the invariant that makes it usable anyway is that
+    // `quantile_bounds(q)` returns exactly the bucket holding the
+    // q-th order statistic of the recorded multiset, so every reported
+    // percentile is off by at most one bucket width.
+    for seed in 0..TRIALS {
+        let mut rng = Rng::new(seed ^ 0x0b5);
+        let n = 30 + rng.gen_range(470);
+        // Spread samples across many octaves: a uniform u64 would land
+        // almost everything in the top few buckets.
+        let samples: Vec<u64> = (0..n)
+            .map(|_| {
+                let shift = rng.gen_range(64) as u32;
+                rng.next_u64() >> shift
+            })
+            .collect();
+
+        let h = Histogram::new();
+        for &v in &samples {
+            h.record(v);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+
+        assert_eq!(h.count(), n as u64, "seed {seed}: count");
+        assert_eq!(h.min(), sorted[0], "seed {seed}: min");
+        assert_eq!(h.max(), *sorted.last().unwrap(), "seed {seed}: max");
+        assert_eq!(
+            h.sum(),
+            samples.iter().fold(0u64, |a, &v| a.wrapping_add(v)),
+            "seed {seed}: sum"
+        );
+
+        for &q in &[0.0, 0.01, 0.25, 0.50, 0.90, 0.99, 1.0] {
+            // The same 1-based rank rule the histogram documents.
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let exact = sorted[rank - 1];
+            let (lo, hi) = h.quantile_bounds(q);
+            assert!(
+                lo <= exact && exact <= hi,
+                "seed {seed}: q={q} exact {exact} outside bracket [{lo}, {hi}]"
+            );
+            // The bracket is exactly the one bucket containing the
+            // order statistic — never wider.
+            let idx = 64 - exact.leading_zeros() as usize;
+            assert_eq!(
+                (lo, hi),
+                Histogram::bucket_bounds(idx),
+                "seed {seed}: q={q} bracket is not the bucket of {exact}"
+            );
+            // The single-number summary stays inside the bracket and
+            // on the far side of the exact statistic.
+            let p = h.quantile(q);
+            assert!(
+                exact <= p && lo <= p && p <= hi,
+                "seed {seed}: q={q} quantile {p} vs exact {exact} in [{lo}, {hi}]"
+            );
+        }
     }
 }

@@ -7,7 +7,9 @@
 //! issuing its sub-queries individually; (4) the scratch
 //! collect-message cache never leaks evidence between queries; (5) the
 //! frame cap is configurable and the shutdown sentinel drains the
-//! pool.
+//! pool; (6) after TCP traffic the `{"type": "stats"}` endpoint
+//! reports non-zero latency buckets and an attached tracer holds the
+//! serve and jointree spans for that traffic.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -17,6 +19,7 @@ use cges::engine::{CompiledModel, ServeConfig, Server, SharedEngine};
 use cges::infer::json::Json;
 use cges::infer::EngineConfig;
 use cges::model::{bundle_from_bytes, bundle_to_bytes, Bundle, BundleMeta};
+use cges::obs::Tracer;
 
 fn small_cfg(nodes: usize, edges: usize) -> NetGenConfig {
     NetGenConfig { nodes, edges, max_parents: 3, card_range: (2, 3), locality: 0, alpha: 0.8 }
@@ -540,4 +543,63 @@ fn shutdown_sentinel_drains_the_pool() {
         handle.join().unwrap();
         assert!(server.is_shutting_down());
     });
+}
+
+#[test]
+fn stats_over_tcp_reports_latency_and_tracer_captures_spans() {
+    let bn = generate(&small_cfg(8, 11), 5);
+    let mut server = Server::new(
+        &bn,
+        &EngineConfig::default(),
+        ServeConfig { threads: 2, ..Default::default() },
+    )
+    .unwrap();
+    server.set_tracer(Tracer::new(true));
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|s| {
+        let server = &server;
+        s.spawn(move || server.serve_tcp(&listener, Some(1)).unwrap());
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        for id in 0..4 {
+            send_frame(&mut writer, &format!(r#"{{"id": {id}, "type": "marginal"}}"#));
+            let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        }
+
+        // An unconfirmed reset is refused and lands in serve.errors.
+        send_frame(&mut writer, r#"{"id": 8, "type": "stats_reset"}"#);
+        let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+
+        // The snapshot reflects the traffic it was part of.
+        send_frame(&mut writer, r#"{"id": 9, "type": "stats"}"#);
+        let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        let stats = v.get("stats").expect("stats body");
+        let counters = stats.get("counters").expect("counters");
+        assert!(counters.get("serve.requests").and_then(Json::as_usize).unwrap() >= 5);
+        assert!(counters.get("serve.errors").and_then(Json::as_usize).unwrap() >= 1);
+        assert!(counters.get("serve.conns_accepted").and_then(Json::as_usize).unwrap() >= 1);
+        let hists = stats.get("histograms").expect("histograms");
+        let lat = hists.get("serve.latency_ns").expect("latency histogram");
+        assert!(lat.get("count").and_then(Json::as_usize).unwrap() >= 5);
+        assert!(lat.get("p50").and_then(Json::as_usize).unwrap() > 0);
+        assert!(!lat.get("buckets").and_then(Json::as_array).unwrap().is_empty());
+        // Both directions of every exchange were measured.
+        let frames = hists.get("serve.frame_bytes").expect("frame-size histogram");
+        assert!(frames.get("count").and_then(Json::as_usize).unwrap() >= 10);
+    });
+
+    // Every request left a span in its thread's serve lane; the exact
+    // engine also traced its jointree passes under the same lane.
+    let spans = server.tracer().spans();
+    assert!(spans.iter().any(|sp| sp.cat == "serve" && sp.name == "marginal"));
+    assert!(spans.iter().any(|sp| sp.cat == "serve" && sp.name == "stats"));
+    assert!(spans.iter().any(|sp| sp.cat == "jointree" && sp.name == "collect"));
+    assert!(spans.iter().any(|sp| sp.cat == "jointree" && sp.name == "distribute"));
 }
