@@ -9,10 +9,10 @@ pub mod transport;
 
 pub use ring::{
     cges, insert_limit, run_ring, BundleEmit, PartitionSource, RingConfig, RingMode,
-    RingOutcome, RingResult, RingRunOptions,
+    RingObsHub, RingOutcome, RingResult, RingRunOptions, WorkerObsCtx,
 };
 pub use telemetry::{RoundRecord, Telemetry, WorkerTimeline};
 pub use transport::{
-    ChannelTransport, ModelMsg, RingLink, RingMessage, RingRx, RingToken, RingTransport,
-    RingTx, RoundProbe, WireTransport,
+    ChannelTransport, ModelMsg, ObsPayload, RingLink, RingMessage, RingRx, RingToken,
+    RingTransport, RingTx, RoundProbe, WireTransport,
 };

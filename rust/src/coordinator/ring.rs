@@ -52,6 +52,19 @@
 //! and calibrates the final model once ([`RingConfig::emit_bundle`] →
 //! [`RingResult::bundle`]) — identical bytes, none of the in-loop
 //! fitting cost.
+//!
+//! Distributed observability ([`RingRunOptions`]`::obs`): with a
+//! [`RingObsHub`] installed, each worker keeps its own [`obs::Tracer`]
+//! and [`obs::Registry`], clock-aligns with its ring predecessor
+//! before any round traffic (NTP-style over wire links, exact epoch
+//! arithmetic in-process), and piggybacks span batches + metric deltas
+//! on its round messages. Shipments hop toward the ring head, rebased
+//! onto each holder's clock per link, and the head relays them to the
+//! coordinator, which merges every worker's metrics under a
+//! `worker<k>.` prefix and files every span — mapped onto the
+//! coordinator's clock — into one trace with one lane per worker.
+//! Same capability contract as bundles: with the hub absent, frames
+//! stay byte-identical to the legacy format.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -61,8 +74,8 @@ use anyhow::Result;
 
 use crate::coordinator::telemetry::{RoundRecord, Telemetry};
 use crate::coordinator::transport::{
-    ChannelTransport, ModelMsg, RingLink, RingMessage, RingRx, RingToken, RingTransport, RingTx,
-    RoundProbe, WireTransport,
+    ChannelTransport, ModelMsg, ObsPayload, RingLink, RingMessage, RingRx, RingToken,
+    RingTransport, RingTx, RoundProbe, WireTransport,
 };
 use crate::data::Dataset;
 use crate::graph::Dag;
@@ -161,6 +174,14 @@ pub struct RingConfig {
     /// Span tracer threaded through the coordinator and every ring
     /// worker; disabled by default (one atomic probe per span site).
     pub tracer: obs::Tracer,
+    /// Ring-wide distributed-observability capability: give each
+    /// worker its own clock domain, clock-align the links, and ship
+    /// spans + metric deltas on the ring's round messages, merged live
+    /// into `tracer` (one lane per worker) and `registry` (worker
+    /// series under `worker<k>.`). Changes the wire format (obs frame
+    /// tags) but never the learned result. Ignored in
+    /// [`RingMode::Deterministic`], which has no ring messages.
+    pub distributed_obs: bool,
 }
 
 impl Default for RingConfig {
@@ -180,6 +201,7 @@ impl Default for RingConfig {
             count_mode: CountMode::Packed,
             registry: None,
             tracer: obs::Tracer::disabled(),
+            distributed_obs: false,
         }
     }
 }
@@ -253,6 +275,78 @@ impl Default for BundleEmit {
     }
 }
 
+/// One ring worker's private observability context inside a
+/// [`RingObsHub`]: its own registry and its own tracer (with its own
+/// epoch — each worker is a clock domain, exactly as if it ran in a
+/// separate process).
+#[derive(Debug)]
+pub struct WorkerObsCtx {
+    /// The worker's private metric store; shipped as deltas and merged
+    /// into the hub's registry under `worker<k>.`.
+    pub registry: obs::Registry,
+    /// The worker's span clock and sink; enabled iff the coordinator's
+    /// tracer is.
+    pub tracer: obs::Tracer,
+}
+
+/// The ring's distributed-observability capability: per-worker clock
+/// domains plus the coordinator-side merge targets. Install one via
+/// [`RingRunOptions::obs`] (or [`RingConfig::distributed_obs`]) to
+/// turn on obs frames, clock alignment, and live merging.
+#[derive(Clone, Debug)]
+pub struct RingObsHub {
+    coordinator: obs::Tracer,
+    merged: obs::Registry,
+    workers: Arc<Vec<WorkerObsCtx>>,
+}
+
+impl RingObsHub {
+    /// Hub for a `k`-ring merging into `coordinator`'s trace and
+    /// `merged`. Worker tracers record iff `coordinator` does.
+    pub fn new(k: usize, coordinator: obs::Tracer, merged: obs::Registry) -> RingObsHub {
+        let workers = (0..k)
+            .map(|_| WorkerObsCtx {
+                registry: obs::Registry::new(),
+                tracer: obs::Tracer::new(coordinator.enabled()),
+            })
+            .collect();
+        RingObsHub { coordinator, merged, workers: Arc::new(workers) }
+    }
+
+    /// Worker `i`'s private obs context.
+    pub fn worker(&self, i: usize) -> &WorkerObsCtx {
+        &self.workers[i]
+    }
+
+    /// The registry every worker's metric deltas merge into.
+    pub fn merged_registry(&self) -> &obs::Registry {
+        &self.merged
+    }
+
+    /// The tracer every worker's spans merge into (the coordinator's).
+    pub fn coordinator_tracer(&self) -> &obs::Tracer {
+        &self.coordinator
+    }
+
+    /// Merge one shipment the coordinator received from `holder`:
+    /// spans (on `holder`'s clock) are mapped onto the coordinator's
+    /// clock by the exact in-process epoch offset and filed in the
+    /// origin worker's lane; metrics land under `worker<origin>.`.
+    pub fn absorb(&self, holder: usize, payload: &ObsPayload) {
+        if !payload.spans.is_empty() {
+            let off = self.workers[holder].tracer.offset_to(&self.coordinator);
+            let mut th = self.coordinator.handle(payload.origin);
+            for s in &payload.spans {
+                th.add(&s.name, s.cat, s.start_ns.saturating_add_signed(off), s.dur_ns, &s.args);
+            }
+            th.flush();
+        }
+        if !payload.metrics.is_empty() {
+            self.merged.absorb_prefixed(&format!("worker{}.", payload.origin), &payload.metrics);
+        }
+    }
+}
+
 /// Options for [`run_ring`] (what the runtime needs beyond the workers
 /// themselves — each [`RingWorker`] already owns its scorer, mask and
 /// cGES-L insert cap through its `GesConfig`).
@@ -279,6 +373,16 @@ pub struct RingRunOptions {
     /// into its own lane when enabled. The default disabled tracer
     /// costs one atomic probe per span site.
     pub tracer: obs::Tracer,
+    /// Distributed-observability capability: when set, each worker
+    /// records into its own hub context (ignoring `tracer`),
+    /// clock-aligns its inbound link, and ships spans + metric deltas
+    /// on its round messages (`TAG_MODEL_OBS` frames — every peer must
+    /// understand them, the same ring-wide contract as
+    /// `ship_bundles`). `None` (the default) leaves frames
+    /// byte-identical to the legacy format. Ignored by the
+    /// deterministic scheduler, whose barrier workers already share
+    /// the coordinator's tracer directly.
+    pub obs: Option<RingObsHub>,
 }
 
 impl Default for RingRunOptions {
@@ -289,6 +393,7 @@ impl Default for RingRunOptions {
             emit: None,
             ship_bundles: false,
             tracer: obs::Tracer::disabled(),
+            obs: None,
         }
     }
 }
@@ -453,6 +558,17 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
     Ok(RingOutcome { best_dag, best_score, rounds, models, records, best_bundle })
 }
 
+/// What flows from the worker threads to the coordinator's fold.
+enum RingEvent {
+    /// One completed hop: its record, model, and optional bundle.
+    Hop(RoundRecord, Dag, Option<Bundle>),
+    /// An observability shipment that reached the coordinator, either
+    /// relayed by the ring head mid-run or flushed directly by a
+    /// worker at teardown. `holder` is the worker whose clock the
+    /// payload's spans are on.
+    Obs { holder: usize, payload: ObsPayload },
+}
+
 /// Actor runtime: one long-lived thread per worker, connected through
 /// the transport; the calling thread folds the event stream.
 fn run_pipelined(
@@ -464,7 +580,7 @@ fn run_pipelined(
     let n = workers[0].n();
     let links = transport.connect(k)?;
     let stop = AtomicBool::new(false);
-    let (events_tx, events_rx) = mpsc::channel::<(RoundRecord, Dag, Option<Bundle>)>();
+    let (events_tx, events_rx) = mpsc::channel::<RingEvent>();
     let opts = opts.clone();
 
     std::thread::scope(|s| {
@@ -475,7 +591,7 @@ fn run_pipelined(
             s.spawn(move || worker_loop(i, k, worker, link, events, stop, &wopts));
         }
         drop(events_tx);
-        collect(k, n, opts.max_rounds, &stop, events_rx)
+        collect(k, n, opts.max_rounds, &stop, events_rx, opts.obs.as_ref())
     })
 }
 
@@ -491,24 +607,169 @@ fn stop_and_drain(tx: &mut dyn RingTx, rx: &mut dyn RingRx) {
     }
 }
 
+/// One worker's in-loop obs state (present iff the run has a
+/// [`RingObsHub`]).
+struct WorkerObsState {
+    /// The worker's private clock domain (same handles as
+    /// `hub.worker(i)`).
+    tracer: obs::Tracer,
+    registry: obs::Registry,
+    /// Ship-state of `registry`: each round ships only what changed.
+    cursor: obs::RegistryCursor,
+    /// Payloads received from the predecessor, already rebased onto
+    /// this worker's clock, awaiting the next outbound message.
+    relay: Vec<ObsPayload>,
+    /// Offset mapping predecessor-clock timestamps onto this worker's
+    /// clock (measured over wire links, exact in-process).
+    link_offset_ns: i64,
+    /// Per-hop stage metrics, recorded into `registry`.
+    wait_ns: obs::Hist,
+    fusion_ns: obs::Hist,
+    ges_ns: obs::Hist,
+    codec_ns: obs::Hist,
+    hops: obs::Counter,
+}
+
+impl WorkerObsState {
+    fn new(i: usize, hub: &RingObsHub, link_offset_ns: i64) -> WorkerObsState {
+        let ctx = hub.worker(i);
+        WorkerObsState {
+            tracer: ctx.tracer.clone(),
+            registry: ctx.registry.clone(),
+            cursor: obs::RegistryCursor::default(),
+            relay: Vec::new(),
+            link_offset_ns,
+            wait_ns: ctx.registry.hist("ring.wait_ns"),
+            fusion_ns: ctx.registry.hist("ring.fusion_ns"),
+            ges_ns: ctx.registry.hist("ring.ges_ns"),
+            codec_ns: ctx.registry.hist("ring.codec_ns"),
+            hops: ctx.registry.counter("ring.hops"),
+        }
+    }
+
+    /// Everything new since the last shipment, as one payload (may be
+    /// empty when the round produced no spans or metric changes).
+    fn own_payload(&mut self, i: usize, th: &mut obs::TraceHandle) -> ObsPayload {
+        th.flush();
+        ObsPayload {
+            origin: i as u32,
+            spans: self.tracer.take_spans(),
+            metrics: self.registry.delta_since(&mut self.cursor),
+        }
+    }
+}
+
+/// Clock-align one worker's link pair before any round traffic: answer
+/// the successor's pings on the outbound link while measuring the
+/// predecessor on the inbound one (every worker does both at once, so
+/// the ring-wide handshake cannot deadlock). In-process links skip the
+/// wire handshake and use exact tracer-epoch arithmetic; a transport
+/// error falls back to 0 — the ring is tearing down anyway.
+fn clock_align(
+    i: usize,
+    k: usize,
+    hub: &RingObsHub,
+    tx: &mut dyn RingTx,
+    rx: &mut dyn RingRx,
+) -> i64 {
+    let own = hub.worker(i).tracer.clone();
+    let answer_clock = own.clone();
+    let measured = std::thread::scope(|s| {
+        let answerer = s.spawn(move || {
+            let mut now = || answer_clock.now_ns();
+            tx.answer_clock_sync(&mut now)
+        });
+        let mut now = || own.now_ns();
+        let measured = rx.measure_clock_sync(&mut now);
+        let _ = answerer.join();
+        measured
+    });
+    match measured {
+        Ok(Some(off)) => off.offset_ns,
+        Ok(None) => {
+            let pred = (i + k - 1) % k;
+            hub.worker(pred).tracer.offset_to(&hub.worker(i).tracer)
+        }
+        Err(_) => 0,
+    }
+}
+
+/// Teardown flush: hand any relayed payloads plus this worker's own
+/// tail (spans still buffered, metric changes since the last shipment)
+/// straight to the coordinator's event stream, covering every loop
+/// exit path — convergence, stop flag, peer-gone.
+fn flush_worker_obs(
+    i: usize,
+    st: &mut WorkerObsState,
+    th: &mut obs::TraceHandle,
+    events: &mpsc::Sender<RingEvent>,
+) {
+    for payload in std::mem::take(&mut st.relay) {
+        let _ = events.send(RingEvent::Obs { holder: i, payload });
+    }
+    let own = st.own_payload(i, th);
+    if !own.is_empty() {
+        let _ = events.send(RingEvent::Obs { holder: i, payload: own });
+    }
+}
+
 /// The actor body: receive, fuse, learn, send — plus token folding and
 /// shutdown. Errors from the transport mean the runtime is tearing
 /// down; the loop exits quietly and the coordinator already has every
 /// record that matters.
-#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     i: usize,
     k: usize,
-    mut worker: RingWorker,
+    worker: RingWorker,
     link: RingLink,
-    events: mpsc::Sender<(RoundRecord, Dag, Option<Bundle>)>,
+    events: mpsc::Sender<RingEvent>,
     stop: &AtomicBool,
     opts: &RingRunOptions,
 ) {
-    let max_rounds = opts.max_rounds;
     let RingLink { mut tx, mut rx } = link;
-    // This worker's trace lane; spans flush when the loop returns.
-    let mut th = opts.tracer.handle(i as u32);
+    let mut obs_state = opts.obs.as_ref().map(|hub| {
+        let off = clock_align(i, k, hub, tx.as_mut(), rx.as_mut());
+        WorkerObsState::new(i, hub, off)
+    });
+    // This worker's trace lane: its private clock domain when the obs
+    // capability is on, the run-wide tracer otherwise.
+    let mut th = match &obs_state {
+        Some(st) => st.tracer.handle(i as u32),
+        None => opts.tracer.handle(i as u32),
+    };
+    run_worker_rounds(
+        i,
+        k,
+        worker,
+        tx.as_mut(),
+        rx.as_mut(),
+        &events,
+        stop,
+        opts,
+        &mut th,
+        obs_state.as_mut(),
+    );
+    if let Some(st) = obs_state.as_mut() {
+        flush_worker_obs(i, st, &mut th, &events);
+    }
+}
+
+/// The round loop of [`worker_loop`], split out so obs teardown runs
+/// after *every* exit path.
+#[allow(clippy::too_many_arguments)]
+fn run_worker_rounds(
+    i: usize,
+    k: usize,
+    mut worker: RingWorker,
+    tx: &mut dyn RingTx,
+    rx: &mut dyn RingRx,
+    events: &mpsc::Sender<RingEvent>,
+    stop: &AtomicBool,
+    opts: &RingRunOptions,
+    th: &mut obs::TraceHandle,
+    mut obs_state: Option<&mut WorkerObsState>,
+) {
+    let max_rounds = opts.max_rounds;
     // My score per round (what token probes fold in).
     let mut history: Vec<f64> = Vec::new();
     // Probes received last hop, to forward with the next send.
@@ -518,7 +779,7 @@ fn worker_loop(
 
     for round in 0..max_rounds {
         if stop.load(Ordering::Acquire) {
-            stop_and_drain(tx.as_mut(), rx.as_mut());
+            stop_and_drain(tx, rx);
             return;
         }
 
@@ -555,6 +816,21 @@ fn worker_loop(
                     return;
                 }
                 RingMessage::Model(mut m) => {
+                    if let Some(st) = obs_state.as_deref_mut() {
+                        // Rebase the shipment onto this worker's clock
+                        // and move it one hop closer to the head —
+                        // which hands it straight to the coordinator.
+                        for mut payload in std::mem::take(&mut m.obs) {
+                            for s in &mut payload.spans {
+                                s.start_ns = s.start_ns.saturating_add_signed(st.link_offset_ns);
+                            }
+                            if i == 0 {
+                                let _ = events.send(RingEvent::Obs { holder: 0, payload });
+                            } else {
+                                st.relay.push(payload);
+                            }
+                        }
+                    }
                     if i == 0 {
                         // Probes have completed the circuit: apply the
                         // paper's convergence rule in round order.
@@ -563,7 +839,7 @@ fn worker_loop(
                             if p.best > head_best {
                                 head_best = p.best;
                             } else {
-                                stop_and_drain(tx.as_mut(), rx.as_mut());
+                                stop_and_drain(tx, rx);
                                 return;
                             }
                         }
@@ -630,6 +906,25 @@ fn worker_loop(
             }
         }
 
+        // Obs capability: drain the relayed payloads plus everything
+        // this worker produced since its last shipment. The head
+        // delivers directly to the coordinator instead of sending its
+        // own data the long way around the ring.
+        let mut obs_for_wire: Vec<ObsPayload> = Vec::new();
+        if let Some(st) = obs_state.as_deref_mut() {
+            let own = st.own_payload(i, th);
+            if i == 0 {
+                if !own.is_empty() {
+                    let _ = events.send(RingEvent::Obs { holder: 0, payload: own });
+                }
+            } else {
+                obs_for_wire = std::mem::take(&mut st.relay);
+                if !own.is_empty() {
+                    obs_for_wire.push(own);
+                }
+            }
+        }
+
         // Hand the model to the successor first (unless this is the
         // self-ring's non-improving round, which nobody consumes) so
         // the hop's record includes the serialization cost.
@@ -644,6 +939,7 @@ fn worker_loop(
                 // The wire capability: bundles ride the ring only when
                 // every peer negotiated the bundle-frame tag.
                 bundle: if opts.ship_bundles { bundle.clone() } else { None },
+                obs: obs_for_wire,
             });
             let t_s = th.start();
             match tx.send(msg) {
@@ -667,10 +963,20 @@ fn worker_loop(
             inserts,
             deletes,
         };
-        let _ = events.send((rec, dag, bundle));
+        if let Some(st) = obs_state.as_deref_mut() {
+            // Recorded after this round's shipment was built, so the
+            // hop's metrics ride the *next* message (or the teardown
+            // flush) — totals are exact either way.
+            st.hops.inc();
+            st.wait_ns.record(obs::secs_to_ns(rec.wait_secs));
+            st.fusion_ns.record(obs::secs_to_ns(rec.fusion_secs));
+            st.ges_ns.record(obs::secs_to_ns(rec.ges_secs));
+            st.codec_ns.record(obs::secs_to_ns(rec.codec_secs));
+        }
+        let _ = events.send(RingEvent::Hop(rec, dag, bundle));
 
         if self_converged {
-            stop_and_drain(tx.as_mut(), rx.as_mut());
+            stop_and_drain(tx, rx);
             return;
         }
         if peer_gone {
@@ -688,7 +994,8 @@ fn collect(
     n: usize,
     max_rounds: usize,
     stop: &AtomicBool,
-    events: mpsc::Receiver<(RoundRecord, Dag, Option<Bundle>)>,
+    events: mpsc::Receiver<RingEvent>,
+    obs: Option<&RingObsHub>,
 ) -> Result<RingOutcome> {
     use std::collections::BTreeMap;
 
@@ -703,7 +1010,16 @@ fn collect(
     let mut rounds = 0usize;
     let mut decided = false;
 
-    while let Ok((rec, dag, bundle)) = events.recv() {
+    while let Ok(event) = events.recv() {
+        let (rec, dag, bundle) = match event {
+            RingEvent::Hop(rec, dag, bundle) => (rec, dag, bundle),
+            RingEvent::Obs { holder, payload } => {
+                if let Some(hub) = obs {
+                    hub.absorb(holder, &payload);
+                }
+                continue;
+            }
+        };
         records.push(rec.clone());
         let slots =
             buffer.entry(rec.round).or_insert_with(|| (0..k).map(|_| None).collect());
@@ -805,6 +1121,16 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     // k × rounds of in-loop fits would buy nothing. `run_ring` callers
     // whose coordinator holds no data (the federated example's
     // per-shard sites) are the ones that set `emit`/`ship_bundles`.
+    // Distributed obs merges into the run's own tracer and registry
+    // (a throwaway registry when none was configured — the spans still
+    // land in the trace).
+    let obs_hub = (cfg.distributed_obs && cfg.mode != RingMode::Deterministic).then(|| {
+        RingObsHub::new(
+            cfg.k,
+            cfg.tracer.clone(),
+            cfg.registry.clone().unwrap_or_default(),
+        )
+    });
     let t_stage = th.start();
     let outcome = run_ring(
         workers,
@@ -812,6 +1138,7 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
             max_rounds: cfg.max_rounds,
             mode: cfg.mode,
             tracer: cfg.tracer.clone(),
+            obs: obs_hub,
             ..Default::default()
         },
     )?;
@@ -1035,7 +1362,7 @@ mod tests {
         // case) frames are byte-identical to the pre-bundle format.
         // All variants must converge to the same structures.
         let (_bn, data) = workload(14, 18, 21);
-        let run = |mode: RingMode, emit: Option<BundleEmit>, ship: bool| {
+        let run = |mode: RingMode, emit: Option<BundleEmit>, ship: bool, obs: Option<RingObsHub>| {
             let scorer = BdeuScorer::new(data.clone(), 10.0);
             let workers: Vec<RingWorker> = (0..2)
                 .map(|_| {
@@ -1047,11 +1374,18 @@ mod tests {
                 .collect();
             run_ring(
                 workers,
-                &RingRunOptions { max_rounds: 8, mode, emit, ship_bundles: ship, ..Default::default() },
+                &RingRunOptions {
+                    max_rounds: 8,
+                    mode,
+                    emit,
+                    ship_bundles: ship,
+                    obs,
+                    ..Default::default()
+                },
             )
             .unwrap()
         };
-        let legacy = run(RingMode::Channel, None, false);
+        let legacy = run(RingMode::Channel, None, false, None);
         let variants = [
             (None, false),
             (Some(BundleEmit::default()), false),
@@ -1059,7 +1393,7 @@ mod tests {
         ];
         for mode in [RingMode::Channel, RingMode::Tcp] {
             for (emit, ship) in variants {
-                let got = run(mode, emit, ship);
+                let got = run(mode, emit, ship, None);
                 assert_eq!(
                     got.best_dag.edges(),
                     legacy.best_dag.edges(),
@@ -1074,6 +1408,33 @@ mod tests {
                     assert_eq!(b.bn.dag.edges(), got.best_dag.edges());
                 }
             }
+        }
+
+        // The obs capability composes the same way: structures, scores
+        // and rounds are bit-identical to the legacy run, and the hub
+        // additionally merges every worker's series and spans.
+        for mode in [RingMode::Channel, RingMode::Tcp] {
+            let tracer = obs::Tracer::new(true);
+            let merged = obs::Registry::new();
+            let hub = RingObsHub::new(2, tracer.clone(), merged.clone());
+            let got = run(mode, None, false, Some(hub));
+            assert_eq!(
+                got.best_dag.edges(),
+                legacy.best_dag.edges(),
+                "{} obs-on must not change the result",
+                mode.name()
+            );
+            assert!((got.best_score - legacy.best_score).abs() < 1e-9);
+            assert_eq!(got.rounds, legacy.rounds);
+            for w in 0..2 {
+                let hops = merged
+                    .counter_value(&format!("worker{w}.ring.hops"))
+                    .unwrap_or(0);
+                assert!(hops >= 1, "{}: worker{w} shipped no hop metrics", mode.name());
+            }
+            let json = tracer.chrome_json();
+            assert!(!json.is_empty(), "{}: no merged spans", mode.name());
+            crate::infer::json::Json::parse(&json).expect("merged trace parses");
         }
     }
 

@@ -253,13 +253,24 @@ impl Server {
                 ("shutdown", protocol::shutdown_response(id).to_string())
             }
             Some("stats") => {
-                let resp = Json::Obj(vec![
+                // `"format": "prometheus"` swaps the JSON snapshot for
+                // text exposition (as a string field, so the framed
+                // protocol stays JSON); the default is byte-identical
+                // to the pre-format responses.
+                let prom =
+                    parsed.get("format").and_then(Json::as_str) == Some("prometheus");
+                let mut fields = vec![
                     ("id".to_string(), id),
                     ("ok".to_string(), Json::Bool(true)),
                     ("engine".to_string(), Json::Str(self.engine.name().to_string())),
-                    ("stats".to_string(), self.registry.snapshot()),
-                ]);
-                ("stats", resp.to_string())
+                ];
+                if prom {
+                    fields.push(("format".to_string(), Json::Str("prometheus".to_string())));
+                    fields.push(("stats".to_string(), Json::Str(self.registry.to_prometheus())));
+                } else {
+                    fields.push(("stats".to_string(), self.registry.snapshot()));
+                }
+                ("stats", Json::Obj(fields).to_string())
             }
             Some("stats_reset") => {
                 // Guarded: zeroing live metrics is destructive to
@@ -575,6 +586,26 @@ mod tests {
         // metered before this snapshot was taken.
         assert!(reqs <= 1.0, "reset did not zero serve.requests: {reqs}");
         assert!(!s.is_shutting_down());
+    }
+
+    #[test]
+    fn stats_prometheus_format_serves_exposition_text() {
+        let s = server(ServeConfig::default());
+        let mut scratch = s.new_scratch();
+        s.handle(&mut scratch, r#"{"id": 1}"#);
+
+        let raw = s.handle(&mut scratch, r#"{"id": 2, "type": "stats", "format": "prometheus"}"#);
+        let v = Json::parse(&raw).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("format").and_then(Json::as_str), Some("prometheus"));
+        let text = v.get("stats").and_then(Json::as_str).expect("stats is exposition text");
+        assert!(text.contains("# TYPE serve_requests counter"), "{text}");
+        assert!(text.contains("_bucket{le=\"+Inf\"}"), "{text}");
+
+        // The default format stays a JSON object, not a string.
+        let v = Json::parse(&s.handle(&mut scratch, r#"{"id": 3, "type": "stats"}"#)).unwrap();
+        assert!(v.get("stats").and_then(Json::as_str).is_none());
+        assert!(v.get("stats").and_then(|st| st.get("counters")).is_some());
     }
 
     #[test]

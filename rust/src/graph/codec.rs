@@ -77,6 +77,29 @@ pub fn take_u64(input: &mut &[u8]) -> Result<u64> {
     Ok(u64::from_le_bytes(head.try_into().expect("8-byte slice")))
 }
 
+/// Append a length-prefixed UTF-8 string (`u32` length + bytes).
+#[inline]
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Read a string written by [`put_str`], advancing the cursor. The
+/// declared length is checked against the remaining bytes before any
+/// allocation, so a corrupt length can't balloon memory.
+pub fn take_str(input: &mut &[u8]) -> Result<String> {
+    let len = take_u32(input)? as usize;
+    if input.len() < len {
+        bail!("truncated frame: string of {len} bytes, {} left", input.len());
+    }
+    let (head, rest) = input.split_at(len);
+    *input = rest;
+    match std::str::from_utf8(head) {
+        Ok(s) => Ok(s.to_string()),
+        Err(_) => bail!("invalid utf-8 in wire string"),
+    }
+}
+
 /// Read a little-endian `f64`, advancing the cursor.
 #[inline]
 pub fn take_f64(input: &mut &[u8]) -> Result<f64> {
@@ -230,6 +253,30 @@ mod tests {
             put_u32(&mut dup, 1);
         }
         assert!(dag_from_bytes(&dup).is_err());
+    }
+
+    #[test]
+    fn string_helper_roundtrips_and_rejects_bad_frames() {
+        let mut buf = Vec::new();
+        put_str(&mut buf, "ring.wait_ns");
+        put_str(&mut buf, "");
+        put_str(&mut buf, "π≈3.14159");
+        let mut cursor = buf.as_slice();
+        assert_eq!(take_str(&mut cursor).unwrap(), "ring.wait_ns");
+        assert_eq!(take_str(&mut cursor).unwrap(), "");
+        assert_eq!(take_str(&mut cursor).unwrap(), "π≈3.14159");
+        assert!(cursor.is_empty());
+
+        // Over-long declared length must fail, not allocate.
+        let mut bogus = Vec::new();
+        put_u32(&mut bogus, u32::MAX);
+        assert!(take_str(&mut bogus.as_slice()).is_err());
+
+        // Invalid UTF-8 must fail cleanly.
+        let mut bad = Vec::new();
+        put_u32(&mut bad, 2);
+        bad.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(take_str(&mut bad.as_slice()).is_err());
     }
 
     #[test]

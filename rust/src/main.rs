@@ -15,6 +15,9 @@
 //!   inspect    print a bundle's JSON debug form
 //!   import-bif convert a .bif network into a .bnb bundle
 //!   export-bif convert a .bnb bundle back to .bif
+//!   obs        merge per-process observability artifacts (Chrome
+//!              traces / metrics snapshots) into one timeline and one
+//!              registry, with optional Prometheus exposition output
 
 use std::net::TcpListener;
 use std::path::{Path, PathBuf};
@@ -64,6 +67,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "inspect" => cmd_inspect(rest),
         "import-bif" => cmd_import_bif(rest),
         "export-bif" => cmd_export_bif(rest),
+        "obs" => cmd_obs(rest),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -85,12 +89,19 @@ SUBCOMMANDS
   learn      --algo cges|cges-l|ges|fges --data data.csv [--out learned.dag]
              [--bundle model.bnb] [--bundle-ess 1] [--k 4] [--ess 10]
              [--threads N] [--artifacts DIR] [--trace trace.tsv|trace.json]
-             [--metrics metrics.json] [--max-rounds 50]
+             [--metrics metrics.json|metrics.prom] [--max-rounds 50]
+             [--obs-wire]
              --trace with a .json path writes a Chrome trace-event file
              (per-worker wait/codec/fuse/ges span lanes; load in
              Perfetto or chrome://tracing); any other extension keeps
-             the per-hop TSV. --metrics writes a registry snapshot
-             (counters/gauges/histograms) as JSON
+             the per-hop TSV. --metrics writes a registry snapshot:
+             a .prom path gets Prometheus exposition text, anything
+             else JSON. --metrics also starts a /proc self-sampler
+             (proc.rss_bytes / proc.user_secs / proc.sys_secs /
+             proc.threads gauges). --obs-wire piggybacks worker span
+             batches and metric deltas on ring messages (clock-aligned
+             at the coordinator), so --trace/--metrics cover every
+             worker in one timeline and one registry
              [--transport channel|tcp|sync]   ring execution mode:
              channel = pipelined in-process actors (default),
              tcp     = pipelined over loopback TCP (wire codec),
@@ -109,11 +120,15 @@ SUBCOMMANDS
   serve      --model fitted.bnb|.bif [--listen 127.0.0.1:7878] [--threads N]
              [--method auto|jointree|lw] [--samples 20000] [--seed 1] [--budget N]
              [--batch 256] [--max-frame-bytes 1048576]
-             [--trace trace.json] [--metrics metrics.json]
+             [--trace trace.json] [--metrics metrics.json|metrics.prom]
              {\"type\":\"stats\"} answers a live metrics snapshot (request
              latency/frame-size/batch-depth histograms + counters);
+             {\"type\":\"stats\",\"format\":\"prometheus\"} answers the same
+             registry as Prometheus exposition text;
              {\"type\":\"stats_reset\",\"confirm\":true} zeroes it. --trace /
-             --metrics write span + metrics files on shutdown.
+             --metrics write span + metrics files on shutdown (a .prom
+             metrics path selects exposition text) and start the /proc
+             self-sampler gauges.
              CGES_LOG=error|info|debug filters server-side logging
              a .bnb bundle with calibrated potentials warm-starts every
              handler thread (zero cold collect sweeps)
@@ -128,6 +143,13 @@ SUBCOMMANDS
   import-bif --bif net.bif --out net.bnb [--budget 4194304]
              [--no-calibrate]            convert + calibrate for warm serving
   export-bif --bundle model.bnb --out net.bif
+  obs        merge <artifact...> [--out-trace merged.trace.json]
+             [--out-metrics merged.metrics.json] [--out-prom merged.prom]
+             join detached per-process obs artifacts offline: inputs
+             are classified by content (JSON array = Chrome trace,
+             snapshot object = metrics registry); traces land on
+             distinct pids, metrics under proc<j>. prefixes when
+             several. At least one --out-* is required.
 ";
 
 fn cmd_gen_net(argv: &[String]) -> Result<()> {
@@ -217,7 +239,7 @@ fn cmd_partition(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_learn(argv: &[String]) -> Result<()> {
-    let a = Args::parse(argv, &[])?;
+    let a = Args::parse(argv, &["obs-wire"])?;
     a.check_known(
         &[
             "algo",
@@ -235,7 +257,7 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
             "max-parents",
             "transport",
         ],
-        &[],
+        &["obs-wire"],
     )?;
     let algo = a.require("algo")?;
     let data = Arc::new(read_csv(Path::new(a.require("data")?))?);
@@ -257,6 +279,11 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
         trace_path.as_deref().map(|p| p.ends_with(".json")).unwrap_or(false);
     let registry = cges::obs::Registry::new();
     let tracer = cges::obs::Tracer::new(want_chrome);
+    // Background /proc self-sampler: machine context (RSS, CPU time,
+    // threads) lands in the same snapshot as the algorithmic series.
+    let sys_sampler = metrics_path.as_ref().map(|_| {
+        cges::obs::SysSampler::start(&registry, std::time::Duration::from_millis(500))
+    });
 
     let t = Timer::start();
     let (dag, score, mut bundle) = match algo {
@@ -280,6 +307,7 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
                 bundle_ess,
                 registry: metrics_path.is_some().then(|| registry.clone()),
                 tracer: tracer.clone(),
+                distributed_obs: a.flag("obs-wire"),
                 ..Default::default()
             };
             let r = run_cges(data.clone(), &cfg)?;
@@ -333,9 +361,8 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
     );
     if let Some(mpath) = &metrics_path {
         registry.gauge("learn.total_secs").set(secs);
-        registry
-            .write_json(Path::new(mpath))
-            .with_context(|| format!("write metrics {mpath}"))?;
+        drop(sys_sampler); // stop the background thread, then sample once more
+        write_metrics(&registry, mpath)?;
         println!("metrics written to {mpath}");
     }
 
@@ -374,6 +401,20 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Write a registry to `path`, taking one final `/proc` sample first
+/// so the snapshot reflects end-of-run usage: a `.prom` extension
+/// selects Prometheus exposition text, anything else the JSON
+/// snapshot.
+fn write_metrics(registry: &cges::obs::Registry, path: &str) -> Result<()> {
+    cges::obs::sysinfo::sample_now(registry);
+    let p = Path::new(path);
+    if p.extension().map(|e| e == "prom").unwrap_or(false) {
+        registry.write_prometheus(p).with_context(|| format!("write metrics {path}"))
+    } else {
+        registry.write_json(p).with_context(|| format!("write metrics {path}"))
+    }
 }
 
 /// Write a learned structure as an edge list (`.dag` text format:
@@ -620,6 +661,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if trace_path.is_some() {
         server.set_tracer(cges::obs::Tracer::new(true));
     }
+    let sys_sampler = metrics_path.as_ref().map(|_| {
+        cges::obs::SysSampler::start(server.registry(), std::time::Duration::from_millis(500))
+    });
     let warm = if server.warm_started() { " warm-started from bundle potentials" } else { "" };
     match a.get("listen") {
         Some(addr) => {
@@ -654,10 +698,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         eprintln!("trace written to {p}");
     }
     if let Some(p) = &metrics_path {
-        server
-            .registry()
-            .write_json(Path::new(p))
-            .with_context(|| format!("write metrics {p}"))?;
+        drop(sys_sampler); // stop the background thread, then sample once more
+        write_metrics(server.registry(), p)?;
         eprintln!("metrics written to {p}");
     }
     Ok(())
@@ -708,6 +750,53 @@ fn cmd_export_bif(argv: &[String]) -> Result<()> {
         bundle.n_vars(),
         bundle.bn.dag.edge_count()
     );
+    Ok(())
+}
+
+fn cmd_obs(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &[])?;
+    a.check_known(&["out-trace", "out-metrics", "out-prom"], &[])?;
+    match a.pos(0) {
+        Some("merge") => {}
+        Some(other) => bail!("unknown obs action '{other}' (expected `obs merge`)"),
+        None => bail!(
+            "usage: cges obs merge <artifact...> \
+             [--out-trace T.json] [--out-metrics M.json] [--out-prom P.prom]"
+        ),
+    }
+    let inputs: Vec<PathBuf> =
+        (1..a.n_pos()).filter_map(|i| a.pos(i)).map(PathBuf::from).collect();
+    ensure!(!inputs.is_empty(), "obs merge needs at least one input artifact");
+    let (out_trace, out_metrics, out_prom) =
+        (a.get("out-trace"), a.get("out-metrics"), a.get("out-prom"));
+    ensure!(
+        out_trace.is_some() || out_metrics.is_some() || out_prom.is_some(),
+        "obs merge: name at least one output (--out-trace, --out-metrics or --out-prom)"
+    );
+    let merged = cges::obs::merge::merge_files(&inputs)?;
+    println!(
+        "merged {} trace input(s) ({} events) and {} metrics input(s)",
+        merged.traces_in, merged.trace_events, merged.metrics_in
+    );
+    if let Some(p) = out_trace {
+        std::fs::write(p, &merged.trace_json)
+            .with_context(|| format!("write merged trace {p}"))?;
+        println!("merged trace written to {p} (load in Perfetto or chrome://tracing)");
+    }
+    if let Some(p) = out_metrics {
+        merged
+            .registry
+            .write_json(Path::new(p))
+            .with_context(|| format!("write merged metrics {p}"))?;
+        println!("merged metrics written to {p}");
+    }
+    if let Some(p) = out_prom {
+        merged
+            .registry
+            .write_prometheus(Path::new(p))
+            .with_context(|| format!("write prometheus text {p}"))?;
+        println!("prometheus exposition written to {p}");
+    }
     Ok(())
 }
 

@@ -24,6 +24,54 @@ pub struct Histogram {
     min: AtomicU64,
 }
 
+/// What changed in a [`Histogram`] between two [`HistCursor`] reads —
+/// the shippable unit for the ring's obs wire and offline merge.
+///
+/// `buckets`, `count` and `sum` are increments (additive, wrapping for
+/// `sum` like the histogram itself); `max`/`min` are the source's
+/// current *absolute* extrema, merged idempotently with
+/// `fetch_max`/`fetch_min` so re-shipping them is harmless.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistDelta {
+    /// `(bucket index, added samples)` for buckets that grew.
+    pub buckets: Vec<(u8, u64)>,
+    /// Sum increment (wrapping difference of totals).
+    pub sum: u64,
+    /// Count increment.
+    pub count: u64,
+    /// Source's all-time max (0 when it never recorded).
+    pub max: u64,
+    /// Source's all-time min (`u64::MAX` when it never recorded — the
+    /// `fetch_min` identity, so absorbing an empty source is a no-op).
+    pub min: u64,
+}
+
+impl HistDelta {
+    /// True when the delta carries no new samples.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0 && self.buckets.is_empty()
+    }
+}
+
+/// Last-shipped totals of one histogram, advanced by
+/// [`Histogram::delta_since`]. One cursor per (histogram, shipper).
+#[derive(Clone, Debug)]
+pub struct HistCursor {
+    buckets: [u64; BUCKETS],
+    sum: u64,
+    count: u64,
+}
+
+impl Default for HistCursor {
+    fn default() -> Self {
+        HistCursor {
+            buckets: [0; BUCKETS],
+            sum: 0,
+            count: 0,
+        }
+    }
+}
+
 impl Default for Histogram {
     fn default() -> Self {
         Self::new()
@@ -59,6 +107,13 @@ impl Histogram {
     #[inline]
     fn bucket_of(v: u64) -> usize {
         (64 - v.leading_zeros()) as usize
+    }
+
+    /// Index of the bucket a value lands in — the inverse of
+    /// [`Histogram::bucket_bounds`] (used when rebuilding a histogram
+    /// from snapshot `(lo, hi, n)` triples).
+    pub fn bucket_index(v: u64) -> usize {
+        Self::bucket_of(v)
     }
 
     /// Inclusive `[lo, hi]` value range of bucket `idx`.
@@ -184,6 +239,51 @@ impl Histogram {
             .collect()
     }
 
+    /// What was recorded since `cursor` last saw this histogram; the
+    /// cursor advances to the current totals. Concurrent recording is
+    /// fine — samples landing mid-read ship with the *next* delta.
+    pub fn delta_since(&self, cursor: &mut HistCursor) -> HistDelta {
+        let mut buckets = Vec::new();
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let now = b.load(Ordering::Relaxed);
+            let grew = now.saturating_sub(cursor.buckets[idx]);
+            if grew > 0 {
+                buckets.push((idx as u8, grew));
+            }
+            cursor.buckets[idx] = now;
+        }
+        let sum_now = self.sum();
+        let count_now = self.count();
+        let delta = HistDelta {
+            buckets,
+            sum: sum_now.wrapping_sub(cursor.sum),
+            count: count_now.saturating_sub(cursor.count),
+            max: self.max.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+        };
+        cursor.sum = sum_now;
+        cursor.count = count_now;
+        delta
+    }
+
+    /// Merge a delta produced by [`Histogram::delta_since`] on another
+    /// histogram into this one. Empty deltas are ignored entirely so
+    /// their absolute `max`/`min` fields can't perturb the target.
+    pub fn absorb(&self, d: &HistDelta) {
+        if d.is_empty() {
+            return;
+        }
+        for &(idx, n) in &d.buckets {
+            if let Some(b) = self.buckets.get(idx as usize) {
+                b.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(d.count, Ordering::Relaxed);
+        self.sum.fetch_add(d.sum, Ordering::Relaxed);
+        self.max.fetch_max(d.max, Ordering::Relaxed);
+        self.min.fetch_min(d.min, Ordering::Relaxed);
+    }
+
     /// Zero every bucket and counter.
     pub fn reset(&self) {
         for b in &self.buckets {
@@ -259,6 +359,45 @@ mod tests {
         assert_eq!(h.min(), 0);
         assert_eq!(h.quantile_bounds(0.5), (0, 0));
         assert!(h.nonzero_buckets().is_empty());
+    }
+
+    #[test]
+    fn delta_absorb_replays_exactly_in_batches() {
+        let src = Histogram::new();
+        let dst = Histogram::new();
+        let mut cursor = HistCursor::default();
+        for v in [3u64, 0, 17, 1 << 40] {
+            src.record(v);
+        }
+        let d1 = src.delta_since(&mut cursor);
+        assert_eq!(d1.count, 4);
+        dst.absorb(&d1);
+        // nothing new -> empty delta, and absorbing it changes nothing
+        let d2 = src.delta_since(&mut cursor);
+        assert!(d2.is_empty());
+        dst.absorb(&d2);
+        // second batch catches up
+        src.record(1);
+        src.record(u64::MAX);
+        dst.absorb(&src.delta_since(&mut cursor));
+        assert_eq!(dst.count(), src.count());
+        assert_eq!(dst.sum(), src.sum());
+        assert_eq!(dst.min(), src.min());
+        assert_eq!(dst.max(), src.max());
+        assert_eq!(dst.nonzero_buckets(), src.nonzero_buckets());
+    }
+
+    #[test]
+    fn empty_delta_does_not_perturb_target_extrema() {
+        let src = Histogram::new();
+        let mut cursor = HistCursor::default();
+        src.record(0); // src min/max both 0
+        let _shipped = src.delta_since(&mut cursor);
+        let stale = src.delta_since(&mut cursor); // empty, but max=0/min=0
+        let dst = Histogram::new();
+        dst.record(5);
+        dst.absorb(&stale);
+        assert_eq!((dst.min(), dst.max()), (5, 5));
     }
 
     #[test]

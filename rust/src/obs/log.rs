@@ -1,13 +1,13 @@
 //! Leveled stderr logging with a `CGES_LOG` environment filter.
 //!
 //! Deliberately tiny: three levels, one env var, stderr only. The
-//! level is read from `CGES_LOG` (`error` | `info` | `debug`) once on
-//! first use and cached in an atomic; [`set_level`] overrides it at
-//! runtime (used by tests and by anything that wants a verbosity
-//! flag). Default level is `info`, so `error`-level messages — like
-//! the server's per-connection failures — are always visible unless
-//! explicitly silenced with `CGES_LOG=` ... nothing silences errors;
-//! `CGES_LOG=error` silences `info`/`debug`.
+//! level is read from `CGES_LOG` (`error` | `info` | `debug`, any
+//! case) once on first use and cached in an atomic; [`set_level`]
+//! overrides it at runtime (used by tests and by anything that wants
+//! a verbosity flag). Default level is `info`; nothing silences
+//! errors — `CGES_LOG=error` silences `info`/`debug`. An unrecognized
+//! value falls back to `info` and is reported once on stderr rather
+//! than silently changing behavior.
 
 use std::fmt::Arguments;
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -34,12 +34,44 @@ fn parse(text: &str) -> Option<Level> {
     }
 }
 
+/// Resolve an env-var value to a level, plus the warning to print
+/// when the value is present but unrecognized. Empty (or blank)
+/// values count as unset, not as errors.
+fn resolve(var: Option<&str>) -> (Level, Option<String>) {
+    match var {
+        None => (Level::Info, None),
+        Some(v) if v.trim().is_empty() => (Level::Info, None),
+        Some(v) => match parse(v) {
+            Some(l) => (l, None),
+            None => (
+                Level::Info,
+                Some(format!(
+                    "unrecognized CGES_LOG value '{}' (want error|info|debug); using info",
+                    v.trim()
+                )),
+            ),
+        },
+    }
+}
+
 /// Current log level (reads `CGES_LOG` on first call; default `info`).
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         UNSET => {
-            let l = std::env::var("CGES_LOG").ok().and_then(|v| parse(&v)).unwrap_or(Level::Info);
-            LEVEL.store(l as u8, Ordering::Relaxed);
+            let var = std::env::var("CGES_LOG").ok();
+            let (l, warning) = resolve(var.as_deref());
+            // Only the caller that wins the store prints the warning,
+            // so a bad value is reported exactly once per process. The
+            // level is already cached by then, so the nested `error`
+            // call can't recurse back into this branch.
+            if LEVEL
+                .compare_exchange(UNSET, l as u8, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                if let Some(w) = warning {
+                    error(format_args!("{w}"));
+                }
+            }
             l
         }
         0 => Level::Error,
@@ -89,9 +121,27 @@ mod tests {
         assert_eq!(parse(" ERR "), Some(Level::Error));
         assert_eq!(parse("info"), Some(Level::Info));
         assert_eq!(parse("Debug"), Some(Level::Debug));
+        assert_eq!(parse("DEBUG"), Some(Level::Debug));
+        assert_eq!(parse("InFo"), Some(Level::Info));
         assert_eq!(parse("2"), Some(Level::Debug));
         assert_eq!(parse("warn"), None);
         assert_eq!(parse(""), None);
+    }
+
+    #[test]
+    fn resolve_defaults_and_warns_on_garbage_only() {
+        // Unset and blank values: quiet info default.
+        assert_eq!(resolve(None), (Level::Info, None));
+        assert_eq!(resolve(Some("")), (Level::Info, None));
+        assert_eq!(resolve(Some("   ")), (Level::Info, None));
+        // Recognized values, any case: no warning.
+        assert_eq!(resolve(Some("ERROR")), (Level::Error, None));
+        assert_eq!(resolve(Some("dEbUg")), (Level::Debug, None));
+        // Garbage: info default plus a warning naming the bad value.
+        let (l, w) = resolve(Some("verbose"));
+        assert_eq!(l, Level::Info);
+        let w = w.expect("unrecognized value must warn");
+        assert!(w.contains("verbose") && w.contains("CGES_LOG"), "{w}");
     }
 
     #[test]

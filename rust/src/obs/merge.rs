@@ -1,0 +1,199 @@
+//! Offline merge of per-process obs artifacts (`cges obs merge`).
+//!
+//! The ring's obs wire merges traces and metrics *live*; this module
+//! is the escape hatch for workers that ran detached — each process
+//! left behind its own `*.trace.json` (Chrome trace array) and/or
+//! `*.metrics.json` (registry snapshot). `merge_files` classifies
+//! each input by content, not filename:
+//!
+//! - a JSON **array** is a Chrome trace; its events keep their lanes
+//!   but are moved to a distinct `pid` per input, so viewers show one
+//!   process group per source file. No clock alignment is attempted —
+//!   offline there is no handshake to measure offsets with, and
+//!   faking one would be worse than showing honest per-process
+//!   timelines side by side.
+//! - a JSON **object** with `counters`/`gauges`/`histograms` is a
+//!   registry snapshot; it is replayed into one merged [`Registry`].
+//!   With a single metrics input names are kept as-is; with several,
+//!   each input's series land under a `proc<j>.` prefix to avoid
+//!   collisions.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::registry::Registry;
+use crate::infer::json::Json;
+
+enum Kind {
+    Trace(Vec<Json>),
+    Metrics(Json),
+}
+
+fn classify(path: &Path) -> Result<Kind> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read obs artifact {}", path.display()))?;
+    if text.trim().is_empty() {
+        // A disabled tracer writes zero bytes; treat as an empty trace.
+        return Ok(Kind::Trace(Vec::new()));
+    }
+    let v = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+    let is_snapshot = v.get("counters").is_some()
+        || v.get("gauges").is_some()
+        || v.get("histograms").is_some();
+    match v {
+        Json::Arr(events) => Ok(Kind::Trace(events)),
+        Json::Obj(_) if is_snapshot => Ok(Kind::Metrics(v)),
+        _ => bail!(
+            "{}: neither a Chrome trace array nor a registry snapshot",
+            path.display()
+        ),
+    }
+}
+
+/// Set (or add) the `pid` field of one trace event.
+fn set_pid(event: Json, pid: f64) -> Json {
+    let Json::Obj(mut fields) = event else {
+        return event;
+    };
+    match fields.iter_mut().find(|(k, _)| k == "pid") {
+        Some((_, v)) => *v = Json::Num(pid),
+        None => fields.push(("pid".to_string(), Json::Num(pid))),
+    }
+    Json::Obj(fields)
+}
+
+/// Result of [`merge_files`].
+pub struct Merged {
+    /// Merged trace serialized as a Chrome trace array (empty string
+    /// when no trace inputs carried events, matching
+    /// [`super::Tracer::chrome_json`]).
+    pub trace_json: String,
+    /// Merged registry (write via `write_json` / `write_prometheus`).
+    pub registry: Registry,
+    /// Trace inputs seen.
+    pub traces_in: usize,
+    /// Metrics inputs seen.
+    pub metrics_in: usize,
+    /// Total trace events in the merged output.
+    pub trace_events: usize,
+}
+
+/// Merge obs artifacts (traces and/or metrics snapshots, classified
+/// by content) into one trace and one registry.
+pub fn merge_files(inputs: &[PathBuf]) -> Result<Merged> {
+    if inputs.is_empty() {
+        bail!("obs merge needs at least one input file");
+    }
+    let mut events: Vec<Json> = Vec::new();
+    let mut snapshots: Vec<Json> = Vec::new();
+    let mut traces_in = 0usize;
+    for path in inputs {
+        match classify(path)? {
+            Kind::Trace(evs) => {
+                let pid = traces_in as f64;
+                traces_in += 1;
+                events.extend(evs.into_iter().map(|e| set_pid(e, pid)));
+            }
+            Kind::Metrics(snap) => snapshots.push(snap),
+        }
+    }
+    let registry = Registry::new();
+    let solo = snapshots.len() == 1;
+    for (j, snap) in snapshots.iter().enumerate() {
+        let prefix = if solo { String::new() } else { format!("proc{j}.") };
+        registry
+            .absorb_snapshot(&prefix, snap)
+            .with_context(|| format!("merge metrics input {j}"))?;
+    }
+    let trace_json = if events.is_empty() {
+        String::new()
+    } else {
+        let mut out = String::from("[\n");
+        for (i, e) in events.iter().enumerate() {
+            out.push_str(&e.to_string());
+            if i + 1 < events.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push(']');
+        out
+    };
+    Ok(Merged {
+        trace_json,
+        registry,
+        traces_in,
+        metrics_in: snapshots.len(),
+        trace_events: events.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Tracer;
+
+    fn write_tmp(name: &str, contents: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cges-obs-merge-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("tmp dir");
+        let p = dir.join(name);
+        std::fs::write(&p, contents).expect("write tmp");
+        p
+    }
+
+    fn trace_file(name: &str, lane: u32) -> PathBuf {
+        let tr = Tracer::new(true);
+        let mut th = tr.handle(lane);
+        th.add("work", "test", 10, 50, &[("round", 1.0)]);
+        th.add("more", "test", 70, 20, &[]);
+        th.flush();
+        write_tmp(name, &tr.chrome_json())
+    }
+
+    #[test]
+    fn merges_traces_onto_distinct_pids_and_metrics_with_prefixes() {
+        let t0 = trace_file("a.trace.json", 0);
+        let t1 = trace_file("b.trace.json", 0);
+        let reg_a = Registry::new();
+        reg_a.counter("ring.hops").add(4);
+        let m0 = write_tmp("a.metrics.json", &reg_a.to_json_string());
+        let reg_b = Registry::new();
+        reg_b.counter("ring.hops").add(6);
+        reg_b.hist("wait_ns").record(123);
+        let m1 = write_tmp("b.metrics.json", &reg_b.to_json_string());
+
+        let merged = merge_files(&[t0, m0, t1, m1]).expect("merge");
+        assert_eq!((merged.traces_in, merged.metrics_in), (2, 2));
+
+        // Traces: same lane in both inputs, separated by pid.
+        let doc = Json::parse(&merged.trace_json).expect("merged trace parses");
+        let events = doc.as_array().expect("array");
+        assert_eq!(events.len(), merged.trace_events);
+        let pids: std::collections::BTreeSet<i64> = events
+            .iter()
+            .map(|e| e.get("pid").and_then(Json::as_f64).expect("pid") as i64)
+            .collect();
+        assert_eq!(pids.into_iter().collect::<Vec<_>>(), vec![0, 1]);
+
+        // Metrics: per-input prefixes, values preserved.
+        assert_eq!(merged.registry.counter_value("proc0.ring.hops"), Some(4));
+        assert_eq!(merged.registry.counter_value("proc1.ring.hops"), Some(6));
+        assert_eq!(merged.registry.hist("proc1.wait_ns").inner().count(), 1);
+    }
+
+    #[test]
+    fn single_metrics_input_keeps_names_and_empty_trace_is_ok() {
+        let reg = Registry::new();
+        reg.gauge("proc.rss_bytes").set(1.0);
+        let m = write_tmp("solo.metrics.json", &reg.to_json_string());
+        let empty = write_tmp("off.trace.json", "");
+        let merged = merge_files(&[m, empty]).expect("merge");
+        assert_eq!(merged.registry.gauge("proc.rss_bytes").get(), 1.0);
+        assert_eq!(merged.trace_json, "");
+
+        let junk = write_tmp("junk.json", "{\"not\": \"an artifact\"}");
+        assert!(merge_files(&[junk]).is_err());
+        assert!(merge_files(&[]).is_err());
+    }
+}

@@ -20,17 +20,33 @@
 //!   test below.
 //! * **Clock & log** — [`clock::Stopwatch`] with a mock-time hook (the
 //!   old `util::Timer` is now a view over it), and [`log`] with a
-//!   `CGES_LOG=error|info|debug` filter.
+//!   `CGES_LOG=error|info|debug` filter (case-insensitive, warns once
+//!   on garbage).
+//!
+//! The *distributed* half builds on the same types: [`sync`] measures
+//! NTP-style clock offsets between wire peers, [`registry`] ships
+//! [`RegistryDelta`]s through [`RegistryCursor`]s (merged back with
+//! `absorb_prefixed`), [`prometheus`] renders any registry as
+//! Prometheus exposition text, [`sysinfo`]'s [`SysSampler`] feeds
+//! `/proc/self` gauges, and [`merge`] joins detached per-process
+//! artifacts offline. The ring transport carries the deltas and span
+//! batches between processes (`coordinator::transport`).
 
 pub mod clock;
 pub mod hist;
 pub mod log;
+pub mod merge;
+pub mod prometheus;
 pub mod registry;
+pub mod sync;
+pub mod sysinfo;
 pub mod trace;
 
 pub use clock::{Clock, MockTime, Stopwatch, Timer};
-pub use hist::{HistSummary, Histogram};
-pub use registry::{Counter, Gauge, Hist, Registry};
+pub use hist::{HistCursor, HistDelta, HistSummary, Histogram};
+pub use registry::{Counter, Gauge, Hist, Registry, RegistryCursor, RegistryDelta};
+pub use sync::ClockOffset;
+pub use sysinfo::SysSampler;
 pub use trace::{secs_to_ns, SpanRec, TraceHandle, Tracer, COORDINATOR_TID};
 
 #[cfg(test)]

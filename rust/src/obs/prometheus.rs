@@ -1,0 +1,186 @@
+//! Prometheus text exposition (format 0.0.4) for a [`Registry`].
+//!
+//! Dependency-free rendering of the registry's live values into the
+//! line format scraped by Prometheus: `# HELP`/`# TYPE` headers, then
+//! one sample line per counter/gauge and the cumulative
+//! `_bucket`/`_sum`/`_count` family per histogram. Metric names pass
+//! through [`sanitize`] (dots become underscores); the original name
+//! is preserved in the HELP line so dashboards can be mapped back.
+//!
+//! `_sum`/`_count` come from the histogram's exact atomics — not from
+//! bucket arithmetic — so they are precise even though the buckets
+//! themselves are power-of-two brackets.
+
+use super::registry::Registry;
+
+/// Rewrite `name` into the Prometheus metric-name alphabet
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`); every illegal character becomes `_`.
+pub fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, ch) in name.chars().enumerate() {
+        let ok = ch.is_ascii_alphabetic()
+            || ch == '_'
+            || ch == ':'
+            || (i > 0 && ch.is_ascii_digit());
+        out.push(if ok { ch } else { '_' });
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Format an `f64` the way Prometheus parsers expect (plain decimal;
+/// integral values without a trailing `.0`).
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render the registry's current state as Prometheus exposition text.
+pub fn render(reg: &Registry) -> String {
+    let mut out = String::new();
+    for (name, v) in reg.counters() {
+        let n = sanitize(&name);
+        out.push_str(&format!(
+            "# HELP {n} Counter {name}\n# TYPE {n} counter\n{n} {v}\n"
+        ));
+    }
+    for (name, v) in reg.gauges() {
+        let n = sanitize(&name);
+        out.push_str(&format!(
+            "# HELP {n} Gauge {name}\n# TYPE {n} gauge\n{n} {}\n",
+            fmt_f64(v)
+        ));
+    }
+    for (name, h) in reg.hists() {
+        let n = sanitize(&name);
+        let hh = h.inner();
+        out.push_str(&format!(
+            "# HELP {n} Histogram {name}\n# TYPE {n} histogram\n"
+        ));
+        let mut cum = 0u64;
+        for (_lo, hi, cnt) in hh.nonzero_buckets() {
+            cum += cnt;
+            out.push_str(&format!("{n}_bucket{{le=\"{hi}\"}} {cum}\n"));
+        }
+        // The +Inf bucket equals the total count by definition; under
+        // concurrent recording `count` can momentarily trail the
+        // bucket sweep, so keep the cumulative series monotone.
+        let total = hh.count().max(cum);
+        out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {total}\n"));
+        out.push_str(&format!("{n}_sum {}\n", hh.sum()));
+        out.push_str(&format!("{n}_count {total}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_maps_into_metric_alphabet() {
+        assert_eq!(sanitize("ring.wait_ns"), "ring_wait_ns");
+        assert_eq!(sanitize("worker0.ring.hops"), "worker0_ring_hops");
+        assert_eq!(sanitize("0weird"), "_weird");
+        assert_eq!(sanitize(""), "_");
+        let s = sanitize("a-b/c d");
+        assert!(s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'), "{s}");
+    }
+
+    /// Line-format validator: every line of the exposition must be a
+    /// comment or `name[{labels}] value`, HELP/TYPE must precede each
+    /// family, histogram buckets must be cumulative and end at +Inf
+    /// with exactly the `_count` value, and `_count` must equal the
+    /// source histogram's exact count.
+    #[test]
+    fn exposition_passes_line_format_validation() {
+        let reg = Registry::new();
+        reg.counter("ring.hops").add(12);
+        reg.gauge("proc.rss_bytes").set(4096.0);
+        reg.gauge("score.ratio").set(0.75);
+        let h = reg.hist("serve.latency_ns");
+        for v in [1u64, 3, 3, 900, 70_000] {
+            h.record(v);
+        }
+        let text = reg.to_prometheus();
+
+        let mut typed: std::collections::BTreeMap<String, String> = Default::default();
+        let mut helped: std::collections::BTreeSet<String> = Default::default();
+        let mut bucket_cum: std::collections::BTreeMap<String, u64> = Default::default();
+        let mut inf_seen: std::collections::BTreeMap<String, u64> = Default::default();
+        let mut counts: std::collections::BTreeMap<String, u64> = Default::default();
+        for line in text.lines() {
+            assert!(!line.trim().is_empty(), "no blank lines in exposition");
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                helped.insert(rest.split_whitespace().next().expect("help name").to_string());
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().expect("type name").to_string();
+                let ty = it.next().expect("type kind").to_string();
+                assert!(helped.contains(&name), "HELP must precede TYPE for {name}");
+                assert!(
+                    matches!(ty.as_str(), "counter" | "gauge" | "histogram"),
+                    "unknown TYPE {ty}"
+                );
+                typed.insert(name, ty);
+                continue;
+            }
+            // sample line: name or name{labels}, then a numeric value
+            let (name_part, value) = line.rsplit_once(' ').expect("sample line");
+            value.parse::<f64>().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+            let (name, labels) = match name_part.split_once('{') {
+                Some((n, l)) => (n, Some(l.strip_suffix('}').expect("closed label set"))),
+                None => (name_part, None),
+            };
+            assert!(
+                name.chars().enumerate().all(|(i, c)| c.is_ascii_alphabetic()
+                    || c == '_'
+                    || c == ':'
+                    || (i > 0 && c.is_ascii_digit())),
+                "illegal metric name {name}"
+            );
+            let family = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .filter(|f| typed.get(*f).map(String::as_str) == Some("histogram"))
+                .unwrap_or(name);
+            assert!(typed.contains_key(family), "sample before TYPE: {name}");
+            if name.ends_with("_bucket") && typed.get(family).map(String::as_str) == Some("histogram") {
+                let le = labels
+                    .and_then(|l| l.strip_prefix("le=\""))
+                    .and_then(|l| l.strip_suffix('"'))
+                    .expect("bucket needs le label");
+                let v = value.parse::<u64>().expect("integral bucket count");
+                let prev = bucket_cum.insert(family.to_string(), v).unwrap_or(0);
+                assert!(v >= prev, "bucket series must be cumulative for {family}");
+                if le == "+Inf" {
+                    inf_seen.insert(family.to_string(), v);
+                } else {
+                    le.parse::<u64>().expect("finite le bound");
+                    assert!(!inf_seen.contains_key(family), "+Inf must come last");
+                }
+            }
+            if let Some(f) = name.strip_suffix("_count") {
+                if typed.get(f).map(String::as_str) == Some("histogram") {
+                    counts.insert(f.to_string(), value as u64);
+                }
+            }
+        }
+        let fam = "serve_latency_ns";
+        assert_eq!(typed.get(fam).map(String::as_str), Some("histogram"));
+        assert_eq!(inf_seen.get(fam), Some(&5), "+Inf bucket = total count");
+        assert_eq!(counts.get(fam), Some(&5), "_count equals exact count");
+        assert!(text.contains("ring_hops 12\n"));
+        assert!(text.contains(&format!("{fam}_sum {}\n", 1 + 3 + 3 + 900 + 70_000)));
+        assert!(text.contains("proc_rss_bytes 4096\n"), "integral gauge prints plain");
+        assert!(text.contains("score_ratio 0.75\n"));
+    }
+}

@@ -17,7 +17,9 @@ use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use super::hist::Histogram;
+use anyhow::{bail, Context, Result};
+
+use super::hist::{HistCursor, HistDelta, Histogram};
 use crate::infer::json::Json;
 
 /// Monotonic event counter (relaxed atomic `u64`).
@@ -112,6 +114,38 @@ struct Inner {
     counters: RwLock<BTreeMap<String, Counter>>,
     gauges: RwLock<BTreeMap<String, Gauge>>,
     hists: RwLock<BTreeMap<String, Hist>>,
+}
+
+/// What changed in a [`Registry`] between two [`RegistryCursor`]
+/// reads — one worker's metric shipment on the ring's obs wire.
+///
+/// Counters carry increments, gauges their current value (last-write
+/// -wins, shipped only when the bits changed), histograms a
+/// [`HistDelta`] each.
+#[derive(Clone, Debug, Default)]
+pub struct RegistryDelta {
+    /// `(name, increment)` for counters that grew.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, current value)` for gauges whose bits changed.
+    pub gauges: Vec<(String, f64)>,
+    /// `(name, delta)` for histograms with new samples.
+    pub hists: Vec<(String, HistDelta)>,
+}
+
+impl RegistryDelta {
+    /// True when nothing changed since the cursor.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+}
+
+/// Last-shipped state of one registry, advanced by
+/// [`Registry::delta_since`]. One cursor per (registry, shipper).
+#[derive(Clone, Debug, Default)]
+pub struct RegistryCursor {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, u64>,
+    hists: BTreeMap<String, HistCursor>,
 }
 
 /// Named collection of metrics; `Clone` shares the same store.
@@ -275,6 +309,158 @@ impl Registry {
     pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json_string())
     }
+
+    /// Registered counters as sorted `(name, value)` pairs.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.inner
+            .counters
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, c)| (k.clone(), c.get()))
+            .collect()
+    }
+
+    /// Registered gauges as sorted `(name, value)` pairs.
+    pub fn gauges(&self) -> Vec<(String, f64)> {
+        self.inner
+            .gauges
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, g)| (k.clone(), g.get()))
+            .collect()
+    }
+
+    /// Registered histogram handles, sorted by name.
+    pub fn hists(&self) -> Vec<(String, Hist)> {
+        self.inner
+            .hists
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, h)| (k.clone(), h.clone()))
+            .collect()
+    }
+
+    /// What changed since `cursor` last saw this registry; the cursor
+    /// advances to the current state. Metrics created after the last
+    /// read ship in full (the cursor starts them at zero).
+    pub fn delta_since(&self, cursor: &mut RegistryCursor) -> RegistryDelta {
+        let mut out = RegistryDelta::default();
+        for (name, c) in self.inner.counters.read().expect("registry poisoned").iter() {
+            let v = c.get();
+            let prev = cursor.counters.insert(name.clone(), v).unwrap_or(0);
+            if v > prev {
+                out.counters.push((name.clone(), v - prev));
+            }
+        }
+        for (name, g) in self.inner.gauges.read().expect("registry poisoned").iter() {
+            let bits = g.get().to_bits();
+            let prev = cursor.gauges.insert(name.clone(), bits);
+            // Ship on first sight too (prev None), even if the value
+            // is the 0.0 default — the receiver learns the gauge exists.
+            if prev != Some(bits) {
+                out.gauges.push((name.clone(), f64::from_bits(bits)));
+            }
+        }
+        for (name, h) in self.inner.hists.read().expect("registry poisoned").iter() {
+            let hc = cursor.hists.entry(name.clone()).or_default();
+            let d = h.inner().delta_since(hc);
+            if !d.is_empty() {
+                out.hists.push((name.clone(), d));
+            }
+        }
+        out
+    }
+
+    /// Merge a delta into this registry with every name prefixed (the
+    /// coordinator files worker shipments under `worker<k>.`).
+    pub fn absorb_prefixed(&self, prefix: &str, delta: &RegistryDelta) {
+        for (name, inc) in &delta.counters {
+            self.counter(&format!("{prefix}{name}")).add(*inc);
+        }
+        for (name, v) in &delta.gauges {
+            self.gauge(&format!("{prefix}{name}")).set(*v);
+        }
+        for (name, d) in &delta.hists {
+            self.hist(&format!("{prefix}{name}")).inner().absorb(d);
+        }
+    }
+
+    /// Merge a snapshot produced by [`Registry::snapshot`] /
+    /// [`Registry::write_json`] under `prefix` — the offline
+    /// `obs merge` path. Histograms are rebuilt from their
+    /// `[lo, hi, n]` bucket triples plus the exact
+    /// `count`/`sum`/`min`/`max` fields; values above 2^53 went
+    /// through JSON `f64`s, so extreme counters round accordingly.
+    pub fn absorb_snapshot(&self, prefix: &str, snap: &Json) -> Result<()> {
+        fn section<'a>(snap: &'a Json, key: &str) -> Result<&'a [(String, Json)]> {
+            match snap.get(key) {
+                None => Ok(&[]),
+                Some(v) => v
+                    .as_object()
+                    .with_context(|| format!("snapshot field '{key}' is not an object")),
+            }
+        }
+        for (name, v) in section(snap, "counters")? {
+            let n = v
+                .as_f64()
+                .with_context(|| format!("counter '{name}' is not a number"))?;
+            self.counter(&format!("{prefix}{name}")).add(n.max(0.0) as u64);
+        }
+        for (name, v) in section(snap, "gauges")? {
+            let n = v
+                .as_f64()
+                .with_context(|| format!("gauge '{name}' is not a number"))?;
+            self.gauge(&format!("{prefix}{name}")).set(n);
+        }
+        for (name, h) in section(snap, "histograms")? {
+            let num = |key: &str| -> Result<u64> {
+                h.get(key)
+                    .and_then(Json::as_f64)
+                    .map(|v| v.max(0.0) as u64)
+                    .with_context(|| format!("histogram '{name}' lacks numeric '{key}'"))
+            };
+            let count = num("count")?;
+            if count == 0 {
+                continue;
+            }
+            let mut buckets = Vec::new();
+            for triple in h.get("buckets").and_then(Json::as_array).unwrap_or(&[]) {
+                let t = triple.as_array().unwrap_or(&[]);
+                let (Some(lo), Some(n)) = (
+                    t.first().and_then(Json::as_f64),
+                    t.get(2).and_then(Json::as_f64),
+                ) else {
+                    bail!("histogram '{name}' has a malformed bucket triple");
+                };
+                buckets.push((
+                    Histogram::bucket_index(lo.max(0.0) as u64) as u8,
+                    n.max(0.0) as u64,
+                ));
+            }
+            let delta = HistDelta {
+                buckets,
+                sum: num("sum")?,
+                count,
+                max: num("max")?,
+                min: num("min")?,
+            };
+            self.hist(&format!("{prefix}{name}")).inner().absorb(&delta);
+        }
+        Ok(())
+    }
+
+    /// Prometheus text exposition (format 0.0.4) of the current state.
+    pub fn to_prometheus(&self) -> String {
+        super::prometheus::render(self)
+    }
+
+    /// Write [`Registry::to_prometheus`] to `path`.
+    pub fn write_prometheus(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_prometheus())
+    }
 }
 
 #[cfg(test)]
@@ -309,6 +495,68 @@ mod tests {
         assert_eq!(reg.counter_value("ext.hits"), Some(5));
         mine.inc();
         assert_eq!(reg.counter_value("ext.hits"), Some(6));
+    }
+
+    #[test]
+    fn delta_since_ships_changes_and_absorb_prefixed_files_them() {
+        let src = Registry::new();
+        let dst = Registry::new();
+        let mut cursor = RegistryCursor::default();
+
+        src.counter("ring.hops").add(3);
+        src.gauge("load").set(0.5);
+        src.hist("wait_ns").record(100);
+        let d1 = src.delta_since(&mut cursor);
+        assert_eq!(d1.counters, vec![("ring.hops".to_string(), 3)]);
+        dst.absorb_prefixed("worker1.", &d1);
+        assert_eq!(dst.counter_value("worker1.ring.hops"), Some(3));
+        assert_eq!(dst.gauge("worker1.load").get(), 0.5);
+        assert_eq!(dst.hist("worker1.wait_ns").inner().count(), 1);
+
+        // quiescent source -> empty delta
+        assert!(src.delta_since(&mut cursor).is_empty());
+
+        // only the increments ship the second time
+        src.counter("ring.hops").add(2);
+        src.hist("wait_ns").record(7);
+        let d2 = src.delta_since(&mut cursor);
+        assert_eq!(d2.counters, vec![("ring.hops".to_string(), 2)]);
+        assert!(d2.gauges.is_empty(), "unchanged gauge must not re-ship");
+        dst.absorb_prefixed("worker1.", &d2);
+        assert_eq!(dst.counter_value("worker1.ring.hops"), Some(5));
+        let h = dst.hist("worker1.wait_ns");
+        assert_eq!(h.inner().count(), 2);
+        assert_eq!(h.inner().sum(), 107);
+        assert_eq!(h.inner().min(), 7);
+        assert_eq!(h.inner().max(), 100);
+    }
+
+    #[test]
+    fn absorb_snapshot_rebuilds_histograms_exactly() {
+        let src = Registry::new();
+        src.counter("c").add(41);
+        src.gauge("g").set(-2.25);
+        let h = src.hist("lat");
+        for v in [1u64, 5, 5, 900] {
+            h.record(v);
+        }
+        let snap = Json::parse(&src.to_json_string()).expect("valid snapshot");
+
+        let dst = Registry::new();
+        dst.absorb_snapshot("proc0.", &snap).expect("absorb");
+        assert_eq!(dst.counter_value("proc0.c"), Some(41));
+        assert_eq!(dst.gauge("proc0.g").get(), -2.25);
+        let got = dst.hist("proc0.lat");
+        assert_eq!(got.inner().count(), 4);
+        assert_eq!(got.inner().sum(), 911);
+        assert_eq!(got.inner().min(), 1);
+        assert_eq!(got.inner().max(), 900);
+        assert_eq!(got.inner().nonzero_buckets(), h.inner().nonzero_buckets());
+
+        assert!(
+            dst.absorb_snapshot("p.", &Json::parse("{\"counters\": 3}").unwrap()).is_err(),
+            "malformed snapshot must be rejected"
+        );
     }
 
     #[test]

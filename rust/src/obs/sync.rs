@@ -1,0 +1,213 @@
+//! NTP-style clock-offset estimation between two stream peers.
+//!
+//! Ring workers in separate processes stamp spans against independent
+//! monotonic epochs ([`super::trace::Tracer`] starts its clock at
+//! construction), so merging their traces onto one timeline needs the
+//! offset between each pair of clocks. The classic midpoint estimate
+//! over a few ping round-trips is plenty here: loopback RTTs are tens
+//! of microseconds while ring rounds are milliseconds, so even the
+//! worst single-sample error is invisible at trace resolution.
+//!
+//! Protocol (all messages are 8-byte little-endian `u64` nanosecond
+//! timestamps):
+//!
+//! 1. the **initiator** notes `t1` on its clock and sends it;
+//! 2. the **responder** replies with `t_r`, the time on *its* clock;
+//! 3. the initiator notes the arrival time `t2` and estimates the
+//!    offset mapping responder timestamps onto its own clock as
+//!    `(t1 + t2) / 2 - t_r` — exact when the two directions of the
+//!    trip are symmetric, off by at most RTT/2 otherwise.
+//!
+//! [`SYNC_ROUNDS`] trips are made and the estimate from the
+//! minimum-RTT trip wins (the trip least likely to have been delayed
+//! asymmetrically by scheduling).
+
+use std::io::{Read, Write};
+
+use anyhow::{Context, Result};
+
+/// Ping round-trips per measurement; the minimum-RTT sample wins.
+pub const SYNC_ROUNDS: usize = 8;
+
+/// A measured clock relationship between two peers.
+///
+/// `offset_ns` maps timestamps on the *responder's* clock onto the
+/// *initiator's* clock: `t_initiator ≈ t_responder + offset_ns`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClockOffset {
+    /// Signed correction to add to responder timestamps.
+    pub offset_ns: i64,
+    /// Round-trip time of the winning sample — an error bound on the
+    /// offset (the true offset is within ±`rtt_ns / 2`).
+    pub rtt_ns: u64,
+}
+
+impl ClockOffset {
+    /// Rebase a responder-clock timestamp onto the initiator's clock,
+    /// saturating at the `u64` range ends.
+    pub fn apply(&self, ts_ns: u64) -> u64 {
+        ts_ns.saturating_add_signed(self.offset_ns)
+    }
+}
+
+/// A `Read + Write` view stitched from two halves — used when one
+/// socket is owned as a buffered reader on one side and a raw clone
+/// on the other (full-duplex TCP ring links).
+pub struct ReadWritePair<'a, R: Read, W: Write> {
+    /// Receiving half.
+    pub r: &'a mut R,
+    /// Sending half.
+    pub w: &'a mut W,
+}
+
+impl<R: Read, W: Write> Read for ReadWritePair<'_, R, W> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.r.read(buf)
+    }
+}
+
+impl<R: Read, W: Write> Write for ReadWritePair<'_, R, W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.w.write(buf)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+fn send_ts<S: Write + ?Sized>(stream: &mut S, ts: u64) -> Result<()> {
+    stream
+        .write_all(&ts.to_le_bytes())
+        .and_then(|()| stream.flush())
+        .context("clock sync: send timestamp")
+}
+
+fn recv_ts<S: Read + ?Sized>(stream: &mut S) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    stream
+        .read_exact(&mut buf)
+        .context("clock sync: recv timestamp")?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+/// Initiator side: run `rounds` ping trips against a peer executing
+/// [`answer_pings`] with the same `rounds`, reading the local clock
+/// through `now_ns`. Returns the minimum-RTT offset estimate.
+pub fn measure_offset<S: Read + Write>(
+    stream: &mut S,
+    now_ns: &mut dyn FnMut() -> u64,
+    rounds: usize,
+) -> Result<ClockOffset> {
+    let mut best = ClockOffset {
+        offset_ns: 0,
+        rtt_ns: u64::MAX,
+    };
+    for _ in 0..rounds.max(1) {
+        let t1 = now_ns();
+        send_ts(stream, t1)?;
+        let t_r = recv_ts(stream)?;
+        let t2 = now_ns();
+        let rtt = t2.saturating_sub(t1);
+        if rtt < best.rtt_ns {
+            // Midpoint in i128: (t1 + t2) / 2 can exceed u64.
+            let mid = (t1 as i128 + t2 as i128) / 2;
+            best = ClockOffset {
+                offset_ns: (mid - t_r as i128).clamp(i64::MIN as i128, i64::MAX as i128) as i64,
+                rtt_ns: rtt,
+            };
+        }
+    }
+    Ok(best)
+}
+
+/// Responder side: answer `rounds` pings, stamping each reply with the
+/// local clock through `now_ns`. The incoming timestamp is only read
+/// to pace the exchange; its value is the initiator's business.
+pub fn answer_pings<S: Read + Write>(
+    stream: &mut S,
+    now_ns: &mut dyn FnMut() -> u64,
+    rounds: usize,
+) -> Result<()> {
+    for _ in 0..rounds.max(1) {
+        let _t1 = recv_ts(stream)?;
+        send_ts(stream, now_ns())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Instant;
+
+    fn socket_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let client = TcpStream::connect(addr).expect("connect");
+        let (server, _) = listener.accept().expect("accept");
+        (client, server)
+    }
+
+    #[test]
+    fn measures_known_skew_within_rtt() {
+        // Two clocks off the same Instant with a fixed 5 s skew: the
+        // initiator's clock runs 5 s ahead of the responder's, so the
+        // measured offset (responder -> initiator) should be ~ +5 s.
+        const SKEW_NS: u64 = 5_000_000_000;
+        let epoch = Instant::now();
+        let (mut a, mut b) = socket_pair();
+
+        let responder = std::thread::spawn(move || {
+            let mut now = || epoch.elapsed().as_nanos() as u64;
+            answer_pings(&mut b, &mut now, SYNC_ROUNDS).expect("responder");
+        });
+        let mut now = || epoch.elapsed().as_nanos() as u64 + SKEW_NS;
+        let off = measure_offset(&mut a, &mut now, SYNC_ROUNDS).expect("initiator");
+        responder.join().expect("join");
+
+        assert!(off.rtt_ns < 1_000_000_000, "loopback rtt: {}", off.rtt_ns);
+        let err = (off.offset_ns - SKEW_NS as i64).unsigned_abs();
+        assert!(
+            err <= off.rtt_ns / 2 + 1,
+            "offset {} vs skew {SKEW_NS}, rtt {}",
+            off.offset_ns,
+            off.rtt_ns
+        );
+    }
+
+    #[test]
+    fn negative_skew_is_negative_offset() {
+        // Responder ahead of initiator: offset must come out negative.
+        const SKEW_NS: u64 = 3_000_000_000;
+        let epoch = Instant::now();
+        let (mut a, mut b) = socket_pair();
+
+        let responder = std::thread::spawn(move || {
+            let mut now = || epoch.elapsed().as_nanos() as u64 + SKEW_NS;
+            answer_pings(&mut b, &mut now, SYNC_ROUNDS).expect("responder");
+        });
+        let mut now = || epoch.elapsed().as_nanos() as u64;
+        let off = measure_offset(&mut a, &mut now, SYNC_ROUNDS).expect("initiator");
+        responder.join().expect("join");
+
+        assert!(off.offset_ns < 0, "expected negative offset: {off:?}");
+        let err = (off.offset_ns + SKEW_NS as i64).unsigned_abs();
+        assert!(err <= off.rtt_ns / 2 + 1, "err {err}, rtt {}", off.rtt_ns);
+    }
+
+    #[test]
+    fn apply_saturates_at_range_ends() {
+        let ahead = ClockOffset {
+            offset_ns: 10,
+            rtt_ns: 0,
+        };
+        assert_eq!(ahead.apply(u64::MAX - 3), u64::MAX);
+        let behind = ClockOffset {
+            offset_ns: -10,
+            rtt_ns: 0,
+        };
+        assert_eq!(behind.apply(3), 0);
+        assert_eq!(behind.apply(25), 15);
+    }
+}

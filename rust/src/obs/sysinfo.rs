@@ -1,0 +1,179 @@
+//! Low-rate process self-sampler: `/proc/self` into gauges.
+//!
+//! When `--metrics` is set, `learn`/`serve` start one background
+//! thread that periodically reads the process's own resource usage
+//! and publishes it as gauges, so metrics snapshots carry the
+//! machine-level context next to the algorithmic counters:
+//!
+//! - `proc.rss_bytes` — resident set size,
+//! - `proc.user_secs` / `proc.sys_secs` — cumulative CPU time,
+//! - `proc.threads` — live thread count.
+//!
+//! The reads are Linux-only (`/proc` text files, no syscalls beyond
+//! `read`); on other platforms the sampler runs but publishes
+//! nothing. Sampling is deliberately coarse (default 500 ms) — this
+//! is context, not profiling.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::{Gauge, Registry};
+
+/// Handle to the background sampler thread; dropping it stops and
+/// joins the thread.
+pub struct SysSampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl SysSampler {
+    /// Start sampling into `registry` every `interval`. The first
+    /// sample is taken immediately.
+    pub fn start(registry: &Registry, interval: Duration) -> SysSampler {
+        let stop = Arc::new(AtomicBool::new(false));
+        let gauges = Gauges::bind(registry);
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("cges-sysinfo".into())
+            .spawn(move || loop {
+                gauges.publish();
+                // Sleep in short slices so Drop joins promptly.
+                let mut waited = Duration::ZERO;
+                while waited < interval {
+                    if flag.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let slice = Duration::from_millis(50).min(interval - waited);
+                    std::thread::sleep(slice);
+                    waited += slice;
+                }
+                if flag.load(Ordering::Relaxed) {
+                    return;
+                }
+            })
+            .expect("spawn sysinfo sampler thread");
+        SysSampler {
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for SysSampler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Take one sample synchronously — used just before a final metrics
+/// write so the snapshot reflects end-of-run usage.
+pub fn sample_now(registry: &Registry) {
+    Gauges::bind(registry).publish();
+}
+
+struct Gauges {
+    rss: Gauge,
+    user: Gauge,
+    sys: Gauge,
+    threads: Gauge,
+}
+
+impl Gauges {
+    fn bind(registry: &Registry) -> Gauges {
+        Gauges {
+            rss: registry.gauge("proc.rss_bytes"),
+            user: registry.gauge("proc.user_secs"),
+            sys: registry.gauge("proc.sys_secs"),
+            threads: registry.gauge("proc.threads"),
+        }
+    }
+
+    fn publish(&self) {
+        if let Some(s) = read_proc_self() {
+            self.rss.set(s.rss_bytes);
+            self.user.set(s.user_secs);
+            self.sys.set(s.sys_secs);
+            self.threads.set(s.threads);
+        }
+    }
+}
+
+struct ProcSample {
+    rss_bytes: f64,
+    user_secs: f64,
+    sys_secs: f64,
+    threads: f64,
+}
+
+#[cfg(target_os = "linux")]
+fn read_proc_self() -> Option<ProcSample> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let mut rss_bytes = 0.0;
+    let mut threads = 0.0;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: f64 = rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0.0);
+            rss_bytes = kb * 1024.0;
+        } else if let Some(rest) = line.strip_prefix("Threads:") {
+            threads = rest.trim().parse().unwrap_or(0.0);
+        }
+    }
+    let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+    // The comm field can contain spaces and parens; everything after
+    // the *last* ')' is the fixed-layout tail, where field 3 of the
+    // file (state) is tail index 0 → utime (field 14) is index 11 and
+    // stime (field 15) is index 12, both in USER_HZ ticks. The /proc
+    // ABI fixes USER_HZ at 100 regardless of the kernel tick rate.
+    let tail = stat.rsplit_once(')').map(|(_, t)| t)?;
+    let fields: Vec<&str> = tail.split_whitespace().collect();
+    let ticks = |i: usize| fields.get(i)?.parse::<f64>().ok();
+    Some(ProcSample {
+        rss_bytes,
+        user_secs: ticks(11)? / 100.0,
+        sys_secs: ticks(12)? / 100.0,
+        threads,
+    })
+}
+
+#[cfg(not(target_os = "linux"))]
+fn read_proc_self() -> Option<ProcSample> {
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn sampler_publishes_positive_process_gauges() {
+        let reg = Registry::new();
+        let sampler = SysSampler::start(&reg, Duration::from_millis(20));
+        // Burn a little CPU so user time is nonzero-ish, then let at
+        // least one sampling cycle land.
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        assert!(acc != 1); // keep the loop alive
+        std::thread::sleep(Duration::from_millis(60));
+        drop(sampler); // joins the thread
+
+        assert!(reg.gauge("proc.rss_bytes").get() > 0.0, "rss should be positive");
+        assert!(reg.gauge("proc.threads").get() >= 1.0, "at least this thread");
+        assert!(reg.gauge("proc.user_secs").get() >= 0.0);
+    }
+
+    #[test]
+    fn sample_now_is_synchronous_and_safe_everywhere() {
+        let reg = Registry::new();
+        sample_now(&reg); // must not panic on any platform
+        #[cfg(target_os = "linux")]
+        assert!(reg.gauge("proc.rss_bytes").get() > 0.0);
+    }
+}

@@ -96,6 +96,21 @@ impl Tracer {
         self.shared.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
     }
 
+    /// Exact signed offset mapping this tracer's timestamps onto
+    /// `other`'s clock: `t_other = t_self + offset`. Both epochs are
+    /// in-process [`Instant`]s, so this is the zero-error analogue of
+    /// the wire handshake in [`super::sync`] — used for workers that
+    /// share the coordinator's process.
+    pub fn offset_to(&self, other: &Tracer) -> i64 {
+        match self.shared.epoch.checked_duration_since(other.shared.epoch) {
+            Some(ahead) => ahead.as_nanos().min(i64::MAX as u128) as i64,
+            None => {
+                let behind = other.shared.epoch.duration_since(self.shared.epoch);
+                -(behind.as_nanos().min(i64::MAX as u128) as i64)
+            }
+        }
+    }
+
     /// A per-thread recording handle for lane `tid`.
     pub fn handle(&self, tid: u32) -> TraceHandle {
         TraceHandle { shared: self.shared.clone(), tid, buf: Vec::new() }
@@ -410,6 +425,22 @@ mod tests {
             outer_b.get("args").and_then(|a| a.get("round")).and_then(Json::as_f64),
             Some(0.0)
         );
+    }
+
+    #[test]
+    fn offset_to_is_antisymmetric_and_maps_clocks() {
+        let early = Tracer::new(true);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let late = Tracer::new(true);
+        // `late`'s epoch is after `early`'s, so a timestamp on `late`'s
+        // clock maps to a *larger* value on `early`'s clock.
+        let off = late.offset_to(&early);
+        assert!(off > 0, "late->early offset must be positive: {off}");
+        assert_eq!(early.offset_to(&late), -off);
+        // The mapped "now" of one clock lands near the other's now.
+        let mapped = late.now_ns().saturating_add_signed(off);
+        let err = mapped.abs_diff(early.now_ns());
+        assert!(err < 1_000_000_000, "mapped now off by {err} ns");
     }
 
     #[test]

@@ -250,6 +250,107 @@ fn ring_trace_roundtrip_chrome_events() {
     assert!(off.chrome_json().is_empty(), "disabled tracer emitted bytes");
 }
 
+/// Acceptance gate for the distributed obs wire (tentpole of the obs
+/// PR): a ring run over the real TCP wire transport with
+/// `distributed_obs` on must deliver every worker's spans and metric
+/// deltas to the coordinator — one Chrome-parseable timeline with one
+/// lane per worker (strict B/E pairing, monotone clock-aligned
+/// timestamps per lane) and one merged registry carrying
+/// `worker<k>.*` series for every worker — while leaving the learned
+/// structure identical to a run with the capability off.
+#[test]
+fn distributed_obs_tcp_ring_merges_one_timeline() {
+    use cges::infer::json::Json;
+    use cges::obs::{Registry, Tracer, COORDINATOR_TID};
+    use std::collections::{BTreeMap, BTreeSet};
+
+    let (_bn, data) = workload(14, 18, 900, 7);
+    let k = 3;
+    let tracer = Tracer::new(true);
+    let registry = Registry::new();
+    let obs = cges(
+        data.clone(),
+        &RingConfig {
+            k,
+            threads: k,
+            mode: RingMode::Tcp,
+            distributed_obs: true,
+            registry: Some(registry.clone()),
+            tracer: tracer.clone(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let plain = cges(
+        data,
+        &RingConfig { k, threads: k, mode: RingMode::Tcp, ..Default::default() },
+    )
+    .unwrap();
+
+    // The capability must not perturb the learning outcome.
+    assert_eq!(obs.dag.edges(), plain.dag.edges(), "obs wire changed the structure");
+    assert_eq!(obs.score.to_bits(), plain.score.to_bits(), "obs wire changed the score");
+
+    // Merged registry: every worker shipped its deltas; the prefixed
+    // hop counter sums to the global one telemetry exports.
+    let mut shipped_hops = 0;
+    for w in 0..k {
+        let hops = registry.counter_value(&format!("worker{w}.ring.hops")).unwrap_or(0);
+        assert!(hops >= 1, "worker{w}: no hops shipped over the obs wire");
+        shipped_hops += hops;
+        assert!(
+            registry.hist(&format!("worker{w}.ring.ges_ns")).inner().count() >= 1,
+            "worker{w}: no ges latency shipped"
+        );
+    }
+    assert_eq!(
+        shipped_hops,
+        registry.counter_value("ring.hops").unwrap_or(0),
+        "shipped per-worker hops disagree with the telemetry total"
+    );
+
+    // One timeline: the coordinator tracer now holds every worker's
+    // ring spans (clock-rebased) next to its own stage spans.
+    let text = tracer.chrome_json();
+    let events = Json::parse(&text).expect("merged chrome trace must parse");
+    let events = events.as_array().expect("chrome trace is an event array");
+    let mut ring_lanes: BTreeSet<u64> = BTreeSet::new();
+    let mut stacks: BTreeMap<u64, Vec<(String, f64)>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    for ev in events {
+        let tid = ev.get("tid").and_then(Json::as_f64).expect("tid") as u64;
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("ts");
+        let name = ev.get("name").and_then(Json::as_str).expect("name").to_string();
+        let ph = ev.get("ph").and_then(Json::as_str).expect("ph");
+        let cat = ev.get("cat").and_then(Json::as_str).unwrap_or("");
+        if cat == "ring" {
+            ring_lanes.insert(tid);
+        } else if cat == "stage" {
+            assert_eq!(tid, COORDINATOR_TID as u64, "stage span off the coordinator lane");
+        }
+        let prev = last_ts.entry(tid).or_insert(f64::NEG_INFINITY);
+        assert!(ts >= *prev, "lane {tid}: timestamp went backwards ({ts} < {prev})");
+        *prev = ts;
+        match ph {
+            "B" => stacks.entry(tid).or_default().push((name, ts)),
+            "E" => {
+                let (open, begin_ts) = stacks
+                    .get_mut(&tid)
+                    .and_then(Vec::pop)
+                    .unwrap_or_else(|| panic!("lane {tid}: E '{name}' without matching B"));
+                assert_eq!(open, name, "lane {tid}: mismatched B/E nesting");
+                assert!(ts >= begin_ts, "lane {tid}: span '{name}' ends before it begins");
+            }
+            other => panic!("unexpected phase '{other}'"),
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "lane {tid}: {} unclosed spans", stack.len());
+    }
+    let expected: BTreeSet<u64> = (0..k as u64).collect();
+    assert_eq!(ring_lanes, expected, "every worker must own a ring-span lane");
+}
+
 #[test]
 fn telemetry_records_every_round_and_worker() {
     let (_bn, data) = workload(16, 22, 1200, 13);

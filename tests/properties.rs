@@ -17,7 +17,7 @@ use cges::infer::kernel::{self, reference};
 use cges::learn::{fges, ges, FgesConfig, GesConfig};
 use cges::metrics::smhd;
 use cges::model::{bundle_from_bytes, bundle_to_bytes, Bundle, BundleMeta};
-use cges::obs::Histogram;
+use cges::obs::{HistCursor, Histogram};
 use cges::partition::{assign_edges, cluster_variables, partition_stats};
 use cges::rng::Rng;
 use cges::score::{
@@ -839,6 +839,40 @@ fn prop_histogram_quantiles_bracket_exact_order_statistics() {
             assert!(
                 exact <= p && lo <= p && p <= hi,
                 "seed {seed}: q={q} quantile {p} vs exact {exact} in [{lo}, {hi}]"
+            );
+        }
+
+        // Distributed invariant: shipping the same multiset through
+        // the delta/absorb wire path (one cursor, two incremental
+        // deltas — exactly how the ring's obs wire batches per-round
+        // shipments) reconstructs an equal histogram: same count, sum,
+        // max and per-bucket occupancy, so merged quantile brackets
+        // match the source's.
+        let src = Histogram::new();
+        let replayed = Histogram::new();
+        let mut cursor = HistCursor::default();
+        let half = samples.len() / 2;
+        for &v in &samples[..half] {
+            src.record(v);
+        }
+        replayed.absorb(&src.delta_since(&mut cursor));
+        for &v in &samples[half..] {
+            src.record(v);
+        }
+        replayed.absorb(&src.delta_since(&mut cursor));
+        assert_eq!(replayed.count(), src.count(), "seed {seed}: replay count");
+        assert_eq!(replayed.sum(), src.sum(), "seed {seed}: replay sum");
+        assert_eq!(replayed.max(), src.max(), "seed {seed}: replay max");
+        assert_eq!(
+            replayed.nonzero_buckets(),
+            src.nonzero_buckets(),
+            "seed {seed}: replay bucket occupancy"
+        );
+        for &q in &[0.5, 0.99] {
+            assert_eq!(
+                replayed.quantile_bounds(q),
+                src.quantile_bounds(q),
+                "seed {seed}: replay q={q} bracket"
             );
         }
     }

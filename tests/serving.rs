@@ -603,3 +603,57 @@ fn stats_over_tcp_reports_latency_and_tracer_captures_spans() {
     assert!(spans.iter().any(|sp| sp.cat == "jointree" && sp.name == "collect"));
     assert!(spans.iter().any(|sp| sp.cat == "jointree" && sp.name == "distribute"));
 }
+
+/// `{"type":"stats","format":"prometheus"}` over a real framed TCP
+/// exchange answers the live registry as Prometheus exposition text
+/// (satellite of the distributed-obs PR); the default format stays a
+/// structured JSON snapshot, byte-compatible with existing scrapers.
+#[test]
+fn stats_prometheus_format_over_framed_tcp() {
+    let bn = generate(&small_cfg(8, 11), 5);
+    let server = Server::new(
+        &bn,
+        &EngineConfig::default(),
+        ServeConfig { threads: 1, ..Default::default() },
+    )
+    .unwrap();
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|s| {
+        let server = &server;
+        s.spawn(move || server.serve_tcp(&listener, Some(1)).unwrap());
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        send_frame(&mut writer, r#"{"id": 1, "type": "marginal"}"#);
+        let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+
+        send_frame(&mut writer, r#"{"id": 2, "type": "stats", "format": "prometheus"}"#);
+        let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("format").and_then(Json::as_str), Some("prometheus"));
+        let text = v
+            .get("stats")
+            .and_then(Json::as_str)
+            .expect("prometheus stats body is a string");
+        assert!(
+            text.contains("# TYPE serve_requests counter"),
+            "missing counter TYPE line in: {text}"
+        );
+        assert!(
+            text.contains("_bucket{le=\"+Inf\"}"),
+            "histogram missing the +Inf cumulative bucket"
+        );
+
+        // The default shape is untouched: a structured object.
+        send_frame(&mut writer, r#"{"id": 3, "type": "stats"}"#);
+        let v = Json::parse(&recv_frame(&mut reader)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(v.get("format").is_none(), "default stats must not grow a format field");
+        let stats = v.get("stats").expect("stats body");
+        assert!(stats.get("counters").is_some(), "default stats is the JSON snapshot");
+    });
+}
