@@ -1,0 +1,584 @@
+//! Fault taxonomy, fault policy, and the fault-injection harness for
+//! the ring runtime.
+//!
+//! The paper's ring is a synchronous pipeline: one slow or dead
+//! processor stalls every round forever. This module is the toolbox
+//! the runtime uses to do better, in three parts:
+//!
+//! * **[`RingFault`]** — a typed error taxonomy for everything that
+//!   can go wrong on a ring link (timeout, corrupt frame, peer gone,
+//!   oversize frame, worker panic), replacing the ad-hoc `anyhow!`
+//!   tears the transports used to produce. The worker loop matches on
+//!   the variant to pick a policy: skip the round, retry the link, or
+//!   heal the ring.
+//! * **[`FaultPolicy`] + [`FaultStats`]** — the knobs (per-round recv
+//!   deadline, mid-frame stall grace, bounded decode retries with
+//!   exponential backoff, healing on/off) and the shared counters
+//!   every fault event increments (exported as `ring.faults.*`).
+//!   The default policy is *inert*: no deadline, healing passive —
+//!   absent faults, frames and learned structures are byte/bit
+//!   identical to a policy-less run.
+//! * **[`FaultPlan`] + [`ChaosTransport`]** — a scripted
+//!   fault-injection harness. The plan is parsed from a tiny grammar
+//!   (`kill:w2@1,delay:w1@2:50ms,...`) and the chaos transport wraps
+//!   any [`RingTransport`], applying the scripted actions at each
+//!   worker's numbered *send hops* (hop h = the send that ends round
+//!   h). Tests and the `learn --fault-plan` debug flag drive it; an
+//!   empty plan is a pure pass-through.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::log;
+
+use super::transport::{RecvTiming, RingLink, RingMessage, RingRx, RingTransport, RingTx};
+
+// ---------------------------------------------------------------------
+// Typed fault taxonomy
+// ---------------------------------------------------------------------
+
+/// Everything that can go wrong on a ring link, typed so callers can
+/// choose a policy per failure mode instead of tearing down on any
+/// error string.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RingFault {
+    /// No frame arrived within the configured per-round deadline. The
+    /// link is still synchronized (no partial frame was consumed);
+    /// receiving later is safe. Policy: skip the round (straggler).
+    Timeout {
+        /// The deadline that expired.
+        after: Duration,
+    },
+    /// A complete frame arrived but failed validation/decoding. The
+    /// frame is consumed and the link remains framed (length prefixes
+    /// still line up). Policy: bounded retry, then surface.
+    Decode {
+        /// What the codec rejected.
+        detail: String,
+    },
+    /// The peer closed the link, reset the connection, or stalled
+    /// mid-frame past the stall grace. Policy: treat the neighbor as
+    /// gone (shutdown or heal).
+    PeerGone {
+        /// What the transport observed.
+        detail: String,
+    },
+    /// A frame exceeded the wire cap — either an incoming length
+    /// prefix above the cap (likely corruption) or an outgoing frame
+    /// too large to ship.
+    Oversize {
+        /// Claimed/actual frame length in bytes.
+        len: u64,
+        /// The cap it exceeded.
+        cap: u64,
+    },
+    /// A ring worker's body panicked; the panic was caught at the
+    /// worker boundary instead of poisoning the coordinator.
+    WorkerPanicked {
+        /// Ring index of the panicked worker.
+        worker: usize,
+        /// The panic payload, stringified.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for RingFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RingFault::Timeout { after } => {
+                write!(f, "ring recv deadline expired after {:.0}ms", after.as_secs_f64() * 1e3)
+            }
+            RingFault::Decode { detail } => write!(f, "corrupt ring frame: {detail}"),
+            RingFault::PeerGone { detail } => write!(f, "ring peer gone: {detail}"),
+            RingFault::Oversize { len, cap } => {
+                write!(f, "ring frame of {len} bytes exceeds cap of {cap} bytes")
+            }
+            RingFault::WorkerPanicked { worker, detail } => {
+                write!(f, "ring worker {worker} panicked: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RingFault {}
+
+/// Stringify a caught panic payload (the `Box<dyn Any>` from
+/// `catch_unwind`/`join`) for a [`RingFault::WorkerPanicked`].
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault policy + stats
+// ---------------------------------------------------------------------
+
+/// How a ring run reacts to faults. The default is inert: blocking
+/// receives, generous stall grace, two decode retries, healing on —
+/// none of which changes behavior in a fault-free run.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPolicy {
+    /// Bounded per-round wait for the predecessor's model. `None`
+    /// (default) blocks forever — the legacy synchronous behavior.
+    /// `Some(d)` arms the straggler policy: after `d` the round is
+    /// skipped and the worker steps on its own model.
+    pub recv_timeout: Option<Duration>,
+    /// Grace for a frame that started arriving but stalled mid-bytes.
+    /// Past this the link is declared [`RingFault::PeerGone`] (a
+    /// half-written frame can never be resynchronized).
+    pub stall_timeout: Duration,
+    /// Bounded retries after a [`RingFault::Decode`] before the fault
+    /// is surfaced. Each retry waits for the *next* frame on the link
+    /// (the corrupt one is consumed and unrecoverable).
+    pub max_retries: u32,
+    /// Base delay between decode retries; doubles per attempt.
+    pub backoff: Duration,
+    /// Catch worker panics and heal the ring (dead worker's thread
+    /// becomes a pass-through relay, its edge subset is redistributed)
+    /// instead of failing the run.
+    pub heal: bool,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            recv_timeout: None,
+            stall_timeout: Duration::from_secs(30),
+            max_retries: 2,
+            backoff: Duration::from_millis(1),
+            heal: true,
+        }
+    }
+}
+
+/// Shared fault-event counters, incremented by the worker loops and
+/// the transports; snapshotted into [`FaultSummary`] for telemetry and
+/// exported as `ring.faults.*`.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    /// Recv deadlines that expired (straggler detections).
+    pub timeouts: AtomicU64,
+    /// Rounds a worker stepped without its predecessor's fresh model.
+    pub skips: AtomicU64,
+    /// Decode retries consumed.
+    pub retries: AtomicU64,
+    /// Corrupt frames seen.
+    pub decode: AtomicU64,
+    /// Duplicated frames discarded.
+    pub duplicates: AtomicU64,
+    /// Links declared dead (close/reset/mid-frame stall).
+    pub peer_gone: AtomicU64,
+    /// Worker panics caught at the worker boundary.
+    pub deaths: AtomicU64,
+    /// Dead workers the coordinator healed around.
+    pub healed: AtomicU64,
+}
+
+impl FaultStats {
+    /// Plain-integer snapshot for telemetry.
+    pub fn snapshot(&self) -> FaultSummary {
+        FaultSummary {
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            skips: self.skips.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            decode: self.decode.load(Ordering::Relaxed),
+            duplicates: self.duplicates.load(Ordering::Relaxed),
+            peer_gone: self.peer_gone.load(Ordering::Relaxed),
+            deaths: self.deaths.load(Ordering::Relaxed),
+            healed: self.healed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`FaultStats`], carried in telemetry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSummary {
+    /// See [`FaultStats::timeouts`].
+    pub timeouts: u64,
+    /// See [`FaultStats::skips`].
+    pub skips: u64,
+    /// See [`FaultStats::retries`].
+    pub retries: u64,
+    /// See [`FaultStats::decode`].
+    pub decode: u64,
+    /// See [`FaultStats::duplicates`].
+    pub duplicates: u64,
+    /// See [`FaultStats::peer_gone`].
+    pub peer_gone: u64,
+    /// See [`FaultStats::deaths`].
+    pub deaths: u64,
+    /// See [`FaultStats::healed`].
+    pub healed: u64,
+}
+
+impl FaultSummary {
+    /// Did any fault event occur?
+    pub fn any(&self) -> bool {
+        *self != FaultSummary::default()
+    }
+}
+
+/// Receive with the policy's deadline, retrying corrupt frames up to
+/// `policy.max_retries` times with exponential backoff. Non-decode
+/// faults pass straight through. Shared by the worker loop and the
+/// fault tests.
+pub fn recv_with_policy(
+    rx: &mut dyn RingRx,
+    policy: &FaultPolicy,
+    stats: &FaultStats,
+    who: usize,
+) -> Result<(RingMessage, RecvTiming), RingFault> {
+    let mut attempt = 0u32;
+    loop {
+        match rx.recv_deadline(policy.recv_timeout, policy.stall_timeout) {
+            Err(RingFault::Decode { detail }) => {
+                stats.decode.fetch_add(1, Ordering::Relaxed);
+                if attempt >= policy.max_retries {
+                    return Err(RingFault::Decode { detail });
+                }
+                attempt += 1;
+                stats.retries.fetch_add(1, Ordering::Relaxed);
+                log::warn(format_args!(
+                    "ring worker {who}: corrupt frame from predecessor ({detail}); \
+                     retrying ({attempt}/{})",
+                    policy.max_retries
+                ));
+                let backoff = policy.backoff.saturating_mul(1u32 << (attempt - 1).min(16));
+                if !backoff.is_zero() {
+                    std::thread::sleep(backoff);
+                }
+            }
+            other => return other,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault-injection harness
+// ---------------------------------------------------------------------
+
+/// One scripted fault action.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic the worker at the send site (caught and healed by the
+    /// runtime when [`FaultPolicy::heal`] is on).
+    Kill,
+    /// Swallow the frame — the successor never sees this round.
+    Drop,
+    /// Sleep before sending — makes the worker a straggler.
+    Delay(Duration),
+    /// Flip a payload byte in flight (wire links; in-process links
+    /// degrade to a drop, since a moved message has no bytes to flip).
+    Corrupt,
+    /// Send the frame twice — the successor must deduplicate.
+    Duplicate,
+}
+
+/// A scripted fault at one worker's numbered send hop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Ring index of the worker whose send misbehaves.
+    pub worker: usize,
+    /// Which of that worker's model sends (0-based; hop h ends round
+    /// h) the action fires on.
+    pub hop: usize,
+    /// What happens.
+    pub action: FaultAction,
+}
+
+/// A parsed fault-injection script.
+///
+/// Grammar (comma-separated entries):
+///
+/// ```text
+/// <action>:w<worker>@<hop>[:<param>]
+/// action := kill | drop | delay | corrupt | dup
+/// param  := duration for delay: "50ms", "2s", or bare millis
+/// ```
+///
+/// Example: `kill:w2@1,delay:w1@2:50ms,corrupt:w3@0,dup:w3@0`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The scripted events.
+    pub events: Vec<FaultEvent>,
+}
+
+fn parse_duration(text: &str) -> Result<Duration> {
+    let t = text.trim();
+    if let Some(ms) = t.strip_suffix("ms") {
+        let v: u64 = ms.trim().parse().with_context(|| format!("bad millis '{t}'"))?;
+        return Ok(Duration::from_millis(v));
+    }
+    if let Some(s) = t.strip_suffix('s') {
+        let v: f64 = s.trim().parse().with_context(|| format!("bad seconds '{t}'"))?;
+        if !(v.is_finite() && v >= 0.0) {
+            bail!("bad seconds '{t}'");
+        }
+        return Ok(Duration::from_secs_f64(v));
+    }
+    let v: u64 = t.parse().with_context(|| format!("bad duration '{t}' (want e.g. 50ms)"))?;
+    Ok(Duration::from_millis(v))
+}
+
+impl FaultPlan {
+    /// Parse the `--fault-plan` grammar. An empty/blank spec is the
+    /// empty plan (pure pass-through).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let mut parts = entry.splitn(3, ':');
+            let action = parts.next().unwrap_or("").trim().to_ascii_lowercase();
+            let site = parts
+                .next()
+                .with_context(|| format!("fault entry '{entry}' missing ':w<worker>@<hop>'"))?
+                .trim();
+            let param = parts.next();
+            let rest = site
+                .strip_prefix('w')
+                .with_context(|| format!("fault site '{site}' must look like w<worker>@<hop>"))?;
+            let (w, h) = rest
+                .split_once('@')
+                .with_context(|| format!("fault site '{site}' must look like w<worker>@<hop>"))?;
+            let worker: usize =
+                w.trim().parse().with_context(|| format!("bad worker index '{w}'"))?;
+            let hop: usize = h.trim().parse().with_context(|| format!("bad hop index '{h}'"))?;
+            let action = match action.as_str() {
+                "kill" => FaultAction::Kill,
+                "drop" => FaultAction::Drop,
+                "delay" => FaultAction::Delay(parse_duration(
+                    param.with_context(|| format!("delay entry '{entry}' needs a duration"))?,
+                )?),
+                "corrupt" => FaultAction::Corrupt,
+                "dup" | "duplicate" => FaultAction::Duplicate,
+                other => bail!("unknown fault action '{other}' (want kill|drop|delay|corrupt|dup)"),
+            };
+            events.push(FaultEvent { worker, hop, action });
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// True when no events are scripted.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The (hop, action) script for one worker's send side.
+    fn for_worker(&self, worker: usize) -> Vec<(usize, FaultAction)> {
+        self.events
+            .iter()
+            .filter(|e| e.worker == worker)
+            .map(|e| (e.hop, e.action.clone()))
+            .collect()
+    }
+}
+
+/// Chaos wrapper over any [`RingTransport`]: connects the inner ring,
+/// then interposes on each worker's send side to apply its scripted
+/// [`FaultPlan`] actions. With an empty plan every send passes through
+/// untouched (frames stay byte-identical).
+pub struct ChaosTransport<'a> {
+    inner: &'a dyn RingTransport,
+    plan: FaultPlan,
+}
+
+impl<'a> ChaosTransport<'a> {
+    /// Wrap `inner` with the scripted `plan`.
+    pub fn new(inner: &'a dyn RingTransport, plan: FaultPlan) -> Self {
+        ChaosTransport { inner, plan }
+    }
+}
+
+impl RingTransport for ChaosTransport<'_> {
+    fn connect(&self, k: usize) -> Result<Vec<RingLink>> {
+        let links = self.inner.connect(k)?;
+        Ok(links
+            .into_iter()
+            .enumerate()
+            .map(|(i, link)| RingLink {
+                tx: Box::new(ChaosTx {
+                    inner: link.tx,
+                    worker: i,
+                    hop: 0,
+                    script: self.plan.for_worker(i),
+                }),
+                rx: link.rx,
+            })
+            .collect())
+    }
+}
+
+struct ChaosTx {
+    inner: Box<dyn RingTx>,
+    worker: usize,
+    /// Model sends completed so far (hop counter; `Stop` doesn't count).
+    hop: usize,
+    script: Vec<(usize, FaultAction)>,
+}
+
+impl RingTx for ChaosTx {
+    fn send(&mut self, msg: RingMessage) -> Result<f64, RingFault> {
+        if matches!(msg, RingMessage::Stop) {
+            return self.inner.send(msg);
+        }
+        let hop = self.hop;
+        self.hop += 1;
+        let actions: Vec<FaultAction> =
+            self.script.iter().filter(|(h, _)| *h == hop).map(|(_, a)| a.clone()).collect();
+        if actions.iter().any(|a| *a == FaultAction::Kill) {
+            panic!("fault-plan kill: worker {} at hop {hop}", self.worker);
+        }
+        for a in &actions {
+            if let FaultAction::Delay(d) = a {
+                std::thread::sleep(*d);
+            }
+        }
+        if actions.iter().any(|a| *a == FaultAction::Drop) {
+            return Ok(0.0);
+        }
+        let duplicate = actions.iter().any(|a| *a == FaultAction::Duplicate);
+        if duplicate {
+            self.inner.send(msg.clone())?;
+        }
+        if actions.iter().any(|a| *a == FaultAction::Corrupt) {
+            return self.inner.send_corrupt(msg);
+        }
+        self.inner.send(msg)
+    }
+
+    fn send_corrupt(&mut self, msg: RingMessage) -> Result<f64, RingFault> {
+        self.inner.send_corrupt(msg)
+    }
+
+    fn answer_clock_sync(&mut self, now_ns: &mut dyn FnMut() -> u64) -> Result<()> {
+        self.inner.answer_clock_sync(now_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::ChannelTransport;
+    use crate::graph::Dag;
+
+    fn tiny_model(round: usize) -> RingMessage {
+        RingMessage::Model(super::super::transport::ModelMsg {
+            from: 0,
+            round,
+            score: -1.0,
+            dag: Dag::new(2),
+            token: Default::default(),
+            bundle: None,
+            obs: Vec::new(),
+        })
+    }
+
+    #[test]
+    fn fault_plan_grammar_round_trips() {
+        let plan = FaultPlan::parse("kill:w2@1, delay:w1@2:50ms, drop:w0@0, corrupt:w3@2, dup:w3@2")
+            .unwrap();
+        assert_eq!(plan.events.len(), 5);
+        assert_eq!(
+            plan.events[0],
+            FaultEvent { worker: 2, hop: 1, action: FaultAction::Kill }
+        );
+        assert_eq!(
+            plan.events[1],
+            FaultEvent { worker: 1, hop: 2, action: FaultAction::Delay(Duration::from_millis(50)) }
+        );
+        assert_eq!(plan.events[2].action, FaultAction::Drop);
+        assert_eq!(plan.events[3].action, FaultAction::Corrupt);
+        assert_eq!(plan.events[4].action, FaultAction::Duplicate);
+        // Alternate duration spellings.
+        let plan = FaultPlan::parse("delay:w0@0:2s").unwrap();
+        assert_eq!(plan.events[0].action, FaultAction::Delay(Duration::from_secs(2)));
+        let plan = FaultPlan::parse("delay:w0@0:75").unwrap();
+        assert_eq!(plan.events[0].action, FaultAction::Delay(Duration::from_millis(75)));
+        // Empty and blank specs are the empty plan.
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  , ").unwrap().is_empty());
+        // Garbage is rejected with the offending fragment named.
+        for bad in ["boom:w0@0", "kill", "kill:x0@0", "kill:w0", "delay:w0@0", "kill:w@0"] {
+            assert!(FaultPlan::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn chaos_drop_and_duplicate_shape_the_stream() {
+        // k=1 self-loop: the worker's tx feeds its own rx.
+        let plan = FaultPlan::parse("drop:w0@0,dup:w0@1").unwrap();
+        let chaos = ChaosTransport::new(&ChannelTransport, plan);
+        let mut links = chaos.connect(1).unwrap();
+        let RingLink { mut tx, mut rx } = links.pop().unwrap();
+        tx.send(tiny_model(0)).unwrap(); // dropped
+        tx.send(tiny_model(1)).unwrap(); // duplicated
+        tx.send(RingMessage::Stop).unwrap();
+        let (m1, _) = rx.recv().unwrap();
+        let (m2, _) = rx.recv().unwrap();
+        let (m3, _) = rx.recv().unwrap();
+        match (&m1, &m2) {
+            (RingMessage::Model(a), RingMessage::Model(b)) => {
+                assert_eq!(a.round, 1);
+                assert_eq!(b.round, 1);
+            }
+            _ => panic!("expected the duplicated round-1 model twice"),
+        }
+        assert!(matches!(m3, RingMessage::Stop));
+    }
+
+    #[test]
+    fn chaos_kill_panics_at_the_scripted_hop() {
+        let plan = FaultPlan::parse("kill:w0@1").unwrap();
+        let chaos = ChaosTransport::new(&ChannelTransport, plan);
+        let mut links = chaos.connect(1).unwrap();
+        let RingLink { mut tx, mut rx } = links.pop().unwrap();
+        tx.send(tiny_model(0)).unwrap(); // hop 0: clean
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = tx.send(tiny_model(1)); // hop 1: kill
+        }));
+        let payload = caught.expect_err("scripted kill must panic");
+        let msg = panic_message(payload.as_ref());
+        assert!(msg.contains("kill") && msg.contains("hop 1"), "{msg}");
+        let (m, _) = rx.recv().unwrap();
+        assert!(matches!(m, RingMessage::Model(_)));
+    }
+
+    #[test]
+    fn empty_plan_is_pass_through() {
+        let chaos = ChaosTransport::new(&ChannelTransport, FaultPlan::default());
+        let mut links = chaos.connect(1).unwrap();
+        let RingLink { mut tx, mut rx } = links.pop().unwrap();
+        tx.send(tiny_model(0)).unwrap();
+        tx.send(RingMessage::Stop).unwrap();
+        assert!(matches!(rx.recv().unwrap().0, RingMessage::Model(_)));
+        assert!(matches!(rx.recv().unwrap().0, RingMessage::Stop));
+    }
+
+    #[test]
+    fn fault_summary_any_and_snapshot() {
+        let stats = FaultStats::default();
+        assert!(!stats.snapshot().any());
+        stats.skips.fetch_add(2, Ordering::Relaxed);
+        stats.healed.fetch_add(1, Ordering::Relaxed);
+        let s = stats.snapshot();
+        assert!(s.any());
+        assert_eq!(s.skips, 2);
+        assert_eq!(s.healed, 1);
+    }
+
+    #[test]
+    fn panic_message_extracts_strs_and_strings() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("boom");
+        assert_eq!(panic_message(p.as_ref()), "boom");
+        let p: Box<dyn std::any::Any + Send> = Box::new(String::from("dynamic boom"));
+        assert_eq!(panic_message(p.as_ref()), "dynamic boom");
+        let p: Box<dyn std::any::Any + Send> = Box::new(42usize);
+        assert_eq!(panic_message(p.as_ref()), "worker panicked");
+    }
+}

@@ -3,10 +3,15 @@
 //! actor-style workers over a pluggable [`transport`] — plus run
 //! telemetry.
 
+pub mod fault;
 pub mod ring;
 pub mod telemetry;
 pub mod transport;
 
+pub use fault::{
+    ChaosTransport, FaultAction, FaultEvent, FaultPlan, FaultPolicy, FaultStats, FaultSummary,
+    RingFault,
+};
 pub use ring::{
     cges, insert_limit, run_ring, BundleEmit, PartitionSource, RingConfig, RingMode,
     RingObsHub, RingOutcome, RingResult, RingRunOptions, WorkerObsCtx,

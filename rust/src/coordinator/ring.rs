@@ -66,12 +66,18 @@
 //! Same capability contract as bundles: with the hub absent, frames
 //! stay byte-identical to the legacy format.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::coordinator::fault::{
+    panic_message, recv_with_policy, ChaosTransport, FaultPlan, FaultPolicy, FaultStats,
+    FaultSummary, RingFault,
+};
 use crate::coordinator::telemetry::{RoundRecord, Telemetry};
 use crate::coordinator::transport::{
     ChannelTransport, ModelMsg, ObsPayload, RingLink, RingMessage, RingRx, RingToken,
@@ -182,6 +188,14 @@ pub struct RingConfig {
     /// tags) but never the learned result. Ignored in
     /// [`RingMode::Deterministic`], which has no ring messages.
     pub distributed_obs: bool,
+    /// Fault tolerance knobs (recv deadline, straggler skip, decode
+    /// retries, ring healing). The default is inert: fault-free runs
+    /// are byte/bit-identical with or without it.
+    pub fault_policy: FaultPolicy,
+    /// Scripted fault injection for the pipelined transports (the
+    /// `learn --fault-plan` debug flag). `None` or an empty plan is a
+    /// pure pass-through.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl Default for RingConfig {
@@ -202,6 +216,8 @@ impl Default for RingConfig {
             registry: None,
             tracer: obs::Tracer::disabled(),
             distributed_obs: false,
+            fault_policy: FaultPolicy::default(),
+            fault_plan: None,
         }
     }
 }
@@ -383,6 +399,17 @@ pub struct RingRunOptions {
     /// deterministic scheduler, whose barrier workers already share
     /// the coordinator's tracer directly.
     pub obs: Option<RingObsHub>,
+    /// Fault tolerance: per-round recv deadline (straggler skip),
+    /// decode retry budget, and ring healing on worker death. The
+    /// default is inert — fault-free runs behave identically with or
+    /// without it.
+    pub policy: FaultPolicy,
+    /// Scripted fault injection: wraps the pipelined transports in a
+    /// [`ChaosTransport`] applying the plan's actions at each worker's
+    /// numbered send hops. `None` (or an empty plan) leaves the
+    /// transport untouched. Ignored by the deterministic scheduler,
+    /// which has no transport.
+    pub plan: Option<FaultPlan>,
 }
 
 impl Default for RingRunOptions {
@@ -394,6 +421,8 @@ impl Default for RingRunOptions {
             ship_bundles: false,
             tracer: obs::Tracer::disabled(),
             obs: None,
+            policy: FaultPolicy::default(),
+            plan: None,
         }
     }
 }
@@ -416,6 +445,9 @@ pub struct RingOutcome {
     /// [`RingRunOptions::emit`] was set (absent if that worker's fit
     /// failed or emission was off).
     pub best_bundle: Option<Bundle>,
+    /// Fault events over the whole run (all zero in a clean run):
+    /// stragglers skipped, frames retried, workers healed around.
+    pub faults: FaultSummary,
 }
 
 /// Fit + calibrate one worker's current model into a shippable bundle
@@ -477,7 +509,8 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
     'rounds: for round in 0..opts.max_rounds {
         rounds = round + 1;
         let prev = models.clone();
-        let results: Vec<(Dag, RoundRecord, Option<Bundle>)> = std::thread::scope(|s| {
+        let joined: Vec<std::thread::Result<(Dag, RoundRecord, Option<Bundle>)>> =
+            std::thread::scope(|s| {
             let handles: Vec<_> = workers
                 .iter_mut()
                 .zip(own_best.iter_mut())
@@ -536,8 +569,24 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("ring worker panicked")).collect()
+            // Join without unwrapping: a worker panic is surfaced as a
+            // typed fault below instead of poisoning the coordinator.
+            handles.into_iter().map(|h| h.join()).collect()
         });
+        let mut results: Vec<(Dag, RoundRecord, Option<Bundle>)> = Vec::with_capacity(k);
+        for (i, res) in joined.into_iter().enumerate() {
+            match res {
+                Ok(r) => results.push(r),
+                Err(payload) => {
+                    let detail = panic_message(payload.as_ref());
+                    obs::log::error(format_args!(
+                        "ring worker {i} panicked in deterministic mode ({detail}); \
+                         the barrier scheduler cannot heal — failing the run"
+                    ));
+                    return Err(RingFault::WorkerPanicked { worker: i, detail }.into());
+                }
+            }
+        }
 
         // Convergence check (Algorithm 1, lines 11-16).
         let mut improved = false;
@@ -555,7 +604,10 @@ fn run_deterministic(mut workers: Vec<RingWorker>, opts: &RingRunOptions) -> Res
             break 'rounds;
         }
     }
-    Ok(RingOutcome { best_dag, best_score, rounds, models, records, best_bundle })
+    // The barrier scheduler has no transport and no healing: a clean
+    // run by construction (panics error out above).
+    let faults = FaultSummary::default();
+    Ok(RingOutcome { best_dag, best_score, rounds, models, records, best_bundle, faults })
 }
 
 /// What flows from the worker threads to the coordinator's fold.
@@ -567,6 +619,18 @@ enum RingEvent {
     /// worker at teardown. `holder` is the worker whose clock the
     /// payload's spans are on.
     Obs { holder: usize, payload: ObsPayload },
+    /// A worker's body panicked and was caught at the worker boundary.
+    /// Sent exactly once per worker, after all of its `Hop` events
+    /// (same mpsc sender, FIFO per sender), carrying the candidate
+    /// subset the coordinator may redistribute.
+    WorkerDead { worker: usize, mask: Option<Arc<EdgeMask>>, detail: String },
+}
+
+/// Coordinator → worker side-channel commands (polled between rounds).
+enum HealCmd {
+    /// Ring healing: union a dead worker's candidate-edge subset into
+    /// the receiver's own, so the dead worker's pairs stay covered.
+    Widen(Arc<EdgeMask>),
 }
 
 /// Actor runtime: one long-lived thread per worker, connected through
@@ -578,21 +642,50 @@ fn run_pipelined(
 ) -> Result<RingOutcome> {
     let k = workers.len();
     let n = workers[0].n();
+    // Scripted fault injection: interpose the chaos wrapper on each
+    // worker's send side. An absent or empty plan keeps the inner
+    // transport untouched (frames stay byte-identical).
+    let chaos;
+    let transport: &dyn RingTransport = match &opts.plan {
+        Some(plan) if !plan.is_empty() => {
+            chaos = ChaosTransport::new(transport, plan.clone());
+            &chaos
+        }
+        _ => transport,
+    };
     let links = transport.connect(k)?;
     let stop = AtomicBool::new(false);
+    let faults = FaultStats::default();
     let (events_tx, events_rx) = mpsc::channel::<RingEvent>();
+    // Healing side channels: the coordinator redistributes a dead
+    // worker's candidate subset to a live heir through its own queue.
+    let mut heal_txs: Vec<mpsc::Sender<HealCmd>> = Vec::with_capacity(k);
+    let mut heal_rxs: Vec<mpsc::Receiver<HealCmd>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (htx, hrx) = mpsc::channel::<HealCmd>();
+        heal_txs.push(htx);
+        heal_rxs.push(hrx);
+    }
     let opts = opts.clone();
 
-    std::thread::scope(|s| {
-        for (i, (worker, link)) in workers.into_iter().zip(links).enumerate() {
+    let outcome = std::thread::scope(|s| {
+        for (i, ((worker, link), heal_rx)) in
+            workers.into_iter().zip(links).zip(heal_rxs).enumerate()
+        {
             let events = events_tx.clone();
             let stop = &stop;
+            let faults = &faults;
             let wopts = opts.clone();
-            s.spawn(move || worker_loop(i, k, worker, link, events, stop, &wopts));
+            s.spawn(move || worker_loop(i, k, worker, link, events, stop, &wopts, heal_rx, faults));
         }
         drop(events_tx);
-        collect(k, n, opts.max_rounds, &stop, events_rx, opts.obs.as_ref())
-    })
+        collect(k, n, &opts, &stop, events_rx, &heal_txs, &faults)
+    });
+    // Snapshot after the scope joins every worker thread, so late
+    // teardown events (relay exits, link failures) are counted too.
+    let mut outcome = outcome?;
+    outcome.faults = faults.snapshot();
+    Ok(outcome)
 }
 
 /// Send `Stop` (unless the peer's already arrived) and drain the
@@ -716,7 +809,11 @@ fn flush_worker_obs(
 /// The actor body: receive, fuse, learn, send — plus token folding and
 /// shutdown. Errors from the transport mean the runtime is tearing
 /// down; the loop exits quietly and the coordinator already has every
-/// record that matters.
+/// record that matters. A panic inside the round loop is caught here —
+/// the worker boundary — reported as a [`RingEvent::WorkerDead`], and
+/// (with healing on) the thread lives on as a pass-through relay so
+/// the ring stays connected.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     i: usize,
     k: usize,
@@ -725,6 +822,8 @@ fn worker_loop(
     events: mpsc::Sender<RingEvent>,
     stop: &AtomicBool,
     opts: &RingRunOptions,
+    heal: mpsc::Receiver<HealCmd>,
+    faults: &FaultStats,
 ) {
     let RingLink { mut tx, mut rx } = link;
     let mut obs_state = opts.obs.as_ref().map(|hub| {
@@ -737,20 +836,83 @@ fn worker_loop(
         Some(st) => st.tracer.handle(i as u32),
         None => opts.tracer.handle(i as u32),
     };
-    run_worker_rounds(
-        i,
-        k,
-        worker,
-        tx.as_mut(),
-        rx.as_mut(),
-        &events,
-        stop,
-        opts,
-        &mut th,
-        obs_state.as_mut(),
-    );
+    // Stashed before the body can panic: the panic consumes the
+    // worker, but its candidate subset must survive the crash so the
+    // coordinator can redistribute it.
+    let mask = worker.mask();
+    let body = catch_unwind(AssertUnwindSafe(|| {
+        run_worker_rounds(
+            i,
+            k,
+            worker,
+            tx.as_mut(),
+            rx.as_mut(),
+            &events,
+            stop,
+            opts,
+            &mut th,
+            obs_state.as_mut(),
+            &heal,
+            faults,
+        )
+    }));
+    if let Err(payload) = body {
+        let detail = panic_message(payload.as_ref());
+        faults.deaths.fetch_add(1, Ordering::Relaxed);
+        obs::log::warn(format_args!("ring worker {i} died: {detail}"));
+        let _ = events.send(RingEvent::WorkerDead { worker: i, mask, detail });
+        if opts.policy.heal {
+            let off = obs_state.as_ref().map(|st| st.link_offset_ns).unwrap_or(0);
+            relay_loop(tx.as_mut(), rx.as_mut(), stop, off);
+        }
+    }
     if let Some(st) = obs_state.as_mut() {
         flush_worker_obs(i, st, &mut th, &events);
+    }
+}
+
+/// A healed worker's replacement body: a pure pass-through relay.
+/// Forwards every predecessor message to the successor — advancing
+/// token probes by one hop without folding any score, and rebasing
+/// relayed obs shipments by the link offset this worker measured — so
+/// the dataflow is exactly a ring re-linked around the dead worker,
+/// without re-dialing any transport. Polls the stop flag so shutdown
+/// completes even when both neighbors are idle.
+fn relay_loop(tx: &mut dyn RingTx, rx: &mut dyn RingRx, stop: &AtomicBool, link_offset_ns: i64) {
+    const RELAY_POLL: Duration = Duration::from_millis(25);
+    let mut sent_stop = false;
+    loop {
+        if stop.load(Ordering::Acquire) && !sent_stop {
+            sent_stop = true;
+            if tx.send(RingMessage::Stop).is_err() {
+                return;
+            }
+        }
+        match rx.recv_deadline(Some(RELAY_POLL), Duration::from_secs(30)) {
+            Ok((RingMessage::Stop, _)) => {
+                // Forward so the circuit completes (unless this relay
+                // already injected its own Stop), then exit.
+                if !sent_stop {
+                    let _ = tx.send(RingMessage::Stop);
+                }
+                return;
+            }
+            Ok((RingMessage::Model(mut m), _)) => {
+                for p in &mut m.token.probes {
+                    p.hops += 1; // a visited hop that folds no score
+                }
+                for payload in &mut m.obs {
+                    for s in &mut payload.spans {
+                        s.start_ns = s.start_ns.saturating_add_signed(link_offset_ns);
+                    }
+                }
+                if tx.send(RingMessage::Model(m)).is_err() {
+                    return;
+                }
+            }
+            Err(RingFault::Timeout { .. }) => {} // idle poll slice; re-check the stop flag
+            Err(_) => return,
+        }
     }
 }
 
@@ -768,6 +930,8 @@ fn run_worker_rounds(
     opts: &RingRunOptions,
     th: &mut obs::TraceHandle,
     mut obs_state: Option<&mut WorkerObsState>,
+    heal: &mpsc::Receiver<HealCmd>,
+    faults: &FaultStats,
 ) {
     let max_rounds = opts.max_rounds;
     // My score per round (what token probes fold in).
@@ -776,11 +940,25 @@ fn run_worker_rounds(
     let mut pending: Vec<RoundProbe> = Vec::new();
     // Ring head only: best score over completed (token-confirmed) rounds.
     let mut head_best = f64::NEG_INFINITY;
+    // Straggler bookkeeping: rounds skipped minus late messages since
+    // drained (the inbound backlog the catch-up drain may consume),
+    // and the last accepted (from, round) — the duplicate filter.
+    let mut lag = 0usize;
+    let mut last_seen: Option<(usize, usize)> = None;
 
     for round in 0..max_rounds {
         if stop.load(Ordering::Acquire) {
             stop_and_drain(tx, rx);
             return;
+        }
+        // Ring healing: adopt any candidate subset the coordinator
+        // redistributed from a dead worker.
+        while let Ok(HealCmd::Widen(extra)) = heal.try_recv() {
+            obs::log::warn(format_args!(
+                "ring worker {i}: adopted {} candidate pairs from a dead worker",
+                extra.len()
+            ));
+            worker.widen_mask(&extra);
         }
 
         let mut wait_secs = 0.0;
@@ -788,78 +966,169 @@ fn run_worker_rounds(
         let mut fusion_secs = 0.0;
         if round > 0 {
             let t_recv = th.start();
-            let (msg, timing) = match rx.recv() {
-                Ok(x) => x,
-                Err(_) => return, // predecessor gone: tear-down
-            };
-            wait_secs = timing.wait_secs;
-            codec_secs += timing.codec_secs;
-            if let Some(t0) = t_recv {
-                // Split the recv interval into the transport's own
-                // blocked-wait and decode measurements.
-                let wait_ns = obs::secs_to_ns(timing.wait_secs);
-                let round_arg = [("round", round as f64)];
-                th.add("wait", "ring", t0, wait_ns, &round_arg);
-                th.add(
-                    "codec",
-                    "ring",
-                    t0 + wait_ns,
-                    obs::secs_to_ns(timing.codec_secs),
-                    &round_arg,
-                );
-            }
-            match msg {
-                RingMessage::Stop => {
-                    // Forward once so the circuit completes, then exit:
-                    // the predecessor sends nothing after Stop.
-                    let _ = tx.send(RingMessage::Stop);
-                    return;
-                }
-                RingMessage::Model(mut m) => {
-                    if let Some(st) = obs_state.as_deref_mut() {
-                        // Rebase the shipment onto this worker's clock
-                        // and move it one hop closer to the head —
-                        // which hands it straight to the coordinator.
-                        for mut payload in std::mem::take(&mut m.obs) {
-                            for s in &mut payload.spans {
-                                s.start_ns = s.start_ns.saturating_add_signed(st.link_offset_ns);
+            // The freshest predecessor model this round — the one to
+            // fuse. Earlier messages drained from a recovered
+            // straggler's backlog still get their probes folded and
+            // their obs shipments relayed; only the model itself is
+            // superseded.
+            let mut fuse_dag: Option<Dag> = None;
+            let mut stop_seen = false;
+            let mut teardown = false;
+            // One mandatory receive, plus — after earlier skipped
+            // rounds — a non-blocking catch-up drain so the backlog
+            // shrinks instead of growing without bound.
+            let mut extra_budget = lag;
+            loop {
+                let result = if fuse_dag.is_none() {
+                    recv_with_policy(rx, &opts.policy, faults, i)
+                } else if extra_budget > 0 {
+                    rx.recv_deadline(Some(Duration::ZERO), opts.policy.stall_timeout)
+                } else {
+                    break;
+                };
+                match result {
+                    Ok((msg, timing)) => {
+                        wait_secs += timing.wait_secs;
+                        codec_secs += timing.codec_secs;
+                        match msg {
+                            RingMessage::Stop => {
+                                stop_seen = true;
+                                break;
                             }
-                            if i == 0 {
-                                let _ = events.send(RingEvent::Obs { holder: 0, payload });
-                            } else {
-                                st.relay.push(payload);
-                            }
-                        }
-                    }
-                    if i == 0 {
-                        // Probes have completed the circuit: apply the
-                        // paper's convergence rule in round order.
-                        for p in &m.token.probes {
-                            debug_assert_eq!(p.hops, k, "probe returned early");
-                            if p.best > head_best {
-                                head_best = p.best;
-                            } else {
-                                stop_and_drain(tx, rx);
-                                return;
-                            }
-                        }
-                    } else {
-                        for p in &mut m.token.probes {
-                            if let Some(&s) = history.get(p.round) {
-                                if s > p.best {
-                                    p.best = s;
+                            RingMessage::Model(mut m) => {
+                                if last_seen == Some((m.from, m.round)) {
+                                    // A duplicated frame (chaos `dup`):
+                                    // this hop is already folded in.
+                                    faults.duplicates.fetch_add(1, Ordering::Relaxed);
+                                    obs::log::warn(format_args!(
+                                        "ring worker {i}: discarded duplicate frame \
+                                         (worker {} round {})",
+                                        m.from, m.round
+                                    ));
+                                    continue;
                                 }
+                                last_seen = Some((m.from, m.round));
+                                if fuse_dag.is_some() {
+                                    extra_budget -= 1;
+                                    lag -= 1;
+                                }
+                                if let Some(st) = obs_state.as_deref_mut() {
+                                    // Rebase the shipment onto this
+                                    // worker's clock and move it one hop
+                                    // closer to the head — which hands it
+                                    // straight to the coordinator.
+                                    for mut payload in std::mem::take(&mut m.obs) {
+                                        for s in &mut payload.spans {
+                                            s.start_ns = s
+                                                .start_ns
+                                                .saturating_add_signed(st.link_offset_ns);
+                                        }
+                                        if i == 0 {
+                                            let _ =
+                                                events.send(RingEvent::Obs { holder: 0, payload });
+                                        } else {
+                                            st.relay.push(payload);
+                                        }
+                                    }
+                                }
+                                if i == 0 {
+                                    // Probes have completed the circuit:
+                                    // apply the paper's convergence rule
+                                    // in round order.
+                                    for p in &m.token.probes {
+                                        debug_assert_eq!(p.hops, k, "probe returned early");
+                                        if p.best > head_best {
+                                            head_best = p.best;
+                                        } else {
+                                            stop_and_drain(tx, rx);
+                                            return;
+                                        }
+                                    }
+                                } else {
+                                    for p in &mut m.token.probes {
+                                        if let Some(&s) = history.get(p.round) {
+                                            if s > p.best {
+                                                p.best = s;
+                                            }
+                                        }
+                                        p.hops += 1;
+                                    }
+                                    pending.append(&mut m.token.probes);
+                                }
+                                fuse_dag = Some(m.dag);
                             }
-                            p.hops += 1;
                         }
-                        pending = std::mem::take(&mut m.token.probes);
                     }
-                    let t_f = th.start();
-                    let ft = Timer::start();
-                    worker.absorb_fused(&m.dag);
-                    fusion_secs = ft.secs();
-                    th.end_args(t_f, "fuse", "ring", &[("round", round as f64)]);
+                    Err(RingFault::Timeout { after }) => {
+                        if fuse_dag.is_none() {
+                            // Straggler policy: the bounded per-round
+                            // wait expired — skip the predecessor's
+                            // contribution and step on our own model.
+                            faults.timeouts.fetch_add(1, Ordering::Relaxed);
+                            faults.skips.fetch_add(1, Ordering::Relaxed);
+                            lag += 1;
+                            wait_secs += after.as_secs_f64();
+                            obs::log::warn(format_args!(
+                                "ring worker {i}: predecessor missed the round-{round} \
+                                 deadline ({:.0}ms); skipping its model this round",
+                                after.as_secs_f64() * 1e3
+                            ));
+                            if let Some(t0) = t_recv {
+                                th.add(
+                                    "skip",
+                                    "ring",
+                                    t0,
+                                    obs::secs_to_ns(after.as_secs_f64()),
+                                    &[("round", round as f64)],
+                                );
+                            }
+                        }
+                        break; // (a drain timeout just means: backlog empty)
+                    }
+                    Err(fault) => {
+                        // Peer gone (or a decode fault past the retry
+                        // budget): the inbound link is unusable. Quiet
+                        // when the run is already stopping — that is
+                        // the normal teardown race, not a fault.
+                        if !stop.load(Ordering::Acquire) {
+                            if matches!(fault, RingFault::PeerGone { .. }) {
+                                faults.peer_gone.fetch_add(1, Ordering::Relaxed);
+                            }
+                            obs::log::warn(format_args!(
+                                "ring worker {i}: inbound link failed ({fault}); \
+                                 leaving the ring"
+                            ));
+                        }
+                        teardown = true;
+                        break;
+                    }
                 }
+            }
+            if fuse_dag.is_some() || stop_seen {
+                if let Some(t0) = t_recv {
+                    // Split the recv interval into the transport's own
+                    // blocked-wait and decode measurements.
+                    let wait_ns = obs::secs_to_ns(wait_secs);
+                    let round_arg = [("round", round as f64)];
+                    th.add("wait", "ring", t0, wait_ns, &round_arg);
+                    th.add("codec", "ring", t0 + wait_ns, obs::secs_to_ns(codec_secs), &round_arg);
+                }
+            }
+            if stop_seen {
+                // Forward once so the circuit completes, then exit:
+                // the predecessor sends nothing after Stop.
+                let _ = tx.send(RingMessage::Stop);
+                return;
+            }
+            if teardown {
+                return;
+            }
+            if let Some(dag) = &fuse_dag {
+                let t_f = th.start();
+                let ft = Timer::start();
+                worker.absorb_fused(dag);
+                fusion_secs = ft.secs();
+                th.end_args(t_f, "fuse", "ring", &[("round", round as f64)]);
             }
         }
 
@@ -944,7 +1213,17 @@ fn run_worker_rounds(
             let t_s = th.start();
             match tx.send(msg) {
                 Ok(secs) => codec_secs += secs,
-                Err(_) => peer_gone = true, // successor gone: tear-down
+                Err(fault) => {
+                    // Successor gone: tear down — quietly when the run
+                    // is already stopping (the normal shutdown race).
+                    if !stop.load(Ordering::Acquire) {
+                        faults.peer_gone.fetch_add(1, Ordering::Relaxed);
+                        obs::log::warn(format_args!(
+                            "ring worker {i}: outbound link failed ({fault}); leaving the ring"
+                        ));
+                    }
+                    peer_gone = true;
+                }
             }
             th.end_args(t_s, "send", "ring", &[("round", round as f64)]);
         }
@@ -989,16 +1268,26 @@ fn run_worker_rounds(
 /// convergence rule as soon as a round completes, raise the stop flag,
 /// and keep the best model — the same strict-improvement scan, in the
 /// same (round, worker) order, as the deterministic scheduler.
+///
+/// Fault tolerance: a [`RingEvent::WorkerDead`] marks its worker's
+/// future round slots as satisfied (the ring runs on with k−1
+/// contributors), redistributes the dead worker's candidate subset to
+/// the next live worker, and logs the healing exactly once per death.
+/// With [`FaultPolicy::heal`] off, the first death fails the run with
+/// a typed [`RingFault::WorkerPanicked`] after the stream drains.
 fn collect(
     k: usize,
     n: usize,
-    max_rounds: usize,
+    opts: &RingRunOptions,
     stop: &AtomicBool,
     events: mpsc::Receiver<RingEvent>,
-    obs: Option<&RingObsHub>,
+    heal_txs: &[mpsc::Sender<HealCmd>],
+    faults: &FaultStats,
 ) -> Result<RingOutcome> {
     use std::collections::BTreeMap;
 
+    let max_rounds = opts.max_rounds;
+    let obs = opts.obs.as_ref();
     let mut buffer: BTreeMap<usize, Vec<Option<(RoundRecord, Dag, Option<Bundle>)>>> =
         BTreeMap::new();
     let mut records: Vec<RoundRecord> = Vec::new();
@@ -1009,26 +1298,82 @@ fn collect(
     let mut models: Vec<Dag> = vec![Dag::new(n); k];
     let mut rounds = 0usize;
     let mut decided = false;
+    let mut dead: Vec<bool> = vec![false; k];
+    let mut first_death: Option<(usize, String)> = None;
 
     while let Ok(event) = events.recv() {
-        let (rec, dag, bundle) = match event {
-            RingEvent::Hop(rec, dag, bundle) => (rec, dag, bundle),
+        match event {
             RingEvent::Obs { holder, payload } => {
                 if let Some(hub) = obs {
                     hub.absorb(holder, &payload);
                 }
                 continue;
             }
-        };
-        records.push(rec.clone());
-        let slots =
-            buffer.entry(rec.round).or_insert_with(|| (0..k).map(|_| None).collect());
-        slots[rec.worker] = Some((rec, dag, bundle));
+            RingEvent::WorkerDead { worker, mask, detail } => {
+                if dead[worker] {
+                    continue; // defensive: one death event per worker
+                }
+                dead[worker] = true;
+                if first_death.is_none() {
+                    first_death = Some((worker, detail.clone()));
+                }
+                if opts.policy.heal {
+                    faults.healed.fetch_add(1, Ordering::Relaxed);
+                    // The dead worker's own thread relays messages past
+                    // it (predecessor re-linked to successor); here we
+                    // redistribute its candidate subset to the next
+                    // live worker so its pairs stay covered.
+                    let heir = (1..k).map(|d| (worker + d) % k).find(|&j| !dead[j]);
+                    match (heir, mask) {
+                        (Some(j), Some(m)) => {
+                            let pairs = m.len();
+                            let _ = heal_txs[j].send(HealCmd::Widen(m));
+                            obs::log::warn(format_args!(
+                                "ring healed: worker {worker} died ({detail}); re-linked \
+                                 its neighbors and redistributed {pairs} candidate pairs \
+                                 to worker {j}"
+                            ));
+                        }
+                        (Some(j), None) => {
+                            obs::log::warn(format_args!(
+                                "ring healed: worker {worker} died ({detail}); re-linked \
+                                 its neighbors (worker {j} is unrestricted — nothing to \
+                                 redistribute)"
+                            ));
+                        }
+                        (None, _) => {
+                            obs::log::warn(format_args!(
+                                "ring worker {worker} died ({detail}); no live workers \
+                                 remain to heal around"
+                            ));
+                        }
+                    }
+                } else {
+                    obs::log::error(format_args!(
+                        "ring worker {worker} died ({detail}); healing is disabled — \
+                         failing the run"
+                    ));
+                    stop.store(true, Ordering::Release);
+                }
+                // Fall through: rounds the dead worker will never
+                // report may be complete now.
+            }
+            RingEvent::Hop(rec, dag, bundle) => {
+                records.push(rec.clone());
+                let slots =
+                    buffer.entry(rec.round).or_insert_with(|| (0..k).map(|_| None).collect());
+                slots[rec.worker] = Some((rec, dag, bundle));
+            }
+        }
 
         while !decided {
+            // A round is complete when every live worker reported it; a
+            // dead worker's slot is vacuously satisfied (its hops all
+            // precede its death event on the same FIFO sender, so a
+            // slot still empty here can never fill).
             let complete = buffer
                 .get(&next_round)
-                .map(|s| s.iter().all(|x| x.is_some()))
+                .map(|s| s.iter().enumerate().all(|(w, x)| x.is_some() || dead[w]))
                 .unwrap_or(false);
             if !complete {
                 break;
@@ -1036,18 +1381,17 @@ fn collect(
             let slots = buffer.remove(&next_round).expect("checked above");
             rounds = next_round + 1;
             let mut improved = false;
-            let mut new_models = Vec::with_capacity(k);
-            for entry in slots {
-                let (rec, dag, bundle) = entry.expect("complete round");
+            for (w, entry) in slots.into_iter().enumerate() {
+                // A dead worker's missing slot keeps its last model.
+                let Some((rec, dag, bundle)) = entry else { continue };
                 if rec.score > best_score {
                     best_score = rec.score;
                     best_dag = dag.clone();
                     best_bundle = bundle;
                     improved = true;
                 }
-                new_models.push(dag);
+                models[w] = dag;
             }
-            models = new_models;
             next_round += 1;
             if !improved || rounds == max_rounds {
                 decided = true;
@@ -1055,8 +1399,16 @@ fn collect(
             }
         }
     }
+    if let Some((worker, detail)) = first_death {
+        if !opts.policy.heal {
+            return Err(RingFault::WorkerPanicked { worker, detail }.into());
+        }
+    }
     records.sort_by_key(|r| (r.round, r.worker));
-    Ok(RingOutcome { best_dag, best_score, rounds, models, records, best_bundle })
+    // `faults` is re-snapshotted by `run_pipelined` after every worker
+    // thread joins; this interim copy keeps the struct total.
+    let faults = faults.snapshot();
+    Ok(RingOutcome { best_dag, best_score, rounds, models, records, best_bundle, faults })
 }
 
 /// Run cGES on a dataset.
@@ -1139,6 +1491,8 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
             mode: cfg.mode,
             tracer: cfg.tracer.clone(),
             obs: obs_hub,
+            policy: cfg.fault_policy,
+            plan: cfg.fault_plan.clone(),
             ..Default::default()
         },
     )?;
@@ -1147,6 +1501,7 @@ pub fn cges(data: Arc<Dataset>, cfg: &RingConfig) -> Result<RingResult> {
     telemetry.records = outcome.records;
     telemetry.transport = cfg.mode.name().into();
     telemetry.converged_rounds = outcome.rounds;
+    telemetry.faults = outcome.faults;
 
     // ---- Stage 3: fine tuning --------------------------------------
     let t_stage = th.start();
@@ -1436,6 +1791,47 @@ mod tests {
             assert!(!json.is_empty(), "{}: no merged spans", mode.name());
             crate::infer::json::Json::parse(&json).expect("merged trace parses");
         }
+    }
+
+    #[test]
+    fn ring_heals_and_logs_exactly_once_per_dead_worker() {
+        // A scripted kill at worker 1's second send: the panic is
+        // caught at the worker boundary, the ring re-links around the
+        // dead worker (its thread relays), and the run completes on
+        // k−1 contributors. The healing warn fires exactly once.
+        let (_bn, data) = workload(16, 22, 17);
+        let scorer = BdeuScorer::new(data, 10.0);
+        let workers: Vec<RingWorker> = (0..3)
+            .map(|_| {
+                RingWorker::new(scorer.clone(), GesConfig { threads: 2, ..Default::default() })
+            })
+            .collect();
+        obs::log::capture_start();
+        let out = run_ring(
+            workers,
+            &RingRunOptions {
+                max_rounds: 6,
+                mode: RingMode::Channel,
+                policy: FaultPolicy {
+                    recv_timeout: Some(Duration::from_secs(5)),
+                    ..Default::default()
+                },
+                plan: Some(FaultPlan::parse("kill:w1@1").unwrap()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let lines = obs::log::capture_take();
+        let heals = lines.iter().filter(|l| l.contains("ring healed: worker 1")).count();
+        assert_eq!(heals, 1, "healing must log exactly once per dead worker: {lines:#?}");
+        assert_eq!(out.faults.deaths, 1);
+        assert_eq!(out.faults.healed, 1);
+        assert!(out.best_score.is_finite());
+        assert!(out.rounds >= 1);
+        // The healed run still returns a usable structure with records
+        // from every worker that lived.
+        assert!(out.records.iter().any(|r| r.worker == 0));
+        assert!(out.records.iter().any(|r| r.worker == 2));
     }
 
     // Cross-mode result equality (deterministic vs channel vs tcp) is

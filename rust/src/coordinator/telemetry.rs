@@ -12,6 +12,7 @@
 use std::io::Write;
 use std::path::Path;
 
+use crate::coordinator::fault::FaultSummary;
 use crate::obs;
 use crate::obs::trace::{spans_to_chrome_json, SpanRec};
 
@@ -83,6 +84,9 @@ pub struct Telemetry {
     /// backward (0 when fine tuning is off).
     pub fes_evaluations: u64,
     pub bes_evaluations: u64,
+    /// Fault events over the learning stage (all zero in a clean run):
+    /// straggler skips, frame retries, healed worker deaths.
+    pub faults: FaultSummary,
 }
 
 impl Telemetry {
@@ -155,6 +159,16 @@ impl Telemetry {
         reg.gauge("ring.fine_tune_secs").set(self.fine_tune_secs);
         reg.counter("ges.fes_evaluations").add(self.fes_evaluations);
         reg.counter("ges.bes_evaluations").add(self.bes_evaluations);
+        // Fault taxonomy: always exported (zeros included), so a clean
+        // run's series pin "no faults" rather than being absent.
+        reg.counter("ring.faults.timeouts").add(self.faults.timeouts);
+        reg.counter("ring.faults.skips").add(self.faults.skips);
+        reg.counter("ring.faults.retries").add(self.faults.retries);
+        reg.counter("ring.faults.decode").add(self.faults.decode);
+        reg.counter("ring.faults.duplicates").add(self.faults.duplicates);
+        reg.counter("ring.faults.peer_gone").add(self.faults.peer_gone);
+        reg.counter("ring.faults.deaths").add(self.faults.deaths);
+        reg.counter("ring.faults.healed").add(self.faults.healed);
     }
 
     /// The run as trace spans: one lane per worker, each hop rendered
@@ -243,7 +257,7 @@ impl Telemetry {
         }
         writeln!(
             f,
-            "#summary\ttransport={}\tcounted_rounds={}\tpartition={:.3}s ({})\tlearning={:.3}s\tfine_tune={:.3}s\tcache_hits={}\tcache_misses={}\tcounts=popcount:{}/blocked:{}/dense:{}/sparse:{}/derived:{}\ttables={}h/{}m\tevals=fes:{}/bes:{}",
+            "#summary\ttransport={}\tcounted_rounds={}\tpartition={:.3}s ({})\tlearning={:.3}s\tfine_tune={:.3}s\tcache_hits={}\tcache_misses={}\tcounts=popcount:{}/blocked:{}/dense:{}/sparse:{}/derived:{}\ttables={}h/{}m\tevals=fes:{}/bes:{}\tfaults=skips:{}/retries:{}/deaths:{}/healed:{}",
             if self.transport.is_empty() { "-" } else { &self.transport },
             self.converged_rounds,
             self.partition_secs,
@@ -260,7 +274,11 @@ impl Telemetry {
             self.table_hits,
             self.table_misses,
             self.fes_evaluations,
-            self.bes_evaluations
+            self.bes_evaluations,
+            self.faults.skips,
+            self.faults.retries,
+            self.faults.deaths,
+            self.faults.healed
         )?;
         Ok(())
     }
@@ -332,6 +350,7 @@ mod tests {
         assert!(text.contains("transport=channel"));
         assert!(text.contains("counts=popcount:"));
         assert!(text.contains("evals=fes:"));
+        assert!(text.contains("faults=skips:0/retries:0/deaths:0/healed:0"));
         // header + 2 records + 2 worker lines + summary
         assert_eq!(text.lines().count(), 6);
         std::fs::remove_file(&tmp).ok();
@@ -370,11 +389,15 @@ mod tests {
             partition_secs: 0.5,
             fes_evaluations: 12,
             bes_evaluations: 3,
+            faults: FaultSummary { skips: 2, healed: 1, ..Default::default() },
             ..Default::default()
         };
         let reg = crate::obs::Registry::new();
         t.export_metrics(&reg);
         assert_eq!(reg.counter_value("ring.hops"), Some(2));
+        assert_eq!(reg.counter_value("ring.faults.skips"), Some(2));
+        assert_eq!(reg.counter_value("ring.faults.healed"), Some(1));
+        assert_eq!(reg.counter_value("ring.faults.deaths"), Some(0));
         assert_eq!(reg.counter_value("ring.converged_rounds"), Some(1));
         assert_eq!(reg.counter_value("ges.fes_evaluations"), Some(12));
         assert_eq!(reg.counter_value("ges.bes_evaluations"), Some(3));

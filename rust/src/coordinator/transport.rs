@@ -47,11 +47,12 @@
 //! (blocked-wait, decode) seconds separately, feeding the per-hop
 //! worker timelines in [`telemetry`](crate::coordinator::telemetry).
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::graph::codec::{
     decode_dag, encode_dag, put_f64, put_str, put_u32, put_u64, take_f64, take_str, take_u32,
@@ -59,9 +60,12 @@ use crate::graph::codec::{
 };
 use crate::graph::Dag;
 use crate::model::{decode_bundle, encode_bundle, Bundle};
+use crate::obs::log;
 use crate::obs::sync::{answer_pings, measure_offset, ClockOffset, ReadWritePair, SYNC_ROUNDS};
 use crate::obs::{HistDelta, RegistryDelta, SpanRec};
-use crate::util::{ensure_frame_len, Timer};
+use crate::util::Timer;
+
+use super::fault::RingFault;
 
 /// One probe of the convergence token: the best BDeu score seen for
 /// `round` across the `hops` workers it has visited so far.
@@ -158,9 +162,25 @@ pub struct RecvTiming {
 /// Sending half of a ring link (worker i → worker (i+1) mod k).
 pub trait RingTx: Send {
     /// Send one message (by value — channels move it, wires encode
-    /// it); returns serialization seconds (0 for moves). An error
-    /// means the peer is gone — callers treat it as shutdown.
-    fn send(&mut self, msg: RingMessage) -> Result<f64>;
+    /// it); returns serialization seconds (0 for moves). Errors are
+    /// typed [`RingFault`]s — [`RingFault::PeerGone`] means the
+    /// successor closed the link, [`RingFault::Oversize`] that the
+    /// frame can't fit the wire cap.
+    fn send(&mut self, msg: RingMessage) -> Result<f64, RingFault>;
+
+    /// Fault-injection hook: send a deliberately mangled copy of
+    /// `msg`. Wire links flip payload bytes so the receiver sees a
+    /// framed-but-corrupt message ([`RingFault::Decode`]); in-process
+    /// links move values and have no bytes to flip, so the default
+    /// degrades to a drop (the closest observable effect: the frame
+    /// is lost either way).
+    fn send_corrupt(&mut self, msg: RingMessage) -> Result<f64, RingFault> {
+        let _ = msg;
+        log::warn(format_args!(
+            "ring chaos: corrupt injection degrades to a drop on an in-process link"
+        ));
+        Ok(0.0)
+    }
 
     /// Obs capability: answer the successor's clock-sync pings on this
     /// link's back-channel (wire links are full-duplex TCP), stamping
@@ -175,9 +195,27 @@ pub trait RingTx: Send {
 
 /// Receiving half of a ring link (worker (i−1) mod k → worker i).
 pub trait RingRx: Send {
-    /// Block for the next message. An error means the peer closed the
-    /// link without a `Stop` — callers treat it as shutdown.
-    fn recv(&mut self) -> Result<(RingMessage, RecvTiming)>;
+    /// Block for the next message. Errors are typed [`RingFault`]s:
+    /// [`RingFault::PeerGone`] when the peer closed the link without a
+    /// `Stop`, [`RingFault::Decode`] for a corrupt-but-framed payload
+    /// (the link stays synchronized; receiving again is safe).
+    fn recv(&mut self) -> Result<(RingMessage, RecvTiming), RingFault>;
+
+    /// Receive with a bounded wait. `deadline: None` is exactly
+    /// [`RingRx::recv`] (the default implementation). With
+    /// `Some(d)`, a frame whose first byte hasn't arrived within `d`
+    /// returns [`RingFault::Timeout`] with the link still framed; a
+    /// frame that *started* but stalls longer than `stall` returns
+    /// [`RingFault::PeerGone`] (a half-read frame can't be resynced).
+    fn recv_deadline(
+        &mut self,
+        deadline: Option<Duration>,
+        stall: Duration,
+    ) -> Result<(RingMessage, RecvTiming), RingFault> {
+        let _ = stall;
+        let _ = deadline;
+        self.recv()
+    }
 
     /// Obs capability: measure the predecessor's clock offset with a
     /// few NTP-style ping round-trips ([`crate::obs::sync`]), reading
@@ -226,20 +264,38 @@ struct ChannelRx {
 }
 
 impl RingTx for ChannelTx {
-    fn send(&mut self, msg: RingMessage) -> Result<f64> {
-        self.sender.send(msg).map_err(|_| anyhow!("ring successor hung up"))?;
+    fn send(&mut self, msg: RingMessage) -> Result<f64, RingFault> {
+        self.sender
+            .send(msg)
+            .map_err(|_| RingFault::PeerGone { detail: "ring successor hung up".into() })?;
         Ok(0.0)
     }
 }
 
 impl RingRx for ChannelRx {
-    fn recv(&mut self) -> Result<(RingMessage, RecvTiming)> {
+    fn recv(&mut self) -> Result<(RingMessage, RecvTiming), RingFault> {
         let t = Timer::start();
         let msg = self
             .receiver
             .recv()
-            .map_err(|_| anyhow!("ring predecessor hung up"))?;
+            .map_err(|_| RingFault::PeerGone { detail: "ring predecessor hung up".into() })?;
         Ok((msg, RecvTiming { wait_secs: t.secs(), codec_secs: 0.0 }))
+    }
+
+    fn recv_deadline(
+        &mut self,
+        deadline: Option<Duration>,
+        _stall: Duration,
+    ) -> Result<(RingMessage, RecvTiming), RingFault> {
+        let Some(d) = deadline else { return self.recv() };
+        let t = Timer::start();
+        match self.receiver.recv_timeout(d) {
+            Ok(msg) => Ok((msg, RecvTiming { wait_secs: t.secs(), codec_secs: 0.0 })),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(RingFault::Timeout { after: d }),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(RingFault::PeerGone { detail: "ring predecessor hung up".into() })
+            }
+        }
     }
 }
 
@@ -518,8 +574,29 @@ struct WireRx {
     stream: BufReader<TcpStream>,
 }
 
+impl WireTx {
+    /// Write the scratch buffer as one length-prefixed frame.
+    fn flush_scratch(&mut self) -> Result<(), RingFault> {
+        let len = u32::try_from(self.scratch.len()).map_err(|_| RingFault::Oversize {
+            len: self.scratch.len() as u64,
+            cap: MAX_FRAME_BYTES as u64,
+        })?;
+        if len > MAX_FRAME_BYTES {
+            return Err(RingFault::Oversize { len: len as u64, cap: MAX_FRAME_BYTES as u64 });
+        }
+        let gone = |what: &str| {
+            let what = what.to_string();
+            move |e: std::io::Error| RingFault::PeerGone { detail: format!("{what}: {e}") }
+        };
+        self.stream.write_all(&len.to_le_bytes()).map_err(gone("write frame length"))?;
+        self.stream.write_all(&self.scratch).map_err(gone("write frame payload"))?;
+        self.stream.flush().map_err(gone("flush frame"))?;
+        Ok(())
+    }
+}
+
 impl RingTx for WireTx {
-    fn send(&mut self, msg: RingMessage) -> Result<f64> {
+    fn send(&mut self, msg: RingMessage) -> Result<f64, RingFault> {
         // Only serialization counts as codec time; blocking in the
         // socket writes is communication, not encoding, and must not
         // masquerade as codec cost in the worker timelines.
@@ -563,11 +640,28 @@ impl RingTx for WireTx {
             }
         }
 
-        let len = u32::try_from(self.scratch.len()).context("frame too large for u32 prefix")?;
-        ensure_frame_len("outgoing", len, MAX_FRAME_BYTES)?;
-        self.stream.write_all(&len.to_le_bytes()).context("write frame length")?;
-        self.stream.write_all(&self.scratch).context("write frame payload")?;
-        self.stream.flush().context("flush frame")?;
+        self.flush_scratch()?;
+        Ok(codec_secs)
+    }
+
+    fn send_corrupt(&mut self, msg: RingMessage) -> Result<f64, RingFault> {
+        // Chaos-only path: encode, then mangle the payload while
+        // keeping the length prefix consistent with what is written —
+        // the receiver sees a well-framed but undecodable message and
+        // the link stays synchronized. Truncating the tail plus
+        // flipping a middle byte reliably trips the codec's validation
+        // (`message_codec_rejects_garbage` pins truncated frames as
+        // undecodable).
+        let t = Timer::start();
+        self.scratch.clear();
+        encode_message(&msg, &mut self.scratch);
+        let codec_secs = t.secs();
+        if self.scratch.len() > 4 {
+            let mid = self.scratch.len() / 2;
+            self.scratch[mid] ^= 0xFF;
+            self.scratch.truncate(self.scratch.len() - 3);
+        }
+        self.flush_scratch()?;
         Ok(codec_secs)
     }
 
@@ -580,22 +674,152 @@ impl RingTx for WireTx {
     }
 }
 
-impl RingRx for WireRx {
-    fn recv(&mut self) -> Result<(RingMessage, RecvTiming)> {
+/// Poll slice while a deadline-armed read waits for bytes.
+const WIRE_POLL: Duration = Duration::from_millis(20);
+
+impl WireRx {
+    /// Read one length-prefixed frame, blocking indefinitely.
+    fn read_frame_blocking(&mut self) -> Result<Vec<u8>, RingFault> {
+        let mut len_bytes = [0u8; 4];
+        self.stream
+            .read_exact(&mut len_bytes)
+            .map_err(|e| RingFault::PeerGone { detail: format!("read frame length: {e}") })?;
+        let len = u32::from_le_bytes(len_bytes);
+        if len > MAX_FRAME_BYTES {
+            return Err(RingFault::Oversize { len: len as u64, cap: MAX_FRAME_BYTES as u64 });
+        }
+        let mut payload = vec![0u8; len as usize];
+        self.stream
+            .read_exact(&mut payload)
+            .map_err(|e| RingFault::PeerGone { detail: format!("read frame payload: {e}") })?;
+        Ok(payload)
+    }
+
+    /// Read one frame under a first-byte `deadline` and a mid-frame
+    /// `stall` grace, polling the socket in short slices. A deadline
+    /// expiry with zero bytes consumed leaves the link framed
+    /// ([`RingFault::Timeout`]); a frame that started but stalls is
+    /// unrecoverable ([`RingFault::PeerGone`]).
+    fn read_frame_deadline(
+        &mut self,
+        deadline: Duration,
+        stall: Duration,
+    ) -> Result<Vec<u8>, RingFault> {
+        let start = Instant::now();
+        let poll = WIRE_POLL.min(deadline.max(Duration::from_millis(1)));
+        self.stream
+            .get_ref()
+            .set_read_timeout(Some(poll))
+            .map_err(|e| RingFault::PeerGone { detail: format!("arm read timeout: {e}") })?;
+        let out = self.read_frame_polled(start, deadline, stall);
+        // Restore the blocking socket for plain `recv` and clock sync.
+        let _ = self.stream.get_ref().set_read_timeout(None);
+        out
+    }
+
+    fn read_frame_polled(
+        &mut self,
+        start: Instant,
+        deadline: Duration,
+        stall: Duration,
+    ) -> Result<Vec<u8>, RingFault> {
+        let mut len_bytes = [0u8; 4];
+        let mut got = 0usize;
+        let mut frame_started: Option<Instant> = None;
+        while got < len_bytes.len() {
+            match self.stream.read(&mut len_bytes[got..]) {
+                Ok(0) => {
+                    return Err(RingFault::PeerGone {
+                        detail: "ring peer closed the link".into(),
+                    })
+                }
+                Ok(n) => {
+                    got += n;
+                    frame_started.get_or_insert_with(Instant::now);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    match frame_started {
+                        None if start.elapsed() >= deadline => {
+                            return Err(RingFault::Timeout { after: deadline })
+                        }
+                        Some(t0) if t0.elapsed() >= stall => {
+                            return Err(RingFault::PeerGone {
+                                detail: "ring peer stalled mid-frame".into(),
+                            })
+                        }
+                        _ => {}
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(RingFault::PeerGone { detail: format!("read frame length: {e}") })
+                }
+            }
+        }
+        let len = u32::from_le_bytes(len_bytes);
+        if len > MAX_FRAME_BYTES {
+            return Err(RingFault::Oversize { len: len as u64, cap: MAX_FRAME_BYTES as u64 });
+        }
+        let t0 = frame_started.unwrap_or_else(Instant::now);
+        let mut payload = vec![0u8; len as usize];
+        let mut got = 0usize;
+        while got < payload.len() {
+            match self.stream.read(&mut payload[got..]) {
+                Ok(0) => {
+                    return Err(RingFault::PeerGone {
+                        detail: "ring peer closed the link mid-frame".into(),
+                    })
+                }
+                Ok(n) => got += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    if t0.elapsed() >= stall {
+                        return Err(RingFault::PeerGone {
+                            detail: "ring peer stalled mid-frame".into(),
+                        });
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(RingFault::PeerGone { detail: format!("read frame payload: {e}") })
+                }
+            }
+        }
+        Ok(payload)
+    }
+
+    fn recv_inner(
+        &mut self,
+        deadline: Option<Duration>,
+        stall: Duration,
+    ) -> Result<(RingMessage, RecvTiming), RingFault> {
         // All socket I/O (length prefix *and* payload) is wait;
         // only the in-memory decode is codec.
         let t = Timer::start();
-        let mut len_bytes = [0u8; 4];
-        self.stream.read_exact(&mut len_bytes).context("read frame length")?;
-        let len = u32::from_le_bytes(len_bytes);
-        ensure_frame_len("incoming", len, MAX_FRAME_BYTES)?;
-        let mut payload = vec![0u8; len as usize];
-        self.stream.read_exact(&mut payload).context("read frame payload")?;
+        let payload = match deadline {
+            None => self.read_frame_blocking()?,
+            Some(d) => self.read_frame_deadline(d, stall)?,
+        };
         let wait_secs = t.secs();
 
         let t = Timer::start();
-        let msg = decode_message(&payload)?;
-        Ok((msg, RecvTiming { wait_secs, codec_secs: t.secs() }))
+        match decode_message(&payload) {
+            Ok(msg) => Ok((msg, RecvTiming { wait_secs, codec_secs: t.secs() })),
+            Err(e) => Err(RingFault::Decode { detail: format!("{e:#}") }),
+        }
+    }
+}
+
+impl RingRx for WireRx {
+    fn recv(&mut self) -> Result<(RingMessage, RecvTiming), RingFault> {
+        self.recv_inner(None, Duration::MAX)
+    }
+
+    fn recv_deadline(
+        &mut self,
+        deadline: Option<Duration>,
+        stall: Duration,
+    ) -> Result<(RingMessage, RecvTiming), RingFault> {
+        self.recv_inner(deadline, stall)
     }
 
     fn measure_clock_sync(
@@ -940,5 +1164,74 @@ mod tests {
             let (second, _) = rx.recv().unwrap();
             assert!(matches!(second, RingMessage::Stop));
         }
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_still_delivers() {
+        // Both transports: an expired deadline is a typed Timeout that
+        // leaves the link framed — the next message arrives intact.
+        for transport in
+            [&ChannelTransport as &dyn RingTransport, &WireTransport as &dyn RingTransport]
+        {
+            let mut links = transport.connect(1).unwrap();
+            let RingLink { mut tx, mut rx } = links.pop().unwrap();
+            let d = Duration::from_millis(60);
+            let err = rx.recv_deadline(Some(d), Duration::from_secs(5)).unwrap_err();
+            assert!(matches!(err, RingFault::Timeout { .. }), "{err}");
+            tx.send(model_msg()).unwrap();
+            let (msg, _) = rx
+                .recv_deadline(Some(Duration::from_secs(5)), Duration::from_secs(5))
+                .unwrap();
+            assert_msgs_equal(&msg, &model_msg());
+        }
+    }
+
+    #[test]
+    fn wire_corrupt_send_is_a_typed_decode_fault() {
+        // One directed wire link: a mangled frame surfaces as Decode
+        // (not PeerGone) and the link stays synchronized for the next
+        // clean frame.
+        let links = WireTransport.connect(2).unwrap();
+        let mut it = links.into_iter();
+        let mut w0 = it.next().unwrap();
+        let mut w1 = it.next().unwrap();
+        w0.tx.send_corrupt(model_msg()).unwrap();
+        w0.tx.send(model_msg()).unwrap();
+        let err = w1.rx.recv().unwrap_err();
+        assert!(matches!(err, RingFault::Decode { .. }), "{err}");
+        let (msg, _) = w1.rx.recv().unwrap();
+        assert_msgs_equal(&msg, &model_msg());
+    }
+
+    #[test]
+    fn wire_mid_frame_stall_is_peer_gone() {
+        // A frame that starts arriving but stalls past the grace is
+        // unrecoverable: the reader cannot resynchronize mid-frame.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut rx = WireRx { stream: BufReader::new(server) };
+        client.write_all(&[7u8, 0]).unwrap(); // 2 of 4 prefix bytes, then silence
+        client.flush().unwrap();
+        let err = rx
+            .recv_deadline(Some(Duration::from_millis(500)), Duration::from_millis(120))
+            .unwrap_err();
+        assert!(matches!(err, RingFault::PeerGone { .. }), "{err}");
+    }
+
+    #[test]
+    fn wire_oversize_prefix_is_a_typed_fault() {
+        // A corrupt length prefix above the cap is rejected before any
+        // allocation, as Oversize.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut rx = WireRx { stream: BufReader::new(server) };
+        client.write_all(&(MAX_FRAME_BYTES + 1).to_le_bytes()).unwrap();
+        client.flush().unwrap();
+        let err = rx.recv().unwrap_err();
+        assert!(matches!(err, RingFault::Oversize { .. }), "{err}");
     }
 }

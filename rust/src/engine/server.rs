@@ -31,7 +31,10 @@
 //! expect (the CLI defaults to the core count), not to request
 //! volume. Idle and even mid-frame-stalled connections stop blocking
 //! shutdown: every read path polls the shutdown latch on its idle
-//! timeout.
+//! timeout. With [`ServeConfig::idle_timeout`] set, a reaper closes
+//! connections that sit quiet between frames (counted in
+//! `serve.conns_reaped`) and fails reads that stall mid-frame, so a
+//! wedged client can never pin a handler thread for good.
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -68,6 +71,13 @@ pub struct ServeConfig {
     pub max_frame_bytes: u32,
     /// Max sub-queries per batch request.
     pub max_batch: usize,
+    /// Reap a connection idle longer than this between frames (and cap
+    /// how long a client may stall *mid*-frame before the read fails).
+    /// `None` keeps connections alive indefinitely — a quiet
+    /// persistent client holds its handler thread, so bounded pools
+    /// serving untrusted clients should set this. CLI
+    /// `--idle-timeout-ms`.
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +86,7 @@ impl Default for ServeConfig {
             threads: 1,
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
             max_batch: DEFAULT_MAX_BATCH,
+            idle_timeout: None,
         }
     }
 }
@@ -88,6 +99,7 @@ struct ServeMetrics {
     errors: obs::Counter,
     conns_accepted: obs::Counter,
     conns_failed: obs::Counter,
+    conns_reaped: obs::Counter,
     latency: obs::Hist,
     frame_bytes: obs::Hist,
     batch_depth: obs::Hist,
@@ -100,6 +112,7 @@ impl ServeMetrics {
             errors: reg.counter("serve.errors"),
             conns_accepted: reg.counter("serve.conns_accepted"),
             conns_failed: reg.counter("serve.conns_failed"),
+            conns_reaped: reg.counter("serve.conns_reaped"),
             latency: reg.hist("serve.latency_ns"),
             frame_bytes: reg.hist("serve.frame_bytes"),
             batch_depth: reg.hist("serve.batch_depth"),
@@ -460,10 +473,13 @@ impl Server {
     }
 
     /// Read one 4-byte length prefix. `Ok(None)` = clean EOF between
-    /// frames, or an idle connection observed after shutdown latched.
+    /// frames, an idle connection observed after shutdown latched, or
+    /// an idle connection past [`ServeConfig::idle_timeout`] (the
+    /// reaper: counted in `serve.conns_reaped`, closed quietly).
     fn read_len_prefix(&self, reader: &mut impl Read) -> Result<Option<u32>> {
         let mut buf = [0u8; 4];
         let mut got = 0usize;
+        let idle_since = std::time::Instant::now();
         while got < 4 {
             match reader.read(&mut buf[got..]) {
                 Ok(0) => {
@@ -488,6 +504,20 @@ impl Server {
                         }
                         bail!("shutdown while awaiting frame length");
                     }
+                    if let Some(cap) = self.cfg.idle_timeout {
+                        if idle_since.elapsed() >= cap {
+                            if got == 0 {
+                                // Between frames: the reaper. Frees the
+                                // handler thread for the next client.
+                                self.metrics.conns_reaped.inc();
+                                obs::log::warn(format_args!(
+                                    "reaped idle connection (> {cap:?} between frames)"
+                                ));
+                                return Ok(None);
+                            }
+                            bail!("client stalled inside frame length (> {cap:?})");
+                        }
+                    }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                 Err(e) => return Err(e).context("read frame length"),
@@ -498,15 +528,20 @@ impl Server {
 
     /// Finish filling `buf`, riding out read timeouts. Mid-frame we
     /// keep waiting (abandoning an in-flight frame would desync the
-    /// stream) — unless shutdown latches, which closes the connection
-    /// so a stalled client cannot pin its handler thread and block the
-    /// pool from draining.
+    /// stream) — unless shutdown latches, or the client makes no
+    /// progress for [`ServeConfig::idle_timeout`]; either way the
+    /// connection closes so a stalled client cannot pin its handler
+    /// thread and block the pool from draining.
     fn read_exact_patient(&self, reader: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
         let mut got = 0usize;
+        let mut last_progress = std::time::Instant::now();
         while got < buf.len() {
             match reader.read(&mut buf[got..]) {
                 Ok(0) => bail!("eof inside {what}"),
-                Ok(k) => got += k,
+                Ok(k) => {
+                    got += k;
+                    last_progress = std::time::Instant::now();
+                }
                 Err(e)
                     if matches!(
                         e.kind(),
@@ -515,6 +550,15 @@ impl Server {
                 {
                     if self.is_shutting_down() {
                         bail!("shutdown while awaiting {what}");
+                    }
+                    if let Some(cap) = self.cfg.idle_timeout {
+                        if last_progress.elapsed() >= cap {
+                            bail!(
+                                "client stalled inside {what} ({got}/{} bytes, > {cap:?} \
+                                 without progress)",
+                                buf.len()
+                            );
+                        }
                     }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
@@ -606,6 +650,39 @@ mod tests {
         let v = Json::parse(&s.handle(&mut scratch, r#"{"id": 3, "type": "stats"}"#)).unwrap();
         assert!(v.get("stats").and_then(Json::as_str).is_none());
         assert!(v.get("stats").and_then(|st| st.get("counters")).is_some());
+    }
+
+    #[test]
+    fn idle_connections_are_reaped() {
+        let s = server(ServeConfig {
+            idle_timeout: Some(Duration::from_millis(250)),
+            ..Default::default()
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            // One healthy round-trip first: the reaper must only fire
+            // on *idleness*, not on connections that are slow to start.
+            let req = br#"{"id":1}"#;
+            stream.write_all(&(req.len() as u32).to_le_bytes()).unwrap();
+            stream.write_all(req).unwrap();
+            let mut len = [0u8; 4];
+            stream.read_exact(&mut len).unwrap();
+            let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+            stream.read_exact(&mut body).unwrap();
+            // Then go quiet and hold the connection open: the server
+            // must close it (EOF here) rather than pin the handler.
+            let mut probe = [0u8; 1];
+            let n = stream.read(&mut probe).unwrap_or(0);
+            assert_eq!(n, 0, "server should close the idle connection");
+        });
+        // Returns only once the handler pool drains — i.e. once the
+        // idle connection was reaped.
+        s.serve_tcp(&listener, Some(1)).unwrap();
+        client.join().unwrap();
+        assert_eq!(s.registry().counter_value("serve.conns_reaped"), Some(1));
+        assert_eq!(s.registry().counter_value("serve.conns_failed"), Some(0));
     }
 
     #[test]

@@ -595,6 +595,33 @@ impl RingWorker {
         self.search.evaluations
     }
 
+    /// This worker's edge-subset restriction (`None` = unrestricted).
+    /// The ring runtime stashes it at spawn so a healed ring can hand
+    /// the subset to a surviving worker if this one dies.
+    pub fn mask(&self) -> Option<Arc<EdgeMask>> {
+        self.search.cfg.mask.clone()
+    }
+
+    /// Ring healing: adopt a dead worker's candidate pairs by widening
+    /// this worker's mask with `extra`, then mark the whole forward
+    /// frontier dirty so the newly-allowed pairs get evaluated. An
+    /// unrestricted worker (no mask) already covers every pair — no-op.
+    /// The backward phase is unmasked by design (deletes of existing
+    /// edges are always legal), so only the forward frontier re-seeds.
+    pub fn widen_mask(&mut self, extra: &EdgeMask) {
+        let merged = match self.search.cfg.mask.take() {
+            Some(own) => {
+                let mut m = (*own).clone();
+                m.merge(extra);
+                m
+            }
+            None => return,
+        };
+        self.search.cfg.mask = Some(Arc::new(merged));
+        let n = self.search.n();
+        self.search.dirty_fwd.extend(0..n);
+    }
+
     /// The scorer (and through it the dataset) this worker learns
     /// against — what the ring's bundle-emitting path fits CPTs with,
     /// so a federated worker parameterizes on its own shard.

@@ -61,6 +61,20 @@ impl EdgeMask {
         &self.rows[x]
     }
 
+    /// Union `other` into this mask (ring healing: the heir adopts a
+    /// dead worker's candidate pairs). Idempotent — pairs already
+    /// present are left alone, so the count stays exact.
+    pub fn merge(&mut self, other: &EdgeMask) {
+        debug_assert_eq!(self.n(), other.n());
+        for x in 0..self.rows.len() {
+            for y in other.rows[x].iter() {
+                if x < y {
+                    self.allow(x, y);
+                }
+            }
+        }
+    }
+
     /// Number of unordered pairs in the mask.
     pub fn len(&self) -> usize {
         self.count
@@ -85,6 +99,22 @@ mod tests {
         assert_eq!(m.len(), 1);
         m.allow(1, 0); // idempotent
         assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn merge_unions_pairs_idempotently() {
+        let mut a = EdgeMask::new(5);
+        a.allow(0, 1);
+        a.allow(2, 3);
+        let mut b = EdgeMask::new(5);
+        b.allow(2, 3); // overlap
+        b.allow(1, 4);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert!(a.allowed(0, 1) && a.allowed(2, 3) && a.allowed(4, 1));
+        // Merging again changes nothing.
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
     }
 
     #[test]

@@ -30,7 +30,9 @@ use cges::bn::{
     NetGenConfig,
 };
 use cges::cli::Args;
-use cges::coordinator::{cges as run_cges, PartitionSource, RingConfig, RingMode};
+use cges::coordinator::{
+    cges as run_cges, FaultPlan, FaultPolicy, PartitionSource, RingConfig, RingMode,
+};
 use cges::data::{read_csv, write_csv, Dataset};
 use cges::engine::protocol::DEFAULT_MAX_BATCH;
 use cges::engine::server::DEFAULT_MAX_FRAME_BYTES;
@@ -108,6 +110,19 @@ SUBCOMMANDS
              sync    = deterministic barrier scheduler
              --bundle writes the final model as a self-contained .bnb
              artifact (structure + fitted CPTs + calibrated potentials)
+             [--ring-timeout-ms MS]  straggler policy: bound the
+             per-round wait for the predecessor's model; past it the
+             round is skipped (worker steps on its own model) and the
+             skip lands in ring.faults.* / the #summary faults field.
+             Unset = block forever (legacy behavior). Worker dropouts
+             heal either way: the ring re-links around a dead worker
+             and redistributes its edge subset.
+             [--fault-plan SPEC]  scripted fault injection (debugging
+             the fault machinery; channel/tcp transports only). SPEC is
+             comma-separated <action>:w<worker>@<hop>[:<param>] events:
+             kill:w2@1 (panic worker 2 at its 2nd send), drop:w0@3,
+             delay:w1@2:250ms, corrupt:w3@1, dup:w0@2. Faults show up
+             in logs (CGES_LOG=warn), metrics and the trace
   eval       --learned learned.dag|.bif|.bnb --truth net.bif --data data.csv [--ess 10]
   fit        --structure learned.dag|.bif|.bnb --data data.csv --out fitted.bnb
              [--ess 1] [--budget 4194304]
@@ -119,7 +134,7 @@ SUBCOMMANDS
              [--budget 4194304]   (budget = max clique state space for exact)
   serve      --model fitted.bnb|.bif [--listen 127.0.0.1:7878] [--threads N]
              [--method auto|jointree|lw] [--samples 20000] [--seed 1] [--budget N]
-             [--batch 256] [--max-frame-bytes 1048576]
+             [--batch 256] [--max-frame-bytes 1048576] [--idle-timeout-ms MS]
              [--trace trace.json] [--metrics metrics.json|metrics.prom]
              {\"type\":\"stats\"} answers a live metrics snapshot (request
              latency/frame-size/batch-depth histograms + counters);
@@ -129,7 +144,10 @@ SUBCOMMANDS
              --metrics write span + metrics files on shutdown (a .prom
              metrics path selects exposition text) and start the /proc
              self-sampler gauges.
-             CGES_LOG=error|info|debug filters server-side logging
+             --idle-timeout-ms reaps connections idle between frames
+             (counted in serve.conns_reaped) and fails reads stalled
+             mid-frame, so quiet clients cannot pin handler threads
+             CGES_LOG=error|warn|info|debug filters server-side logging
              a .bnb bundle with calibrated potentials warm-starts every
              handler thread (zero cold collect sweeps)
              stdin mode (default): one JSON query per line, one JSON answer per line
@@ -256,6 +274,8 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
             "max-rounds",
             "max-parents",
             "transport",
+            "ring-timeout-ms",
+            "fault-plan",
         ],
         &["obs-wire"],
     )?;
@@ -293,6 +313,22 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
                 Some(name) => RingMode::parse(name)
                     .ok_or_else(|| anyhow::anyhow!("--transport: unknown mode '{name}' (channel|tcp|sync)"))?,
             };
+            // Fault tolerance: --ring-timeout-ms arms the straggler
+            // policy; --fault-plan scripts chaos (debug/testing only).
+            let fault_policy = FaultPolicy {
+                recv_timeout: a
+                    .get("ring-timeout-ms")
+                    .map(|v| v.parse::<u64>())
+                    .transpose()
+                    .context("--ring-timeout-ms")?
+                    .map(std::time::Duration::from_millis),
+                ..Default::default()
+            };
+            let fault_plan = a
+                .get("fault-plan")
+                .map(FaultPlan::parse)
+                .transpose()
+                .context("--fault-plan")?;
             let cfg = RingConfig {
                 k,
                 limit_inserts: algo == "cges-l",
@@ -308,6 +344,8 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
                 registry: metrics_path.is_some().then(|| registry.clone()),
                 tracer: tracer.clone(),
                 distributed_obs: a.flag("obs-wire"),
+                fault_policy,
+                fault_plan,
                 ..Default::default()
             };
             let r = run_cges(data.clone(), &cfg)?;
@@ -322,6 +360,14 @@ fn cmd_learn(argv: &[String]) -> Result<()> {
                 r.telemetry.cache_hits,
                 r.telemetry.cache_misses,
             );
+            if r.telemetry.faults.any() {
+                let f = &r.telemetry.faults;
+                println!(
+                    "ring faults: {} timeout(s), {} skipped round(s), {} frame retr(ies), \
+                     {} duplicate(s), {} death(s), {} healed",
+                    f.timeouts, f.skips, f.retries, f.duplicates, f.deaths, f.healed
+                );
+            }
             if let Some(path) = &trace_path {
                 if want_chrome {
                     tracer
@@ -631,6 +677,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "threads",
             "batch",
             "max-frame-bytes",
+            "idle-timeout-ms",
             "trace",
             "metrics",
         ],
@@ -651,6 +698,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         threads: a.get_parse("threads", cges::util::num_threads())?,
         max_frame_bytes: a.get_parse("max-frame-bytes", DEFAULT_MAX_FRAME_BYTES)?,
         max_batch: a.get_parse("batch", DEFAULT_MAX_BATCH)?,
+        idle_timeout: a
+            .get("idle-timeout-ms")
+            .map(|v| v.parse::<u64>())
+            .transpose()
+            .context("--idle-timeout-ms")?
+            .map(std::time::Duration::from_millis),
     };
     ensure!(serve_cfg.threads >= 1, "--threads must be at least 1");
     ensure!(serve_cfg.max_frame_bytes >= 64, "--max-frame-bytes must be at least 64");

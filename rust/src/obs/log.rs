@@ -1,23 +1,32 @@
 //! Leveled stderr logging with a `CGES_LOG` environment filter.
 //!
-//! Deliberately tiny: three levels, one env var, stderr only. The
-//! level is read from `CGES_LOG` (`error` | `info` | `debug`, any
-//! case) once on first use and cached in an atomic; [`set_level`]
+//! Deliberately tiny: four levels, one env var, stderr only. The
+//! level is read from `CGES_LOG` (`error` | `warn` | `info` | `debug`,
+//! any case) once on first use and cached in an atomic; [`set_level`]
 //! overrides it at runtime (used by tests and by anything that wants
 //! a verbosity flag). Default level is `info`; nothing silences
-//! errors — `CGES_LOG=error` silences `info`/`debug`. An unrecognized
-//! value falls back to `info` and is reported once on stderr rather
-//! than silently changing behavior.
+//! errors — `CGES_LOG=error` silences `warn`/`info`/`debug`. An
+//! unrecognized value falls back to `info` and is reported once on
+//! stderr rather than silently changing behavior.
+//!
+//! Tests that need to assert on log *content* (e.g. "ring healing
+//! warns exactly once per dead worker") use [`capture_start`] /
+//! [`capture_take`], which mirror every log line into an in-process
+//! buffer on top of stderr. The mirror ignores the level filter
+//! (stderr does not), so content assertions stay deterministic even
+//! while another test toggles the global level.
 
 use std::fmt::Arguments;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
 
 /// Log severity, most severe first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
     Error = 0,
-    Info = 1,
-    Debug = 2,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
 }
 
 /// Unset sentinel: the env var has not been consulted yet.
@@ -25,11 +34,15 @@ const UNSET: u8 = u8::MAX;
 
 static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
 
+/// Mirror buffer for tests: `Some(lines)` while a capture is active.
+static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
 fn parse(text: &str) -> Option<Level> {
     match text.trim().to_ascii_lowercase().as_str() {
         "error" | "err" | "0" => Some(Level::Error),
-        "info" | "1" => Some(Level::Info),
-        "debug" | "2" => Some(Level::Debug),
+        "warn" | "warning" | "1" => Some(Level::Warn),
+        "info" | "2" => Some(Level::Info),
+        "debug" | "3" => Some(Level::Debug),
         _ => None,
     }
 }
@@ -46,7 +59,7 @@ fn resolve(var: Option<&str>) -> (Level, Option<String>) {
             None => (
                 Level::Info,
                 Some(format!(
-                    "unrecognized CGES_LOG value '{}' (want error|info|debug); using info",
+                    "unrecognized CGES_LOG value '{}' (want error|warn|info|debug); using info",
                     v.trim()
                 )),
             ),
@@ -75,7 +88,8 @@ pub fn level() -> Level {
             l
         }
         0 => Level::Error,
-        1 => Level::Info,
+        1 => Level::Warn,
+        2 => Level::Info,
         _ => Level::Debug,
     }
 }
@@ -90,15 +104,44 @@ pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Start mirroring emitted lines into an in-process buffer (tests).
+/// Any previously captured lines are discarded.
+pub fn capture_start() {
+    *CAPTURE.lock().unwrap() = Some(Vec::new());
+}
+
+/// Stop capturing and return the lines mirrored since
+/// [`capture_start`]. Returns an empty vec if no capture was active.
+pub fn capture_take() -> Vec<String> {
+    CAPTURE.lock().unwrap().take().unwrap_or_default()
+}
+
 fn emit(l: Level, tag: &str, msg: Arguments<'_>) {
-    if enabled(l) {
-        eprintln!("[cges:{tag}] {msg}");
+    let on = enabled(l);
+    let mut cap = CAPTURE.lock().unwrap();
+    if !on && cap.is_none() {
+        return;
+    }
+    let line = format!("[cges:{tag}] {msg}");
+    if let Some(buf) = cap.as_mut() {
+        // The mirror records regardless of the current level, so
+        // content assertions don't race other tests toggling it.
+        buf.push(line.clone());
+    }
+    drop(cap);
+    if on {
+        eprintln!("{line}");
     }
 }
 
 /// Log at error level (`obs::log::error(format_args!(...))`).
 pub fn error(msg: Arguments<'_>) {
     emit(Level::Error, "error", msg);
+}
+
+/// Log at warn level (skipped rounds, healed workers, frame retries).
+pub fn warn(msg: Arguments<'_>) {
+    emit(Level::Warn, "warn", msg);
 }
 
 /// Log at info level.
@@ -119,12 +162,15 @@ mod tests {
     fn parse_accepts_names_and_digits() {
         assert_eq!(parse("error"), Some(Level::Error));
         assert_eq!(parse(" ERR "), Some(Level::Error));
+        assert_eq!(parse("warn"), Some(Level::Warn));
+        assert_eq!(parse("Warning"), Some(Level::Warn));
         assert_eq!(parse("info"), Some(Level::Info));
         assert_eq!(parse("Debug"), Some(Level::Debug));
         assert_eq!(parse("DEBUG"), Some(Level::Debug));
         assert_eq!(parse("InFo"), Some(Level::Info));
-        assert_eq!(parse("2"), Some(Level::Debug));
-        assert_eq!(parse("warn"), None);
+        assert_eq!(parse("1"), Some(Level::Warn));
+        assert_eq!(parse("3"), Some(Level::Debug));
+        assert_eq!(parse("verbose"), None);
         assert_eq!(parse(""), None);
     }
 
@@ -136,6 +182,7 @@ mod tests {
         assert_eq!(resolve(Some("   ")), (Level::Info, None));
         // Recognized values, any case: no warning.
         assert_eq!(resolve(Some("ERROR")), (Level::Error, None));
+        assert_eq!(resolve(Some("WaRn")), (Level::Warn, None));
         assert_eq!(resolve(Some("dEbUg")), (Level::Debug, None));
         // Garbage: info default plus a warning naming the bad value.
         let (l, w) = resolve(Some("verbose"));
@@ -150,10 +197,16 @@ mod tests {
         // restore a permissive default for other tests in-process.
         set_level(Level::Error);
         assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
         set_level(Level::Debug);
         assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
         assert!(enabled(Level::Info));
         assert!(enabled(Level::Debug));
         error(format_args!("test error line"));

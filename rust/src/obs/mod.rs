@@ -20,8 +20,8 @@
 //!   test below.
 //! * **Clock & log** — [`clock::Stopwatch`] with a mock-time hook (the
 //!   old `util::Timer` is now a view over it), and [`log`] with a
-//!   `CGES_LOG=error|info|debug` filter (case-insensitive, warns once
-//!   on garbage).
+//!   `CGES_LOG=error|warn|info|debug` filter (case-insensitive, warns
+//!   once on garbage).
 //!
 //! The *distributed* half builds on the same types: [`sync`] measures
 //! NTP-style clock offsets between wire peers, [`registry`] ships
