@@ -13,15 +13,31 @@
 //!   (PR 2 serving semantics) and warm scratch in arrival order;
 //! * **batch** — the same queries processed in canonical-evidence
 //!   order on one warm scratch, the `"type": "batch"` execution shape
-//!   (collect messages of shared evidence prefixes are reused).
+//!   (collect messages of shared evidence prefixes are reused);
+//! * **runtime grid** — the fleet event loop vs the thread pool over
+//!   real loopback TCP with window-8 pipelined clients, across
+//!   connections 1/4/8 and (fleet) 1 or 2 hosted models with live
+//!   switch churn. Tail latency comes from each runtime's own
+//!   `{"type": "stats"}` endpoint; the full snapshots land in
+//!   `BENCH_fleet_stats.json` / `BENCH_pool_stats.json` for the CI
+//!   artifact.
 //!
 //! Writes `BENCH_serve.json` so serving throughput is tracked from PR
 //! to PR next to `BENCH_infer.json`/`BENCH_table2.json`.
 
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+
 use cges::bn::{fit, forward_sample, generate, NetGenConfig};
-use cges::engine::CompiledModel;
+use cges::engine::{CompiledModel, FleetConfig, FleetServer, ServeConfig, Server};
+use cges::infer::json::Json;
+use cges::infer::EngineConfig;
+use cges::model::{bundle_fingerprint, Bundle, BundleMeta};
 use cges::rng::Rng;
 use cges::util::Timer;
+
+/// Pipelining window per client connection.
+const WINDOW: usize = 8;
 
 fn main() -> anyhow::Result<()> {
     let wall = Timer::start();
@@ -143,8 +159,118 @@ fn main() -> anyhow::Result<()> {
     let batch_qps = queries as f64 / t.secs().max(1e-9);
     println!("batch (evidence-sorted, warm scratch): {batch_qps:.1} queries/sec");
 
+    // ---- Runtime grid: fleet event loop vs thread pool over TCP ----
+
+    // Two distinguishable models: the fitted network and a heavier
+    // smoothed refit (different CPTs, same structure), so the fleet's
+    // two-model cells churn a real hot swap under load.
+    let meta_a = BundleMeta { producer: "bench-a".into(), rounds: 0, score: 0.0, ess: 1.0 };
+    let bundle_a = Bundle::calibrated_within(bn.clone(), meta_a, u64::MAX);
+    let meta_b = BundleMeta { producer: "bench-b".into(), rounds: 0, score: 0.0, ess: 5.0 };
+    let bundle_b = Bundle::calibrated_within(fit(&truth.dag, &data, 5.0)?, meta_b, u64::MAX);
+
+    // The framed request stream: one marginal query per evidence set.
+    let req_texts: Vec<String> = evidence_sets
+        .iter()
+        .enumerate()
+        .map(|(i, ev)| {
+            let cells: Vec<String> =
+                ev.iter().map(|&(v, s)| format!("\"{}\": {s}", bn.names[v])).collect();
+            format!(r#"{{"id": {i}, "type": "marginal", "evidence": {{{}}}}}"#, cells.join(", "))
+        })
+        .collect();
+
+    let mut fleet_qps = [[0.0f64; 2]; 3]; // [conns slot][models slot]
+    let mut pool_qps = [0.0f64; 3];
+    let mut fleet_stats = String::new();
+    let mut pool_stats = String::new();
+    let mut fleet_p99 = 0.0f64;
+    let mut pool_p99 = 0.0f64;
+    for (slot, conns) in [1usize, 4, 8].into_iter().enumerate() {
+        for (mslot, n_models) in [1usize, 2].into_iter().enumerate() {
+            let fleet = FleetServer::new(
+                EngineConfig::default(),
+                FleetConfig { workers: 4, ..Default::default() },
+            );
+            fleet.load_bundle(&bundle_a)?;
+            if n_models == 2 {
+                fleet.load_bundle(&bundle_b)?;
+            }
+            let listener = TcpListener::bind(("127.0.0.1", 0))?;
+            let addr = listener.local_addr()?;
+            let qps = std::thread::scope(|s| {
+                let fleet = &fleet;
+                let server = s.spawn(move || fleet.serve(&listener, None).unwrap());
+                // Live hot-swap churn while the clients drive load.
+                let stop = std::sync::atomic::AtomicBool::new(false);
+                let churn = if n_models == 2 {
+                    let stop = &stop;
+                    let fps = [bundle_fingerprint(&bundle_a), bundle_fingerprint(&bundle_b)];
+                    Some(s.spawn(move || {
+                        let mut flip = 0usize;
+                        while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                            flip += 1;
+                            fleet.switch_to(fps[flip % 2]).unwrap();
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                    }))
+                } else {
+                    None
+                };
+                let t = Timer::start();
+                drive_clients(addr, conns, &req_texts);
+                let qps = req_texts.len() as f64 / t.secs().max(1e-9);
+                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+                if let Some(h) = churn {
+                    h.join().unwrap();
+                }
+                shutdown(addr);
+                server.join().unwrap();
+                qps
+            });
+            fleet_qps[slot][mslot] = qps;
+            println!("fleet conns {conns} models {n_models}: {qps:.1} queries/sec");
+            if conns == 8 && n_models == 2 {
+                fleet_stats = fleet.handle(r#"{"id": 0, "type": "stats"}"#);
+                fleet_p99 = stats_p99(&fleet_stats);
+            }
+        }
+
+        let pool = Server::from_bundle(
+            &bundle_a,
+            &EngineConfig::default(),
+            ServeConfig { threads: 4, ..Default::default() },
+        )?;
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let addr = listener.local_addr()?;
+        let qps = std::thread::scope(|s| {
+            let pool = &pool;
+            let server = s.spawn(move || pool.serve_tcp(&listener, None).unwrap());
+            let t = Timer::start();
+            drive_clients(addr, conns, &req_texts);
+            let qps = req_texts.len() as f64 / t.secs().max(1e-9);
+            shutdown(addr);
+            server.join().unwrap();
+            qps
+        });
+        pool_qps[slot] = qps;
+        println!("pool  conns {conns}: {qps:.1} queries/sec");
+        if conns == 8 {
+            let mut scratch = pool.new_scratch();
+            pool_stats = pool.handle(&mut scratch, r#"{"id": 0, "type": "stats"}"#);
+            pool_p99 = stats_p99(&pool_stats);
+        }
+    }
+    println!(
+        "p99 serve.latency_ns (conns 8): fleet {fleet_p99:.0} vs pool {pool_p99:.0} \
+         (from each runtime's stats endpoint)"
+    );
+    std::fs::write("BENCH_fleet_stats.json", &fleet_stats)?;
+    std::fs::write("BENCH_pool_stats.json", &pool_stats)?;
+    println!("stats snapshots written to BENCH_fleet_stats.json / BENCH_pool_stats.json");
+
     let wall_secs = wall.secs();
-    let json = perf_record_json(
+    let json = perf_record_json(&PerfRecord {
         nodes,
         edges,
         rows,
@@ -155,18 +281,87 @@ fn main() -> anyhow::Result<()> {
         singleton_cold_qps,
         singleton_warm_qps,
         batch_qps,
+        fleet_qps,
+        pool_qps,
+        fleet_p99,
+        pool_p99,
         wall_secs,
-    );
+    });
     let out = "BENCH_serve.json";
     std::fs::write(out, &json)?;
     println!("\nperf record written to {out} (wall {wall_secs:.1}s)");
     Ok(())
 }
 
-/// Hand-rolled JSON (no serde offline) — same convention as the other
-/// perf records.
-#[allow(clippy::too_many_arguments)]
-fn perf_record_json(
+fn send_frame(writer: &mut impl Write, payload: &str) {
+    let bytes = payload.as_bytes();
+    writer.write_all(&(bytes.len() as u32).to_le_bytes()).unwrap();
+    writer.write_all(bytes).unwrap();
+    writer.flush().unwrap();
+}
+
+fn recv_frame(reader: &mut impl Read) -> String {
+    let mut len_bytes = [0u8; 4];
+    reader.read_exact(&mut len_bytes).unwrap();
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    let mut payload = vec![0u8; len];
+    reader.read_exact(&mut payload).unwrap();
+    String::from_utf8(payload).unwrap()
+}
+
+/// Drive `conns` concurrent clients, each pipelining its share of the
+/// request stream [`WINDOW`] frames deep.
+fn drive_clients(addr: std::net::SocketAddr, conns: usize, reqs: &[String]) {
+    std::thread::scope(|s| {
+        for c in 0..conns {
+            s.spawn(move || {
+                let mine: Vec<&String> = reqs.iter().skip(c).step_by(conns).collect();
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = BufWriter::new(stream);
+                let mut sent = 0usize;
+                while sent < mine.len().min(WINDOW) {
+                    send_frame(&mut writer, mine[sent]);
+                    sent += 1;
+                }
+                for _ in 0..mine.len() {
+                    let resp = recv_frame(&mut reader);
+                    assert!(resp.contains("\"ok\": true"), "bench query failed: {resp}");
+                    if sent < mine.len() {
+                        send_frame(&mut writer, mine[sent]);
+                        sent += 1;
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Stop a serving runtime via its own wire protocol.
+fn shutdown(addr: std::net::SocketAddr) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+    send_frame(&mut writer, r#"{"type": "shutdown"}"#);
+    recv_frame(&mut reader);
+}
+
+/// `serve.latency_ns` p99 out of a `{"type": "stats"}` response.
+fn stats_p99(stats_response: &str) -> f64 {
+    Json::parse(stats_response)
+        .ok()
+        .and_then(|v| {
+            v.get("stats")?
+                .get("histograms")?
+                .get("serve.latency_ns")?
+                .get("p99")?
+                .as_f64()
+        })
+        .unwrap_or(0.0)
+}
+
+/// Everything the perf record captures.
+struct PerfRecord {
     nodes: usize,
     edges: usize,
     rows: usize,
@@ -177,25 +372,47 @@ fn perf_record_json(
     singleton_cold_qps: f64,
     singleton_warm_qps: f64,
     batch_qps: f64,
+    /// Fleet qps, `[connections 1/4/8][models 1/2]`.
+    fleet_qps: [[f64; 2]; 3],
+    /// Thread-pool qps at connections 1/4/8.
+    pool_qps: [f64; 3],
+    fleet_p99: f64,
+    pool_p99: f64,
     wall_secs: f64,
-) -> String {
+}
+
+/// Hand-rolled JSON (no serde offline) — same convention as the other
+/// perf records.
+fn perf_record_json(r: &PerfRecord) -> String {
     use std::fmt::Write as _;
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"serving\",");
-    let _ = writeln!(s, "  \"nodes\": {nodes},");
-    let _ = writeln!(s, "  \"edges\": {edges},");
-    let _ = writeln!(s, "  \"rows\": {rows},");
-    let _ = writeln!(s, "  \"queries\": {queries},");
-    let _ = writeln!(s, "  \"group\": {group},");
-    let _ = writeln!(s, "  \"compile_secs\": {build_secs:.4},");
-    let _ = writeln!(s, "  \"qps_threads_1\": {:.2},", thread_qps[0]);
-    let _ = writeln!(s, "  \"qps_threads_4\": {:.2},", thread_qps[1]);
-    let _ = writeln!(s, "  \"qps_threads_8\": {:.2},", thread_qps[2]);
-    let _ = writeln!(s, "  \"singleton_cold_qps\": {singleton_cold_qps:.2},");
-    let _ = writeln!(s, "  \"singleton_warm_qps\": {singleton_warm_qps:.2},");
-    let _ = writeln!(s, "  \"batch_qps\": {batch_qps:.2},");
-    let _ = writeln!(s, "  \"wall_secs\": {wall_secs:.2}");
+    let _ = writeln!(s, "  \"nodes\": {},", r.nodes);
+    let _ = writeln!(s, "  \"edges\": {},", r.edges);
+    let _ = writeln!(s, "  \"rows\": {},", r.rows);
+    let _ = writeln!(s, "  \"queries\": {},", r.queries);
+    let _ = writeln!(s, "  \"group\": {},", r.group);
+    let _ = writeln!(s, "  \"compile_secs\": {:.4},", r.build_secs);
+    let _ = writeln!(s, "  \"qps_threads_1\": {:.2},", r.thread_qps[0]);
+    let _ = writeln!(s, "  \"qps_threads_4\": {:.2},", r.thread_qps[1]);
+    let _ = writeln!(s, "  \"qps_threads_8\": {:.2},", r.thread_qps[2]);
+    let _ = writeln!(s, "  \"singleton_cold_qps\": {:.2},", r.singleton_cold_qps);
+    let _ = writeln!(s, "  \"singleton_warm_qps\": {:.2},", r.singleton_warm_qps);
+    let _ = writeln!(s, "  \"batch_qps\": {:.2},", r.batch_qps);
+    for (slot, conns) in [1usize, 4, 8].into_iter().enumerate() {
+        for (mslot, n_models) in [1usize, 2].into_iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "  \"fleet_qps_c{conns}_m{n_models}\": {:.2},",
+                r.fleet_qps[slot][mslot]
+            );
+        }
+        let _ = writeln!(s, "  \"pool_qps_c{conns}\": {:.2},", r.pool_qps[slot]);
+    }
+    let _ = writeln!(s, "  \"fleet_p99_latency_ns\": {:.0},", r.fleet_p99);
+    let _ = writeln!(s, "  \"pool_p99_latency_ns\": {:.0},", r.pool_p99);
+    let _ = writeln!(s, "  \"wall_secs\": {:.2}", r.wall_secs);
     s.push_str("}\n");
     s
 }

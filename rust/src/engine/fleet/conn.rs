@@ -1,0 +1,368 @@
+//! Per-connection state machine for the fleet event loop.
+//!
+//! One `Conn` owns a nonblocking `TcpStream` and the buffers around
+//! it: a read buffer frames are parsed out of, a sequence-ordered
+//! reassembly map for responses coming back from the worker pool (a
+//! pipelined connection can have many requests in flight, and workers
+//! finish them out of order), and a write buffer flushed as the socket
+//! accepts bytes. The wire format is the crate-wide `u32` little-endian
+//! length prefix plus JSON payload; the per-frame cap shares
+//! [`ensure_frame_len`]'s wording with every other length-prefixed
+//! medium, and an oversized declaration (or a non-UTF-8 payload)
+//! produces a *typed error response* on the wire followed by a clean
+//! close — not a torn connection — because past the bad prefix the
+//! byte stream can no longer be trusted as frames.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use crate::util::ensure_frame_len;
+
+/// Compact the read buffer once this many parsed bytes accumulate.
+const COMPACT_AT: usize = 64 * 1024;
+
+/// Stop filling while this much unparsed input is already buffered
+/// (backpressure: a client blasting frames faster than the workers
+/// drain them waits in its socket, not in our memory).
+const FILL_HIGH_WATER: usize = 4 * 1024 * 1024;
+
+/// One frame parsed out of a connection's read buffer.
+pub(crate) enum Frame {
+    /// A complete well-formed frame: dispatch `text` to a worker.
+    Request {
+        /// Response slot (responses flush in `seq` order).
+        seq: u64,
+        /// UTF-8 payload.
+        text: String,
+        /// Declared payload length (for the frame-size histogram).
+        len: u32,
+    },
+    /// A protocol violation — oversized length declaration or
+    /// non-UTF-8 payload. Queue `error` as the typed response for
+    /// `seq`, then close once flushed (the stream past a bad prefix
+    /// cannot be re-framed).
+    Reject {
+        /// Response slot.
+        seq: u64,
+        /// Human-readable violation, [`ensure_frame_len`] wording for
+        /// oversize.
+        error: String,
+    },
+}
+
+/// State machine for one keep-alive, pipelined connection.
+pub(crate) struct Conn {
+    stream: TcpStream,
+    /// Generation tag: completions carry it so a slab slot reused by a
+    /// newer connection never receives a stale response.
+    pub(crate) gen: u64,
+    /// Peer address (for log lines).
+    pub(crate) peer: Option<SocketAddr>,
+    read_buf: Vec<u8>,
+    /// Bytes of `read_buf` already consumed as frames.
+    parsed: usize,
+    write_buf: Vec<u8>,
+    /// Bytes of `write_buf` already written to the socket.
+    written: usize,
+    /// Out-of-order responses waiting for their turn on the wire.
+    pending: BTreeMap<u64, Vec<u8>>,
+    next_seq: u64,
+    next_write_seq: u64,
+    /// Requests dispatched to workers, not yet completed.
+    pub(crate) inflight: usize,
+    /// Peer closed its write half.
+    pub(crate) eof: bool,
+    /// Protocol violation latched: stop reading, flush, close.
+    pub(crate) closing: bool,
+    /// Shutdown drain already did this connection's final read.
+    pub(crate) drain_filled: bool,
+}
+
+impl Conn {
+    /// Wrap an accepted (already nonblocking) stream.
+    pub(crate) fn new(stream: TcpStream, peer: Option<SocketAddr>, gen: u64) -> Conn {
+        Conn {
+            stream,
+            gen,
+            peer,
+            read_buf: Vec::new(),
+            parsed: 0,
+            write_buf: Vec::new(),
+            written: 0,
+            pending: BTreeMap::new(),
+            next_seq: 0,
+            next_write_seq: 0,
+            inflight: 0,
+            eof: false,
+            closing: false,
+            drain_filled: false,
+        }
+    }
+
+    /// Pull everything the socket has into the read buffer (until
+    /// `WouldBlock`, EOF, or the high-water bound). Returns whether any
+    /// bytes arrived; an `Err` is a hard connection failure.
+    pub(crate) fn fill(&mut self, tmp: &mut [u8]) -> std::io::Result<bool> {
+        if self.eof || self.closing {
+            return Ok(false);
+        }
+        let mut progress = false;
+        while self.read_buf.len() - self.parsed < FILL_HIGH_WATER {
+            match self.stream.read(tmp) {
+                Ok(0) => {
+                    self.eof = true;
+                    return Ok(progress);
+                }
+                Ok(n) => {
+                    self.read_buf.extend_from_slice(&tmp[..n]);
+                    progress = true;
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(progress)
+    }
+
+    /// Parse the next complete frame out of the read buffer, if one is
+    /// there. `cap` is the per-frame byte cap; violations come back as
+    /// [`Frame::Reject`] and latch [`Conn::closing`].
+    pub(crate) fn next_frame(&mut self, cap: u32) -> Option<Frame> {
+        if self.closing {
+            return None;
+        }
+        self.compact();
+        let avail = self.read_buf.len() - self.parsed;
+        if avail < 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes(
+            self.read_buf[self.parsed..self.parsed + 4].try_into().expect("4 bytes"),
+        );
+        if let Err(e) = ensure_frame_len("incoming", len, cap) {
+            self.closing = true;
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            return Some(Frame::Reject { seq, error: format!("{e:#}") });
+        }
+        if avail - 4 < len as usize {
+            return None;
+        }
+        let start = self.parsed + 4;
+        let payload = &self.read_buf[start..start + len as usize];
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let frame = match std::str::from_utf8(payload) {
+            Ok(text) => {
+                let text = text.to_string();
+                self.inflight += 1;
+                Frame::Request { seq, text, len }
+            }
+            Err(_) => {
+                self.closing = true;
+                Frame::Reject { seq, error: "request frame is not UTF-8".to_string() }
+            }
+        };
+        self.parsed = start + len as usize;
+        Some(frame)
+    }
+
+    /// File a response for slot `seq`; every response whose turn has
+    /// come moves to the write buffer (pipelined responses leave in
+    /// request order regardless of worker completion order).
+    pub(crate) fn queue_response(&mut self, seq: u64, payload: &[u8]) {
+        let mut framed = Vec::with_capacity(payload.len() + 4);
+        framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        framed.extend_from_slice(payload);
+        self.pending.insert(seq, framed);
+        while let Some(buf) = self.pending.remove(&self.next_write_seq) {
+            self.write_buf.extend_from_slice(&buf);
+            self.next_write_seq += 1;
+        }
+    }
+
+    /// Write as much of the write buffer as the socket accepts.
+    /// Returns whether any bytes left; an `Err` is a hard failure.
+    pub(crate) fn flush(&mut self) -> std::io::Result<bool> {
+        let mut progress = false;
+        while self.written < self.write_buf.len() {
+            match self.stream.write(&self.write_buf[self.written..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ));
+                }
+                Ok(n) => {
+                    self.written += n;
+                    progress = true;
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if self.written == self.write_buf.len() && self.written > 0 {
+            self.write_buf.clear();
+            self.written = 0;
+        }
+        Ok(progress)
+    }
+
+    /// All owed responses computed and on the wire?
+    fn settled(&self) -> bool {
+        self.inflight == 0 && self.pending.is_empty() && self.written == self.write_buf.len()
+    }
+
+    /// Ready to close? The caller has already dispatched every
+    /// complete buffered frame this iteration, so "done" is: some
+    /// reason to stop (violation, peer EOF, fleet-wide drain) and
+    /// nothing still owed to the peer.
+    pub(crate) fn done(&self, draining: bool) -> bool {
+        (self.closing || self.eof || draining) && self.settled()
+    }
+
+    /// Did the peer vanish mid-frame (EOF with a partial frame
+    /// buffered)? Counted as a failed connection, not a clean close.
+    pub(crate) fn dirty_eof(&self) -> bool {
+        self.eof && !self.closing && self.read_buf.len() > self.parsed
+    }
+
+    fn compact(&mut self) {
+        if self.parsed == self.read_buf.len() {
+            self.read_buf.clear();
+            self.parsed = 0;
+        } else if self.parsed > COMPACT_AT {
+            self.read_buf.drain(..self.parsed);
+            self.parsed = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, Conn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, peer) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (client, Conn::new(server, Some(peer), 1))
+    }
+
+    fn frame(payload: &[u8]) -> Vec<u8> {
+        let mut out = (payload.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(payload);
+        out
+    }
+
+    fn fill_until(conn: &mut Conn, tmp: &mut [u8], want: usize) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while conn.read_buf.len() < want {
+            conn.fill(tmp).unwrap();
+            assert!(std::time::Instant::now() < deadline, "fill timed out");
+        }
+    }
+
+    #[test]
+    fn pipelined_frames_parse_and_responses_reorder() {
+        let (mut client, mut conn) = pair();
+        let mut wire = frame(b"{\"id\":0}");
+        wire.extend_from_slice(&frame(b"{\"id\":1}"));
+        client.write_all(&wire).unwrap();
+
+        let mut tmp = vec![0u8; 4096];
+        fill_until(&mut conn, &mut tmp, wire.len());
+        let Some(Frame::Request { seq: s0, text: t0, len: l0 }) = conn.next_frame(1024) else {
+            panic!("first frame");
+        };
+        let Some(Frame::Request { seq: s1, text: t1, .. }) = conn.next_frame(1024) else {
+            panic!("second frame");
+        };
+        assert!(conn.next_frame(1024).is_none());
+        assert_eq!((s0, s1), (0, 1));
+        assert_eq!(t0, "{\"id\":0}");
+        assert_eq!(t1, "{\"id\":1}");
+        assert_eq!(l0 as usize, t0.len());
+        assert_eq!(conn.inflight, 2);
+
+        // Worker 1 finishes first; its response must wait for slot 0.
+        conn.inflight -= 1;
+        conn.queue_response(1, b"second");
+        assert!(conn.flush().is_ok());
+        conn.inflight -= 1;
+        conn.queue_response(0, b"first");
+        while conn.flush().unwrap() {}
+        assert!(conn.done(false) || conn.settled());
+
+        let mut len = [0u8; 4];
+        client.read_exact(&mut len).unwrap();
+        let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+        client.read_exact(&mut body).unwrap();
+        assert_eq!(body, b"first");
+        client.read_exact(&mut len).unwrap();
+        let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+        client.read_exact(&mut body).unwrap();
+        assert_eq!(body, b"second");
+    }
+
+    #[test]
+    fn oversize_prefix_rejects_with_frame_cap_wording_and_latches_close() {
+        let (mut client, mut conn) = pair();
+        client.write_all(&1024u32.to_le_bytes()).unwrap();
+        client.write_all(&[0u8; 8]).unwrap();
+        let mut tmp = vec![0u8; 4096];
+        fill_until(&mut conn, &mut tmp, 4);
+        let Some(Frame::Reject { seq, error }) = conn.next_frame(256) else {
+            panic!("oversize must reject");
+        };
+        assert_eq!(seq, 0);
+        let expected = format!("{:#}", ensure_frame_len("incoming", 1024, 256).unwrap_err());
+        assert_eq!(error, expected, "wording parity with every other framed medium");
+        assert!(conn.closing);
+        assert!(conn.next_frame(256).is_none(), "no parsing past a bad prefix");
+
+        conn.queue_response(seq, b"typed error");
+        while conn.flush().unwrap() {}
+        assert!(conn.done(false), "flushed violation closes cleanly");
+    }
+
+    #[test]
+    fn partial_frame_waits_and_dirty_eof_is_detected() {
+        let (mut client, mut conn) = pair();
+        // Declare 100 bytes, deliver 10, vanish.
+        client.write_all(&100u32.to_le_bytes()).unwrap();
+        client.write_all(&[b'x'; 10]).unwrap();
+        let mut tmp = vec![0u8; 4096];
+        fill_until(&mut conn, &mut tmp, 14);
+        assert!(conn.next_frame(1024).is_none(), "incomplete frame must wait");
+        assert!(!conn.dirty_eof());
+        drop(client);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while !conn.eof {
+            conn.fill(&mut tmp).unwrap();
+            assert!(std::time::Instant::now() < deadline, "eof not observed");
+        }
+        assert!(conn.dirty_eof(), "mid-frame disconnect is a dirty close");
+        assert!(conn.done(false), "nothing owed, ready to drop");
+    }
+}

@@ -1,0 +1,302 @@
+//! Request dispatch for fleet workers: queries, server endpoints and
+//! the model control plane.
+//!
+//! Query types (`marginal`, `map`, `joint_map`, `batch`) resolve the
+//! registry's active [`ModelEntry`](super::registry::ModelEntry)
+//! **once**, then run entirely on that `Arc` through
+//! [`protocol::answer`] — so query responses are byte-identical to the
+//! thread-pool [`Server`](crate::engine::Server) serving the same
+//! bundle, and a concurrent `switch` never splits one request across
+//! two models. The control plane adds four request types:
+//!
+//! | request | effect |
+//! |---|---|
+//! | `{"type": "load_model", "path": "m.bnb"}` | read + compile a bundle on the server host, file it by fingerprint |
+//! | `{"type": "switch", "model": "<fp hex>"}` | point live traffic at a loaded model (the hot swap) |
+//! | `{"type": "models"}` | list hosted models, the active one flagged |
+//! | `{"type": "unload", "model": "<fp hex>"}` | drop an inactive model (in-flight `Arc`s finish first) |
+//!
+//! Mutating control types are refused when
+//! [`FleetConfig::control`](super::FleetConfig) is off; `models` is
+//! read-only and always answers. The `stats`, `stats_reset` and
+//! `shutdown` endpoints keep their thread-pool shapes.
+
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::engine::protocol;
+use crate::infer::json::Json;
+use crate::model::parse_fingerprint;
+use crate::obs;
+use crate::util::ensure_frame_len;
+
+use super::registry::ModelEntry;
+use super::FleetShared;
+
+/// Answer one request text with one response text, metering it
+/// (`serve.requests`, `serve.latency_ns`, the per-model histogram) and
+/// recording a span into the worker's trace lane. `enqueued` is the
+/// frame-complete time stamped by the event loop, so latency includes
+/// queue wait — the honest number to compare against the thread pool,
+/// whose latency clock also starts before dispatch.
+pub(crate) fn respond(
+    shared: &FleetShared,
+    th: &mut obs::TraceHandle,
+    request: &str,
+    enqueued: Option<Instant>,
+) -> String {
+    let t0 = th.start();
+    let sw = obs::Stopwatch::start();
+    let out = dispatch(shared, request);
+    shared.metrics.requests.inc();
+    let ns = match enqueued {
+        Some(at) => u64::try_from(at.elapsed().as_nanos()).unwrap_or(u64::MAX),
+        None => sw.elapsed_ns(),
+    };
+    shared.metrics.latency.record(ns);
+    if let Some(entry) = &out.model {
+        entry.requests.inc();
+        entry.latency.record(ns);
+    }
+    th.end(t0, out.label, "serve");
+    cap_outgoing(shared, out.id, out.response)
+}
+
+/// Enforce the outgoing frame cap *in the worker*: an oversized
+/// response is substituted with a typed error (same
+/// [`ensure_frame_len`] wording as everywhere else) so the connection
+/// survives — the event loop never has to tear a stream mid-frame.
+fn cap_outgoing(shared: &FleetShared, id: Json, response: String) -> String {
+    let cap = shared.cfg.max_frame_bytes;
+    let message = match u32::try_from(response.len()) {
+        Ok(len) => match ensure_frame_len("outgoing", len, cap) {
+            Ok(()) => return response,
+            Err(e) => format!("{e:#}"),
+        },
+        Err(_) => "response too large for u32 prefix".to_string(),
+    };
+    shared.metrics.errors.inc();
+    protocol::error_response(id, &message).to_string()
+}
+
+struct Outcome {
+    label: &'static str,
+    /// The entry a query resolved (meters the per-model histogram).
+    model: Option<Arc<ModelEntry>>,
+    id: Json,
+    response: String,
+}
+
+fn outcome(label: &'static str, model: Option<Arc<ModelEntry>>, id: Json, body: Json) -> Outcome {
+    Outcome { label, model, id, response: body.to_string() }
+}
+
+fn refuse(shared: &FleetShared, label: &'static str, id: Json, message: &str) -> Outcome {
+    shared.metrics.errors.inc();
+    let body = protocol::error_response(id.clone(), message);
+    outcome(label, None, id, body)
+}
+
+fn dispatch(shared: &FleetShared, request: &str) -> Outcome {
+    let parsed = match Json::parse(request) {
+        Ok(v) => v,
+        Err(e) => return refuse(shared, "bad_json", Json::Null, &format!("bad json: {e:#}")),
+    };
+    let id = parsed.get("id").cloned().unwrap_or(Json::Null);
+    match parsed.get("type").and_then(Json::as_str) {
+        Some("shutdown") => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            let body = protocol::shutdown_response(id.clone());
+            outcome("shutdown", None, id, body)
+        }
+        Some("stats") => {
+            let prom = parsed.get("format").and_then(Json::as_str) == Some("prometheus");
+            let engine = shared
+                .models
+                .active()
+                .map_or("none", |entry| entry.engine.name());
+            let mut fields = vec![
+                ("id".to_string(), id.clone()),
+                ("ok".to_string(), Json::Bool(true)),
+                ("engine".to_string(), Json::Str(engine.to_string())),
+            ];
+            if prom {
+                fields.push(("format".to_string(), Json::Str("prometheus".to_string())));
+                fields.push(("stats".to_string(), Json::Str(shared.registry.to_prometheus())));
+            } else {
+                fields.push(("stats".to_string(), shared.registry.snapshot()));
+            }
+            outcome("stats", None, id, Json::Obj(fields))
+        }
+        Some("stats_reset") => {
+            if parsed.get("confirm").and_then(Json::as_bool) == Some(true) {
+                shared.registry.reset();
+                let body = Json::Obj(vec![
+                    ("id".to_string(), id.clone()),
+                    ("ok".to_string(), Json::Bool(true)),
+                    ("reset".to_string(), Json::Bool(true)),
+                ]);
+                outcome("stats_reset", None, id, body)
+            } else {
+                refuse(shared, "stats_reset", id, "stats_reset requires \"confirm\": true")
+            }
+        }
+        Some("load_model") => op_load(shared, id, &parsed),
+        Some("switch") => op_switch(shared, id, &parsed),
+        Some("models") => op_models(shared, id),
+        Some("unload") => op_unload(shared, id, &parsed),
+        qtype => {
+            let Some(entry) = shared.models.active() else {
+                return refuse(
+                    shared,
+                    "no_model",
+                    id,
+                    "no model loaded (control plane: load_model, then switch)",
+                );
+            };
+            if qtype == Some("batch") {
+                if let Some(qs) = parsed.get("queries").and_then(Json::as_array) {
+                    shared.metrics.batch_depth.record(qs.len() as u64);
+                }
+            }
+            let mut scratch = entry.checkout();
+            let resp =
+                protocol::answer(&entry.engine, &mut scratch, &parsed, shared.cfg.max_batch);
+            entry.checkin(scratch);
+            if resp.get("ok").and_then(Json::as_bool) == Some(false) {
+                shared.metrics.errors.inc();
+            }
+            let label = match qtype {
+                Some("map") => "map",
+                Some("joint_map") => "joint_map",
+                Some("batch") => "batch",
+                None | Some("marginal") => "marginal",
+                Some(_) => "other",
+            };
+            outcome(label, Some(entry), id, resp)
+        }
+    }
+}
+
+fn op_load(shared: &FleetShared, id: Json, req: &Json) -> Outcome {
+    if !shared.cfg.control {
+        return refuse(shared, "load_model", id, "control plane is disabled (--no-control)");
+    }
+    let Some(path) = req.get("path").and_then(Json::as_str) else {
+        return refuse(
+            shared,
+            "load_model",
+            id,
+            "'path' must be a string (a .bnb bundle on the server host)",
+        );
+    };
+    let loaded =
+        crate::model::read_bundle(Path::new(path)).and_then(|bundle| shared.load(&bundle));
+    match loaded {
+        Err(e) => refuse(shared, "load_model", id, &format!("load_model: {e:#}")),
+        Ok((entry, fresh)) => {
+            if fresh {
+                obs::log::info(format_args!("fleet: loaded model {} from {path}", entry.hex()));
+            }
+            let body = Json::Obj(vec![
+                ("id".to_string(), id.clone()),
+                ("ok".to_string(), Json::Bool(true)),
+                ("model".to_string(), Json::Str(entry.hex())),
+                ("engine".to_string(), Json::Str(entry.engine.name().to_string())),
+                ("warm".to_string(), Json::Bool(entry.warm_started())),
+                ("already_loaded".to_string(), Json::Bool(!fresh)),
+                (
+                    "active".to_string(),
+                    Json::Bool(shared.models.active_fingerprint() == Some(entry.fingerprint)),
+                ),
+            ]);
+            outcome("load_model", None, id, body)
+        }
+    }
+}
+
+fn parse_model_field(req: &Json) -> Result<u64, String> {
+    let Some(text) = req.get("model").and_then(Json::as_str) else {
+        return Err("'model' must be a fingerprint string (see {\"type\": \"models\"})".to_string());
+    };
+    parse_fingerprint(text)
+        .ok_or_else(|| format!("'{text}' is not a model fingerprint (up to 16 hex digits)"))
+}
+
+fn op_switch(shared: &FleetShared, id: Json, req: &Json) -> Outcome {
+    if !shared.cfg.control {
+        return refuse(shared, "switch", id, "control plane is disabled (--no-control)");
+    }
+    let fp = match parse_model_field(req) {
+        Ok(fp) => fp,
+        Err(msg) => return refuse(shared, "switch", id, &msg),
+    };
+    match shared.activate(fp) {
+        Err(e) => refuse(shared, "switch", id, &format!("switch: {e:#}")),
+        Ok(entry) => {
+            obs::log::info(format_args!("fleet: switched active model to {}", entry.hex()));
+            let body = Json::Obj(vec![
+                ("id".to_string(), id.clone()),
+                ("ok".to_string(), Json::Bool(true)),
+                ("active".to_string(), Json::Str(entry.hex())),
+                ("engine".to_string(), Json::Str(entry.engine.name().to_string())),
+                ("warm".to_string(), Json::Bool(entry.warm_started())),
+            ]);
+            outcome("switch", None, id, body)
+        }
+    }
+}
+
+fn op_models(shared: &FleetShared, id: Json) -> Outcome {
+    let (active, entries) = shared.models.list();
+    let models: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            Json::Obj(vec![
+                ("model".to_string(), Json::Str(e.hex())),
+                ("producer".to_string(), Json::Str(e.producer.clone())),
+                ("vars".to_string(), Json::Num(e.n_vars() as f64)),
+                ("edges".to_string(), Json::Num(e.edges as f64)),
+                ("engine".to_string(), Json::Str(e.engine.name().to_string())),
+                ("warm".to_string(), Json::Bool(e.warm_started())),
+                ("active".to_string(), Json::Bool(Some(e.fingerprint) == active)),
+                ("requests".to_string(), Json::Num(e.requests.get() as f64)),
+            ])
+        })
+        .collect();
+    let body = Json::Obj(vec![
+        ("id".to_string(), id.clone()),
+        ("ok".to_string(), Json::Bool(true)),
+        (
+            "active".to_string(),
+            active.map_or(Json::Null, |fp| Json::Str(crate::model::fingerprint_hex(fp))),
+        ),
+        ("models".to_string(), Json::Arr(models)),
+    ]);
+    outcome("models", None, id, body)
+}
+
+fn op_unload(shared: &FleetShared, id: Json, req: &Json) -> Outcome {
+    if !shared.cfg.control {
+        return refuse(shared, "unload", id, "control plane is disabled (--no-control)");
+    }
+    let fp = match parse_model_field(req) {
+        Ok(fp) => fp,
+        Err(msg) => return refuse(shared, "unload", id, &msg),
+    };
+    match shared.models.unload(fp) {
+        Err(e) => refuse(shared, "unload", id, &format!("unload: {e:#}")),
+        Ok(entry) => {
+            shared.metrics.models_unloaded.inc();
+            obs::log::info(format_args!("fleet: unloaded model {}", entry.hex()));
+            let body = Json::Obj(vec![
+                ("id".to_string(), id.clone()),
+                ("ok".to_string(), Json::Bool(true)),
+                ("unloaded".to_string(), Json::Str(entry.hex())),
+            ]);
+            outcome("unload", None, id, body)
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! The readiness-polled event loop and the worker-core pool.
+//!
+//! One I/O thread owns the nonblocking listener and every
+//! `conn::Conn`; `cfg.workers` compute threads own the
+//! engines' scratches. The split is classic: the I/O loop only moves
+//! bytes and parses frames (never runs inference), workers only
+//! compute (never touch sockets). They meet on two unbounded channels
+//! — jobs out, completions back — so the I/O loop can never stall on a
+//! full queue while holding the sockets.
+//!
+//! Each loop iteration: drain the accept backlog, drain completions
+//! into their connections' reorder maps, then per connection
+//! fill → parse-and-dispatch → flush, and finally reap connections
+//! with nothing left to say. When an iteration moves no bytes the loop
+//! parks briefly instead of spinning (hand-rolled `std::net` has no
+//! `epoll`; a sub-millisecond park is the portable readiness wait).
+//!
+//! Shutdown drains: once the sentinel latches, the loop stops
+//! accepting, gives every connection one final read (so frames the
+//! clients pipelined before seeing the ack are captured), answers
+//! everything captured, flushes, then closes — bounded by
+//! `DRAIN_DEADLINE` so a peer that stops reading its socket cannot
+//! hold the fleet open.
+
+use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::engine::protocol;
+use crate::infer::json::Json;
+use crate::obs;
+
+use super::conn::{Conn, Frame};
+use super::{control, FleetShared};
+
+/// Hard cap on how long the shutdown drain may take (a peer that
+/// never reads its responses is cut off here).
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Park time when an iteration made no progress.
+const IDLE_PARK: Duration = Duration::from_micros(50);
+
+/// Park time when additionally no connection is open.
+const EMPTY_PARK: Duration = Duration::from_micros(500);
+
+/// One parsed request on its way to a worker.
+struct Job {
+    slot: usize,
+    gen: u64,
+    seq: u64,
+    text: String,
+    /// Frame-complete time: latency measured from here includes queue
+    /// wait.
+    at: Instant,
+}
+
+/// One response on its way back to the event loop.
+struct Completion {
+    slot: usize,
+    gen: u64,
+    seq: u64,
+    bytes: Vec<u8>,
+}
+
+/// Run the fleet: spawn the worker pool, then the event loop on the
+/// calling thread. Returns once shutdown has drained (or, with
+/// `max_conns`, once that many connections were accepted and all of
+/// them closed — the test harness mode, mirroring
+/// [`Server::serve_tcp`](crate::engine::Server::serve_tcp)).
+pub(crate) fn serve(
+    shared: &FleetShared,
+    listener: &TcpListener,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    listener.set_nonblocking(true).context("set listener nonblocking")?;
+    let workers = shared.cfg.workers.max(1);
+    let (jobs_tx, jobs_rx) = mpsc::channel::<Job>();
+    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+    let jobs_rx = Mutex::new(jobs_rx);
+    std::thread::scope(|scope| -> Result<()> {
+        for t in 0..workers {
+            let jobs_rx = &jobs_rx;
+            let done_tx = done_tx.clone();
+            scope.spawn(move || worker_loop(shared, jobs_rx, &done_tx, t as u32));
+        }
+        drop(done_tx);
+        let result = event_loop(shared, listener, max_conns, &jobs_tx, &done_rx);
+        // Closing the job queue lets the workers exit; the scope join
+        // waits for in-flight jobs (whose completions now go nowhere).
+        drop(jobs_tx);
+        result
+    })
+}
+
+fn worker_loop(
+    shared: &FleetShared,
+    jobs: &Mutex<Receiver<Job>>,
+    done: &Sender<Completion>,
+    tid: u32,
+) {
+    let mut th = shared.tracer.handle(tid);
+    loop {
+        // Hold the lock only for the dequeue, never while computing.
+        let next = jobs.lock().expect("fleet job queue poisoned").recv();
+        let Ok(job) = next else { break };
+        let response = control::respond(shared, &mut th, &job.text, Some(job.at));
+        let _ = done.send(Completion {
+            slot: job.slot,
+            gen: job.gen,
+            seq: job.seq,
+            bytes: response.into_bytes(),
+        });
+    }
+}
+
+fn event_loop(
+    shared: &FleetShared,
+    listener: &TcpListener,
+    max_conns: Option<usize>,
+    jobs: &Sender<Job>,
+    done: &Receiver<Completion>,
+) -> Result<()> {
+    let m = &shared.metrics;
+    let cap = shared.cfg.max_frame_bytes;
+    let mut slab: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut gen: u64 = 0;
+    let mut accepted = 0usize;
+    let mut tmp = vec![0u8; 64 * 1024];
+    let mut draining = false;
+    let mut drain_started = Instant::now();
+    loop {
+        let mut progress = false;
+        if !draining && shared.shutdown.load(Ordering::SeqCst) {
+            draining = true;
+            drain_started = Instant::now();
+            progress = true;
+        }
+
+        // Accept everything the backlog has.
+        if !draining && max_conns.is_none_or(|cap| accepted < cap) {
+            loop {
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        accepted += 1;
+                        progress = true;
+                        if let Err(e) = stream.set_nonblocking(true) {
+                            m.conns_failed.inc();
+                            obs::log::error(format_args!("fleet accept {peer}: {e}"));
+                        } else {
+                            stream.set_nodelay(true).ok();
+                            gen += 1;
+                            let conn = Conn::new(stream, Some(peer), gen);
+                            let slot = free.pop().unwrap_or_else(|| {
+                                slab.push(None);
+                                slab.len() - 1
+                            });
+                            slab[slot] = Some(conn);
+                            m.conns_accepted.inc();
+                            m.conns_open.add(1.0);
+                        }
+                        if max_conns.is_some_and(|cap| accepted >= cap) {
+                            break;
+                        }
+                    }
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        break;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e).context("accept fleet connection"),
+                }
+            }
+        }
+
+        // Route finished responses into their reorder maps. Stale
+        // completions (connection already gone, or the slot reused by
+        // a newer generation) are dropped on the floor.
+        while let Ok(c) = done.try_recv() {
+            progress = true;
+            if let Some(conn) = slab.get_mut(c.slot).and_then(Option::as_mut) {
+                if conn.gen == c.gen {
+                    conn.inflight = conn.inflight.saturating_sub(1);
+                    m.frame_bytes.record(c.bytes.len() as u64);
+                    conn.queue_response(c.seq, &c.bytes);
+                }
+            }
+        }
+
+        // Per-connection I/O.
+        let force_close = draining && drain_started.elapsed() >= DRAIN_DEADLINE;
+        for slot in 0..slab.len() {
+            let Some(conn) = slab[slot].as_mut() else { continue };
+            let mut failed = false;
+
+            // Read. During the drain each connection gets exactly one
+            // final fill: frames already in flight are captured, but a
+            // client that keeps streaming cannot stall shutdown.
+            if !draining || !conn.drain_filled {
+                if draining {
+                    conn.drain_filled = true;
+                }
+                match conn.fill(&mut tmp) {
+                    Ok(p) => progress |= p,
+                    Err(e) => {
+                        failed = true;
+                        log_conn(conn, "read", &e);
+                    }
+                }
+            }
+
+            // Parse and dispatch every complete frame.
+            if !failed {
+                while let Some(frame) = conn.next_frame(cap) {
+                    progress = true;
+                    match frame {
+                        Frame::Request { seq, text, len } => {
+                            m.frame_bytes.record(len as u64);
+                            m.pipeline_depth.record(conn.inflight as u64);
+                            let _ = jobs.send(Job {
+                                slot,
+                                gen: conn.gen,
+                                seq,
+                                text,
+                                at: Instant::now(),
+                            });
+                        }
+                        Frame::Reject { seq, error } => {
+                            m.frames_rejected.inc();
+                            m.errors.inc();
+                            let body = protocol::error_response(Json::Null, &error);
+                            conn.queue_response(seq, body.to_string().as_bytes());
+                        }
+                    }
+                }
+            }
+
+            // Write.
+            if !failed {
+                match conn.flush() {
+                    Ok(p) => progress |= p,
+                    Err(e) => {
+                        failed = true;
+                        log_conn(conn, "write", &e);
+                    }
+                }
+            }
+
+            // Reap.
+            if failed || conn.done(draining) || force_close {
+                progress = true;
+                if failed || conn.dirty_eof() {
+                    m.conns_failed.inc();
+                }
+                m.conns_open.add(-1.0);
+                m.conns_closed.inc();
+                slab[slot] = None;
+                free.push(slot);
+            }
+        }
+
+        let open = slab.iter().filter(|s| s.is_some()).count();
+        if open == 0 && (draining || max_conns.is_some_and(|cap| accepted >= cap)) {
+            return Ok(());
+        }
+        if !progress {
+            std::thread::park_timeout(if open == 0 { EMPTY_PARK } else { IDLE_PARK });
+        }
+    }
+}
+
+fn log_conn(conn: &Conn, what: &str, e: &std::io::Error) {
+    match conn.peer {
+        Some(p) => obs::log::error(format_args!("fleet connection {p}: {what}: {e}")),
+        None => obs::log::error(format_args!("fleet connection: {what}: {e}")),
+    }
+}

@@ -1,0 +1,445 @@
+//! The serving fleet: an async, shard-aware runtime hosting many
+//! models behind one port, with live bundle hot-swap.
+//!
+//! The thread-pool [`Server`](crate::engine::Server) pins one frozen
+//! model per process and one OS thread per connection — fine for a
+//! demo, wrong for a fleet. This subsystem replaces the runtime while
+//! keeping the wire contract:
+//!
+//! * **event loop** ([`event`]) — one I/O thread over nonblocking
+//!   `std::net` sockets (readiness-polled by hand; the offline
+//!   toolchain has no mio/tokio), so thousands of keep-alive
+//!   connections cost buffers, not threads. Connections are
+//!   per-connection state machines ([`conn`]) speaking the same
+//!   `u32`-length-prefix + JSON framing as the thread pool, with
+//!   *pipelining*: a client may send many frames before reading;
+//!   responses return in request order.
+//! * **worker cores** — `workers` compute threads pull parsed
+//!   requests from an unbounded queue and answer via the untouched
+//!   [`protocol`](crate::engine::protocol) surface, so query
+//!   responses are **byte-identical** to the thread-pool server on
+//!   the same bundle.
+//! * **multi-model registry** ([`registry`]) — bundles keyed by
+//!   content fingerprint, each with its own engine and scratch pool
+//!   (warm-started from shipped calibrations). The active model is a
+//!   pointer; [`control`] hot-swaps it under live traffic with zero
+//!   dropped in-flight queries.
+//!
+//! Observability: the shared `serve.*` metrics keep their thread-pool
+//! names, per-model latency lands in `serve.<fp>.latency_ns`, and the
+//! fleet adds `fleet.conns_accepted`/`fleet.conns_open` (gauge)/
+//! `fleet.conns_closed`/`fleet.conns_failed`, `fleet.pipeline_depth`,
+//! `fleet.frames_rejected`, `fleet.swaps`,
+//! `fleet.models_loaded`/`fleet.models_unloaded`. Worker trace lanes
+//! carry request spans like the thread pool's.
+
+pub mod conn;
+pub mod control;
+pub mod event;
+pub mod registry;
+
+pub use registry::{ModelEntry, ModelRegistry};
+
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::engine::protocol::DEFAULT_MAX_BATCH;
+use crate::engine::server::DEFAULT_MAX_FRAME_BYTES;
+use crate::infer::EngineConfig;
+use crate::model::Bundle;
+use crate::obs;
+
+/// Fleet runtime parameters (engine selection stays in
+/// [`EngineConfig`]).
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Compute threads (the event loop itself is one more thread).
+    pub workers: usize,
+    /// Per-frame byte cap, requests and responses — enforced on the
+    /// event-loop read path with the same
+    /// [`ensure_frame_len`](crate::util::ensure_frame_len) wording as
+    /// the thread pool, but answered as a typed error instead of a
+    /// torn connection.
+    pub max_frame_bytes: u32,
+    /// Max sub-queries per batch request.
+    pub max_batch: usize,
+    /// Accept mutating control-plane requests (`load_model`, `switch`,
+    /// `unload`). Off, they answer a typed error; `models` stays
+    /// readable. CLI `--no-control` clears it.
+    pub control: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            workers: 1,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            max_batch: DEFAULT_MAX_BATCH,
+            control: true,
+        }
+    }
+}
+
+/// Pre-created handles for the fleet metrics (same idiom as the
+/// thread pool's `ServeMetrics`: the hot path never takes the
+/// registry's name-map lock).
+pub(crate) struct FleetMetrics {
+    pub(crate) requests: obs::Counter,
+    pub(crate) errors: obs::Counter,
+    pub(crate) latency: obs::Hist,
+    pub(crate) frame_bytes: obs::Hist,
+    pub(crate) batch_depth: obs::Hist,
+    pub(crate) conns_accepted: obs::Counter,
+    pub(crate) conns_open: obs::Gauge,
+    pub(crate) conns_closed: obs::Counter,
+    pub(crate) conns_failed: obs::Counter,
+    pub(crate) pipeline_depth: obs::Hist,
+    pub(crate) frames_rejected: obs::Counter,
+    pub(crate) swaps: obs::Counter,
+    pub(crate) models_loaded: obs::Counter,
+    pub(crate) models_unloaded: obs::Counter,
+}
+
+impl FleetMetrics {
+    fn bind(reg: &obs::Registry) -> FleetMetrics {
+        FleetMetrics {
+            requests: reg.counter("serve.requests"),
+            errors: reg.counter("serve.errors"),
+            latency: reg.hist("serve.latency_ns"),
+            frame_bytes: reg.hist("serve.frame_bytes"),
+            batch_depth: reg.hist("serve.batch_depth"),
+            conns_accepted: reg.counter("fleet.conns_accepted"),
+            conns_open: reg.gauge("fleet.conns_open"),
+            conns_closed: reg.counter("fleet.conns_closed"),
+            conns_failed: reg.counter("fleet.conns_failed"),
+            pipeline_depth: reg.hist("fleet.pipeline_depth"),
+            frames_rejected: reg.counter("fleet.frames_rejected"),
+            swaps: reg.counter("fleet.swaps"),
+            models_loaded: reg.counter("fleet.models_loaded"),
+            models_unloaded: reg.counter("fleet.models_unloaded"),
+        }
+    }
+}
+
+/// Everything the event loop and the workers share.
+pub(crate) struct FleetShared {
+    pub(crate) cfg: FleetConfig,
+    pub(crate) engine_cfg: EngineConfig,
+    pub(crate) models: ModelRegistry,
+    pub(crate) registry: obs::Registry,
+    pub(crate) tracer: obs::Tracer,
+    pub(crate) metrics: FleetMetrics,
+    pub(crate) shutdown: AtomicBool,
+}
+
+impl FleetShared {
+    /// Insert a bundle and meter a fresh load.
+    pub(crate) fn load(&self, bundle: &Bundle) -> Result<(Arc<ModelEntry>, bool)> {
+        let (entry, fresh) = self.models.insert(bundle, &self.engine_cfg)?;
+        if fresh {
+            self.metrics.models_loaded.inc();
+        }
+        Ok((entry, fresh))
+    }
+
+    /// Activate a model and meter the swap.
+    pub(crate) fn activate(&self, fp: u64) -> Result<Arc<ModelEntry>> {
+        let entry = self.models.activate(fp)?;
+        self.metrics.swaps.inc();
+        Ok(entry)
+    }
+}
+
+/// The fleet runtime: model registry + control plane + event-loop
+/// serving. Construct, load at least one bundle, then
+/// [`serve`](FleetServer::serve).
+pub struct FleetServer {
+    shared: FleetShared,
+}
+
+impl FleetServer {
+    /// A fleet with no models yet; `engine_cfg` governs how every
+    /// loaded bundle compiles (method, budget, samples, seed).
+    pub fn new(engine_cfg: EngineConfig, cfg: FleetConfig) -> FleetServer {
+        let registry = obs::Registry::new();
+        let metrics = FleetMetrics::bind(&registry);
+        let models = ModelRegistry::new(&registry);
+        FleetServer {
+            shared: FleetShared {
+                cfg,
+                engine_cfg,
+                models,
+                registry,
+                tracer: obs::Tracer::disabled(),
+                metrics,
+                shutdown: AtomicBool::new(false),
+            },
+        }
+    }
+
+    /// Load a bundle into the registry (idempotent; the first load
+    /// becomes the active model). Returns its fingerprint.
+    pub fn load_bundle(&self, bundle: &Bundle) -> Result<u64> {
+        let (entry, _) = self.shared.load(bundle)?;
+        Ok(entry.fingerprint)
+    }
+
+    /// [`FleetServer::load_bundle`] from a `.bnb` file.
+    pub fn load_path(&self, path: &Path) -> Result<u64> {
+        self.load_bundle(&crate::model::read_bundle(path)?)
+    }
+
+    /// Point live traffic at `fp` (the in-process form of the
+    /// `{"type": "switch"}` control request).
+    pub fn switch_to(&self, fp: u64) -> Result<()> {
+        self.shared.activate(fp)?;
+        Ok(())
+    }
+
+    /// The model registry (inspection and tests).
+    pub fn models(&self) -> &ModelRegistry {
+        &self.shared.models
+    }
+
+    /// Fingerprint of the active model.
+    pub fn active_fingerprint(&self) -> Option<u64> {
+        self.shared.models.active_fingerprint()
+    }
+
+    /// The metrics registry `{"type": "stats"}` snapshots.
+    pub fn registry(&self) -> &obs::Registry {
+        &self.shared.registry
+    }
+
+    /// Swap in an externally owned metrics registry (CLI `--metrics`).
+    pub fn bind_registry(&mut self, registry: obs::Registry) {
+        self.shared.metrics = FleetMetrics::bind(&registry);
+        self.shared.models.bind_obs(&registry);
+        self.shared.registry = registry;
+    }
+
+    /// Enable span tracing (one lane per worker core).
+    pub fn set_tracer(&mut self, tracer: obs::Tracer) {
+        self.shared.tracer = tracer;
+    }
+
+    /// The span tracer (disabled unless [`FleetServer::set_tracer`]).
+    pub fn tracer(&self) -> &obs::Tracer {
+        &self.shared.tracer
+    }
+
+    /// Has the shutdown sentinel been received?
+    pub fn is_shutting_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Answer one request in-process — the socket-free path for tests
+    /// and embedding; identical dispatch to what a worker core runs.
+    pub fn handle(&self, request: &str) -> String {
+        let mut th = self.shared.tracer.handle(0);
+        control::respond(&self.shared, &mut th, request, None)
+    }
+
+    /// Serve the listener until shutdown drains (or until `max_conns`
+    /// connections were accepted and all of them closed — tests).
+    pub fn serve(&self, listener: &TcpListener, max_conns: Option<usize>) -> Result<()> {
+        event::serve(&self.shared, listener, max_conns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+    use crate::infer::json::Json;
+    use crate::model::{bundle_fingerprint, fingerprint_hex, write_bundle, BundleMeta};
+
+    fn bundle(tag: &str) -> Bundle {
+        let meta = BundleMeta { producer: tag.into(), rounds: 0, score: 0.0, ess: 1.0 };
+        Bundle::calibrated_within(tiny_bn(), meta, u64::MAX)
+    }
+
+    fn parse(text: &str) -> Json {
+        Json::parse(text).expect("fleet response is JSON")
+    }
+
+    #[test]
+    fn queries_error_until_a_model_loads_then_match_threadpool_bytes() {
+        let fleet = FleetServer::new(EngineConfig::default(), FleetConfig::default());
+        let v = parse(&fleet.handle(r#"{"id": 1, "type": "marginal"}"#));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+
+        let b = bundle("a");
+        let fp = fleet.load_bundle(&b).unwrap();
+        assert_eq!(fp, bundle_fingerprint(&b));
+        assert_eq!(fleet.active_fingerprint(), Some(fp), "first load activates");
+
+        // Byte-identity with the thread-pool server on the same bundle.
+        let pool = crate::engine::Server::from_bundle(
+            &b,
+            &EngineConfig::default(),
+            crate::engine::ServeConfig::default(),
+        )
+        .unwrap();
+        let mut scratch = pool.new_scratch();
+        for req in [
+            r#"{"id": 1, "type": "marginal", "evidence": {"b": 1}}"#,
+            r#"{"id": 2, "type": "map"}"#,
+            r#"{"id": 3, "type": "joint_map", "evidence": {"a": 0}}"#,
+            r#"{"id": 4, "type": "batch", "queries": [{"id": 0}, {"id": 1, "evidence": {"b": 0}}]}"#,
+        ] {
+            assert_eq!(fleet.handle(req), pool.handle(&mut scratch, req), "req: {req}");
+        }
+    }
+
+    #[test]
+    fn control_plane_load_switch_models_unload_roundtrip() {
+        let fleet = FleetServer::new(EngineConfig::default(), FleetConfig::default());
+        let dir = std::env::temp_dir();
+        let path_a = dir.join(format!("cges_fleet_mod_a_{}.bnb", std::process::id()));
+        let path_b = dir.join(format!("cges_fleet_mod_b_{}.bnb", std::process::id()));
+        let (ba, bb) = (bundle("a"), bundle("b"));
+        write_bundle(&ba, &path_a).unwrap();
+        write_bundle(&bb, &path_b).unwrap();
+        let (fa, fb) = (bundle_fingerprint(&ba), bundle_fingerprint(&bb));
+
+        let v = parse(&fleet.handle(&format!(
+            r#"{{"id": 1, "type": "load_model", "path": "{}"}}"#,
+            path_a.display()
+        )));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{v:?}");
+        assert_eq!(v.get("model").and_then(Json::as_str), Some(fingerprint_hex(fa).as_str()));
+        assert_eq!(v.get("warm").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("active").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("already_loaded").and_then(Json::as_bool), Some(false));
+
+        let v = parse(&fleet.handle(&format!(
+            r#"{{"id": 2, "type": "load_model", "path": "{}"}}"#,
+            path_b.display()
+        )));
+        assert_eq!(v.get("active").and_then(Json::as_bool), Some(false));
+
+        // Switch to B; the models list flips its active flag.
+        let v = parse(&fleet.handle(&format!(
+            r#"{{"id": 3, "type": "switch", "model": "{}"}}"#,
+            fingerprint_hex(fb)
+        )));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{v:?}");
+        assert_eq!(v.get("active").and_then(Json::as_str), Some(fingerprint_hex(fb).as_str()));
+
+        let v = parse(&fleet.handle(r#"{"id": 4, "type": "models"}"#));
+        let fb_hex = fingerprint_hex(fb);
+        assert_eq!(v.get("active").and_then(Json::as_str), Some(fb_hex.as_str()));
+        let models = v.get("models").and_then(Json::as_array).unwrap();
+        assert_eq!(models.len(), 2);
+        for m in models {
+            let is_b = m.get("model").and_then(Json::as_str) == Some(fb_hex.as_str());
+            assert_eq!(m.get("active").and_then(Json::as_bool), Some(is_b));
+            assert_eq!(m.get("engine").and_then(Json::as_str), Some("jointree"));
+        }
+
+        // The active model refuses to unload; the inactive one goes.
+        let v = parse(&fleet.handle(&format!(
+            r#"{{"id": 5, "type": "unload", "model": "{}"}}"#,
+            fingerprint_hex(fb)
+        )));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        let v = parse(&fleet.handle(&format!(
+            r#"{{"id": 6, "type": "unload", "model": "{}"}}"#,
+            fingerprint_hex(fa)
+        )));
+        assert_eq!(v.get("unloaded").and_then(Json::as_str), Some(fingerprint_hex(fa).as_str()));
+        assert_eq!(fleet.models().len(), 1);
+
+        // Junk fingerprints and unknown models answer typed errors.
+        let v = parse(&fleet.handle(r#"{"id": 7, "type": "switch", "model": "nope!"}"#));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        let v = parse(&fleet.handle(&format!(
+            r#"{{"id": 8, "type": "switch", "model": "{}"}}"#,
+            fingerprint_hex(fa)
+        )));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+
+        std::fs::remove_file(&path_a).ok();
+        std::fs::remove_file(&path_b).ok();
+    }
+
+    #[test]
+    fn control_gate_refuses_mutations_but_not_models() {
+        let fleet = FleetServer::new(
+            EngineConfig::default(),
+            FleetConfig { control: false, ..Default::default() },
+        );
+        fleet.load_bundle(&bundle("a")).unwrap();
+        for req in [
+            r#"{"type": "load_model", "path": "x.bnb"}"#,
+            r#"{"type": "switch", "model": "00000000000000aa"}"#,
+            r#"{"type": "unload", "model": "00000000000000aa"}"#,
+        ] {
+            let v = parse(&fleet.handle(req));
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "req: {req}");
+            assert!(
+                v.get("error").and_then(Json::as_str).unwrap().contains("control plane"),
+                "req: {req}"
+            );
+        }
+        let v = parse(&fleet.handle(r#"{"type": "models"}"#));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        // Queries are unaffected by the gate.
+        let v = parse(&fleet.handle(r#"{"id": 1, "type": "marginal"}"#));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn stats_shape_matches_threadpool_and_shutdown_latches() {
+        let fleet = FleetServer::new(EngineConfig::default(), FleetConfig::default());
+        fleet.load_bundle(&bundle("a")).unwrap();
+        fleet.handle(r#"{"id": 1}"#);
+        let v = parse(&fleet.handle(r#"{"id": 2, "type": "stats"}"#));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("engine").and_then(Json::as_str), Some("jointree"));
+        let stats = v.get("stats").expect("stats body");
+        let counters = stats.get("counters").expect("counters map");
+        assert!(counters.get("serve.requests").and_then(Json::as_f64).unwrap() >= 1.0);
+        let hists = stats.get("histograms").expect("histograms map");
+        assert!(
+            hists.get("serve.latency_ns").and_then(|h| h.get("count")).is_some(),
+            "shared latency histogram"
+        );
+        // The per-model histogram landed under the fingerprint name.
+        let fp_hex = fingerprint_hex(fleet.active_fingerprint().unwrap());
+        assert!(
+            hists.get(&format!("serve.{fp_hex}.latency_ns")).is_some(),
+            "per-model latency histogram missing from {hists:?}"
+        );
+
+        let v = parse(&fleet.handle(r#"{"type": "stats_reset"}"#));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "reset is guarded");
+
+        assert!(!fleet.is_shutting_down());
+        let v = parse(&fleet.handle(r#"{"id": 9, "type": "shutdown"}"#));
+        assert_eq!(v.get("shutdown").and_then(Json::as_bool), Some(true));
+        assert!(fleet.is_shutting_down());
+    }
+
+    #[test]
+    fn oversized_response_is_substituted_with_typed_error() {
+        // A tiny outgoing cap: any real marginal response exceeds it,
+        // so the worker must substitute the typed cap error instead of
+        // letting the event loop tear the connection.
+        let fleet = FleetServer::new(
+            EngineConfig::default(),
+            FleetConfig { max_frame_bytes: 96, ..Default::default() },
+        );
+        fleet.load_bundle(&bundle("a")).unwrap();
+        let raw = fleet.handle(r#"{"id": 1, "type": "marginal"}"#);
+        assert!(raw.len() <= 96, "substituted response must fit the cap: {raw}");
+        let v = parse(&raw);
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(v.get("error").and_then(Json::as_str).unwrap().contains("exceeds cap"));
+    }
+}

@@ -1,0 +1,310 @@
+//! Fingerprint-keyed multi-model registry with per-model scratch
+//! pools.
+//!
+//! Every hosted model is one [`ModelEntry`] behind an `Arc`, filed
+//! under its content fingerprint
+//! ([`bundle_fingerprint`](crate::model::bundle_fingerprint)). The
+//! *active* model is just which fingerprint the registry currently
+//! points at: a [`switch`](ModelRegistry::activate) is a pointer
+//! exchange under a short write lock, and a worker that resolved the
+//! old `Arc` before the swap finishes its request on that `Arc` — the
+//! entry (engine, scratch pool) stays alive until the last in-flight
+//! clone drops, which is exactly the zero-dropped-queries hot-swap
+//! contract. Unloading is refused for the active model, so the control
+//! plane can never yank the pointer queries are about to resolve.
+//!
+//! Engines are built *outside* the registry lock (compiles can take
+//! seconds; queries keep resolving the active pointer meanwhile) via
+//! [`SharedEngine::from_bundle`], so shipped calibrations warm-start
+//! every scratch the pool hands out.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::engine::{Scratch, SharedEngine};
+use crate::infer::EngineConfig;
+use crate::model::{bundle_fingerprint, fingerprint_hex, Bundle};
+use crate::obs;
+
+/// Idle scratches retained per model; checkins past the cap drop the
+/// scratch instead (a bound on memory, not on concurrency — checkout
+/// builds a fresh scratch when the pool is empty).
+const SCRATCH_POOL_CAP: usize = 64;
+
+/// One hosted model: the compiled engine, its provenance, its scratch
+/// pool and its per-model serving metrics (`serve.<fp>.requests`,
+/// `serve.<fp>.latency_ns`).
+pub struct ModelEntry {
+    /// Content fingerprint this entry is filed under.
+    pub fingerprint: u64,
+    /// The shared engine (exact compiled model or sampling fallback).
+    pub engine: SharedEngine,
+    /// Producer string from the bundle's provenance header.
+    pub producer: String,
+    /// Edge count of the fitted structure.
+    pub edges: usize,
+    /// Requests answered by this model.
+    pub requests: obs::Counter,
+    /// Per-model request latency histogram.
+    pub latency: obs::Hist,
+    scratches: Mutex<Vec<Scratch>>,
+}
+
+impl ModelEntry {
+    /// Take a scratch from the pool, or build a fresh one (warm when
+    /// the engine warm-started from shipped calibrations).
+    pub fn checkout(&self) -> Scratch {
+        if let Some(s) = self.scratches.lock().expect("scratch pool poisoned").pop() {
+            return s;
+        }
+        self.engine.new_scratch()
+    }
+
+    /// Return a scratch after use (dropped past [`SCRATCH_POOL_CAP`]).
+    pub fn checkin(&self, scratch: Scratch) {
+        let mut pool = self.scratches.lock().expect("scratch pool poisoned");
+        if pool.len() < SCRATCH_POOL_CAP {
+            pool.push(scratch);
+        }
+    }
+
+    /// Idle scratches currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.scratches.lock().expect("scratch pool poisoned").len()
+    }
+
+    /// Did the engine warm-start from shipped potentials?
+    pub fn warm_started(&self) -> bool {
+        self.engine.warm_started()
+    }
+
+    /// Number of variables in the model.
+    pub fn n_vars(&self) -> usize {
+        self.engine.n_vars()
+    }
+
+    /// Canonical hex spelling of the fingerprint (wire form).
+    pub fn hex(&self) -> String {
+        fingerprint_hex(self.fingerprint)
+    }
+}
+
+struct Inner {
+    obs: obs::Registry,
+    models: BTreeMap<u64, Arc<ModelEntry>>,
+    active: Option<u64>,
+}
+
+/// The fleet's model table: fingerprint → [`ModelEntry`], plus the
+/// active pointer. See the [module docs](self) for the hot-swap
+/// contract.
+pub struct ModelRegistry {
+    inner: RwLock<Inner>,
+}
+
+impl ModelRegistry {
+    /// Empty registry; per-model metrics register into `obs`.
+    pub fn new(obs: &obs::Registry) -> ModelRegistry {
+        ModelRegistry {
+            inner: RwLock::new(Inner { obs: obs.clone(), models: BTreeMap::new(), active: None }),
+        }
+    }
+
+    /// Re-home per-model metric handles into `obs` (the CLI
+    /// `--metrics` path swaps registries after construction).
+    pub(crate) fn bind_obs(&self, obs: &obs::Registry) {
+        let mut w = self.inner.write().expect("model registry poisoned");
+        for entry in w.models.values() {
+            let hex = entry.hex();
+            obs.register_counter(&format!("serve.{hex}.requests"), &entry.requests);
+            obs.register_hist(&format!("serve.{hex}.latency_ns"), &entry.latency);
+        }
+        w.obs = obs.clone();
+    }
+
+    /// Insert `bundle` (idempotent: an already-hosted fingerprint
+    /// returns the existing entry with `false`). The first model ever
+    /// inserted becomes active. The engine builds outside the lock.
+    pub fn insert(&self, bundle: &Bundle, cfg: &EngineConfig) -> Result<(Arc<ModelEntry>, bool)> {
+        let fp = bundle_fingerprint(bundle);
+        if let Some(existing) = self.get(fp) {
+            return Ok((existing, false));
+        }
+        let engine = SharedEngine::from_bundle(bundle, cfg)?;
+        let entry = Arc::new(ModelEntry {
+            fingerprint: fp,
+            engine,
+            producer: bundle.meta.producer.clone(),
+            edges: bundle.bn.dag.edge_count(),
+            requests: obs::Counter::new(),
+            latency: obs::Hist::new(),
+            scratches: Mutex::new(Vec::new()),
+        });
+        let mut w = self.inner.write().expect("model registry poisoned");
+        if let Some(existing) = w.models.get(&fp) {
+            // Raced with a concurrent load of the same bundle: keep
+            // the first build, drop ours.
+            return Ok((existing.clone(), false));
+        }
+        let hex = entry.hex();
+        w.obs.register_counter(&format!("serve.{hex}.requests"), &entry.requests);
+        w.obs.register_hist(&format!("serve.{hex}.latency_ns"), &entry.latency);
+        w.models.insert(fp, entry.clone());
+        if w.active.is_none() {
+            w.active = Some(fp);
+        }
+        Ok((entry, true))
+    }
+
+    /// Point the active slot at `fp` — the hot swap. In-flight
+    /// requests finish on the `Arc` they already resolved.
+    pub fn activate(&self, fp: u64) -> Result<Arc<ModelEntry>> {
+        let mut w = self.inner.write().expect("model registry poisoned");
+        match w.models.get(&fp) {
+            Some(entry) => {
+                let entry = entry.clone();
+                w.active = Some(fp);
+                Ok(entry)
+            }
+            None => bail!(
+                "no model {} in the registry ({} loaded)",
+                fingerprint_hex(fp),
+                w.models.len()
+            ),
+        }
+    }
+
+    /// The active entry — the pin point every query resolves once.
+    pub fn active(&self) -> Option<Arc<ModelEntry>> {
+        let r = self.inner.read().expect("model registry poisoned");
+        r.active.and_then(|fp| r.models.get(&fp).cloned())
+    }
+
+    /// Fingerprint of the active model.
+    pub fn active_fingerprint(&self) -> Option<u64> {
+        self.inner.read().expect("model registry poisoned").active
+    }
+
+    /// Look up one entry by fingerprint.
+    pub fn get(&self, fp: u64) -> Option<Arc<ModelEntry>> {
+        self.inner.read().expect("model registry poisoned").models.get(&fp).cloned()
+    }
+
+    /// Remove `fp` from the registry. Refused for the active model
+    /// (switch first); in-flight `Arc`s keep the removed entry alive
+    /// until their requests finish, so nothing is yanked mid-query.
+    pub fn unload(&self, fp: u64) -> Result<Arc<ModelEntry>> {
+        let mut w = self.inner.write().expect("model registry poisoned");
+        if w.active == Some(fp) {
+            bail!("model {} is active; switch away before unloading", fingerprint_hex(fp));
+        }
+        match w.models.remove(&fp) {
+            Some(entry) => Ok(entry),
+            None => bail!("no model {} in the registry", fingerprint_hex(fp)),
+        }
+    }
+
+    /// `(active fingerprint, entries in fingerprint order)`.
+    pub fn list(&self) -> (Option<u64>, Vec<Arc<ModelEntry>>) {
+        let r = self.inner.read().expect("model registry poisoned");
+        (r.active, r.models.values().cloned().collect())
+    }
+
+    /// Number of hosted models.
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("model registry poisoned").models.len()
+    }
+
+    /// True when no model is hosted.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::network::tiny_bn;
+    use crate::model::BundleMeta;
+
+    fn bundle(tag: &str) -> Bundle {
+        let meta = BundleMeta { producer: tag.into(), rounds: 0, score: 0.0, ess: 1.0 };
+        Bundle::calibrated_within(tiny_bn(), meta, u64::MAX)
+    }
+
+    #[test]
+    fn insert_activate_unload_lifecycle() {
+        let obs = obs::Registry::new();
+        let reg = ModelRegistry::new(&obs);
+        let cfg = EngineConfig::default();
+        assert!(reg.is_empty());
+        assert!(reg.active().is_none());
+
+        let (a, fresh_a) = reg.insert(&bundle("a"), &cfg).unwrap();
+        assert!(fresh_a);
+        assert!(a.warm_started(), "calibrated bundle must warm-start");
+        // First insert auto-activates.
+        assert_eq!(reg.active_fingerprint(), Some(a.fingerprint));
+
+        // Idempotent re-insert returns the same entry.
+        let (a2, fresh_a2) = reg.insert(&bundle("a"), &cfg).unwrap();
+        assert!(!fresh_a2);
+        assert!(Arc::ptr_eq(&a, &a2));
+
+        let (b, fresh_b) = reg.insert(&bundle("b"), &cfg).unwrap();
+        assert!(fresh_b);
+        assert_ne!(a.fingerprint, b.fingerprint);
+        assert_eq!(reg.len(), 2);
+        // Second insert does not steal the active slot.
+        assert_eq!(reg.active_fingerprint(), Some(a.fingerprint));
+
+        // The active model cannot be unloaded.
+        assert!(reg.unload(a.fingerprint).is_err());
+        reg.activate(b.fingerprint).unwrap();
+        assert_eq!(reg.active_fingerprint(), Some(b.fingerprint));
+        reg.unload(a.fingerprint).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get(a.fingerprint).is_none());
+        assert!(reg.unload(a.fingerprint).is_err(), "double unload must fail");
+        assert!(reg.activate(a.fingerprint).is_err(), "activate after unload must fail");
+
+        // Per-model metrics registered under the fingerprint names.
+        assert_eq!(obs.counter_value(&format!("serve.{}.requests", b.hex())), Some(0));
+    }
+
+    #[test]
+    fn unloaded_entry_survives_for_inflight_arcs() {
+        let obs = obs::Registry::new();
+        let reg = ModelRegistry::new(&obs);
+        let cfg = EngineConfig::default();
+        let (a, _) = reg.insert(&bundle("a"), &cfg).unwrap();
+        let (b, _) = reg.insert(&bundle("b"), &cfg).unwrap();
+        reg.activate(b.fingerprint).unwrap();
+
+        // "In-flight request" holds the Arc across the unload.
+        let pinned = a.clone();
+        reg.unload(a.fingerprint).unwrap();
+        let mut s = pinned.checkout();
+        let post = pinned.engine.posterior(&mut s, &[]).unwrap();
+        assert!((post.marginal(0)[0] - 0.7).abs() < 1e-12);
+        pinned.checkin(s);
+        assert_eq!(pinned.pooled(), 1);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_and_caps() {
+        let obs = obs::Registry::new();
+        let reg = ModelRegistry::new(&obs);
+        let (a, _) = reg.insert(&bundle("a"), &EngineConfig::default()).unwrap();
+        assert_eq!(a.pooled(), 0);
+        let s1 = a.checkout();
+        let s2 = a.checkout();
+        a.checkin(s1);
+        a.checkin(s2);
+        assert_eq!(a.pooled(), 2);
+        let _ = a.checkout();
+        assert_eq!(a.pooled(), 1);
+    }
+}

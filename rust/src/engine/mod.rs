@@ -30,10 +30,12 @@
 //! as compatibility shims over these types.
 
 pub mod compiled;
+pub mod fleet;
 pub mod protocol;
 pub mod server;
 
 pub use compiled::{CompiledModel, Scratch};
+pub use fleet::{FleetConfig, FleetServer, ModelRegistry};
 pub use server::{Server, ServeConfig};
 
 use std::sync::atomic::{AtomicU64, Ordering};

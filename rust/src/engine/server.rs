@@ -61,6 +61,15 @@ pub const DEFAULT_MAX_FRAME_BYTES: u32 = 1 << 20;
 /// flag.
 const IDLE_POLL: Duration = Duration::from_millis(200);
 
+/// Patience for a frame caught mid-transit during the shutdown drain:
+/// frames the client already pipelined get answered, but a client
+/// trickling bytes cannot hold shutdown hostage longer than this.
+const DRAIN_GRACE: Duration = Duration::from_secs(1);
+
+/// Socket read timeout during the drain (short: the drain's job is to
+/// flush what is buffered and get out).
+const DRAIN_POLL: Duration = Duration::from_millis(25);
+
 /// Serving parameters (transport-level; engine selection lives in
 /// [`EngineConfig`]).
 #[derive(Clone, Debug)]
@@ -100,6 +109,12 @@ struct ServeMetrics {
     conns_accepted: obs::Counter,
     conns_failed: obs::Counter,
     conns_reaped: obs::Counter,
+    conns_closed: obs::Counter,
+    /// True gauge of connections currently held by handlers (or queued
+    /// for one): +1 at accept, −1 when the handler finishes — on the
+    /// clean-EOF, idle-reap *and* failure paths alike, so
+    /// `accepted == closed` and `open == 0` hold at quiescence.
+    conns_open: obs::Gauge,
     latency: obs::Hist,
     frame_bytes: obs::Hist,
     batch_depth: obs::Hist,
@@ -113,6 +128,8 @@ impl ServeMetrics {
             conns_accepted: reg.counter("serve.conns_accepted"),
             conns_failed: reg.counter("serve.conns_failed"),
             conns_reaped: reg.counter("serve.conns_reaped"),
+            conns_closed: reg.counter("serve.conns_closed"),
+            conns_open: reg.gauge("serve.conns_open"),
             latency: reg.hist("serve.latency_ns"),
             frame_bytes: reg.hist("serve.frame_bytes"),
             batch_depth: reg.hist("serve.batch_depth"),
@@ -390,7 +407,14 @@ impl Server {
                         let next = rx.lock().expect("connection queue poisoned").recv();
                         let Ok(stream) = next else { break };
                         let peer = stream.peer_addr().ok();
-                        if let Err(e) = self.serve_conn(stream, &mut scratch, &mut th, wake) {
+                        let result = self.serve_conn(stream, &mut scratch, &mut th, wake);
+                        // Every accepted connection ends exactly here —
+                        // clean EOF, idle reap or failure — so the open
+                        // gauge and closed counter stay truthful on all
+                        // paths.
+                        self.metrics.conns_open.add(-1.0);
+                        self.metrics.conns_closed.inc();
+                        if let Err(e) = result {
                             self.metrics.conns_failed.inc();
                             match peer {
                                 Some(p) => {
@@ -420,6 +444,7 @@ impl Server {
                 }
                 conns += 1;
                 self.metrics.conns_accepted.inc();
+                self.metrics.conns_open.add(1.0);
                 tx.send(stream).expect("connection pool alive");
             }
             // Closing the queue lets idle handlers exit; the scope
@@ -464,11 +489,50 @@ impl Server {
             writer.flush().context("flush response")?;
 
             if self.is_shutting_down() {
-                // Wake the acceptor (it is blocked in accept) and close
-                // this connection; the response above already flushed.
+                // Drain, don't drop: a pipelining client may have
+                // queued frames behind the sentinel before it could see
+                // the acknowledgement. Answer what is already buffered,
+                // then wake the acceptor and close.
+                self.drain_buffered(&mut reader, &mut writer, scratch, th)?;
                 let _ = TcpStream::connect(wake);
                 return Ok(());
             }
+        }
+    }
+
+    /// After shutdown latches: keep answering frames the client
+    /// already pipelined, closing as soon as the stream goes quiet.
+    /// Mid-transit frames get [`DRAIN_GRACE`] patience, so a
+    /// byte-trickling client cannot hold shutdown hostage.
+    fn drain_buffered(
+        &self,
+        reader: &mut BufReader<TcpStream>,
+        writer: &mut BufWriter<TcpStream>,
+        scratch: &mut Scratch,
+        th: &mut obs::TraceHandle,
+    ) -> Result<()> {
+        // Shorten the poll: from here on a timeout with nothing read
+        // means "drained, close" rather than "keep waiting".
+        reader.get_ref().set_read_timeout(Some(DRAIN_POLL)).ok();
+        let cap = self.cfg.max_frame_bytes;
+        loop {
+            let Some(len) = read_len_prefix_draining(reader)? else {
+                return Ok(());
+            };
+            ensure_frame_len("incoming", len, cap)?;
+            self.metrics.frame_bytes.record(len as u64);
+            let mut payload = vec![0u8; len as usize];
+            read_exact_draining(reader, &mut payload, "frame payload")?;
+            let text = String::from_utf8(payload).context("request frame is not UTF-8")?;
+
+            let response = self.handle_traced(scratch, th, &text);
+            let out = response.as_bytes();
+            let out_len = u32::try_from(out.len()).context("response too large for u32 prefix")?;
+            ensure_frame_len("outgoing", out_len, cap)?;
+            self.metrics.frame_bytes.record(out_len as u64);
+            writer.write_all(&out_len.to_le_bytes()).context("write response length")?;
+            writer.write_all(out).context("write response payload")?;
+            writer.flush().context("flush response")?;
         }
     }
 
@@ -567,6 +631,71 @@ impl Server {
         }
         Ok(())
     }
+}
+
+/// Drain-phase variant of `read_len_prefix`. Shutdown is *latched* by
+/// now, so the regular helpers (which bail the moment they observe the
+/// latch) cannot be reused; here quiet-between-frames means "drained,
+/// close" (`Ok(None)`) and only a mid-prefix stall past [`DRAIN_GRACE`]
+/// fails the connection.
+fn read_len_prefix_draining(reader: &mut impl Read) -> Result<Option<u32>> {
+    let mut buf = [0u8; 4];
+    let mut got = 0usize;
+    let start = std::time::Instant::now();
+    while got < 4 {
+        match reader.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                bail!("eof inside frame length");
+            }
+            Ok(k) => got += k,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if got == 0 {
+                    return Ok(None);
+                }
+                if start.elapsed() >= DRAIN_GRACE {
+                    bail!("client stalled inside frame length during shutdown drain");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("read frame length"),
+        }
+    }
+    Ok(Some(u32::from_le_bytes(buf)))
+}
+
+/// Drain-phase variant of `read_exact_patient`: finish the in-flight
+/// frame with bounded patience instead of bailing on the latched
+/// shutdown flag.
+fn read_exact_draining(reader: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+    let mut got = 0usize;
+    let start = std::time::Instant::now();
+    while got < buf.len() {
+        match reader.read(&mut buf[got..]) {
+            Ok(0) => bail!("eof inside {what}"),
+            Ok(k) => got += k,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if start.elapsed() >= DRAIN_GRACE {
+                    bail!("client stalled inside {what} during shutdown drain");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).with_context(|| format!("read {what}")),
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -683,6 +812,97 @@ mod tests {
         client.join().unwrap();
         assert_eq!(s.registry().counter_value("serve.conns_reaped"), Some(1));
         assert_eq!(s.registry().counter_value("serve.conns_failed"), Some(0));
+    }
+
+    fn send_frame(stream: &mut TcpStream, payload: &[u8]) {
+        stream.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+        stream.write_all(payload).unwrap();
+    }
+
+    fn recv_frame(stream: &mut TcpStream) -> String {
+        let mut len = [0u8; 4];
+        stream.read_exact(&mut len).unwrap();
+        let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+        stream.read_exact(&mut body).unwrap();
+        String::from_utf8(body).unwrap()
+    }
+
+    #[test]
+    fn conn_accounting_balances_on_reap_and_stall_paths() {
+        let s = server(ServeConfig {
+            threads: 2,
+            idle_timeout: Some(Duration::from_millis(250)),
+            ..Default::default()
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let reaped = std::thread::spawn(move || {
+            // One healthy round trip, then quiet: the idle reaper path.
+            let mut stream = TcpStream::connect(addr).unwrap();
+            send_frame(&mut stream, br#"{"id":1}"#);
+            recv_frame(&mut stream);
+            let mut probe = [0u8; 1];
+            let n = stream.read(&mut probe).unwrap_or(0);
+            assert_eq!(n, 0, "reaper should close the idle connection");
+        });
+        let stalled = std::thread::spawn(move || {
+            // Declare a 100-byte frame, deliver 4 bytes, stall: the
+            // mid-frame failure path.
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(&100u32.to_le_bytes()).unwrap();
+            stream.write_all(b"{\"id").unwrap();
+            let mut probe = [0u8; 1];
+            let n = stream.read(&mut probe).unwrap_or(0);
+            assert_eq!(n, 0, "stalled connection should be failed and closed");
+        });
+        s.serve_tcp(&listener, Some(2)).unwrap();
+        reaped.join().unwrap();
+        stalled.join().unwrap();
+
+        // The arithmetic the gauge must satisfy on every exit path:
+        // accepted == closed, open back to zero, and the two exit
+        // reasons each counted once.
+        let reg = s.registry();
+        assert_eq!(reg.counter_value("serve.conns_accepted"), Some(2));
+        assert_eq!(reg.counter_value("serve.conns_closed"), Some(2));
+        assert_eq!(reg.counter_value("serve.conns_reaped"), Some(1));
+        assert_eq!(reg.counter_value("serve.conns_failed"), Some(1));
+        assert_eq!(reg.gauge_value("serve.conns_open"), Some(0.0));
+    }
+
+    #[test]
+    fn shutdown_drains_pipelined_frames_before_closing() {
+        let s = server(ServeConfig::default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            // Pipeline two queries, the sentinel, and a query *behind*
+            // the sentinel, all in one burst. The old behavior dropped
+            // everything after the sentinel's response.
+            send_frame(&mut stream, br#"{"id":1}"#);
+            send_frame(&mut stream, br#"{"id":2,"type":"map"}"#);
+            send_frame(&mut stream, br#"{"id":3,"type":"shutdown"}"#);
+            send_frame(&mut stream, br#"{"id":4,"type":"joint_map"}"#);
+            let mut responses = Vec::new();
+            for _ in 0..4 {
+                responses.push(Json::parse(&recv_frame(&mut stream)).unwrap());
+            }
+            for (i, v) in responses.iter().enumerate() {
+                assert_eq!(v.get("id").and_then(Json::as_usize), Some(i + 1), "slot {i}");
+                assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "slot {i}");
+            }
+            assert_eq!(responses[2].get("shutdown").and_then(Json::as_bool), Some(true));
+            // Then the server closes the drained connection.
+            let mut probe = [0u8; 1];
+            let n = stream.read(&mut probe).unwrap_or(0);
+            assert_eq!(n, 0, "connection should close after the drain");
+        });
+        s.serve_tcp(&listener, None).unwrap();
+        client.join().unwrap();
+        assert!(s.is_shutting_down());
+        assert_eq!(s.registry().counter_value("serve.conns_failed"), Some(0));
+        assert_eq!(s.registry().gauge_value("serve.conns_open"), Some(0.0));
     }
 
     #[test]

@@ -46,13 +46,17 @@ pub mod prelude {
     pub use crate::bn::{fit, forward_sample, load_domain, DiscreteBn, Domain, NetGenConfig};
     pub use crate::coordinator::{cges, run_ring, RingConfig, RingMode, RingResult};
     pub use crate::data::Dataset;
-    pub use crate::engine::{CompiledModel, Scratch, ServeConfig, Server, SharedEngine};
+    pub use crate::engine::{
+        CompiledModel, FleetConfig, FleetServer, ModelRegistry, Scratch, ServeConfig, Server,
+        SharedEngine,
+    };
     pub use crate::graph::{Dag, Pdag};
     pub use crate::infer::{
         likelihood_weighting, ve_marginal, Engine, EngineConfig, Method, Posterior,
     };
     pub use crate::model::{
-        read_bundle, write_bundle, Bundle, BundleMeta, CalibratedPotentials,
+        bundle_fingerprint, fingerprint_hex, read_bundle, write_bundle, Bundle, BundleMeta,
+        CalibratedPotentials,
     };
     pub use crate::rng::Rng;
     pub use crate::score::BdeuScorer;

@@ -36,7 +36,7 @@ use cges::coordinator::{
 use cges::data::{read_csv, write_csv, Dataset};
 use cges::engine::protocol::DEFAULT_MAX_BATCH;
 use cges::engine::server::DEFAULT_MAX_FRAME_BYTES;
-use cges::engine::{ServeConfig, Server, SharedEngine};
+use cges::engine::{FleetConfig, FleetServer, ServeConfig, Server, SharedEngine};
 use cges::graph::Dag;
 use cges::infer::{ve_marginal, EngineConfig, Method};
 use cges::learn::{fges, ges, FgesConfig, GesConfig};
@@ -136,6 +136,7 @@ SUBCOMMANDS
              [--method auto|jointree|lw] [--samples 20000] [--seed 1] [--budget N]
              [--batch 256] [--max-frame-bytes 1048576] [--idle-timeout-ms MS]
              [--trace trace.json] [--metrics metrics.json|metrics.prom]
+             [--fleet --models a.bnb,b.bnb [--workers N] [--no-control]]
              {\"type\":\"stats\"} answers a live metrics snapshot (request
              latency/frame-size/batch-depth histograms + counters);
              {\"type\":\"stats\",\"format\":\"prometheus\"} answers the same
@@ -157,6 +158,18 @@ SUBCOMMANDS
                            \"targets\":[\"X3\"],\"evidence\":{\"X0\":0}}
              batch shape: {\"id\":2,\"type\":\"batch\",\"queries\":[...]} (answers
              match singletons; shared-evidence prefixes amortize propagation)
+             --fleet swaps the thread pool for the event-loop runtime
+             (requires --listen): one nonblocking I/O thread + --workers
+             compute cores, pipelined keep-alive framing, and a
+             multi-model registry keyed by bundle fingerprint. --models
+             loads a comma list of bundles (first becomes active); the
+             control plane hot-swaps under live traffic:
+             {\"type\":\"load_model\",\"path\":\"m.bnb\"} loads on the server,
+             {\"type\":\"switch\",\"model\":\"<fp>\"} points traffic at it,
+             {\"type\":\"models\"} lists, {\"type\":\"unload\",...} drops an
+             inactive model. --no-control refuses the mutating three
+             (models stays readable). Query answers are byte-identical
+             to the thread pool on the same bundle
   inspect    --bundle model.bnb          print the bundle's JSON debug form
   import-bif --bif net.bif --out net.bnb [--budget 4194304]
              [--no-calibrate]            convert + calibrate for warm serving
@@ -593,22 +606,26 @@ fn print_marginal(name: &str, dist: &[f64]) {
     println!("P({name} | e): {}", cells.join("  "));
 }
 
+/// Load one model path as a bundle: `.bnb` files decode directly (and
+/// may carry a warm-start payload); `.bif` files import as a
+/// potential-less bundle.
+fn load_bundle_at(path: &str) -> Result<Bundle> {
+    let p = Path::new(path);
+    if is_bnb(p) {
+        read_bundle(p)
+    } else {
+        Ok(Bundle::from_bn(read_bif(p)?, BundleMeta::imported(&format!("bif:{path}"))))
+    }
+}
+
 /// Load the model argument (`--model`, or the legacy `--net` alias) as
-/// a bundle: `.bnb` files decode directly (and may carry a warm-start
-/// payload); `.bif` files import as a potential-less bundle. Returns
-/// the path alongside for status lines.
+/// a bundle. Returns the path alongside for status lines.
 fn load_model_bundle(a: &Args) -> Result<(Bundle, &str)> {
     let path = a
         .get("model")
         .or_else(|| a.get("net"))
         .ok_or_else(|| anyhow!("missing required option --model (a .bnb bundle or .bif)"))?;
-    let p = Path::new(path);
-    let bundle = if is_bnb(p) {
-        read_bundle(p)?
-    } else {
-        Bundle::from_bn(read_bif(p)?, BundleMeta::imported(&format!("bif:{path}")))
-    };
-    Ok((bundle, path))
+    Ok((load_bundle_at(path)?, path))
 }
 
 fn cmd_query(argv: &[String]) -> Result<()> {
@@ -664,26 +681,27 @@ fn cmd_query(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let a = Args::parse(argv, &[])?;
+    let a = Args::parse(argv, &["fleet", "no-control"])?;
     a.check_known(
         &[
             "model",
             "net",
+            "models",
             "listen",
             "method",
             "samples",
             "seed",
             "budget",
             "threads",
+            "workers",
             "batch",
             "max-frame-bytes",
             "idle-timeout-ms",
             "trace",
             "metrics",
         ],
-        &[],
+        &["fleet", "no-control"],
     )?;
-    let (bundle, net) = load_model_bundle(&a)?;
     let method_name = a.get("method").unwrap_or("auto");
     let method = Method::parse(method_name)
         .ok_or_else(|| anyhow!("--method: unknown '{method_name}' (auto|jointree|lw)"))?;
@@ -710,6 +728,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     ensure!(serve_cfg.max_batch >= 1, "--batch must be at least 1");
     let trace_path = a.get("trace").map(str::to_string);
     let metrics_path = a.get("metrics").map(str::to_string);
+    if a.flag("fleet") {
+        return serve_fleet(&a, &cfg, &serve_cfg, trace_path, metrics_path);
+    }
+    let (bundle, net) = load_model_bundle(&a)?;
     let mut server = Server::from_bundle(&bundle, &cfg, serve_cfg.clone())?;
     if trace_path.is_some() {
         server.set_tracer(cges::obs::Tracer::new(true));
@@ -753,6 +775,82 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(p) = &metrics_path {
         drop(sys_sampler); // stop the background thread, then sample once more
         write_metrics(server.registry(), p)?;
+        eprintln!("metrics written to {p}");
+    }
+    Ok(())
+}
+
+/// `serve --fleet`: the event-loop runtime hosting every `--models`
+/// path behind one listener, with the control plane for live loads and
+/// hot swaps.
+fn serve_fleet(
+    a: &Args,
+    cfg: &EngineConfig,
+    serve_cfg: &ServeConfig,
+    trace_path: Option<String>,
+    metrics_path: Option<String>,
+) -> Result<()> {
+    let addr = a
+        .get("listen")
+        .ok_or_else(|| anyhow!("--fleet requires --listen (the event loop serves TCP only)"))?;
+    // `--models a.bnb,b.bnb` (first is active) and/or the single
+    // `--model`; the fleet can also start empty and be populated over
+    // the control plane.
+    let mut paths: Vec<String> = Vec::new();
+    if let Some(m) = a.get("model").or_else(|| a.get("net")) {
+        paths.push(m.to_string());
+    }
+    if let Some(list) = a.get("models") {
+        let listed = list.split(',').map(str::trim).filter(|s| !s.is_empty());
+        paths.extend(listed.map(str::to_string));
+    }
+    let fleet_cfg = FleetConfig {
+        workers: a.get_parse("workers", serve_cfg.threads)?,
+        max_frame_bytes: serve_cfg.max_frame_bytes,
+        max_batch: serve_cfg.max_batch,
+        control: !a.flag("no-control"),
+    };
+    ensure!(fleet_cfg.workers >= 1, "--workers must be at least 1");
+    ensure!(
+        !paths.is_empty() || fleet_cfg.control,
+        "an empty fleet with --no-control could never serve; name --models or drop --no-control"
+    );
+    let mut fleet = FleetServer::new(cfg.clone(), fleet_cfg.clone());
+    if trace_path.is_some() {
+        fleet.set_tracer(cges::obs::Tracer::new(true));
+    }
+    for path in &paths {
+        let fp = fleet
+            .load_bundle(&load_bundle_at(path)?)
+            .with_context(|| format!("load model {path}"))?;
+        eprintln!("loaded {path} as model {}", cges::model::fingerprint_hex(fp));
+    }
+    let sys_sampler = metrics_path.as_ref().map(|_| {
+        cges::obs::SysSampler::start(fleet.registry(), std::time::Duration::from_millis(500))
+    });
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    eprintln!(
+        "fleet serving {} model(s) on {} ({} worker core(s) + 1 event loop; frames: u32 LE \
+         length + JSON, cap {} bytes; batch cap {}; control plane {}; \
+         send {{\"type\":\"shutdown\"}} to stop)",
+        fleet.models().len(),
+        listener.local_addr().context("listener addr")?,
+        fleet_cfg.workers,
+        fleet_cfg.max_frame_bytes,
+        fleet_cfg.max_batch,
+        if fleet_cfg.control { "on" } else { "off (--no-control)" },
+    );
+    fleet.serve(&listener, None)?;
+    if let Some(p) = &trace_path {
+        fleet
+            .tracer()
+            .write_chrome(Path::new(p))
+            .with_context(|| format!("write chrome trace {p}"))?;
+        eprintln!("trace written to {p}");
+    }
+    if let Some(p) = &metrics_path {
+        drop(sys_sampler); // stop the background thread, then sample once more
+        write_metrics(fleet.registry(), p)?;
         eprintln!("metrics written to {p}");
     }
     Ok(())

@@ -206,6 +206,38 @@ impl Bundle {
     }
 }
 
+/// Content fingerprint of a bundle: FNV-1a over the canonical `.bnb`
+/// encoding ([`bundle_to_bytes`]), so two bundles share a fingerprint
+/// exactly when they serialize to the same bytes (same header, same
+/// structure, same CPT bits, same potentials). This is the key the
+/// serving fleet's multi-model registry files bundles under — see
+/// [`crate::engine::fleet`] — and it uses the same FNV-1a constants as
+/// [`CompiledModel::schedule_fingerprint`].
+pub fn bundle_fingerprint(bundle: &Bundle) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in &bundle_to_bytes(bundle) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Canonical 16-hex-digit spelling of a bundle fingerprint — the form
+/// the control plane speaks on the wire and the per-model metric names
+/// embed (`serve.<fp>.latency_ns`).
+pub fn fingerprint_hex(fp: u64) -> String {
+    format!("{fp:016x}")
+}
+
+/// Parse a [`fingerprint_hex`] string back to the fingerprint
+/// (case-insensitive; at most 16 hex digits, no sign or prefix).
+pub fn parse_fingerprint(text: &str) -> Option<u64> {
+    if text.is_empty() || text.len() > 16 || !text.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(text, 16).ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +255,32 @@ mod tests {
         // cold-start artifact instead of failing.
         let cold = Bundle::calibrated_within(tiny_bn(), meta, 0);
         assert!(!cold.has_potentials());
+    }
+
+    #[test]
+    fn bundle_fingerprint_is_stable_and_content_sensitive() {
+        let meta = BundleMeta { producer: "fp".into(), rounds: 1, score: -3.5, ess: 1.0 };
+        let a = Bundle::calibrated_within(tiny_bn(), meta.clone(), u64::MAX);
+        let fp = bundle_fingerprint(&a);
+
+        // Stable across the codec round-trip (the hash is over the
+        // canonical encoding, which round-trips bit-exactly).
+        let back = bundle_from_bytes(&bundle_to_bytes(&a)).expect("round-trip");
+        assert_eq!(bundle_fingerprint(&back), fp);
+
+        // Any content change — here the provenance header — moves it.
+        let mut b = a.clone();
+        b.meta.producer = "fp2".into();
+        assert_ne!(bundle_fingerprint(&b), fp);
+
+        // Hex form round-trips and rejects junk.
+        assert_eq!(parse_fingerprint(&fingerprint_hex(fp)), Some(fp));
+        assert_eq!(parse_fingerprint(&fingerprint_hex(fp).to_uppercase()), Some(fp));
+        assert_eq!(fingerprint_hex(fp).len(), 16);
+        assert_eq!(parse_fingerprint(""), None);
+        assert_eq!(parse_fingerprint("xyz"), None);
+        assert_eq!(parse_fingerprint("+12"), None);
+        assert_eq!(parse_fingerprint("00112233445566778"), None);
     }
 
     #[test]

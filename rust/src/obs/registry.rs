@@ -70,6 +70,20 @@ impl Gauge {
         self.0.store(v.to_bits(), Ordering::Relaxed);
     }
 
+    /// Add `delta` (negative to decrement) atomically — the
+    /// level-tracking form used by e.g. open-connection gauges, where
+    /// several threads raise and lower the same value concurrently.
+    pub fn add(&self, delta: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + delta).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
     /// Current value.
     pub fn get(&self) -> f64 {
         f64::from_bits(self.0.load(Ordering::Relaxed))
@@ -223,6 +237,11 @@ impl Registry {
     /// Value of a named counter, if registered.
     pub fn counter_value(&self, name: &str) -> Option<u64> {
         self.inner.counters.read().expect("registry poisoned").get(name).map(Counter::get)
+    }
+
+    /// Value of a named gauge, if registered.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.inner.gauges.read().expect("registry poisoned").get(name).map(Gauge::get)
     }
 
     /// Zero every registered metric (counters, gauges, histograms).
@@ -480,10 +499,36 @@ mod tests {
         let g = reg.gauge("load");
         g.set(0.75);
         assert_eq!(reg.gauge("load").get(), 0.75);
+        assert_eq!(reg.gauge_value("load"), Some(0.75));
+        assert_eq!(reg.gauge_value("absent"), None);
 
         let h = reg.hist("lat");
         h.record(10);
         assert_eq!(reg.hist("lat").inner().count(), 1);
+    }
+
+    #[test]
+    fn gauge_add_tracks_levels_under_contention() {
+        let g = Gauge::new();
+        g.add(1.0);
+        g.add(1.0);
+        g.add(-1.0);
+        assert_eq!(g.get(), 1.0);
+
+        // 8 threads × (100 up + 100 down) nets to the starting level.
+        let shared = g.clone();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let g = shared.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        g.add(1.0);
+                        g.add(-1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(g.get(), 1.0);
     }
 
     #[test]
